@@ -1,0 +1,61 @@
+//! Elastic-scaling demo (§5): hot PS/worker scaling on a live PS-training
+//! job with real parameter buffers, versus the checkpoint-restart
+//! baseline — the Fig 7 walkthrough as runnable code.
+//!
+//! ```bash
+//! cargo run --release --example elastic_scaling
+//! ```
+
+use dl2::cluster::catalog;
+use dl2::elastic::{checkpoint::measure_checkpoint_scaling, ElasticConfig, ElasticJob};
+use dl2::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ElasticConfig::default();
+
+    // Hot scaling across three Table-1 models of very different sizes.
+    let mut t = Table::new(
+        "hot scaling: add one PS (ms per protocol step)",
+        &["model", "size_mb", "register", "assign", "migrate", "worker_upd", "suspension"],
+    );
+    for name in ["ctc", "resnet50", "vgg16"] {
+        let jt = catalog().into_iter().find(|j| j.name == name).unwrap();
+        let mut job = ElasticJob::start(cfg.clone(), jt.model_mb, 2, 2);
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        let r = job.add_ps();
+        assert!(job.verify_integrity(), "{name}: parameter blocks corrupted");
+        t.row(vec![
+            name.into(),
+            format!("{:.0}", jt.model_mb),
+            format!("{:.2}", r.registration_ms),
+            format!("{:.2}", r.assignment_ms),
+            format!("{:.2}", r.migration_ms),
+            format!("{:.2}", r.worker_update_ms),
+            format!("{:.2}", r.avg_suspension_ms),
+        ]);
+        job.shutdown();
+    }
+    t.emit("elastic_hot");
+
+    // Checkpoint-restart baseline on ResNet-50 for contrast (Fig 11).
+    let jt = catalog().into_iter().find(|j| j.name == "resnet50").unwrap();
+    let report = measure_checkpoint_scaling(&cfg, jt.model_mb, 2, 2, 1)?;
+    let mut c = Table::new(
+        "checkpoint-restart baseline: add one PS (resnet50)",
+        &["component", "ms"],
+    );
+    c.row(vec!["checkpoint (stop+serialize+write)".into(), format!("{:.1}", report.checkpoint_ms)]);
+    c.row(vec!["restore (read+relaunch)".into(), format!("{:.1}", report.restore_ms)]);
+    c.row(vec![
+        "modeled container restart (documented constant)".into(),
+        format!("{:.1}", report.modeled_restart_ms),
+    ]);
+    c.row(vec![
+        "TOTAL suspension".into(),
+        format!("{:.1}", report.total_suspension_ms()),
+    ]);
+    c.emit("elastic_checkpoint");
+
+    println!("hot scaling suspends workers for tens of ms; checkpoint-restart for tens of seconds.");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Quickstart: load the AOT artifacts, warm the DL² policy up on DRF
+//! traces (supervised learning, §4.2), and compare it against the DRF
+//! incumbent on a held-out validation trace.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use dl2::cluster::Cluster;
+use dl2::pipeline::{experiment_cluster, experiment_trace, validation_trace};
+use dl2::rl::{evaluate_policy, generate_dataset, train_sl};
+use dl2::runtime::load_default_engine;
+use dl2::scheduler::{run_episode, Dl2Config, Dl2Scheduler, Drf};
+use dl2::trace::{generate, TraceConfig};
+use dl2::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The runtime: rust loads the HLO artifacts produced once by
+    //    `make artifacts` — Python is not involved from here on.
+    let engine = load_default_engine()?;
+    println!(
+        "loaded artifacts: L={} hidden={} J variants {:?}",
+        engine.meta.num_types, engine.meta.hidden, engine.meta.js
+    );
+
+    let cluster_cfg = experiment_cluster();
+    let trace_cfg = experiment_trace();
+    let val = validation_trace(&trace_cfg);
+
+    // 2. The incumbent: DRF on the validation trace.
+    let drf_res = run_episode(
+        Cluster::new(cluster_cfg.clone()),
+        &val,
+        &mut Drf,
+        0.0,
+        3000,
+    );
+    println!(
+        "DRF  : avg JCT {:.2} slots (makespan {})",
+        drf_res.avg_jct_slots, drf_res.makespan_slots
+    );
+
+    // 3. Supervised warm-up: imitate DRF for a few hundred updates.
+    let dl2_cfg = Dl2Config {
+        j: 10,
+        ..Default::default()
+    };
+    let mut sched = Dl2Scheduler::new(engine, dl2_cfg);
+    let traces: Vec<_> = (0..3)
+        .map(|i| {
+            generate(&TraceConfig {
+                seed: 100 + i,
+                ..trace_cfg.clone()
+            })
+        })
+        .collect();
+    let dataset = generate_dataset(&mut Drf, &cluster_cfg, &traces, 10, 8, 3000);
+    println!("SL dataset: {} labeled decisions", dataset.len());
+    let mut rng = Rng::new(0);
+    let losses = train_sl(&mut sched, &dataset, 150, &mut rng);
+    println!(
+        "SL   : cross-entropy {:.3} -> {:.3} over {} updates",
+        losses[0],
+        losses.last().unwrap(),
+        losses.len()
+    );
+
+    // 4. Evaluate the warmed-up policy.
+    let jct = evaluate_policy(&mut sched, &cluster_cfg, &val, 3000);
+    println!("DL2  : avg JCT {jct:.2} slots after SL only");
+    println!("(run `cargo run --release --example end_to_end_training` for the full SL+RL pipeline)");
+    Ok(())
+}

@@ -1,0 +1,156 @@
+"""AOT pipeline: lower the L2 jitted functions to HLO text artifacts.
+
+Run once at ``make artifacts``::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits, for every J in ``--js`` (default 5,10,20,40):
+
+    artifacts/policy_infer_j{J}.hlo.txt
+    artifacts/value_infer_j{J}.hlo.txt
+    artifacts/sl_step_j{J}.hlo.txt
+    artifacts/rl_step_j{J}.hlo.txt
+
+plus ``artifacts/meta.txt`` (flat key=value, parsed by rust) and
+``artifacts/meta.json`` (for humans).
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ADAM_B1, ADAM_B2, ADAM_EPS, HIDDEN, NUM_JOB_TYPES, NetSpec, build_fns
+
+DEFAULT_JS = (5, 10, 20, 40)
+DEFAULT_BATCH = 256  # paper §6.2: mini-batch of 256 samples
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def example_args(spec: NetSpec, batch: int):
+    """ShapeDtypeStructs matching each artifact's signature."""
+    s, a = spec.state_dim, spec.num_actions  # noqa: F841 (a: doc aid)
+    p, pv = spec.policy_params, spec.value_params
+    scalar = f32()
+    return {
+        "policy_infer": (f32(p), f32(s)),
+        "value_infer": (f32(pv), f32(s)),
+        "sl_step": (
+            f32(p), f32(p), f32(p), scalar,  # θ, m, v, t
+            f32(batch, s), i32(batch), scalar,  # states, labels, lr
+        ),
+        "rl_step": (
+            f32(p), f32(p), f32(p), scalar,  # θ, m, v, t
+            f32(pv), f32(pv), f32(pv), scalar,  # θv, mv, vv, tv
+            f32(batch, s), i32(batch), f32(batch),  # states, actions, G
+            scalar, scalar, scalar,  # lr_p, lr_v, β
+        ),
+        "pg_step": (
+            f32(p), f32(p), f32(p), scalar,  # θ, m, v, t
+            f32(batch, s), i32(batch), f32(batch),  # states, actions, adv
+            scalar, scalar,  # lr, β
+        ),
+    }
+
+
+def emit(spec: NetSpec, batch: int, out_dir: str, verbose: bool = True):
+    fns = build_fns(spec)
+    args = example_args(spec, batch)
+    written = {}
+    for name, fn in fns.items():
+        lowered = fn.lower(*args[name])
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}_j{spec.max_jobs}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written[name] = (path, len(text))
+        if verbose:
+            print(f"  {path}: {len(text)} chars")
+    return written
+
+
+def write_meta(js, batch, out_dir):
+    lines = [
+        f"num_types={NUM_JOB_TYPES}",
+        f"hidden={HIDDEN}",
+        f"batch={batch}",
+        f"adam_b1={ADAM_B1}",
+        f"adam_b2={ADAM_B2}",
+        f"adam_eps={ADAM_EPS}",
+        "js=" + ",".join(str(j) for j in js),
+    ]
+    meta_json = {
+        "num_types": NUM_JOB_TYPES,
+        "hidden": HIDDEN,
+        "batch": batch,
+        "adam": {"b1": ADAM_B1, "b2": ADAM_B2, "eps": ADAM_EPS},
+        "js": list(js),
+        "specs": {},
+    }
+    for j in js:
+        spec = NetSpec(max_jobs=j)
+        kv = {
+            "S": spec.state_dim,
+            "A": spec.num_actions,
+            "P": spec.policy_params,
+            "PV": spec.value_params,
+        }
+        for k, v in kv.items():
+            lines.append(f"j{j}.{k}={v}")
+        meta_json["specs"][str(j)] = kv
+    with open(os.path.join(out_dir, "meta.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta_json, f, indent=2)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--js", default=",".join(str(j) for j in DEFAULT_JS),
+        help="comma-separated J values to emit artifacts for",
+    )
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    args = ap.parse_args()
+
+    js = tuple(int(x) for x in args.js.split(","))
+    os.makedirs(args.out_dir, exist_ok=True)
+    for j in js:
+        spec = NetSpec(max_jobs=j)
+        print(
+            f"J={j}: S={spec.state_dim} A={spec.num_actions} "
+            f"P={spec.policy_params} Pv={spec.value_params}"
+        )
+        emit(spec, args.batch, args.out_dir)
+    write_meta(js, args.batch, args.out_dir)
+    print(f"meta written to {args.out_dir}/meta.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""L1 — Pallas kernels for the DL² policy/value networks.
+
+The hot spot of DL² is the policy-network forward/backward executed on every
+scheduling inference and every SL/RL update.  We implement it as a fused
+``y = act(x @ W + b)`` Pallas kernel plus a plain tiled matmul used by the
+custom VJP, so the kernel sits on *both* the inference and the training path
+of every AOT artifact.
+
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): the GEMM is tiled over
+``(BM, BN)`` output blocks with the full K panel resident in VMEM (K ≤ 520
+for every DL² shape, so an x-panel + W-panel + accumulator is ~330 KiB — far
+under the 16 MiB VMEM budget), accumulation is f32 for the MXU, and the
+bias + ReLU epilogue is fused so the activation never makes a second HBM
+round trip.
+
+All kernels run ``interpret=True`` on this image: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that the
+rust runtime executes byte-for-byte like any other op.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default output-tile sizes.  128 matches the MXU systolic-array edge; the
+# wrapper pads M/N up to multiples so the grid always divides exactly.
+BLOCK_M = 128
+BLOCK_N = 128
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One (BM, BN) output tile: o = act(x_panel @ w_panel + b)."""
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation != "none":  # pragma: no cover - guarded at trace time
+        raise ValueError(f"unknown activation {activation!r}")
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Plain (BM, BN) matmul tile used by the VJP."""
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def _pallas_fused_linear(x, w, b, activation: str, bm: int, bn: int):
+    """Padded pallas_call for y = act(x @ w + b); shapes (M,K)@(K,N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n)))
+    bp = jnp.pad(b, ((0, np_ - n),))
+    out = pl.pallas_call(
+        partial(_fused_linear_kernel, activation=activation),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=INTERPRET,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def pallas_matmul(x, w, bm: int = BLOCK_M, bn: int = BLOCK_N):
+    """Tiled pallas matmul with automatic edge padding; used by the VJP."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=INTERPRET,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, activation: str = "relu"):
+    """``act(x @ w + b)`` as one fused Pallas pass.
+
+    Differentiable: the custom VJP routes dx/dW through :func:`pallas_matmul`
+    so the kernel is exercised on the backward path of the SL/RL artifacts
+    as well.
+    """
+    return _pallas_fused_linear(x, w, b, activation, BLOCK_M, BLOCK_N)
+
+
+def _fused_linear_fwd(x, w, b, activation):
+    y = _pallas_fused_linear(x, w, b, activation, BLOCK_M, BLOCK_N)
+    # For ReLU, (y > 0) is exactly the pre-activation mask, so we avoid
+    # stashing z and recompute nothing.
+    return y, (x, w, y)
+
+
+def _fused_linear_bwd(activation, res, dy):
+    x, w, y = res
+    if activation == "relu":
+        dz = dy * (y > 0).astype(dy.dtype)
+    else:
+        dz = dy
+    dx = pallas_matmul(dz, w.T)
+    dw = pallas_matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

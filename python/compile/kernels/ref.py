@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in :mod:`fused_mlp` has a reference implementation here written
+with nothing but ``jax.numpy``.  pytest (and hypothesis sweeps) assert
+``assert_allclose(kernel(...), ref(...))`` across shapes and dtypes; the
+AOT artifacts additionally embed the kernels so the rust-side integration
+tests recheck the same numerics end to end.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_matmul(x, w):
+    return jnp.matmul(
+        x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def ref_fused_linear(x, w, b, activation: str = "relu"):
+    z = (
+        jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+        + b.astype(jnp.float32)[None, :]
+    )
+    if activation == "relu":
+        z = jnp.maximum(z, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return z.astype(x.dtype)
+
+
+def ref_mlp(x, params, activations):
+    """Chain of ref_fused_linear layers; params = [(W, b), ...]."""
+    h = x
+    for (w, b), act in zip(params, activations):
+        h = ref_fused_linear(h, w, b, act)
+    return h

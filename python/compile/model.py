@@ -1,0 +1,287 @@
+"""L2 — the DL² policy/value networks and their SL/RL update steps in JAX.
+
+This module is build-time only: :mod:`compile.aot` lowers the jitted
+functions here to HLO text, and the rust coordinator executes those
+artifacts through PJRT.  Nothing in here runs on the request path.
+
+Architecture (paper §4.1/§6.2):
+  * input state ``s``: the flattened ``J×(L+5)`` matrix
+    ``(x one-hot type, d slots-run, e epochs-left, r dominant-res, w, u)``;
+  * 2 fully-connected hidden layers of 256 ReLU neurons;
+  * policy head: softmax over ``A = 3J+1`` actions
+    ((i,0)=+1 worker, (i,1)=+1 PS, (i,2)=+1 worker+1 PS for each job i,
+    plus the void action);
+  * value head: a single linear neuron (actor-critic critic, §4.3).
+
+Parameters travel as ONE flat f32 vector so the rust runtime marshals a
+single literal per network; layer boundaries are recomputed from
+``(S, H, out)`` on both sides (see ``artifacts/meta.txt``).
+
+Every dense layer goes through the L1 Pallas kernel
+:func:`compile.kernels.fused_mlp.fused_linear` — forward *and* backward
+(custom VJP) — so the kernel is on the hot path of every artifact.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_mlp import fused_linear
+
+# ---------------------------------------------------------------------------
+# Network specification
+# ---------------------------------------------------------------------------
+
+NUM_JOB_TYPES = 8  # L — Table 1 has 8 model categories.
+HIDDEN = 256  # paper §6.2: 2 hidden layers with 256 neurons each.
+FEATURES_PER_JOB = NUM_JOB_TYPES + 5  # one-hot type + (d, e, r, w, u)
+
+
+@dataclass(frozen=True)
+class NetSpec:
+    """Static shape information for one (J,)-parameterized artifact set."""
+
+    max_jobs: int  # J
+    num_types: int = NUM_JOB_TYPES  # L
+    hidden: int = HIDDEN  # H
+
+    @property
+    def state_dim(self) -> int:  # S
+        return self.max_jobs * (self.num_types + 5)
+
+    @property
+    def num_actions(self) -> int:  # A = 3J + 1 (§4.1)
+        return 3 * self.max_jobs + 1
+
+    def layer_shapes(self, out_dim: int):
+        s, h = self.state_dim, self.hidden
+        return [(s, h), (h,), (h, h), (h,), (h, out_dim), (out_dim,)]
+
+    def param_count(self, out_dim: int) -> int:
+        total = 0
+        for shape in self.layer_shapes(out_dim):
+            n = 1
+            for d in shape:
+                n *= d
+            total += n
+        return total
+
+    @property
+    def policy_params(self) -> int:  # P
+        return self.param_count(self.num_actions)
+
+    @property
+    def value_params(self) -> int:  # Pv
+        return self.param_count(1)
+
+
+def unflatten(theta, spec: NetSpec, out_dim: int):
+    """Flat f32 vector -> [(W1,b1),(W2,b2),(W3,b3)]."""
+    params, off = [], 0
+    shapes = spec.layer_shapes(out_dim)
+    for wi in range(0, len(shapes), 2):
+        wshape, bshape = shapes[wi], shapes[wi + 1]
+        wn = wshape[0] * wshape[1]
+        w = theta[off : off + wn].reshape(wshape)
+        off += wn
+        b = theta[off : off + bshape[0]]
+        off += bshape[0]
+        params.append((w, b))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def mlp_forward(theta, states, spec: NetSpec, out_dim: int):
+    """states: [B, S] -> [B, out_dim] raw outputs (no head activation)."""
+    (w1, b1), (w2, b2), (w3, b3) = unflatten(theta, spec, out_dim)
+    h = fused_linear(states, w1, b1, "relu")
+    h = fused_linear(h, w2, b2, "relu")
+    return fused_linear(h, w3, b3, "none")
+
+
+def policy_logits(theta, states, spec: NetSpec):
+    return mlp_forward(theta, states, spec, spec.num_actions)
+
+
+def value_forward(theta_v, states, spec: NetSpec):
+    """[B, S] -> [B] state values (final layer is a single linear neuron)."""
+    return mlp_forward(theta_v, states, spec, 1)[:, 0]
+
+
+def policy_infer(theta, state, spec: NetSpec):
+    """Single-state inference: [S] -> action probabilities [A]."""
+    logits = policy_logits(theta, state[None, :], spec)[0]
+    return jax.nn.softmax(logits)
+
+
+def value_infer(theta_v, state, spec: NetSpec):
+    """Single-state critic evaluation: [S] -> [1]."""
+    return value_forward(theta_v, state[None, :], spec)
+
+
+# ---------------------------------------------------------------------------
+# Adam (carried by the caller as flat (m, v, t) so each HLO step is pure)
+# ---------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def adam_update(theta, m, v, t, grad, lr):
+    """One Adam step on a flat parameter vector; returns (theta', m', v', t')."""
+    t = t + 1.0
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * grad
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * grad * grad
+    mhat = m / (1.0 - ADAM_B1**t)
+    vhat = v / (1.0 - ADAM_B2**t)
+    theta = theta - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return theta, m, v, t
+
+
+# ---------------------------------------------------------------------------
+# Offline supervised learning step (§4.2)
+# ---------------------------------------------------------------------------
+
+
+def sl_loss(theta, states, labels, spec: NetSpec):
+    """Cross-entropy of NN decisions vs the incumbent scheduler's decisions."""
+    logits = policy_logits(theta, states, spec)
+    logp = jax.nn.log_softmax(logits)
+    picked = jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return -jnp.mean(picked)
+
+
+def sl_step(theta, m, v, t, states, labels, lr, *, spec: NetSpec):
+    """(θ, adam, batch, lr) -> (θ', adam', loss).  SGD on cross-entropy."""
+    loss, grad = jax.value_and_grad(sl_loss)(theta, states, labels, spec)
+    theta, m, v, t = adam_update(theta, m, v, t, grad, lr)
+    return theta, m, v, t, loss
+
+
+# ---------------------------------------------------------------------------
+# Online RL step: actor-critic REINFORCE with entropy regularization (§4.3)
+# ---------------------------------------------------------------------------
+
+
+def _normalize_adv(advantages):
+    """Batch z-scoring of advantages.
+
+    Raw discounted returns are O(1..20) while the freshly-initialized
+    critic predicts ~0, so un-normalized advantages uniformly inflate
+    every sampled action's log-probability and collapse the softmax within
+    a few updates.  Normalizing to zero mean / unit variance keeps the
+    REINFORCE gradient scale stable across training stages (standard
+    practice; scale-invariant in the bandit sense, so Eqn 2's direction is
+    preserved).
+    """
+    mu = jnp.mean(advantages)
+    sd = jnp.std(advantages) + 1e-6
+    return (advantages - mu) / sd
+
+
+def _policy_loss(theta, states, actions, advantages, beta, spec: NetSpec):
+    logits = policy_logits(theta, states, spec)
+    logp = jax.nn.log_softmax(logits)
+    p = jax.nn.softmax(logits)
+    picked = jnp.take_along_axis(logp, actions[:, None], axis=1)[:, 0]
+    adv = _normalize_adv(advantages)
+    pg = -jnp.mean(picked * adv)  # REINFORCE with advantage (Eqn 2)
+    entropy = -jnp.mean(jnp.sum(p * logp, axis=1))
+    return pg - beta * entropy, entropy
+
+
+def _value_loss(theta_v, states, returns, spec: NetSpec):
+    v = value_forward(theta_v, states, spec)
+    return jnp.mean((v - returns) ** 2)
+
+
+def pg_step(
+    theta,
+    m,
+    v,
+    t,
+    states,
+    actions,
+    advantages,
+    lr,
+    beta,
+    *,
+    spec: NetSpec,
+):
+    """Plain REINFORCE step with caller-provided advantages (no critic).
+
+    Used by the Table-2 "without actor-critic" ablation, where the rust
+    driver substitutes an exponential-moving-average reward baseline for
+    the value network.  Returns ``(θ', m', v', t', loss, entropy)``.
+    """
+    (loss, entropy), grad = jax.value_and_grad(_policy_loss, has_aux=True)(
+        theta, states, actions, advantages, beta, spec
+    )
+    theta, m, v, t = adam_update(theta, m, v, t, grad, lr)
+    return theta, m, v, t, loss, entropy
+
+
+def rl_step(
+    theta,
+    m,
+    v,
+    t,
+    theta_v,
+    mv,
+    vv,
+    tv,
+    states,
+    actions,
+    returns,
+    lr_p,
+    lr_v,
+    beta,
+    *,
+    spec: NetSpec,
+):
+    """One actor-critic update on a replay mini-batch.
+
+    ``returns`` are the empirical discounted cumulative rewards G_t computed
+    by the rust coordinator.  The critic supplies the baseline:
+    advantage = G − V(s) (stop-gradient), the actor maximizes
+    ``logπ(a|s)·adv + β·H(π)``, and the critic regresses V(s) → G
+    (temporal-difference target, §4.3).
+
+    Returns ``(θ', m', v', t', θv', mv', vv', tv', ploss, vloss, entropy)``.
+    """
+    baseline = value_forward(theta_v, states, spec)
+    advantages = returns - jax.lax.stop_gradient(baseline)
+
+    (ploss, entropy), pgrad = jax.value_and_grad(_policy_loss, has_aux=True)(
+        theta, states, actions, advantages, beta, spec
+    )
+    vloss, vgrad = jax.value_and_grad(_value_loss)(
+        theta_v, states, returns, spec
+    )
+
+    theta, m, v, t = adam_update(theta, m, v, t, pgrad, lr_p)
+    theta_v, mv, vv, tv = adam_update(theta_v, mv, vv, tv, vgrad, lr_v)
+    return theta, m, v, t, theta_v, mv, vv, tv, ploss, vloss, entropy
+
+
+# ---------------------------------------------------------------------------
+# jit wrappers (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def build_fns(spec: NetSpec):
+    """Return the dict of jittable fns lowered into artifacts for this J."""
+    return {
+        "policy_infer": jax.jit(partial(policy_infer, spec=spec)),
+        "value_infer": jax.jit(partial(value_infer, spec=spec)),
+        "sl_step": jax.jit(partial(sl_step, spec=spec)),
+        "rl_step": jax.jit(partial(rl_step, spec=spec)),
+        "pg_step": jax.jit(partial(pg_step, spec=spec)),
+    }

@@ -1,0 +1,78 @@
+"""AOT pipeline: lowering produces valid HLO text + consistent metadata."""
+
+import os
+
+import pytest
+
+from compile.aot import example_args, to_hlo_text
+from compile.model import NetSpec, build_fns
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def lowered_small():
+    spec = NetSpec(max_jobs=5)
+    fns = build_fns(spec)
+    args = example_args(spec, 8)
+    return {
+        name: to_hlo_text(fn.lower(*args[name])) for name, fn in fns.items()
+    }
+
+
+def test_hlo_text_has_entry(lowered_small):
+    for name, text in lowered_small.items():
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+
+
+def test_policy_infer_signature(lowered_small):
+    spec = NetSpec(max_jobs=5)
+    text = lowered_small["policy_infer"]
+    assert f"f32[{spec.policy_params}]" in text
+    assert f"f32[{spec.state_dim}]" in text
+    assert f"f32[{spec.num_actions}]" in text
+
+
+def test_rl_step_uses_i32_actions(lowered_small):
+    assert "s32[8]" in lowered_small["rl_step"]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "meta.txt")),
+    reason="run `make artifacts` first",
+)
+def test_meta_matches_specs():
+    kv = {}
+    with open(os.path.join(ART, "meta.txt")) as f:
+        for line in f:
+            line = line.strip()
+            if line and "=" in line:
+                k, v = line.split("=", 1)
+                kv[k] = v
+    assert kv["num_types"] == "8"
+    assert kv["hidden"] == "256"
+    for j in (int(x) for x in kv["js"].split(",")):
+        spec = NetSpec(max_jobs=j)
+        assert int(kv[f"j{j}.S"]) == spec.state_dim
+        assert int(kv[f"j{j}.A"]) == spec.num_actions
+        assert int(kv[f"j{j}.P"]) == spec.policy_params
+        assert int(kv[f"j{j}.PV"]) == spec.value_params
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "meta.txt")),
+    reason="run `make artifacts` first",
+)
+def test_all_artifacts_exist():
+    kv = {}
+    with open(os.path.join(ART, "meta.txt")) as f:
+        for line in f:
+            if "=" in line:
+                k, v = line.strip().split("=", 1)
+                kv[k] = v
+    for j in kv["js"].split(","):
+        for name in ("policy_infer", "value_infer", "sl_step", "rl_step"):
+            path = os.path.join(ART, f"{name}_j{j}.hlo.txt")
+            assert os.path.exists(path), path
+            assert os.path.getsize(path) > 1000, path

@@ -1,0 +1,119 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Includes a hypothesis sweep over shapes/dtypes — the mandated CORE
+correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_mlp import fused_linear, pallas_matmul
+
+
+def rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32).astype(dtype)
+
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 65, 16), (7, 33, 19), (128, 128, 128),
+                                   (256, 260, 256), (130, 256, 61), (1, 1, 1)])
+@pytest.mark.parametrize("act", ["relu", "none"])
+def test_fused_linear_matches_ref(m, k, n, act):
+    x, w, b = rand(0, m, k), rand(1, k, n), rand(2, n)
+    np.testing.assert_allclose(
+        fused_linear(x, w, b, act), ref.ref_fused_linear(x, w, b, act), **TOL
+    )
+
+
+@pytest.mark.parametrize("m,k,n", [(3, 5, 7), (128, 64, 128), (200, 260, 61)])
+def test_matmul_matches_ref(m, k, n):
+    x, w = rand(3, m, k), rand(4, k, n)
+    np.testing.assert_allclose(pallas_matmul(x, w), ref.ref_matmul(x, w), **TOL)
+
+
+@pytest.mark.parametrize("act", ["relu", "none"])
+def test_vjp_matches_ref(act):
+    x, w, b = rand(5, 9, 21), rand(6, 21, 13), rand(7, 13)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(jnp.sin(fused_linear(x, w, b, act)))
+
+    def f_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref.ref_fused_linear(x, w, b, act)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gk, gr):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+def test_bf16_inputs():
+    x, w, b = (rand(8, 32, 48, dtype=jnp.bfloat16),
+               rand(9, 48, 24, dtype=jnp.bfloat16),
+               rand(10, 24, dtype=jnp.bfloat16))
+    got = fused_linear(x, w, b, "relu").astype(jnp.float32)
+    want = ref.ref_fused_linear(x, w, b, "relu").astype(jnp.float32)
+    np.testing.assert_allclose(got, want, **BF16_TOL)
+
+
+def test_jit_composes():
+    x, w, b = rand(11, 17, 29), rand(12, 29, 11), rand(13, 11)
+    got = jax.jit(lambda x, w, b: fused_linear(x, w, b, "relu"))(x, w, b)
+    np.testing.assert_allclose(got, ref.ref_fused_linear(x, w, b, "relu"), **TOL)
+
+
+def test_relu_clamps_exactly_zero():
+    x = -jnp.ones((4, 4))
+    w = jnp.eye(4)
+    b = jnp.zeros((4,))
+    out = fused_linear(x, w, b, "relu")
+    assert (np.asarray(out) == 0.0).all()
+
+
+def test_bad_activation_raises():
+    x, w, b = rand(14, 2, 2), rand(15, 2, 2), rand(16, 2)
+    with pytest.raises(ValueError):
+        ref.ref_fused_linear(x, w, b, "gelu")
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 140),
+    k=st.integers(1, 70),
+    n=st.integers(1, 140),
+    act=st.sampled_from(["relu", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(m, k, n, act, seed):
+    """Property: kernel == oracle for arbitrary (m,k,n) incl. non-divisible."""
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    b = jax.random.normal(kb, (n,))
+    np.testing.assert_allclose(
+        fused_linear(x, w, b, act), ref.ref_fused_linear(x, w, b, act), **TOL
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 40), k=st.integers(1, 40), n=st.integers(1, 40),
+       seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_grad_sweep(m, k, n, seed):
+    """Property: custom VJP == autodiff of the oracle for arbitrary shapes."""
+    kx, kw, kb, kc = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    b = jax.random.normal(kb, (n,))
+    ct = jax.random.normal(kc, (m, n))
+
+    gk = jax.grad(lambda w: jnp.vdot(fused_linear(x, w, b, "relu"), ct))(w)
+    gr = jax.grad(lambda w: jnp.vdot(ref.ref_fused_linear(x, w, b, "relu"), ct))(w)
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-4)

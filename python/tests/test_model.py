@@ -1,0 +1,164 @@
+"""L2 correctness: network shapes, SL/RL steps, Adam semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import NetSpec
+
+
+SPEC = NetSpec(max_jobs=5)
+
+
+def flat_params(spec, out_dim, seed=0, scale=0.1):
+    n = spec.param_count(out_dim)
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (n,))
+
+
+def test_spec_dimensions():
+    assert SPEC.state_dim == 5 * 13
+    assert SPEC.num_actions == 16
+    s, h, a = SPEC.state_dim, SPEC.hidden, SPEC.num_actions
+    assert SPEC.policy_params == s * h + h + h * h + h + h * a + a
+    assert SPEC.value_params == s * h + h + h * h + h + h + 1
+
+
+def test_unflatten_roundtrip():
+    theta = flat_params(SPEC, SPEC.num_actions, seed=1)
+    layers = model.unflatten(theta, SPEC, SPEC.num_actions)
+    assert [w.shape for w, _ in layers] == [(65, 256), (256, 256), (256, 16)]
+    flat_again = jnp.concatenate(
+        [jnp.concatenate([w.reshape(-1), b]) for w, b in layers]
+    )
+    np.testing.assert_array_equal(flat_again, theta)
+
+
+def test_policy_infer_is_distribution():
+    theta = flat_params(SPEC, SPEC.num_actions, seed=2)
+    state = jax.random.normal(jax.random.PRNGKey(3), (SPEC.state_dim,))
+    probs = model.policy_infer(theta, state, SPEC)
+    assert probs.shape == (SPEC.num_actions,)
+    assert np.all(np.asarray(probs) >= 0)
+    np.testing.assert_allclose(np.sum(np.asarray(probs)), 1.0, rtol=1e-5)
+
+
+def test_value_infer_shape():
+    theta_v = flat_params(SPEC, 1, seed=4)
+    state = jax.random.normal(jax.random.PRNGKey(5), (SPEC.state_dim,))
+    v = model.value_infer(theta_v, state, SPEC)
+    assert v.shape == (1,)
+
+
+def test_adam_first_step_is_signed_lr():
+    # After one step from zero state, Adam's update is -lr * sign(grad)
+    # (bias-corrected mhat/sqrt(vhat) = g/|g| up to eps).
+    theta = jnp.array([1.0, -2.0, 3.0])
+    m = jnp.zeros(3)
+    v = jnp.zeros(3)
+    g = jnp.array([0.5, -0.25, 4.0])
+    theta2, m2, v2, t2 = model.adam_update(theta, m, v, 0.0, g, 0.01)
+    np.testing.assert_allclose(
+        theta2, theta - 0.01 * jnp.sign(g), rtol=1e-4, atol=1e-6
+    )
+    assert t2 == 1.0
+
+
+def test_sl_step_overfits_tiny_batch():
+    """Cross-entropy imitation drives the NN to the incumbent's labels."""
+    spec = SPEC
+    theta = flat_params(spec, spec.num_actions, seed=6, scale=0.05)
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    t = jnp.array(0.0)
+    states = jax.random.normal(jax.random.PRNGKey(7), (8, spec.state_dim))
+    labels = jnp.arange(8, dtype=jnp.int32) % spec.num_actions
+
+    first_loss = None
+    for _ in range(60):
+        theta, m, v, t, loss = model.sl_step(
+            theta, m, v, t, states, labels, jnp.array(0.005), spec=spec
+        )
+        if first_loss is None:
+            first_loss = float(loss)
+    assert float(loss) < 0.1 * first_loss
+    logits = model.policy_logits(theta, states, spec)
+    assert np.array_equal(np.argmax(np.asarray(logits), axis=1), np.asarray(labels))
+
+
+def test_rl_step_increases_advantaged_action_prob():
+    spec = SPEC
+    theta = flat_params(spec, spec.num_actions, seed=8, scale=0.05)
+    theta_v = flat_params(spec, 1, seed=9, scale=0.05)
+    zeros_p = jnp.zeros_like(theta)
+    zeros_v = jnp.zeros_like(theta_v)
+    states = jnp.tile(
+        jax.random.normal(jax.random.PRNGKey(10), (1, spec.state_dim)), (4, 1)
+    )
+    # Contrasting returns: advantages are z-scored inside rl_step, so a
+    # constant-return batch would produce exactly zero gradient.
+    actions = jnp.array([3, 3, 5, 5], dtype=jnp.int32)
+    returns = jnp.array([10.0, 10.0, 0.5, 0.5])  # action 3 advantaged
+
+    p_before = model.policy_infer(theta, states[0], spec)[3]
+    out = model.rl_step(
+        theta, zeros_p, zeros_p, jnp.array(0.0),
+        theta_v, zeros_v, zeros_v, jnp.array(0.0),
+        states, actions, returns,
+        jnp.array(0.01), jnp.array(0.01), jnp.array(0.0),
+        spec=spec,
+    )
+    theta2 = out[0]
+    p_after = model.policy_infer(theta2, states[0], spec)[3]
+    assert float(p_after) > float(p_before)
+
+
+def test_rl_step_value_regression():
+    """Critic moves V(s) toward the returns (TD target)."""
+    spec = SPEC
+    theta = flat_params(spec, spec.num_actions, seed=11, scale=0.05)
+    theta_v = flat_params(spec, 1, seed=12, scale=0.05)
+    zp = jnp.zeros_like(theta)
+    zv = jnp.zeros_like(theta_v)
+    states = jax.random.normal(jax.random.PRNGKey(13), (8, spec.state_dim))
+    actions = jnp.zeros(8, dtype=jnp.int32)
+    returns = jnp.full((8,), 5.0)
+
+    m_p, v_p, t_p = zp, zp, jnp.array(0.0)
+    m_v, v_v, t_v = zv, zv, jnp.array(0.0)
+    vloss_hist = []
+    for _ in range(40):
+        out = model.rl_step(
+            theta, m_p, v_p, t_p, theta_v, m_v, v_v, t_v,
+            states, actions, returns,
+            jnp.array(0.0), jnp.array(0.01), jnp.array(0.0),
+            spec=spec,
+        )
+        theta, m_p, v_p, t_p = out[0], out[1], out[2], out[3]
+        theta_v, m_v, v_v, t_v = out[4], out[5], out[6], out[7]
+        vloss_hist.append(float(out[9]))
+    assert vloss_hist[-1] < 0.2 * vloss_hist[0]
+
+
+def test_rl_entropy_positive_and_bounded():
+    spec = SPEC
+    theta = flat_params(spec, spec.num_actions, seed=14, scale=0.01)
+    theta_v = flat_params(spec, 1, seed=15, scale=0.01)
+    z = jnp.zeros_like(theta)
+    zv = jnp.zeros_like(theta_v)
+    states = jax.random.normal(jax.random.PRNGKey(16), (4, spec.state_dim))
+    out = model.rl_step(
+        theta, z, z, jnp.array(0.0), theta_v, zv, zv, jnp.array(0.0),
+        states, jnp.zeros(4, dtype=jnp.int32), jnp.zeros(4),
+        jnp.array(1e-4), jnp.array(1e-4), jnp.array(0.1), spec=spec,
+    )
+    entropy = float(out[10])
+    assert 0.0 < entropy <= float(np.log(spec.num_actions)) + 1e-5
+
+
+@pytest.mark.parametrize("j", [5, 10, 20])
+def test_specs_scale_with_j(j):
+    spec = NetSpec(max_jobs=j)
+    assert spec.state_dim == j * 13
+    assert spec.num_actions == 3 * j + 1

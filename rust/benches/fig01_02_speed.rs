@@ -1,0 +1,72 @@
+//! Fig 1 + Fig 2: the motivation measurements.
+//!
+//! Fig 1 — training speedup when scaling workers and PSs together
+//! (w = p = k, k = 1..12) for ResNet-50, VGG-16 and Seq2Seq: the paper
+//! observes a *decreasing-return* curve (communication overhead grows).
+//!
+//! Fig 2 — training speed at a fixed task budget w + p = 12 under the
+//! three splits the paper tests (PS:worker = 4:8, 6:6, 8:4): the best
+//! split is model-dependent (Seq2Seq fastest at 4 PS : 8 workers,
+//! VGG-16 at 6 : 6).
+
+use dl2::cluster::{catalog, speed};
+use dl2::util::Table;
+
+fn main() {
+    let cat = catalog();
+    let models = ["resnet50", "vgg16", "seq2seq"];
+
+    // --- Fig 1.
+    let mut t1 = Table::new(
+        "Fig 1: speedup vs #workers (=#PS), relative to (1w,1PS)",
+        &["k", "resnet50", "vgg16", "seq2seq"],
+    );
+    for k in 1..=12usize {
+        let mut row = vec![k.to_string()];
+        for m in models {
+            let jt = cat.iter().find(|j| j.name == m).unwrap();
+            row.push(format!("{:.2}", speed::relative_speed(&jt.speed, k, k)));
+        }
+        t1.row(row);
+    }
+    t1.emit("fig01_speedup");
+
+    // Paper shape check: sublinear by k=12.
+    for m in models {
+        let jt = cat.iter().find(|j| j.name == m).unwrap();
+        let s12 = speed::relative_speed(&jt.speed, 12, 12);
+        assert!(s12 < 12.0, "{m}: superlinear speedup?");
+        assert!(s12 > 1.5, "{m}: no scaling at all?");
+    }
+
+    // --- Fig 2.
+    let mut t2 = Table::new(
+        "Fig 2: relative speed at w+p=12 under PS:worker splits",
+        &["ps:worker", "vgg16", "seq2seq"],
+    );
+    for (p, w) in [(4usize, 8usize), (6, 6), (8, 4)] {
+        let mut row = vec![format!("{p}:{w}")];
+        for m in ["vgg16", "seq2seq"] {
+            let jt = cat.iter().find(|j| j.name == m).unwrap();
+            row.push(format!("{:.3}", speed::relative_speed(&jt.speed, w, p)));
+        }
+        t2.row(row);
+    }
+    t2.emit("fig02_ratio");
+
+    // Paper result check: Seq2Seq best at 4PS:8W, VGG-16 best at 6:6.
+    let best = |m: &str| {
+        let jt = cat.iter().find(|j| j.name == m).unwrap();
+        [(4usize, 8usize), (6, 6), (8, 4)]
+            .into_iter()
+            .max_by(|a, b| {
+                speed::relative_speed(&jt.speed, a.1, a.0)
+                    .partial_cmp(&speed::relative_speed(&jt.speed, b.1, b.0))
+                    .unwrap()
+            })
+            .unwrap()
+    };
+    assert_eq!(best("seq2seq"), (4, 8), "seq2seq should peak at 4 PS : 8 workers");
+    assert_eq!(best("vgg16"), (6, 6), "vgg16 should peak at 6 : 6");
+    println!("shape checks passed: decreasing returns (Fig 1), model-dependent best split (Fig 2)");
+}

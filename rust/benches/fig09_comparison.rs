@@ -1,0 +1,157 @@
+//! Fig 9 — the headline comparison: average job completion time of DL²
+//! vs DRF, Tetris, Optimus and OfflineRL on the validation workload.
+//!
+//! Paper result: DL² beats DRF by 44.1%, Optimus by 17.5% and OfflineRL by
+//! 37.9%.  The *shape* to reproduce: DL² < Optimus < Tetris < DRF, and
+//! OfflineRL notably worse than online-trained DL² (its offline simulator
+//! uses an inaccurate analytical speed model and no interference).
+//!
+//! Scale with DL2_BENCH_SCALE (e.g. 0.2 for a quick run).
+
+use dl2::pipeline::{
+    baseline_by_name, baseline_jct, run_pipeline, validation_trace, PipelineConfig,
+};
+use dl2::rl::{evaluate_policy, OnlineTrainer};
+use dl2::runtime::Engine;
+use dl2::scheduler::offline_rl::{offline_opts, offline_rl_trainer};
+use dl2::scheduler::{Dl2Config, Dl2Scheduler};
+use dl2::util::{scaled, Table};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = PipelineConfig {
+        sl_steps: scaled(250, 30),
+        rl_episodes: scaled(40, 4),
+        ..Default::default()
+    };
+    let val = validation_trace(&cfg.trace);
+    let dir = dl2::runtime::default_artifacts_dir();
+
+    // --- DL2: SL warm-up + online RL.
+    eprintln!("[fig09] training DL2 (SL {} steps + RL {} episodes)...", cfg.sl_steps, cfg.rl_episodes);
+    let result = run_pipeline(&cfg, Engine::load(&dir)?)?;
+    let dl2_jct = result.final_jct;
+
+    // --- OfflineRL: same NN + same training settings as DL², but
+    // everything happens inside the analytical-model simulator (SL
+    // bootstrap on the *simulated* incumbent traces, then offline RL);
+    // the policy is frozen at deployment on the live cluster.
+    eprintln!("[fig09] training OfflineRL...");
+    let mut off_sched = Dl2Scheduler::new(
+        Engine::load(&dir)?,
+        Dl2Config {
+            j: cfg.dl2.j,
+            seed: cfg.dl2.seed ^ 0x0FF1,
+            ..cfg.dl2.clone()
+        },
+    );
+    {
+        use dl2::rl::{generate_dataset, train_sl};
+        use dl2::scheduler::offline_rl::{analytical_catalog, offline_env};
+        use dl2::trace::{generate, TraceConfig};
+        // SL inside the offline simulator (analytic catalog, no noise).
+        let env = offline_env(&cfg.cluster);
+        let cat = analytical_catalog();
+        let traces: Vec<_> = (0..cfg.sl_traces)
+            .map(|i| {
+                generate(&TraceConfig {
+                    seed: cfg.trace.seed.wrapping_add(500 + i as u64),
+                    ..cfg.trace.clone()
+                })
+            })
+            .collect();
+        // Dataset from DRF runs on the *analytic* environment.
+        let mut drf = dl2::scheduler::Drf;
+        let mut dataset = Vec::new();
+        for (e, specs) in traces.iter().enumerate() {
+            let mut cluster = dl2::cluster::Cluster::with_catalog(
+                dl2::cluster::ClusterConfig {
+                    seed: env.seed.wrapping_add(90 + e as u64),
+                    ..env.clone()
+                },
+                cat.clone(),
+            );
+            let mut next = 0usize;
+            loop {
+                while next < specs.len() && specs[next].arrival_slot <= cluster.slot {
+                    cluster.submit(specs[next].type_idx, specs[next].total_epochs, 0.0);
+                    next += 1;
+                }
+                let active = cluster.active_jobs();
+                let alloc = dl2::scheduler::Scheduler::schedule(&mut drf, &cluster, &active);
+                let target_of = |id: usize| {
+                    alloc.iter().find(|a| a.0 == id).map(|&(_, w, p)| (w, p)).unwrap_or((0, 0))
+                };
+                for batch in active.chunks(cfg.dl2.j) {
+                    let targets: Vec<_> = batch.iter().map(|&id| target_of(id)).collect();
+                    dataset.extend(dl2::rl::decompose_batch(
+                        &cluster, batch, &targets, cfg.dl2.j, 8,
+                    ));
+                }
+                let placement = cluster.apply_allocation(&alloc);
+                cluster.advance(&placement);
+                if (next >= specs.len() && cluster.all_finished())
+                    || cluster.slot >= cfg.rl_opts.max_slots
+                {
+                    break;
+                }
+            }
+        }
+        let mut rng = dl2::util::Rng::new(0x0FF1);
+        train_sl(&mut off_sched, &dataset, cfg.sl_steps, &mut rng);
+    }
+    let mut off_trainer = OnlineTrainer::new(off_sched, offline_opts());
+    offline_rl_trainer(
+        &mut off_trainer,
+        &cfg.cluster,
+        &cfg.trace,
+        scaled(40, 4), // comparable RL budget, all offline
+    );
+    let offline_jct = evaluate_policy(
+        &mut off_trainer.sched,
+        &cfg.cluster,
+        &val,
+        cfg.rl_opts.max_slots,
+    );
+
+    // --- Heuristic baselines.
+    let mut t = Table::new(
+        "Fig 9: average job completion time (slots), validation workload",
+        &["scheduler", "avg_jct", "dl2_gain_%", "paper_gain_%"],
+    );
+    let paper = [("drf", 44.1), ("tetris", f64::NAN), ("optimus", 17.5)];
+    let mut jcts = std::collections::BTreeMap::new();
+    for name in ["drf", "tetris", "optimus"] {
+        let mut mk = || baseline_by_name(name).unwrap();
+        let jct = baseline_jct(&mut mk, &cfg.cluster, &val, 3, cfg.rl_opts.max_slots);
+        jcts.insert(name.to_string(), jct);
+    }
+    for (name, paper_gain) in paper {
+        let jct = jcts[name];
+        let gain = 100.0 * (jct - dl2_jct) / jct;
+        t.row(vec![
+            name.into(),
+            format!("{jct:.3}"),
+            format!("{gain:+.1}"),
+            if paper_gain.is_nan() {
+                "-".into()
+            } else {
+                format!("+{paper_gain:.1}")
+            },
+        ]);
+    }
+    let off_gain = 100.0 * (offline_jct - dl2_jct) / offline_jct;
+    t.row(vec![
+        "offline_rl".into(),
+        format!("{offline_jct:.3}"),
+        format!("{off_gain:+.1}"),
+        "+37.9".into(),
+    ]);
+    t.row(vec!["dl2".into(), format!("{dl2_jct:.3}"), "0.0".into(), "0.0".into()]);
+    t.emit("fig09_comparison");
+
+    println!(
+        "DL2 {dl2_jct:.2} | DRF {:.2} | Tetris {:.2} | Optimus {:.2} | OfflineRL {offline_jct:.2}",
+        jcts["drf"], jcts["tetris"], jcts["optimus"]
+    );
+    Ok(())
+}

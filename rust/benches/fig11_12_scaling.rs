@@ -1,0 +1,92 @@
+//! Fig 11 + Fig 12: elastic-scaling overhead.
+//!
+//! Fig 11 — average worker training-suspension time when adding 1–4 PSs
+//! to a running ResNet-50 job: checkpoint-restart (tens of seconds,
+//! dominated by relaunch + restore) vs DL²'s hot scaling (tens of ms,
+//! growing roughly linearly since PSs are added one by one).
+//!
+//! Fig 12 — per-step timing of the 4-step scaling protocol when adding a
+//! PS across all 8 Table-1 models (ascending model size): steps 1–2 are
+//! negligible; step 3 (parameter migration) grows with model size; only
+//! step 4 blocks training.
+
+use dl2::cluster::catalog;
+use dl2::elastic::{checkpoint::measure_checkpoint_scaling, ElasticConfig, ElasticJob};
+use dl2::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    // Fast iterations so the scaling-clock wait (clock_lead × iter_ms)
+    // does not mask the migration payload time in step 3.
+    let cfg = ElasticConfig {
+        iter_ms: 2,
+        ..ElasticConfig::default()
+    };
+    let resnet = catalog().into_iter().find(|j| j.name == "resnet50").unwrap();
+
+    // --- Fig 11.
+    let mut t11 = Table::new(
+        "Fig 11: avg worker suspension when adding k PSs to resnet50 (ms)",
+        &["k", "hot_scaling_ms", "checkpoint_measured_ms", "checkpoint_total_ms"],
+    );
+    for k in 1..=4usize {
+        // Hot: add k PSs one by one, sum the suspensions (the paper adds
+        // PSs sequentially, so overhead grows ~linearly in k).
+        let mut job = ElasticJob::start(cfg.clone(), resnet.model_mb, 2, 2);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut hot_ms = 0.0;
+        for _ in 0..k {
+            hot_ms += job.add_ps().avg_suspension_ms;
+        }
+        assert!(job.verify_integrity());
+        job.shutdown();
+
+        // Checkpoint: one restart regardless of k.
+        let ck = measure_checkpoint_scaling(&cfg, resnet.model_mb, 2, 2, k)?;
+        t11.row(vec![
+            k.to_string(),
+            format!("{hot_ms:.1}"),
+            format!("{:.1}", ck.checkpoint_ms + ck.restore_ms),
+            format!("{:.1}", ck.total_suspension_ms()),
+        ]);
+    }
+    t11.emit("fig11_scaling_overhead");
+
+    // --- Fig 12.
+    let mut models: Vec<_> = catalog();
+    models.sort_by(|a, b| a.model_mb.partial_cmp(&b.model_mb).unwrap());
+    let mut t12 = Table::new(
+        "Fig 12: per-step timing of adding one PS (ms), models by size",
+        &["model", "size_mb", "step1_register", "step2_assign", "step3_migrate", "step4_worker_upd"],
+    );
+    let mut step3: Vec<(f64, f64)> = Vec::new();
+    for jt in &models {
+        let mut job = ElasticJob::start(cfg.clone(), jt.model_mb, 2, 2);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let r = job.add_ps();
+        assert!(job.verify_integrity(), "{}", jt.name);
+        job.shutdown();
+        step3.push((jt.model_mb, r.migration_ms));
+        t12.row(vec![
+            jt.name.into(),
+            format!("{:.0}", jt.model_mb),
+            format!("{:.2}", r.registration_ms),
+            format!("{:.2}", r.assignment_ms),
+            format!("{:.2}", r.migration_ms),
+            format!("{:.2}", r.worker_update_ms),
+        ]);
+    }
+    t12.emit("fig12_scaling_steps");
+
+    // Shape check: the largest model's migration dominates the smallest's
+    // (step 3 includes a constant clock-wait ≈ clock_lead·iter_ms, so the
+    // comparison is meaningful only once the payload dominates — VGG-16's
+    // ~260 MB of moved blocks vs CTC's ~1 MB).
+    let small = step3.first().unwrap().1;
+    let big = step3.last().unwrap().1;
+    println!("step-3 migration: smallest model {small:.1}ms, largest {big:.1}ms");
+    assert!(
+        big > small,
+        "migration time should grow with model size ({small} vs {big})"
+    );
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Fig 15 + Fig 16: generality of the learning recipe.
+//!
+//! Fig 15 — unseen job types: warm up + early RL on only the first 4
+//! Table-1 model categories, then introduce the remaining types mid-
+//! training; the policy adapts toward the "ideal" baseline trained on all
+//! types from the start.
+//!
+//! Fig 16 — alternative incumbents: supervised warm-up from FIFO and SRTF
+//! instead of DRF; in each case SL matches the incumbent and SL+RL
+//! improves well beyond it (paper: 41.3% over SRTF).
+
+use dl2::pipeline::{
+    baseline_by_name, baseline_jct, run_pipeline, validation_trace, Incumbent, PipelineConfig,
+};
+use dl2::rl::{generate_dataset, train_sl, OnlineTrainer, RlOptions};
+use dl2::runtime::Engine;
+use dl2::scheduler::{Dl2Scheduler, Drf};
+use dl2::trace::{generate, TraceConfig};
+use dl2::util::{scaled, Rng, Table};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = PipelineConfig {
+        sl_steps: scaled(250, 30),
+        rl_episodes: scaled(24, 4),
+        ..Default::default()
+    };
+    let dir = dl2::runtime::default_artifacts_dir();
+    // Validation always contains ALL job types.
+    let val = validation_trace(&cfg.trace);
+    let max_slots = cfg.rl_opts.max_slots;
+
+    // --- Fig 15.
+    eprintln!("[fig15] restricted-then-expanded training...");
+    let phase = scaled(8, 2); // episodes per phase
+    let mut curve: Vec<(usize, f64, &str)> = Vec::new();
+    {
+        let engine = Engine::load(&dir)?;
+        let mut sched = Dl2Scheduler::new(engine, cfg.dl2.clone());
+        // SL restricted to the first 4 types.
+        let restricted = TraceConfig {
+            type_limit: Some(4),
+            ..cfg.trace.clone()
+        };
+        let traces: Vec<_> = (0..cfg.sl_traces)
+            .map(|i| generate(&TraceConfig { seed: 10 + i as u64, ..restricted.clone() }))
+            .collect();
+        let data = generate_dataset(&mut Drf, &cfg.cluster, &traces, cfg.dl2.j, 8, max_slots);
+        train_sl(&mut sched, &data, cfg.sl_steps, &mut Rng::new(5));
+        let mut trainer = OnlineTrainer::new(sched, RlOptions::default());
+        // Phase 1: restricted types; phases 2 and 3: progressively all 8.
+        for (p, limit) in [(0usize, Some(4usize)), (1, Some(6)), (2, None)] {
+            for ep in 0..phase {
+                let specs = generate(&TraceConfig {
+                    seed: 2000 + (p * phase + ep) as u64,
+                    type_limit: limit,
+                    ..cfg.trace.clone()
+                });
+                trainer.train_episode(&cfg.cluster, &specs);
+                let jct = trainer.evaluate(&cfg.cluster, &val);
+                let label = ["4_types", "6_types(new!)", "8_types(new!)"][p];
+                curve.push((trainer.updates, jct, label));
+            }
+        }
+    }
+    // Ideal: trained on all categories from the beginning.
+    eprintln!("[fig15] ideal (all types) baseline...");
+    let ideal = run_pipeline(
+        &PipelineConfig {
+            rl_episodes: 3 * phase,
+            ..cfg.clone()
+        },
+        Engine::load(&dir)?,
+    )?;
+    let mut t15 = Table::new(
+        "Fig 15: adapting to unseen job types (validation avg JCT)",
+        &["updates", "avg_jct", "phase", "ideal_final"],
+    );
+    for (u, j, label) in &curve {
+        t15.row(vec![
+            u.to_string(),
+            format!("{j:.3}"),
+            label.to_string(),
+            format!("{:.3}", ideal.final_jct),
+        ]);
+    }
+    t15.emit("fig15_unseen");
+    let final_jct = curve.last().unwrap().1;
+    println!(
+        "after adaptation: {final_jct:.2} vs ideal {:.2} (paper: converges to ideal)",
+        ideal.final_jct
+    );
+
+    // --- Fig 16.
+    let mut t16 = Table::new(
+        "Fig 16: SL from different incumbents (validation avg JCT)",
+        &["incumbent", "incumbent_jct", "dl2_sl_only", "dl2_sl_rl", "speedup_vs_incumbent_%"],
+    );
+    for inc in [Incumbent::Fifo, Incumbent::Srtf, Incumbent::Drf] {
+        eprintln!("[fig16] incumbent {}...", inc.name());
+        let res = run_pipeline(
+            &PipelineConfig {
+                incumbent: inc,
+                ..cfg.clone()
+            },
+            Engine::load(&dir)?,
+        )?;
+        let mut mk = || baseline_by_name(inc.name()).unwrap();
+        let inc_jct = baseline_jct(&mut mk, &cfg.cluster, &val, 3, max_slots);
+        let speedup = 100.0 * (inc_jct - res.final_jct) / inc_jct;
+        t16.row(vec![
+            inc.name().into(),
+            format!("{inc_jct:.3}"),
+            format!("{:.3}", res.sl_jct),
+            format!("{:.3}", res.final_jct),
+            format!("{speedup:+.1}"),
+        ]);
+    }
+    t16.emit("fig16_incumbents");
+    println!("paper: SL+RL beats each incumbent (e.g. +41.3% over SRTF)");
+    Ok(())
+}

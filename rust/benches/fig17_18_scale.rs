@@ -1,0 +1,77 @@
+//! Fig 17 + Fig 18: scaling the scheduler itself.
+//!
+//! Fig 17 — concurrent-job bound J: when more jobs are active than the
+//! NN's J, they are scheduled in batches of J.  Small J loses the global
+//! view and hurts JCT; J large enough to cover the max concurrency is
+//! best.  (Each J uses its own AOT artifact family.)
+//!
+//! Fig 18 — federated A3C training across k clusters: global performance
+//! stays stable as k grows, while total updates per round scale ×k
+//! (the paper's "converges almost x times faster").
+
+use dl2::pipeline::{validation_trace, PipelineConfig};
+use dl2::rl::{Federation, RlOptions};
+use dl2::runtime::Engine;
+use dl2::scheduler::Dl2Config;
+use dl2::util::{scaled, Table};
+
+fn main() -> anyhow::Result<()> {
+    let base = PipelineConfig {
+        sl_steps: scaled(200, 25),
+        rl_episodes: scaled(16, 3),
+        ..Default::default()
+    };
+    let dir = dl2::runtime::default_artifacts_dir();
+    let val = validation_trace(&base.trace);
+
+    // --- Fig 17: J sweep over the available artifact families.
+    let mut t17 = Table::new(
+        "Fig 17: concurrent job bound J vs validation avg JCT",
+        &["J", "avg_jct"],
+    );
+    for j in [5usize, 10, 20, 40] {
+        eprintln!("[fig17] training with J={j}...");
+        let cfg = PipelineConfig {
+            dl2: Dl2Config {
+                j,
+                ..base.dl2.clone()
+            },
+            ..base.clone()
+        };
+        let res = dl2::pipeline::run_pipeline(&cfg, Engine::load(&dir)?)?;
+        t17.row(vec![j.to_string(), format!("{:.3}", res.final_jct)]);
+    }
+    t17.emit("fig17_jsweep");
+    println!("paper shape: small J (batched scheduling) hurts; large-enough J plateaus");
+
+    // --- Fig 18: federation size sweep.
+    let rounds = scaled(6, 2);
+    let mut t18 = Table::new(
+        "Fig 18: federated A3C — clusters vs global validation JCT",
+        &["clusters", "final_jct", "rounds", "total_updates"],
+    );
+    for k in [1usize, 2, 3, 4] {
+        eprintln!("[fig18] federation k={k}...");
+        let mut fed = Federation::new(
+            k,
+            &dir,
+            &base.dl2,
+            &base.cluster,
+            &base.trace,
+            &RlOptions::default(),
+        )?;
+        for _ in 0..rounds {
+            fed.round();
+        }
+        let jct = fed.evaluate(&val);
+        t18.row(vec![
+            k.to_string(),
+            format!("{jct:.3}"),
+            rounds.to_string(),
+            fed.total_updates().to_string(),
+        ]);
+    }
+    t18.emit("fig18_federated");
+    println!("paper shape: global JCT stable in k; updates/round scale ~k (k× faster convergence)");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Runtime performance (§6.1 + EXPERIMENTS.md §Perf):
+//!
+//! * policy inference latency — the paper claims "mapping the cluster and
+//!   job states to a scheduling decision takes less than 3 ms";
+//! * SL / RL / PG update-step latency (batch = 256);
+//! * whole-slot scheduling latency (multi-inference sequence) and
+//!   end-to-end episode throughput.
+
+use std::time::Instant;
+
+use dl2::cluster::{Cluster, ClusterConfig};
+use dl2::runtime::{Engine, TrainState};
+use dl2::scheduler::{Dl2Config, Dl2Scheduler, Scheduler};
+use dl2::util::stats::percentile;
+use dl2::util::Table;
+
+fn time_n<F: FnMut()>(n: usize, mut f: F) -> Vec<f64> {
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples
+}
+
+fn row(t: &mut Table, name: &str, ms: &[f64]) {
+    let mean: f64 = ms.iter().sum::<f64>() / ms.len() as f64;
+    t.row(vec![
+        name.into(),
+        format!("{mean:.3}"),
+        format!("{:.3}", percentile(ms, 50.0)),
+        format!("{:.3}", percentile(ms, 99.0)),
+    ]);
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = dl2::runtime::default_artifacts_dir();
+    let mut engine = Engine::load(&dir)?;
+    let j = 10usize;
+    engine.warmup(j)?;
+    let spec = *engine.meta.spec(j);
+    let batch = engine.meta.batch;
+    let mut rng = dl2::util::Rng::new(42);
+    let mut pol = TrainState::init_policy(&spec, engine.meta.hidden, &mut rng);
+    let mut val = TrainState::init_value(&spec, engine.meta.hidden, &mut rng);
+
+    let mut t = Table::new(
+        "runtime latency (ms) — J=10, batch=256",
+        &["op", "mean", "p50", "p99"],
+    );
+
+    // Single-state policy inference (§6.1: < 3 ms).
+    let state: Vec<f32> = (0..spec.state_dim).map(|_| rng.f32()).collect();
+    let ms = time_n(300, || {
+        engine.policy_infer(j, &pol.theta, &state).unwrap();
+    });
+    row(&mut t, "policy_infer (literal path)", &ms);
+
+    // Device-resident-θ hot path (what the scheduler actually calls).
+    let ms = time_n(300, || {
+        engine.policy_infer_state(j, &pol, &state).unwrap();
+    });
+    let infer_mean: f64 = ms.iter().sum::<f64>() / ms.len() as f64;
+    row(&mut t, "policy_infer_state (cached θ)", &ms);
+
+    // Training steps.
+    let states: Vec<f32> = (0..batch * spec.state_dim).map(|_| rng.f32()).collect();
+    let labels: Vec<i32> = (0..batch).map(|i| (i % spec.num_actions) as i32).collect();
+    let returns = vec![1.0f32; batch];
+    let ms = time_n(30, || {
+        engine.sl_step(j, &mut pol, &states, &labels, 1e-4).unwrap();
+    });
+    row(&mut t, "sl_step", &ms);
+    let ms = time_n(30, || {
+        engine
+            .rl_step(j, &mut pol, &mut val, &states, &labels, &returns, 1e-5, 1e-5, 0.1)
+            .unwrap();
+    });
+    row(&mut t, "rl_step", &ms);
+    let ms = time_n(30, || {
+        engine
+            .pg_step(j, &mut pol, &states, &labels, &returns, 1e-5, 0.1)
+            .unwrap();
+    });
+    row(&mut t, "pg_step", &ms);
+
+    // Whole-slot scheduling decision (multi-inference, 10 active jobs).
+    let mut sched = Dl2Scheduler::new(Engine::load(&dir)?, Dl2Config { j, ..Default::default() });
+    sched.training = false;
+    let mut cluster = Cluster::new(ClusterConfig::default());
+    for i in 0..10 {
+        cluster.submit(i % 8, 20.0, 0.0);
+    }
+    let active = cluster.active_jobs();
+    let ms = time_n(50, || {
+        let _ = sched.schedule(&cluster, &active);
+    });
+    row(&mut t, "full_slot_decision(10 jobs)", &ms);
+    t.emit("perf_runtime");
+
+    println!(
+        "policy inference mean {infer_mean:.2} ms — paper §6.1 claims < 3 ms: {}",
+        if infer_mean < 3.0 { "MET" } else { "NOT met" }
+    );
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Table 2: effectiveness of the training techniques.
+//!
+//! Paper: removing actor-critic slows avg JCT by 21.1%, removing
+//! job-aware exploration by 28.8%, removing experience replay by 39.6%.
+//! We rerun the full SL+RL pipeline with each technique disabled (mean ±
+//! std over seeds) and report the slowdown vs the full system.
+
+use dl2::pipeline::{run_pipeline, PipelineConfig};
+use dl2::runtime::Engine;
+use dl2::scheduler::{Dl2Config, ExploreConfig};
+use dl2::util::stats::{mean, std_dev};
+use dl2::util::{scaled, Table};
+
+struct Variant {
+    name: &'static str,
+    paper_slowdown: f64,
+    use_critic: bool,
+    explore: bool,
+    use_replay: bool,
+}
+
+fn main() -> anyhow::Result<()> {
+    let seeds = scaled(3, 2) as u64;
+    let base = PipelineConfig {
+        sl_steps: scaled(250, 30),
+        rl_episodes: scaled(24, 4),
+        ..Default::default()
+    };
+    let dir = dl2::runtime::default_artifacts_dir();
+
+    let variants = [
+        Variant { name: "full", paper_slowdown: 0.0, use_critic: true, explore: true, use_replay: true },
+        Variant { name: "-actor_critic", paper_slowdown: 21.1, use_critic: false, explore: true, use_replay: true },
+        Variant { name: "-exploration", paper_slowdown: 28.8, use_critic: true, explore: false, use_replay: true },
+        Variant { name: "-experience_replay", paper_slowdown: 39.6, use_critic: true, explore: true, use_replay: false },
+    ];
+
+    let mut t = Table::new(
+        "Table 2: ablation of training techniques (avg JCT, slots)",
+        &["variant", "avg_jct_mean", "avg_jct_std", "slowdown_%", "paper_slowdown_%"],
+    );
+    let mut full_mean = None;
+    for v in &variants {
+        eprintln!("[tab2] variant {} ({} seeds)...", v.name, seeds);
+        let mut jcts = Vec::new();
+        for s in 0..seeds {
+            let mut cfg = base.clone();
+            cfg.dl2 = Dl2Config {
+                seed: 7 + s * 1009,
+                explore: ExploreConfig {
+                    enabled: v.explore,
+                    ..ExploreConfig::default()
+                },
+                // Entropy regularization belongs to the exploration
+                // machinery too (§4.3).
+                beta: if v.explore { cfg.dl2.beta } else { 0.0 },
+                ..cfg.dl2
+            };
+            cfg.rl_opts.use_critic = v.use_critic;
+            cfg.rl_opts.use_replay = v.use_replay;
+            let res = run_pipeline(&cfg, Engine::load(&dir)?)?;
+            jcts.push(res.final_jct);
+        }
+        let m = mean(&jcts);
+        let sd = std_dev(&jcts);
+        if v.name == "full" {
+            full_mean = Some(m);
+        }
+        let slowdown = full_mean.map(|f| 100.0 * (m - f) / f).unwrap_or(0.0);
+        t.row(vec![
+            v.name.into(),
+            format!("{m:.3}"),
+            format!("{sd:.3}"),
+            format!("{slowdown:+.1}"),
+            format!("{:+.1}", v.paper_slowdown),
+        ]);
+    }
+    t.emit("tab2_ablation");
+    println!("paper shape: every removed technique slows completion (replay worst)");
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Job lifecycle: arrival, per-slot progress, completion.
+
+use crate::util::Rng;
+
+/// One DL training job in the cluster.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: usize,
+    /// Index into the Table-1 catalog (the NN's one-hot type).
+    pub type_idx: usize,
+    /// Slot at which the job was submitted.
+    pub arrival_slot: usize,
+    /// User-specified total epochs to train (§3.1).  May be an estimate;
+    /// `true_epochs` is what convergence actually takes (Fig 14 studies the
+    /// gap).
+    pub total_epochs: f64,
+    /// Ground-truth epochs to convergence (== total_epochs unless an
+    /// estimation error is injected).
+    pub true_epochs: f64,
+    /// Epochs trained so far.
+    pub epochs_done: f64,
+    /// Scheduling slots this job has run (the state's d_i).
+    pub slots_run: usize,
+    /// Current allocation: workers / parameter servers.
+    pub workers: usize,
+    pub ps: usize,
+    /// Slot the job finished in, if complete.
+    pub finished_slot: Option<usize>,
+    /// Per-job interference RNG stream (paper Fig 4: run-to-run variation).
+    pub rng: Rng,
+    /// Per-job static speed factor, resampled per run (slow/fast replicas
+    /// land on different machines / suffer different neighbours).
+    pub speed_factor: f64,
+}
+
+impl Job {
+    pub fn new(
+        id: usize,
+        type_idx: usize,
+        arrival_slot: usize,
+        total_epochs: f64,
+        rng: Rng,
+    ) -> Job {
+        Job {
+            id,
+            type_idx,
+            arrival_slot,
+            total_epochs,
+            true_epochs: total_epochs,
+            epochs_done: 0.0,
+            slots_run: 0,
+            workers: 0,
+            ps: 0,
+            finished_slot: None,
+            rng,
+            speed_factor: 1.0,
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished_slot.is_some()
+    }
+
+    /// Remaining epochs against the *user-declared* total (what the
+    /// scheduler sees — state component e_i).
+    pub fn remaining_epochs(&self) -> f64 {
+        (self.total_epochs - self.epochs_done).max(0.0)
+    }
+
+    /// Remaining epochs against ground truth (what actually gates
+    /// completion).
+    pub fn true_remaining(&self) -> f64 {
+        (self.true_epochs - self.epochs_done).max(0.0)
+    }
+
+    /// Advance one slot with `epochs` of progress; returns the *normalized*
+    /// progress t_i/E_i used by the reward (Eqn 1).
+    pub fn advance(&mut self, epochs: f64, slot: usize) -> f64 {
+        debug_assert!(self.finished_slot.is_none());
+        let before = self.epochs_done;
+        self.epochs_done += epochs;
+        self.slots_run += 1;
+        if self.epochs_done >= self.true_epochs {
+            self.epochs_done = self.true_epochs;
+            self.finished_slot = Some(slot);
+        }
+        (self.epochs_done - before) / self.total_epochs.max(1e-9)
+    }
+
+    /// Completion time in slots (arrival → finish inclusive).
+    pub fn completion_time(&self) -> Option<usize> {
+        self.finished_slot.map(|f| f + 1 - self.arrival_slot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> Job {
+        Job::new(0, 2, 3, 10.0, Rng::new(1))
+    }
+
+    #[test]
+    fn advance_accumulates_and_finishes() {
+        let mut j = job();
+        let r = j.advance(4.0, 3);
+        assert!((r - 0.4).abs() < 1e-12);
+        assert!(!j.is_finished());
+        j.advance(7.0, 4); // overshoot clamps at true_epochs
+        assert!(j.is_finished());
+        assert_eq!(j.epochs_done, 10.0);
+        assert_eq!(j.completion_time(), Some(2));
+    }
+
+    #[test]
+    fn reward_is_normalized_progress() {
+        let mut j = job();
+        j.advance(9.0, 3);
+        // Only 1 epoch of true work left: reward clamps to remaining/E.
+        let r = j.advance(5.0, 4);
+        assert!((r - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimation_error_splits_totals() {
+        let mut j = job();
+        j.true_epochs = 12.0; // user under-estimated (error +20%)
+        j.advance(10.0, 5);
+        assert!(!j.is_finished());
+        assert_eq!(j.remaining_epochs(), 0.0); // scheduler thinks it's done
+        assert_eq!(j.true_remaining(), 2.0); // but it still needs 2 epochs
+        j.advance(2.0, 6);
+        assert!(j.is_finished());
+    }
+}

@@ -1,0 +1,356 @@
+//! The DL-cluster substrate: servers, jobs, training-speed model,
+//! interference, and the slot-by-slot environment the schedulers act on.
+//!
+//! This is the simulated stand-in for the paper's 13-server testbed and
+//! 500-server trace-driven simulator (DESIGN.md §Substitutions): the
+//! scheduler-visible interface — job states in, (w, p) allocations out,
+//! per-slot epoch progress and rewards back — matches §3/§4.1 exactly.
+
+pub mod job;
+pub mod server;
+pub mod speed;
+pub mod types;
+
+pub use job::Job;
+pub use server::Placement;
+pub use types::{catalog, JobType, Res, SpeedParams, NUM_TYPES};
+
+use crate::util::Rng;
+
+/// Environment configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub num_servers: usize,
+    pub server_cap: Res,
+    /// Upper bound on workers (and PSs) per job — keeps the action space
+    /// meaningful; the paper observes diminishing returns past ~12 (Fig 1).
+    pub max_tasks_per_job: usize,
+    /// σ of the per-slot log-normal interference noise on training speed.
+    /// 0 disables.  Calibrated default reproduces the trace's ~27% JCT
+    /// coefficient of variation (Fig 4).
+    pub interference: f64,
+    /// Half-width of the per-run static speed-factor variation (Fig 13):
+    /// each job's speed is scaled by U(1-v, 1+v) for its whole run.
+    pub speed_variation: f64,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            num_servers: 20,
+            server_cap: Res::new(2.0, 8.0, 48.0),
+            max_tasks_per_job: 12,
+            interference: 0.18,
+            speed_variation: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// The paper's large-scale simulation setting (§6.2): 500 servers.
+    pub fn large() -> Self {
+        ClusterConfig {
+            num_servers: 500,
+            ..Default::default()
+        }
+    }
+}
+
+/// The live environment: jobs + per-slot dynamics.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub catalog: Vec<JobType>,
+    pub jobs: Vec<Job>,
+    pub slot: usize,
+    rng: Rng,
+    /// Utilization (gpu fraction) per elapsed slot — Fig 3.
+    pub gpu_util_history: Vec<f64>,
+}
+
+/// What the cluster reports after advancing one slot.
+#[derive(Debug, Clone)]
+pub struct SlotOutcome {
+    /// Σ_i t_i/E_i — the per-timeslot reward of Eqn (1).
+    pub reward: f64,
+    /// Jobs that completed this slot.
+    pub finished: Vec<usize>,
+    /// GPU utilization of the allocation this slot.
+    pub gpu_util: f64,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Cluster {
+        Self::with_catalog(cfg, catalog())
+    }
+
+    /// Environment with a custom job-type catalog — used by the OfflineRL
+    /// baseline, whose offline simulator runs on an *inaccurate* analytical
+    /// speed model rather than the live cluster's behaviour (§2.3).
+    pub fn with_catalog(cfg: ClusterConfig, catalog: Vec<JobType>) -> Cluster {
+        let rng = Rng::new(cfg.seed ^ 0xC1_05_7E_12);
+        Cluster {
+            cfg,
+            catalog,
+            jobs: Vec::new(),
+            slot: 0,
+            rng,
+            gpu_util_history: Vec::new(),
+        }
+    }
+
+    /// Submit a job (arrival).  `declared_epochs` is what the user tells
+    /// the scheduler; `epoch_error` injects Fig-14's estimation error on
+    /// the ground-truth epochs (signed: drawn ±error at submission).
+    pub fn submit(&mut self, type_idx: usize, declared_epochs: f64, epoch_error: f64) -> usize {
+        let id = self.jobs.len();
+        let stream = self.rng.fork(id as u64);
+        let mut job = Job::new(id, type_idx, self.slot, declared_epochs, stream);
+        if epoch_error != 0.0 {
+            let sign = if job.rng.bool(0.5) { 1.0 } else { -1.0 };
+            job.true_epochs = declared_epochs * (1.0 + sign * epoch_error);
+        }
+        if self.cfg.speed_variation > 0.0 {
+            let v = self.cfg.speed_variation;
+            job.speed_factor = job.rng.range_f64(1.0 - v, 1.0 + v).max(0.05);
+        }
+        self.jobs.push(job);
+        id
+    }
+
+    /// Indices of jobs that have arrived and not finished, ordered by
+    /// arrival time (the NN state ordering, §4.1).
+    pub fn active_jobs(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self
+            .jobs
+            .iter()
+            .filter(|j| !j.is_finished() && j.arrival_slot <= self.slot)
+            .map(|j| j.id)
+            .collect();
+        ids.sort_by_key(|&i| (self.jobs[i].arrival_slot, i));
+        ids
+    }
+
+    /// Fresh per-slot placement view.
+    pub fn placement(&self) -> Placement {
+        Placement::new(self.cfg.num_servers, self.cfg.server_cap)
+    }
+
+    /// Apply an allocation decided by a scheduler for this slot: job ->
+    /// (workers, ps).  Tasks are placed load-balanced; if the full
+    /// allocation does not fit, the job's allocation is truncated to what
+    /// fits (workers and PSs are placed alternately to keep them usable).
+    /// Returns the realized placement.
+    pub fn apply_allocation(&mut self, alloc: &[(usize, usize, usize)]) -> Placement {
+        let mut placement = self.placement();
+        // Reset all allocations first (numbers are produced anew each slot,
+        // §4.1; the elastic layer in `elastic/` shows the delta is applied
+        // as hot scaling rather than restart).
+        for j in self.jobs.iter_mut() {
+            j.workers = 0;
+            j.ps = 0;
+        }
+        for &(id, want_w, want_p) in alloc {
+            let jt = self.catalog[self.jobs[id].type_idx].clone();
+            let cap = self.cfg.max_tasks_per_job;
+            let (want_w, want_p) = (want_w.min(cap), want_p.min(cap));
+            let mut got_w = 0;
+            let mut got_p = 0;
+            // Alternate worker/PS placement so partial fits stay balanced.
+            while got_w < want_w || got_p < want_p {
+                let mut progress = false;
+                if got_w < want_w {
+                    if placement.try_place(&jt.worker_res).is_some() {
+                        got_w += 1;
+                        progress = true;
+                    } else {
+                        break;
+                    }
+                }
+                if got_p < want_p {
+                    if placement.try_place(&jt.ps_res).is_some() {
+                        got_p += 1;
+                        progress = true;
+                    }
+                }
+                if !progress {
+                    break;
+                }
+            }
+            let job = &mut self.jobs[id];
+            job.workers = got_w;
+            job.ps = got_p;
+        }
+        placement
+    }
+
+    /// Advance one slot: every active job progresses by
+    /// `epochs_per_slot(w, p) × speed_factor × interference-noise`.
+    pub fn advance(&mut self, placement: &Placement) -> SlotOutcome {
+        let slot = self.slot;
+        let interference = self.cfg.interference;
+        let mut reward = 0.0;
+        let mut finished = Vec::new();
+        let catalog = self.catalog.clone();
+        for job in self.jobs.iter_mut() {
+            if job.is_finished() || job.arrival_slot > slot {
+                continue;
+            }
+            let jt = &catalog[job.type_idx];
+            let mut eps = speed::epochs_per_slot(&jt.speed, job.workers, job.ps);
+            eps *= job.speed_factor;
+            if interference > 0.0 && eps > 0.0 {
+                // Log-normal, mean-one multiplicative noise.
+                let z = job.rng.normal();
+                eps *= (interference * z - 0.5 * interference * interference).exp();
+            }
+            reward += job.advance(eps, slot);
+            if job.is_finished() {
+                finished.push(job.id);
+            }
+        }
+        let gpu_util = placement.utilization().gpu;
+        self.gpu_util_history.push(gpu_util);
+        self.slot += 1;
+        SlotOutcome {
+            reward,
+            finished,
+            gpu_util,
+        }
+    }
+
+    /// All jobs submitted so far are finished?
+    pub fn all_finished(&self) -> bool {
+        self.jobs.iter().all(|j| j.is_finished())
+    }
+
+    /// Average job completion time in slots over finished jobs.
+    pub fn avg_jct(&self) -> f64 {
+        let times: Vec<f64> = self
+            .jobs
+            .iter()
+            .filter_map(|j| j.completion_time())
+            .map(|t| t as f64)
+            .collect();
+        crate::util::stats::mean(&times)
+    }
+
+    /// Dominant-resource share of one (w, p) allocation for a job type —
+    /// the state's r_i and DRF's ranking key.
+    pub fn dominant_share_for(&self, type_idx: usize, w: usize, p: usize) -> f64 {
+        let jt = &self.catalog[type_idx];
+        let total = jt
+            .worker_res
+            .scale(w as f64)
+            .add(&jt.ps_res.scale(p as f64));
+        let cap = self
+            .cfg
+            .server_cap
+            .scale(self.cfg.num_servers as f64);
+        total.dominant_share(&cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Cluster {
+        Cluster::new(ClusterConfig {
+            num_servers: 4,
+            interference: 0.0,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn submit_and_active_ordering() {
+        let mut c = small();
+        c.submit(0, 10.0, 0.0);
+        c.submit(1, 10.0, 0.0);
+        assert_eq!(c.active_jobs(), vec![0, 1]);
+    }
+
+    #[test]
+    fn allocation_respects_capacity() {
+        let mut c = small();
+        let id = c.submit(1, 10.0, 0.0); // vgg16: worker needs 2 GPUs
+        // 4 servers × 2 GPUs → at most 4 VGG workers fit.
+        c.apply_allocation(&[(id, 10, 2)]);
+        assert!(c.jobs[id].workers <= 4, "workers={}", c.jobs[id].workers);
+    }
+
+    #[test]
+    fn advance_makes_progress_and_finishes() {
+        let mut c = small();
+        let id = c.submit(0, 5.0, 0.0);
+        let mut slots = 0;
+        while !c.all_finished() && slots < 100 {
+            let p = c.apply_allocation(&[(id, 2, 2)]);
+            c.advance(&p);
+            slots += 1;
+        }
+        assert!(c.all_finished(), "job never finished");
+        assert!(c.avg_jct() > 0.0);
+    }
+
+    #[test]
+    fn no_resources_no_progress() {
+        let mut c = small();
+        let id = c.submit(0, 5.0, 0.0);
+        let p = c.apply_allocation(&[(id, 0, 0)]);
+        let out = c.advance(&p);
+        assert_eq!(out.reward, 0.0);
+        assert_eq!(c.jobs[id].epochs_done, 0.0);
+    }
+
+    #[test]
+    fn reward_matches_eqn1() {
+        let mut c = small();
+        let a = c.submit(0, 10.0, 0.0);
+        let b = c.submit(2, 20.0, 0.0);
+        let p = c.apply_allocation(&[(a, 1, 1), (b, 1, 1)]);
+        let out = c.advance(&p);
+        let expect = c.jobs[a].epochs_done / 10.0 + c.jobs[b].epochs_done / 20.0;
+        assert!((out.reward - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interference_changes_progress_across_runs() {
+        let mk = |seed| {
+            let mut c = Cluster::new(ClusterConfig {
+                num_servers: 4,
+                interference: 0.3,
+                seed,
+                ..Default::default()
+            });
+            let id = c.submit(0, 50.0, 0.0);
+            let p = c.apply_allocation(&[(id, 2, 2)]);
+            c.advance(&p);
+            c.jobs[id].epochs_done
+        };
+        assert_ne!(mk(1), mk(2));
+    }
+
+    #[test]
+    fn epoch_error_injection() {
+        let mut c = Cluster::new(ClusterConfig {
+            interference: 0.0,
+            ..Default::default()
+        });
+        let id = c.submit(0, 10.0, 0.2);
+        let t = c.jobs[id].true_epochs;
+        assert!((t - 12.0).abs() < 1e-9 || (t - 8.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn gpu_util_recorded() {
+        let mut c = small();
+        let id = c.submit(0, 5.0, 0.0);
+        let p = c.apply_allocation(&[(id, 2, 2)]);
+        c.advance(&p);
+        assert_eq!(c.gpu_util_history.len(), 1);
+        assert!(c.gpu_util_history[0] > 0.0);
+    }
+}

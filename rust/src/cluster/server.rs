@@ -1,0 +1,148 @@
+//! Server pool + load-balanced task placement.
+//!
+//! The paper uses the cluster's default placement policy (load balancing,
+//! §3.2/§6.1): every slot, each job's workers/PSs are placed on the
+//! least-loaded machines that fit.  Schedulers allocate incrementally
+//! (one worker / one PS at a time), so `Placement` supports online
+//! placement with capacity rejection — an allocation only "counts" if it
+//! actually fits somewhere in the cluster.
+
+use super::types::Res;
+
+/// Per-slot placement state over a homogeneous server pool.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    cap: Res,
+    used: Vec<Res>,
+}
+
+impl Placement {
+    pub fn new(num_servers: usize, cap: Res) -> Placement {
+        Placement {
+            cap,
+            used: vec![Res::ZERO; num_servers],
+        }
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.used.len()
+    }
+
+    pub fn server_cap(&self) -> Res {
+        self.cap
+    }
+
+    /// Total capacity of the pool.
+    pub fn total_cap(&self) -> Res {
+        self.cap.scale(self.used.len() as f64)
+    }
+
+    /// Aggregate used resources.
+    pub fn total_used(&self) -> Res {
+        self.used
+            .iter()
+            .fold(Res::ZERO, |acc, u| acc.add(u))
+    }
+
+    /// Load-balanced placement: place `r` on the least-loaded server (by
+    /// dominant share) that fits.  Returns the server index or None.
+    pub fn try_place(&mut self, r: &Res) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, used) in self.used.iter().enumerate() {
+            if used.fits(r, &self.cap) {
+                let load = used.dominant_share(&self.cap);
+                match best {
+                    None => best = Some((i, load)),
+                    Some((_, b)) if load < b => best = Some((i, load)),
+                    _ => {}
+                }
+            }
+        }
+        let (idx, _) = best?;
+        self.used[idx] = self.used[idx].add(r);
+        Some(idx)
+    }
+
+    /// Whether `r` could be placed without committing it.
+    pub fn can_place(&self, r: &Res) -> bool {
+        self.used.iter().any(|u| u.fits(r, &self.cap))
+    }
+
+    /// Utilization of each resource dimension across the pool (0..1).
+    pub fn utilization(&self) -> Res {
+        self.total_used().norm(&self.total_cap())
+    }
+
+    /// Per-server dominant loads (diagnostics / load-balance checks).
+    pub fn loads(&self) -> Vec<f64> {
+        self.used
+            .iter()
+            .map(|u| u.dominant_share(&self.cap))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_check;
+
+    fn pool() -> Placement {
+        Placement::new(4, Res::new(2.0, 8.0, 48.0))
+    }
+
+    #[test]
+    fn places_until_full() {
+        let mut p = pool();
+        let gpu_task = Res::new(1.0, 2.0, 4.0);
+        // 4 servers × 2 GPUs = 8 placements fit, the 9th does not.
+        for i in 0..8 {
+            assert!(p.try_place(&gpu_task).is_some(), "placement {i}");
+        }
+        assert!(p.try_place(&gpu_task).is_none());
+        assert!(!p.can_place(&gpu_task));
+        // CPU-only tasks still fit.
+        assert!(p.can_place(&Res::new(0.0, 1.0, 1.0)));
+    }
+
+    #[test]
+    fn load_balances_across_servers() {
+        let mut p = pool();
+        let t = Res::new(1.0, 2.0, 4.0);
+        let mut hits = vec![0usize; 4];
+        for _ in 0..4 {
+            hits[p.try_place(&t).unwrap()] += 1;
+        }
+        assert_eq!(hits, vec![1, 1, 1, 1], "round-robins least-loaded");
+    }
+
+    #[test]
+    fn utilization_tracks_usage() {
+        let mut p = pool();
+        p.try_place(&Res::new(2.0, 0.0, 0.0)).unwrap();
+        let u = p.utilization();
+        assert!((u.gpu - 2.0 / 8.0).abs() < 1e-12);
+        assert_eq!(u.cpu, 0.0);
+    }
+
+    #[test]
+    fn prop_never_exceeds_capacity() {
+        prop_check!(25, |rng: &mut crate::util::Rng| {
+            let mut p = Placement::new(rng.range(1, 6), Res::new(2.0, 8.0, 48.0));
+            for _ in 0..rng.range(1, 100) {
+                let r = Res::new(
+                    rng.below(3) as f64,
+                    rng.range(1, 5) as f64,
+                    rng.range(1, 13) as f64,
+                );
+                let _ = p.try_place(&r);
+                for (i, used) in p.used.iter().enumerate() {
+                    assert!(
+                        Res::ZERO.fits(used, &p.cap),
+                        "server {i} over capacity: {used}"
+                    );
+                }
+            }
+        });
+    }
+}

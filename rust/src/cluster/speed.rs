@@ -1,0 +1,148 @@
+//! Synchronous-training speed model.
+//!
+//! The simulator's stand-in for "run MXNet on 13 GPU servers" (see
+//! DESIGN.md §Substitutions).  Per-iteration time of a job with `w` workers
+//! and `p` parameter servers is modeled as
+//!
+//! ```text
+//! iter(w, p) = comp/w + fixed + comm·(w/p) + sync·p
+//! ```
+//!
+//! * `comp/w`   — data-parallel compute: the global batch splits across
+//!                workers (mini-batch per worker shrinks as w grows, §3.1);
+//! * `fixed`    — per-iteration overhead that does not parallelize;
+//! * `comm·w/p` — gradient push/pull: each PS aggregates `w/p` of the
+//!                worker traffic, so PS-side bandwidth is the bottleneck
+//!                when PSs are scarce;
+//! * `sync·p`   — coordination overhead growing with PS count.
+//!
+//! This reproduces the two empirical facts DL²'s motivation rests on:
+//! diminishing, saturating speedup as w=p grows (Fig 1) and a
+//! type-dependent optimal PS:worker split at fixed w+p (Fig 2) — without
+//! claiming to model any specific hardware.  Zero workers or zero PSs make
+//! no progress (a job cannot train without both).
+
+use super::types::SpeedParams;
+
+/// Per-iteration time for (w workers, p PSs); +inf if either is zero.
+pub fn iter_time(sp: &SpeedParams, w: usize, p: usize) -> f64 {
+    if w == 0 || p == 0 {
+        return f64::INFINITY;
+    }
+    let (w, p) = (w as f64, p as f64);
+    sp.comp / w + sp.fixed + sp.comm * (w / p) + sp.sync * p
+}
+
+/// Training speed relative to a (1 worker, 1 PS) deployment.
+pub fn relative_speed(sp: &SpeedParams, w: usize, p: usize) -> f64 {
+    let base = iter_time(sp, 1, 1);
+    let t = iter_time(sp, w, p);
+    if t.is_finite() {
+        base / t
+    } else {
+        0.0
+    }
+}
+
+/// Epochs a job trains in one scheduling slot at (w, p), before
+/// interference noise is applied.
+pub fn epochs_per_slot(sp: &SpeedParams, w: usize, p: usize) -> f64 {
+    sp.base_epochs_per_slot * relative_speed(sp, w, p)
+}
+
+/// Best (w, p) split for a fixed task budget `total = w + p` — utility
+/// used by benches and sanity tests (exhaustive over the budget).
+pub fn best_split(sp: &SpeedParams, total: usize) -> (usize, usize) {
+    let mut best = (1, 1);
+    let mut best_speed = 0.0;
+    for w in 1..total {
+        let p = total - w;
+        let s = relative_speed(sp, w, p);
+        if s > best_speed {
+            best_speed = s;
+            best = (w, p);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::types::catalog;
+
+    #[test]
+    fn zero_tasks_no_progress() {
+        let sp = catalog()[0].speed;
+        assert_eq!(relative_speed(&sp, 0, 3), 0.0);
+        assert_eq!(relative_speed(&sp, 3, 0), 0.0);
+    }
+
+    #[test]
+    fn speedup_is_sublinear_and_monotone_early() {
+        // Fig 1 shape: speed grows with k but speedup/k shrinks.
+        for jt in catalog() {
+            let s2 = relative_speed(&jt.speed, 2, 2);
+            let s4 = relative_speed(&jt.speed, 4, 4);
+            let s8 = relative_speed(&jt.speed, 8, 8);
+            assert!(s2 > 1.0, "{}", jt.name);
+            assert!(s4 > s2, "{}", jt.name);
+            assert!(s8 / 8.0 < s2 / 2.0, "{}: superlinear?", jt.name);
+        }
+    }
+
+    #[test]
+    fn fig2_type_dependent_best_ratio() {
+        let cat = catalog();
+        let vgg = cat.iter().find(|j| j.name == "vgg16").unwrap();
+        let s2s = cat.iter().find(|j| j.name == "seq2seq").unwrap();
+        // VGG-16 (comm-heavy): balanced split wins among the paper's three
+        // candidate splits (4:8 / 6:6 / 8:4 as w:p).
+        let vgg_best = [(4, 8), (6, 6), (8, 4)]
+            .into_iter()
+            .max_by(|a, b| {
+                relative_speed(&vgg.speed, a.0, a.1)
+                    .partial_cmp(&relative_speed(&vgg.speed, b.0, b.1))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(vgg_best, (6, 6), "vgg16 should prefer 6:6");
+        // Seq2Seq (compute-heavy): 8 workers / 4 PS wins.
+        let s2s_best = [(4, 8), (6, 6), (8, 4)]
+            .into_iter()
+            .max_by(|a, b| {
+                relative_speed(&s2s.speed, a.0, a.1)
+                    .partial_cmp(&relative_speed(&s2s.speed, b.0, b.1))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(s2s_best, (8, 4), "seq2seq should prefer 8 workers : 4 PS");
+    }
+
+    #[test]
+    fn epochs_per_slot_base_case() {
+        for jt in catalog() {
+            let e = epochs_per_slot(&jt.speed, 1, 1);
+            assert!((e - jt.speed.base_epochs_per_slot).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn best_split_within_budget() {
+        for jt in catalog() {
+            let (w, p) = best_split(&jt.speed, 12);
+            assert_eq!(w + p, 12);
+            assert!(w >= 1 && p >= 1);
+        }
+    }
+
+    #[test]
+    fn adding_resources_never_infinite_gain() {
+        // Marginal gain of one more worker shrinks (needed by Optimus'
+        // greedy to terminate sensibly).
+        let sp = catalog()[0].speed;
+        let g1 = relative_speed(&sp, 2, 2) - relative_speed(&sp, 1, 2);
+        let g2 = relative_speed(&sp, 6, 2) - relative_speed(&sp, 5, 2);
+        assert!(g2 < g1);
+    }
+}

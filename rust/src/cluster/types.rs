@@ -1,0 +1,242 @@
+//! Resource vectors and the DL job-type catalog (paper Table 1).
+
+use std::fmt;
+
+/// A 3-dimensional resource vector: GPUs, CPU cores, memory (GB).
+///
+/// The paper's state encodes the *dominant* resource share (DRF-style);
+/// all placement/feasibility checks compare component-wise.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Res {
+    pub gpu: f64,
+    pub cpu: f64,
+    pub mem: f64,
+}
+
+impl Res {
+    pub const ZERO: Res = Res { gpu: 0.0, cpu: 0.0, mem: 0.0 };
+
+    pub fn new(gpu: f64, cpu: f64, mem: f64) -> Res {
+        Res { gpu, cpu, mem }
+    }
+
+    pub fn add(&self, o: &Res) -> Res {
+        Res::new(self.gpu + o.gpu, self.cpu + o.cpu, self.mem + o.mem)
+    }
+
+    pub fn sub(&self, o: &Res) -> Res {
+        Res::new(self.gpu - o.gpu, self.cpu - o.cpu, self.mem - o.mem)
+    }
+
+    pub fn scale(&self, k: f64) -> Res {
+        Res::new(self.gpu * k, self.cpu * k, self.mem * k)
+    }
+
+    /// Component-wise `self + o ≤ cap` (with small epsilon slack).
+    pub fn fits(&self, o: &Res, cap: &Res) -> bool {
+        const EPS: f64 = 1e-9;
+        self.gpu + o.gpu <= cap.gpu + EPS
+            && self.cpu + o.cpu <= cap.cpu + EPS
+            && self.mem + o.mem <= cap.mem + EPS
+    }
+
+    /// Max over dimensions of self/cap — the DRF dominant share.
+    pub fn dominant_share(&self, cap: &Res) -> f64 {
+        let mut share: f64 = 0.0;
+        if cap.gpu > 0.0 {
+            share = share.max(self.gpu / cap.gpu);
+        }
+        if cap.cpu > 0.0 {
+            share = share.max(self.cpu / cap.cpu);
+        }
+        if cap.mem > 0.0 {
+            share = share.max(self.mem / cap.mem);
+        }
+        share
+    }
+
+    /// Fraction-of-capacity vector (for packing scores / utilization).
+    pub fn norm(&self, cap: &Res) -> Res {
+        Res::new(
+            if cap.gpu > 0.0 { self.gpu / cap.gpu } else { 0.0 },
+            if cap.cpu > 0.0 { self.cpu / cap.cpu } else { 0.0 },
+            if cap.mem > 0.0 { self.mem / cap.mem } else { 0.0 },
+        )
+    }
+
+    pub fn dot(&self, o: &Res) -> f64 {
+        self.gpu * o.gpu + self.cpu * o.cpu + self.mem * o.mem
+    }
+}
+
+impl fmt::Display for Res {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(gpu={:.1}, cpu={:.1}, mem={:.1})", self.gpu, self.cpu, self.mem)
+    }
+}
+
+/// Parameters of the synchronous-training speed model (see speed.rs).
+#[derive(Debug, Clone, Copy)]
+pub struct SpeedParams {
+    /// Per-iteration compute that parallelizes across workers (a/w term).
+    pub comp: f64,
+    /// Fixed per-iteration overhead.
+    pub fixed: f64,
+    /// Communication coefficient (∝ model size / bandwidth; c·w/p term).
+    pub comm: f64,
+    /// Per-PS synchronization overhead (d·p term).
+    pub sync: f64,
+    /// Epochs per time slot achieved by a (1 worker, 1 PS) deployment.
+    pub base_epochs_per_slot: f64,
+}
+
+/// One entry of the Table-1 job-type catalog.
+#[derive(Debug, Clone)]
+pub struct JobType {
+    pub name: &'static str,
+    pub domain: &'static str,
+    pub dataset: &'static str,
+    /// Global model size in MB (drives elastic-scaling migration cost).
+    pub model_mb: f64,
+    pub worker_res: Res,
+    pub ps_res: Res,
+    pub speed: SpeedParams,
+}
+
+/// The 8 model categories of Table 1.  Speed-model constants are calibrated
+/// so that (i) speedup at w=p=k is sublinear and saturating (Fig 1),
+/// (ii) the best PS:worker split at w+p=12 is type-dependent — VGG-16 is
+/// communication-bound (balanced 6:6 optimum) while Seq2Seq is
+/// compute-bound (4 PS : 8 workers optimum) (Fig 2).
+pub fn catalog() -> Vec<JobType> {
+    fn sp(comp: f64, fixed: f64, comm: f64, sync: f64, eps: f64) -> SpeedParams {
+        SpeedParams {
+            comp,
+            fixed,
+            comm,
+            sync,
+            base_epochs_per_slot: eps,
+        }
+    }
+    vec![
+        JobType {
+            name: "resnet50",
+            domain: "image classification",
+            dataset: "ImageNet",
+            model_mb: 98.0,
+            worker_res: Res::new(1.0, 4.0, 10.0),
+            ps_res: Res::new(0.0, 4.0, 10.0),
+            speed: sp(1.20, 0.06, 0.08, 0.010, 2.5),
+        },
+        JobType {
+            name: "vgg16",
+            domain: "image classification",
+            dataset: "ImageNet",
+            model_mb: 528.0,
+            worker_res: Res::new(2.0, 4.0, 12.0),
+            ps_res: Res::new(0.0, 4.0, 12.0),
+            speed: sp(1.00, 0.06, 0.10, 0.015, 2.0),
+        },
+        JobType {
+            name: "resnext110",
+            domain: "image classification",
+            dataset: "CIFAR10",
+            model_mb: 6.9,
+            worker_res: Res::new(1.0, 2.0, 6.0),
+            ps_res: Res::new(0.0, 2.0, 6.0),
+            speed: sp(1.10, 0.08, 0.03, 0.008, 4.0),
+        },
+        JobType {
+            name: "inception_bn",
+            domain: "image classification",
+            dataset: "Caltech",
+            model_mb: 44.0,
+            worker_res: Res::new(1.0, 3.0, 8.0),
+            ps_res: Res::new(0.0, 3.0, 8.0),
+            speed: sp(1.00, 0.07, 0.05, 0.010, 3.0),
+        },
+        JobType {
+            name: "seq2seq",
+            domain: "machine translation",
+            dataset: "WMT17",
+            model_mb: 120.0,
+            worker_res: Res::new(1.0, 4.0, 10.0),
+            ps_res: Res::new(0.0, 4.0, 10.0),
+            speed: sp(1.30, 0.05, 0.04, 0.008, 3.5),
+        },
+        JobType {
+            name: "ctc",
+            domain: "sentence classification",
+            dataset: "mr",
+            model_mb: 2.3,
+            worker_res: Res::new(1.0, 2.0, 4.0),
+            ps_res: Res::new(0.0, 1.0, 4.0),
+            speed: sp(0.90, 0.10, 0.02, 0.005, 5.0),
+        },
+        JobType {
+            name: "dssm",
+            domain: "word representation",
+            dataset: "text8",
+            model_mb: 15.0,
+            worker_res: Res::new(1.0, 2.0, 4.0),
+            ps_res: Res::new(0.0, 2.0, 4.0),
+            speed: sp(1.00, 0.08, 0.03, 0.008, 4.5),
+        },
+        JobType {
+            name: "wlm",
+            domain: "language modeling",
+            dataset: "PTB",
+            model_mb: 80.0,
+            worker_res: Res::new(1.0, 3.0, 8.0),
+            ps_res: Res::new(0.0, 3.0, 8.0),
+            speed: sp(1.10, 0.06, 0.09, 0.012, 3.0),
+        },
+    ]
+}
+
+/// Number of job types L (Table 1), matching `NUM_JOB_TYPES` in model.py.
+pub const NUM_TYPES: usize = 8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_has_eight_types() {
+        assert_eq!(catalog().len(), NUM_TYPES);
+    }
+
+    #[test]
+    fn res_arithmetic() {
+        let a = Res::new(1.0, 2.0, 3.0);
+        let b = Res::new(0.5, 1.0, 1.5);
+        assert_eq!(a.add(&b), Res::new(1.5, 3.0, 4.5));
+        assert_eq!(a.sub(&b), b);
+        assert_eq!(a.scale(2.0), Res::new(2.0, 4.0, 6.0));
+    }
+
+    #[test]
+    fn fits_respects_all_dims() {
+        let cap = Res::new(2.0, 8.0, 48.0);
+        let used = Res::new(1.0, 4.0, 24.0);
+        assert!(used.fits(&Res::new(1.0, 4.0, 24.0), &cap));
+        assert!(!used.fits(&Res::new(1.5, 0.0, 0.0), &cap));
+        assert!(!used.fits(&Res::new(0.0, 5.0, 0.0), &cap));
+    }
+
+    #[test]
+    fn dominant_share_picks_max() {
+        let cap = Res::new(10.0, 100.0, 1000.0);
+        let use_ = Res::new(5.0, 20.0, 100.0);
+        assert!((use_.dominant_share(&cap) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn workers_demand_gpu_pss_do_not() {
+        for jt in catalog() {
+            assert!(jt.worker_res.gpu >= 1.0, "{}", jt.name);
+            assert_eq!(jt.ps_res.gpu, 0.0, "{}", jt.name);
+            assert!(jt.model_mb > 0.0);
+        }
+    }
+}

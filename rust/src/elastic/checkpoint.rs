@@ -1,0 +1,162 @@
+//! Checkpoint-restart scaling baseline (the Optimus approach §5 compares
+//! against, Fig 11): terminate the job, serialize global parameters to
+//! disk, relaunch with the new PS/worker deployment, restore parameters.
+//!
+//! We measure the real parts — stop, serialize, disk write, disk read,
+//! relaunch, restore — and add the *modeled* container-relaunch +
+//! data-re-preprocessing constant (`restart_overhead_ms`, documented in
+//! DESIGN.md §Substitutions; the paper reports ~1 min to checkpoint and up
+//! to ~5 min to restore a DSSM job).  Both components are reported
+//! separately so the measured/modeled split stays explicit.
+
+use std::io::{Read, Write};
+use std::time::Instant;
+
+use super::coordinator::ElasticJob;
+use super::ElasticConfig;
+
+/// Timing breakdown of one checkpoint-based scaling operation.
+#[derive(Debug, Clone)]
+pub struct CheckpointReport {
+    /// Stop + serialize + write (ms).
+    pub checkpoint_ms: f64,
+    /// Read + restore + relaunch threads (ms).
+    pub restore_ms: f64,
+    /// Modeled container relaunch / data re-preprocessing constant (ms).
+    pub modeled_restart_ms: f64,
+}
+
+impl CheckpointReport {
+    /// Full training-suspension time the workers experience.
+    pub fn total_suspension_ms(&self) -> f64 {
+        self.checkpoint_ms + self.restore_ms + self.modeled_restart_ms
+    }
+}
+
+/// Scale a job to `new_ps` parameter servers by checkpoint-restart.
+/// Consumes the job and returns the relaunched one plus timings.
+pub fn checkpoint_scale(
+    job: ElasticJob,
+    new_ps: usize,
+    new_workers: usize,
+) -> std::io::Result<(ElasticJob, CheckpointReport)> {
+    let cfg = job.cfg.clone();
+    let model_mb = job.model_mb;
+    // Unique per checkpoint: pid + a process-wide counter (parallel tests
+    // in one process would otherwise collide on the same path).
+    static CKPT_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = CKPT_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let path = std::env::temp_dir().join(format!(
+        "dl2_ckpt_{}_{}_{}.bin",
+        std::process::id(),
+        new_ps,
+        seq
+    ));
+
+    // --- Checkpoint: stop training, serialize global model, write.
+    let t0 = Instant::now();
+    let blocks = job.dump_all();
+    job.shutdown();
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        for b in &blocks {
+            f.write_all(&(b.id as u64).to_le_bytes())?;
+            f.write_all(&(b.data.len() as u64).to_le_bytes())?;
+            // Safe f32 → bytes copy.
+            let mut bytes = Vec::with_capacity(b.data.len() * 4);
+            for x in &b.data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&bytes)?;
+        }
+        f.flush()?;
+    }
+    let checkpoint_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // --- Restore: read, relaunch with the new deployment.
+    let t1 = Instant::now();
+    let mut buf = Vec::new();
+    std::fs::File::open(&path)?.read_to_end(&mut buf)?;
+    let mut restored = 0usize;
+    let mut off = 0usize;
+    while off + 16 <= buf.len() {
+        let len = u64::from_le_bytes(buf[off + 8..off + 16].try_into().unwrap()) as usize;
+        off += 16 + len * 4;
+        restored += 1;
+    }
+    let _ = std::fs::remove_file(&path);
+    // Relaunch: a fresh ElasticJob with the new topology (parameters are
+    // re-partitioned on startup, standing in for "restart with the saved
+    // model parameters").
+    let new_job = ElasticJob::start(cfg.clone(), model_mb, new_workers, new_ps);
+    let restore_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    debug_assert_eq!(restored, blocks.len());
+    Ok((
+        new_job,
+        CheckpointReport {
+            checkpoint_ms,
+            restore_ms,
+            modeled_restart_ms: cfg.restart_overhead_ms as f64,
+        },
+    ))
+}
+
+/// Convenience for benches: run a checkpoint-scale from `ps` to `ps + d`
+/// PSs on a fresh job and return the report.
+pub fn measure_checkpoint_scaling(
+    cfg: &ElasticConfig,
+    model_mb: f64,
+    workers: usize,
+    ps: usize,
+    d: usize,
+) -> std::io::Result<CheckpointReport> {
+    let job = ElasticJob::start(cfg.clone(), model_mb, workers, ps);
+    std::thread::sleep(std::time::Duration::from_millis(3 * cfg.iter_ms));
+    let (new_job, report) = checkpoint_scale(job, ps + d, workers)?;
+    new_job.shutdown();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip_and_relaunch() {
+        let cfg = ElasticConfig {
+            block_elems: 1024,
+            iter_ms: 2,
+            clock_lead: 2,
+            restart_overhead_ms: 100,
+        };
+        let job = ElasticJob::start(cfg.clone(), 1.0, 2, 1);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let (new_job, report) = checkpoint_scale(job, 2, 2).unwrap();
+        assert_eq!(new_job.num_ps(), 2);
+        assert!(new_job.verify_integrity());
+        assert!(report.checkpoint_ms > 0.0);
+        assert!(report.restore_ms > 0.0);
+        assert_eq!(report.modeled_restart_ms, 100.0);
+        assert!(report.total_suspension_ms() >= 100.0);
+        new_job.shutdown();
+    }
+
+    #[test]
+    fn checkpoint_cost_grows_with_model_size() {
+        let cfg = ElasticConfig {
+            block_elems: 64 * 1024,
+            iter_ms: 2,
+            clock_lead: 2,
+            restart_overhead_ms: 0,
+        };
+        let small = measure_checkpoint_scaling(&cfg, 4.0, 1, 1, 1).unwrap();
+        let big = measure_checkpoint_scaling(&cfg, 128.0, 1, 1, 1).unwrap();
+        assert!(
+            big.checkpoint_ms + big.restore_ms > small.checkpoint_ms + small.restore_ms,
+            "big={:?} small={:?}",
+            big,
+            small
+        );
+    }
+}

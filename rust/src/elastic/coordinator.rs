@@ -1,0 +1,497 @@
+//! The coordinator (§5): owns the job topology, computes best-fit
+//! parameter assignments and scaling clocks, orchestrates the 4-step
+//! scaling protocol, and measures each step's duration (Figs 11, 12).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::msg::{Assignment, ToCoord, ToPs, ToWorker};
+use super::ps::PsState;
+use super::worker::WorkerState;
+use super::{blocks_for_model, ElasticConfig};
+
+/// Timing of one scaling operation (milliseconds).
+#[derive(Debug, Clone)]
+pub struct ScaleReport {
+    pub registration_ms: f64,
+    pub assignment_ms: f64,
+    pub migration_ms: f64,
+    pub worker_update_ms: f64,
+    /// Mean training suspension across workers (the Fig-11 overhead).
+    pub avg_suspension_ms: f64,
+}
+
+impl ScaleReport {
+    pub fn total_ms(&self) -> f64 {
+        self.registration_ms + self.assignment_ms + self.migration_ms + self.worker_update_ms
+    }
+}
+
+/// A running elastic training job: live PS/worker threads + coordinator
+/// state (this struct *is* the coordinator).
+pub struct ElasticJob {
+    pub cfg: ElasticConfig,
+    pub model_mb: f64,
+    total_blocks: usize,
+    /// block id → PS id.
+    assignment: Assignment,
+    ps_tx: BTreeMap<usize, Sender<ToPs>>,
+    worker_tx: BTreeMap<usize, Sender<ToWorker>>,
+    threads: Vec<JoinHandle<()>>,
+    coord_rx: Receiver<ToCoord>,
+    coord_tx: Sender<ToCoord>,
+    next_ps_id: usize,
+    next_worker_id: usize,
+}
+
+impl ElasticJob {
+    /// Launch a job with real parameter buffers sized to `model_mb`.
+    pub fn start(cfg: ElasticConfig, model_mb: f64, num_workers: usize, num_ps: usize) -> Self {
+        assert!(num_workers >= 1 && num_ps >= 1);
+        let total_blocks = blocks_for_model(model_mb, cfg.block_elems);
+        let (coord_tx, coord_rx) = channel();
+        let mut job = ElasticJob {
+            cfg,
+            model_mb,
+            total_blocks,
+            assignment: Assignment::new(),
+            ps_tx: BTreeMap::new(),
+            worker_tx: BTreeMap::new(),
+            threads: Vec::new(),
+            coord_rx,
+            coord_tx,
+            next_ps_id: 0,
+            next_worker_id: 0,
+        };
+        // Round-robin initial block partition across PSs.
+        let mut shards: Vec<BTreeMap<usize, Vec<f32>>> =
+            (0..num_ps).map(|_| BTreeMap::new()).collect();
+        for b in 0..total_blocks {
+            shards[b % num_ps].insert(b, vec![0.0f32; job.cfg.block_elems]);
+            job.assignment.insert(b, b % num_ps);
+        }
+        for shard in shards {
+            job.spawn_ps(shard, num_workers, 0);
+        }
+        for _ in 0..num_workers {
+            job.spawn_worker();
+        }
+        job
+    }
+
+    fn spawn_ps(
+        &mut self,
+        blocks: BTreeMap<usize, Vec<f32>>,
+        num_workers: usize,
+        version: u64,
+    ) -> usize {
+        let id = self.next_ps_id;
+        self.next_ps_id += 1;
+        let (tx, rx) = channel();
+        let coord = self.coord_tx.clone();
+        let state = PsState::new(id, blocks, num_workers, version);
+        self.threads
+            .push(std::thread::spawn(move || state.run(rx, coord)));
+        self.ps_tx.insert(id, tx);
+        id
+    }
+
+    fn spawn_worker(&mut self) -> usize {
+        let id = self.next_worker_id;
+        self.next_worker_id += 1;
+        let (tx, rx) = channel();
+        let coord = self.coord_tx.clone();
+        let state = WorkerState {
+            id,
+            ps_channels: self.ps_tx.clone(),
+            iter_ms: self.cfg.iter_ms,
+            version: 0,
+        };
+        self.threads
+            .push(std::thread::spawn(move || state.run(rx, coord)));
+        self.worker_tx.insert(id, tx);
+        id
+    }
+
+    pub fn num_ps(&self) -> usize {
+        self.ps_tx.len()
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.worker_tx.len()
+    }
+
+    /// Global iteration count = max PS version (all old PSs agree; newer
+    /// PSs lag by their join point).
+    pub fn current_version(&self) -> u64 {
+        let mut v = 0;
+        for tx in self.ps_tx.values() {
+            let (rtx, rrx) = channel();
+            if tx.send(ToPs::GetVersion { reply: rtx }).is_ok() {
+                if let Ok(ver) = rrx.recv() {
+                    v = v.max(ver);
+                }
+            }
+        }
+        v
+    }
+
+    /// Blocks currently assigned per PS id.
+    fn load(&self) -> BTreeMap<usize, usize> {
+        let mut load: BTreeMap<usize, usize> = self.ps_tx.keys().map(|&k| (k, 0)).collect();
+        for (_, ps) in self.assignment.iter() {
+            *load.get_mut(ps).unwrap() += 1;
+        }
+        load
+    }
+
+    /// Run the shared steps 2–4 of a scaling event, given per-source move
+    /// lists.  Returns (assignment_ms, migration_ms, worker_update_ms,
+    /// avg_suspension_ms).
+    fn migrate(
+        &mut self,
+        moves_by_src: BTreeMap<usize, Vec<(usize, usize)>>,
+        new_mapping_excludes: Option<usize>,
+    ) -> (f64, f64, f64, f64) {
+        // --- Step 2: assignment + scaling clock broadcast.
+        let t2 = Instant::now();
+        let clock = self.current_version() + self.cfg.clock_lead;
+        let peers = self.ps_tx.clone();
+        for (&ps, tx) in &self.ps_tx {
+            let moves = moves_by_src.get(&ps).cloned().unwrap_or_default();
+            let _ = tx.send(ToPs::Assign {
+                clock,
+                moves,
+                peers: peers.clone(),
+            });
+        }
+        for tx in self.worker_tx.values() {
+            let _ = tx.send(ToWorker::SetClock { clock });
+        }
+        let assignment_ms = t2.elapsed().as_secs_f64() * 1e3;
+
+        // --- Step 3: wait for every PS's MigrationDone.
+        let t3 = Instant::now();
+        let mut done = 0;
+        let expect = self.ps_tx.len();
+        while done < expect {
+            match self.coord_rx.recv() {
+                Ok(ToCoord::MigrationDone { .. }) => done += 1,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        let migration_ms = t3.elapsed().as_secs_f64() * 1e3;
+
+        // --- Step 4: resume workers with the new mapping.
+        let t4 = Instant::now();
+        // Re-base every PS's version counter to the clock first — a PS
+        // that joined mid-training counts rounds from its join point and
+        // would otherwise never reach a future scaling clock (deadlock).
+        for tx in self.ps_tx.values() {
+            let _ = tx.send(ToPs::SyncVersion { version: clock });
+        }
+        let mut mapping = self.ps_tx.clone();
+        if let Some(victim) = new_mapping_excludes {
+            mapping.remove(&victim);
+        }
+        for tx in self.worker_tx.values() {
+            let _ = tx.send(ToWorker::Resume {
+                assignment: self.assignment.clone(),
+                ps_channels: mapping.clone(),
+            });
+        }
+        let mut suspensions = Vec::new();
+        while suspensions.len() < self.worker_tx.len() {
+            match self.coord_rx.recv() {
+                Ok(ToCoord::WorkerResumed { suspended_ms, .. }) => {
+                    suspensions.push(suspended_ms)
+                }
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        let worker_update_ms = t4.elapsed().as_secs_f64() * 1e3;
+        (
+            assignment_ms,
+            migration_ms,
+            worker_update_ms,
+            crate::util::stats::mean(&suspensions),
+        )
+    }
+
+    /// Hot-add one PS (the §5 walkthrough; Figs 7, 11, 12).
+    pub fn add_ps(&mut self) -> ScaleReport {
+        // --- Step 1: registration (INC_SERVER).
+        let t1 = Instant::now();
+        let num_workers = self.worker_tx.len();
+        let new_id = self.spawn_ps(BTreeMap::new(), num_workers, 0);
+        // Handshake: round-trip to confirm the PS is live.
+        let (rtx, rrx) = channel();
+        let _ = self.ps_tx[&new_id].send(ToPs::GetVersion { reply: rtx });
+        let _ = rrx.recv();
+        let registration_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+        // Best-fit plan: move blocks from the most-loaded PSs to the new
+        // one until it holds ⌊total/n⌋, minimizing movement.
+        let n = self.ps_tx.len();
+        let target = self.total_blocks / n;
+        let mut load = self.load();
+        let mut moves_by_src: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+        let mut blocks_of: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (&b, &ps) in &self.assignment {
+            blocks_of.entry(ps).or_default().push(b);
+        }
+        let mut moved = 0usize;
+        while moved < target {
+            // Most-loaded source.
+            let (&src, _) = load
+                .iter()
+                .filter(|&(&ps, _)| ps != new_id)
+                .max_by_key(|&(_, &c)| c)
+                .unwrap();
+            let Some(b) = blocks_of.get_mut(&src).and_then(|v| v.pop()) else {
+                break;
+            };
+            moves_by_src.entry(src).or_default().push((b, new_id));
+            self.assignment.insert(b, new_id);
+            *load.get_mut(&src).unwrap() -= 1;
+            moved += 1;
+        }
+
+        let (assignment_ms, migration_ms, worker_update_ms, avg_susp) =
+            self.migrate(moves_by_src, None);
+        ScaleReport {
+            registration_ms,
+            assignment_ms,
+            migration_ms,
+            worker_update_ms,
+            avg_suspension_ms: avg_susp,
+        }
+    }
+
+    /// Hot-remove one PS (the highest id by default, keeping machines
+    /// load-balanced per §5); its blocks spread across survivors.
+    pub fn remove_ps(&mut self) -> ScaleReport {
+        assert!(self.ps_tx.len() >= 2, "cannot remove the last PS");
+        let t1 = Instant::now();
+        let victim = *self.ps_tx.keys().max().unwrap();
+        let survivors: Vec<usize> = self.ps_tx.keys().copied().filter(|&p| p != victim).collect();
+        let registration_ms = t1.elapsed().as_secs_f64() * 1e3; // removal request
+
+        // Plan: victim's blocks round-robin to the least-loaded survivors.
+        let mut load = self.load();
+        let victim_blocks: Vec<usize> = self
+            .assignment
+            .iter()
+            .filter(|&(_, &ps)| ps == victim)
+            .map(|(&b, _)| b)
+            .collect();
+        let mut moves: Vec<(usize, usize)> = Vec::new();
+        for b in victim_blocks {
+            let (&dst, _) = load
+                .iter()
+                .filter(|&(&ps, _)| survivors.contains(&ps))
+                .min_by_key(|&(_, &c)| c)
+                .unwrap();
+            moves.push((b, dst));
+            self.assignment.insert(b, dst);
+            *load.get_mut(&dst).unwrap() += 1;
+        }
+        let mut moves_by_src = BTreeMap::new();
+        moves_by_src.insert(victim, moves);
+
+        let (assignment_ms, migration_ms, worker_update_ms, avg_susp) =
+            self.migrate(moves_by_src, Some(victim));
+
+        // Tear the victim down.
+        if let Some(tx) = self.ps_tx.remove(&victim) {
+            let _ = tx.send(ToPs::Stop);
+        }
+        ScaleReport {
+            registration_ms,
+            assignment_ms,
+            migration_ms,
+            worker_update_ms,
+            avg_suspension_ms: avg_susp,
+        }
+    }
+
+    /// Hot-add a worker: new connections only; existing workers keep
+    /// training (the paper observes "little interruption").  Returns the
+    /// setup time in ms.
+    pub fn add_worker(&mut self) -> f64 {
+        let t0 = Instant::now();
+        self.spawn_worker();
+        let count = self.worker_tx.len();
+        for tx in self.ps_tx.values() {
+            let _ = tx.send(ToPs::SetWorkers { count });
+        }
+        t0.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Remove one worker (highest id).
+    pub fn remove_worker(&mut self) {
+        assert!(self.worker_tx.len() >= 2, "cannot remove the last worker");
+        let victim = *self.worker_tx.keys().max().unwrap();
+        if let Some(tx) = self.worker_tx.remove(&victim) {
+            let _ = tx.send(ToWorker::Stop);
+        }
+        let count = self.worker_tx.len();
+        for tx in self.ps_tx.values() {
+            let _ = tx.send(ToPs::SetWorkers { count });
+        }
+    }
+
+    /// Consistency check: every block id held by exactly one PS
+    /// (correctness requirement (1) of §5).
+    pub fn verify_integrity(&self) -> bool {
+        let mut seen = vec![false; self.total_blocks];
+        for tx in self.ps_tx.values() {
+            let (rtx, rrx) = channel();
+            if tx.send(ToPs::Dump { reply: rtx }).is_err() {
+                return false;
+            }
+            let Ok(blocks) = rrx.recv() else { return false };
+            for b in blocks {
+                if b.id >= self.total_blocks || seen[b.id] {
+                    return false; // duplicate or unknown block
+                }
+                if b.data.len() != self.cfg.block_elems {
+                    return false;
+                }
+                seen[b.id] = true;
+            }
+        }
+        seen.iter().all(|&s| s)
+    }
+
+    /// Dump all parameters (checkpoint baseline support).
+    pub fn dump_all(&self) -> Vec<super::msg::Block> {
+        let mut out = Vec::new();
+        for tx in self.ps_tx.values() {
+            let (rtx, rrx) = channel();
+            if tx.send(ToPs::Dump { reply: rtx }).is_ok() {
+                if let Ok(mut blocks) = rrx.recv() {
+                    out.append(&mut blocks);
+                }
+            }
+        }
+        out.sort_by_key(|b| b.id);
+        out
+    }
+
+    /// Stop all threads and join.
+    pub fn shutdown(mut self) {
+        for tx in self.worker_tx.values() {
+            let _ = tx.send(ToWorker::Stop);
+        }
+        for tx in self.ps_tx.values() {
+            let _ = tx.send(ToPs::Stop);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ElasticConfig {
+        ElasticConfig {
+            block_elems: 1024,
+            iter_ms: 2,
+            clock_lead: 2,
+            restart_overhead_ms: 0,
+        }
+    }
+
+    #[test]
+    fn training_advances_versions() {
+        let job = ElasticJob::start(tiny_cfg(), 1.0, 2, 2);
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        assert!(job.current_version() > 0, "no training progress");
+        job.shutdown();
+    }
+
+    #[test]
+    fn add_ps_preserves_integrity_and_balances() {
+        let mut job = ElasticJob::start(tiny_cfg(), 2.0, 2, 1);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let report = job.add_ps();
+        assert!(job.verify_integrity(), "blocks lost or duplicated");
+        assert_eq!(job.num_ps(), 2);
+        let load = job.load();
+        let counts: Vec<usize> = load.values().copied().collect();
+        let (min, max) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "unbalanced after add: {counts:?}");
+        assert!(report.avg_suspension_ms >= 0.0);
+        job.shutdown();
+    }
+
+    #[test]
+    fn remove_ps_preserves_integrity() {
+        let mut job = ElasticJob::start(tiny_cfg(), 2.0, 2, 3);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let _ = job.remove_ps();
+        assert_eq!(job.num_ps(), 2);
+        assert!(job.verify_integrity());
+        job.shutdown();
+    }
+
+    #[test]
+    fn add_remove_worker_keeps_training() {
+        let mut job = ElasticJob::start(tiny_cfg(), 1.0, 2, 2);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let setup_ms = job.add_worker();
+        assert!(setup_ms < 1_000.0);
+        assert_eq!(job.num_workers(), 3);
+        let v0 = job.current_version();
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        assert!(job.current_version() > v0, "training stalled after add");
+        job.remove_worker();
+        assert_eq!(job.num_workers(), 2);
+        let v1 = job.current_version();
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        assert!(job.current_version() > v1, "training stalled after remove");
+        job.shutdown();
+    }
+
+    #[test]
+    fn consecutive_scalings() {
+        let mut job = ElasticJob::start(tiny_cfg(), 4.0, 2, 1);
+        for _ in 0..3 {
+            job.add_ps();
+            assert!(job.verify_integrity());
+        }
+        assert_eq!(job.num_ps(), 4);
+        for _ in 0..2 {
+            job.remove_ps();
+            assert!(job.verify_integrity());
+        }
+        assert_eq!(job.num_ps(), 2);
+        job.shutdown();
+    }
+
+    #[test]
+    fn suspension_is_small_relative_to_checkpoint_restart() {
+        let mut job = ElasticJob::start(tiny_cfg(), 8.0, 2, 2);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let report = job.add_ps();
+        // Hot scaling suspension is tens of ms at most at this scale —
+        // far below any checkpoint-restart path.
+        assert!(
+            report.avg_suspension_ms < 2_000.0,
+            "suspension {}ms",
+            report.avg_suspension_ms
+        );
+        job.shutdown();
+    }
+}

@@ -1,0 +1,62 @@
+//! Message types of the elastic-scaling protocol.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Sender;
+
+/// A parameter block: id + real data buffer.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub id: usize,
+    pub data: Vec<f32>,
+}
+
+/// block id → owning PS id (the "parameter-PS mapping" workers hold).
+pub type Assignment = BTreeMap<usize, usize>;
+
+/// Messages to a parameter server.
+pub enum ToPs {
+    /// Synchronous-training push+pull: a worker reports one iteration;
+    /// reply carries the PS's new version counter.
+    PushPull { reply: Sender<u64> },
+    /// Step 2 payload: migration plan (blocks this PS must send away, and
+    /// where), gated on `clock`; `peers` carries the transport endpoints
+    /// of the target PSs.
+    Assign {
+        clock: u64,
+        moves: Vec<(usize, usize)>, // (block_id, target_ps)
+        peers: BTreeMap<usize, Sender<ToPs>>,
+    },
+    /// Synchronous-training divisor changed (worker added/removed).
+    SetWorkers { count: usize },
+    /// End-of-scaling barrier: align the version counter to the scaling
+    /// clock (joining PSs start counting rounds from their join point, so
+    /// the coordinator re-bases everyone before resuming the workers).
+    SyncVersion { version: u64 },
+    /// Step 3 transport: blocks arriving from another PS.
+    Receive { blocks: Vec<Block> },
+    /// Serialize all held blocks (checkpoint baseline / verification).
+    Dump { reply: Sender<Vec<Block>> },
+    /// Current version counter.
+    GetVersion { reply: Sender<u64> },
+    Stop,
+}
+
+/// Messages to a worker.
+pub enum ToWorker {
+    /// Step 2 payload: suspend once your version counter reaches `clock`.
+    SetClock { clock: u64 },
+    /// Step 4: migration finished — new mapping + PS endpoints; resume.
+    Resume {
+        assignment: Assignment,
+        ps_channels: BTreeMap<usize, Sender<ToPs>>,
+    },
+    Stop,
+}
+
+/// Events the coordinator receives.
+pub enum ToCoord {
+    /// A source PS finished sending its re-assigned blocks (step 3).
+    MigrationDone { ps_id: usize },
+    /// A worker resumed; carries its measured suspension time (step 4).
+    WorkerResumed { worker_id: usize, suspended_ms: f64 },
+}

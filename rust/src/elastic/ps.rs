@@ -1,0 +1,132 @@
+//! Parameter-server actor: owns a shard of parameter blocks, maintains the
+//! version counter, and executes clock-gated migration (steps 2–3 of §5).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, Sender};
+
+use super::msg::{Block, ToCoord, ToPs};
+
+pub struct PsState {
+    pub id: usize,
+    pub blocks: BTreeMap<usize, Vec<f32>>,
+    /// Number of completed synchronous update rounds.
+    pub version: u64,
+    /// Pushes received in the current round.
+    pushes_in_round: usize,
+    /// Synchronous-training divisor: pushes per round = #workers.
+    pub num_workers: usize,
+    /// Pending migration: (clock, moves, peer channels).
+    pending: Option<(u64, Vec<(usize, usize)>, BTreeMap<usize, Sender<ToPs>>)>,
+    /// Round-robin cursor for the amortized in-place update touch.
+    touch_cursor: usize,
+}
+
+impl PsState {
+    pub fn new(id: usize, blocks: BTreeMap<usize, Vec<f32>>, num_workers: usize, version: u64) -> Self {
+        PsState {
+            id,
+            blocks,
+            version,
+            pushes_in_round: 0,
+            num_workers: num_workers.max(1),
+            pending: None,
+            touch_cursor: 0,
+        }
+    }
+
+    /// Apply the (amortized) parameter update for one completed round:
+    /// touch one owned block in place, round-robin.
+    fn apply_update(&mut self) {
+        if self.blocks.is_empty() {
+            return;
+        }
+        let keys: Vec<usize> = self.blocks.keys().copied().collect();
+        let k = keys[self.touch_cursor % keys.len()];
+        self.touch_cursor = self.touch_cursor.wrapping_add(1);
+        if let Some(b) = self.blocks.get_mut(&k) {
+            for x in b.iter_mut() {
+                *x += 1e-6;
+            }
+        }
+    }
+
+    /// Execute the pending migration if the clock has been reached.
+    fn maybe_migrate(&mut self, coord: &Sender<ToCoord>) {
+        let ready = matches!(&self.pending, Some((clock, _, _)) if self.version >= *clock);
+        if !ready {
+            return;
+        }
+        let (_, moves, peers) = self.pending.take().unwrap();
+        // Group outgoing blocks by target PS and ship the real buffers.
+        let mut by_target: BTreeMap<usize, Vec<Block>> = BTreeMap::new();
+        for (block_id, target) in moves {
+            if let Some(data) = self.blocks.remove(&block_id) {
+                by_target
+                    .entry(target)
+                    .or_default()
+                    .push(Block { id: block_id, data });
+            }
+        }
+        for (target, blocks) in by_target {
+            if let Some(tx) = peers.get(&target) {
+                let _ = tx.send(ToPs::Receive { blocks });
+            }
+        }
+        let _ = coord.send(ToCoord::MigrationDone { ps_id: self.id });
+    }
+
+    /// Actor loop.
+    pub fn run(mut self, rx: Receiver<ToPs>, coord: Sender<ToCoord>) {
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                ToPs::PushPull { reply } => {
+                    self.pushes_in_round += 1;
+                    if self.pushes_in_round >= self.num_workers {
+                        self.pushes_in_round = 0;
+                        self.version += 1;
+                        self.apply_update();
+                        self.maybe_migrate(&coord);
+                    }
+                    let _ = reply.send(self.version);
+                }
+                ToPs::Assign { clock, moves, peers } => {
+                    if moves.is_empty() {
+                        // Nothing to send: report done immediately so the
+                        // coordinator's barrier completes.
+                        let _ = coord.send(ToCoord::MigrationDone { ps_id: self.id });
+                    } else {
+                        self.pending = Some((clock, moves, peers));
+                        self.maybe_migrate(&coord);
+                    }
+                }
+                ToPs::SetWorkers { count } => {
+                    self.num_workers = count.max(1);
+                }
+                ToPs::SyncVersion { version } => {
+                    self.version = self.version.max(version);
+                    self.pushes_in_round = 0;
+                }
+                ToPs::Receive { blocks } => {
+                    for b in blocks {
+                        self.blocks.insert(b.id, b.data);
+                    }
+                }
+                ToPs::Dump { reply } => {
+                    let blocks = self
+                        .blocks
+                        .iter()
+                        .map(|(id, data)| Block {
+                            id: *id,
+                            data: data.clone(),
+                        })
+                        .collect();
+                    let _ = reply.send(blocks);
+                }
+                ToPs::GetVersion { reply } => {
+                    let _ = reply.send(self.version);
+                }
+                ToPs::Stop => break,
+            }
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Worker actor: synchronous push/pull training loop with clock-gated
+//! suspension (step 4 of §5).
+//!
+//! Each iteration the worker "trains a mini-batch" (a fixed compute delay
+//! standing in for fwd/bwd), then pushes gradients to and pulls parameters
+//! from every PS (a round-trip per PS).  When its version counter reaches
+//! the scaling clock received from the coordinator, it suspends, awaits
+//! the migration-complete notification, swaps in the new parameter-PS
+//! mapping and resumes — the measured suspension is exactly Fig 11's
+//! overhead.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use super::msg::{ToCoord, ToPs, ToWorker};
+
+pub struct WorkerState {
+    pub id: usize,
+    pub ps_channels: BTreeMap<usize, Sender<ToPs>>,
+    pub iter_ms: u64,
+    /// Local iteration counter == the worker's version counter.
+    pub version: u64,
+}
+
+impl WorkerState {
+    pub fn run(mut self, rx: Receiver<ToWorker>, coord: Sender<ToCoord>) {
+        let mut clock: Option<u64> = None;
+        loop {
+            // Drain control messages.
+            loop {
+                match rx.try_recv() {
+                    Ok(ToWorker::SetClock { clock: c }) => clock = Some(c),
+                    Ok(ToWorker::Resume { assignment: _, ps_channels }) => {
+                        // Migration finished before this worker reached the
+                        // scaling clock: it never needs to stop.  Swap the
+                        // mapping, CLEAR the pending clock (the event is
+                        // over), and ack zero suspension — otherwise the
+                        // worker would suspend on the next pull and wait
+                        // for a Resume that was already delivered.
+                        self.ps_channels = ps_channels;
+                        clock = None;
+                        let _ = coord.send(ToCoord::WorkerResumed {
+                            worker_id: self.id,
+                            suspended_ms: 0.0,
+                        });
+                    }
+                    Ok(ToWorker::Stop) => return,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => return,
+                }
+            }
+
+            // Mini-batch compute.
+            std::thread::sleep(Duration::from_millis(self.iter_ms));
+
+            // Push gradients / pull parameters from every PS.  §5: "for
+            // workers, the version counter is received from PSs when
+            // pulling" — gating suspension on a worker-local iteration
+            // count desyncs from the PS round counter after scaling events
+            // and can deadlock the next scaling clock.
+            for tx in self.ps_channels.values() {
+                let (reply_tx, reply_rx) = channel();
+                if tx.send(ToPs::PushPull { reply: reply_tx }).is_err() {
+                    continue;
+                }
+                if let Ok(v) = reply_rx.recv() {
+                    self.version = self.version.max(v);
+                }
+            }
+
+            // Clock-gated suspension (step 4).
+            if let Some(c) = clock {
+                if self.version >= c {
+                    clock = None;
+                    let t0 = Instant::now();
+                    // Block until the coordinator signals migration done.
+                    loop {
+                        match rx.recv() {
+                            Ok(ToWorker::Resume { assignment: _, ps_channels }) => {
+                                self.ps_channels = ps_channels;
+                                break;
+                            }
+                            Ok(ToWorker::SetClock { clock: c2 }) => clock = Some(c2),
+                            Ok(ToWorker::Stop) | Err(_) => return,
+                        }
+                    }
+                    let suspended_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let _ = coord.send(ToCoord::WorkerResumed {
+                        worker_id: self.id,
+                        suspended_ms,
+                    });
+                }
+            }
+        }
+    }
+}

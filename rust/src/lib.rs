@@ -1,0 +1,26 @@
+//! # DL² — a deep-learning-driven scheduler for deep-learning clusters
+//!
+//! Production-quality reproduction of *DL²: A Deep Learning-driven Scheduler
+//! for Deep Learning Clusters* (Peng et al., 2019) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the scheduler/coordinator: time-slotted resource
+//!   allocation over a DL cluster, baseline schedulers (DRF, FIFO, SRTF,
+//!   Tetris, Optimus, OfflineRL), the online RL driver, the elastic-scaling
+//!   substrate (§5), metrics and benches.
+//! * **L2 (python/compile/model.py, build-time)** — policy/value networks,
+//!   SL and actor-critic RL update steps in JAX, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/, build-time)** — fused Pallas
+//!   linear-layer kernels on the forward *and* backward paths.
+//!
+//! Python never runs at runtime: the [`runtime`] module executes the AOT
+//! artifacts through the PJRT C API (`xla` crate).
+
+pub mod cluster;
+pub mod elastic;
+pub mod pipeline;
+pub mod rl;
+pub mod runtime;
+pub mod scheduler;
+pub mod trace;
+pub mod util;

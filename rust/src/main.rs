@@ -1,0 +1,213 @@
+//! `dl2` — the DL² cluster-scheduler launcher.
+//!
+//! Subcommands:
+//!   train     SL warm-up + online RL; saves trained parameters.
+//!   evaluate  Load saved parameters and evaluate on a validation trace.
+//!   compare   All schedulers head-to-head on one validation trace (Fig 9 style).
+//!   elastic   Hot-scaling demo: add/remove PSs & workers with timings (§5).
+//!   info      Artifact / environment inventory.
+//!
+//! Common flags: --servers N --jobs N --j J --seed S --artifacts DIR
+
+use dl2::cluster::ClusterConfig;
+use dl2::elastic::{ElasticConfig, ElasticJob};
+use dl2::pipeline::{
+    baseline_by_name, run_pipeline, validation_trace, Incumbent, PipelineConfig,
+};
+use dl2::rl::evaluate_policy;
+use dl2::runtime::{save_params, Engine};
+use dl2::scheduler::{Dl2Config, Dl2Scheduler};
+use dl2::trace::TraceConfig;
+use dl2::util::{Args, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "compare" => cmd_compare(&args),
+        "elastic" => cmd_elastic(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> std::path::PathBuf {
+    match args.get("artifacts") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => dl2::runtime::default_artifacts_dir(),
+    }
+}
+
+fn cluster_cfg(args: &Args) -> ClusterConfig {
+    ClusterConfig {
+        num_servers: args.usize_or("servers", 12),
+        interference: args.f64_or("interference", 0.18),
+        speed_variation: args.f64_or("speed-variation", 0.0),
+        seed: args.u64_or("seed", 0),
+        ..Default::default()
+    }
+}
+
+fn trace_cfg(args: &Args) -> TraceConfig {
+    TraceConfig {
+        num_jobs: args.usize_or("jobs", 40),
+        peak_rate: args.f64_or("peak-rate", 3.0),
+        seed: args.u64_or("trace-seed", 1),
+        ..Default::default()
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let engine = Engine::load(artifacts_dir(args))?;
+    let incumbent = match args.str_or("incumbent", "drf") {
+        "fifo" => Incumbent::Fifo,
+        "srtf" => Incumbent::Srtf,
+        _ => Incumbent::Drf,
+    };
+    let cfg = PipelineConfig {
+        cluster: cluster_cfg(args),
+        trace: trace_cfg(args),
+        dl2: Dl2Config {
+            j: args.usize_or("j", 10),
+            seed: args.u64_or("seed", 7),
+            ..Default::default()
+        },
+        incumbent,
+        sl_steps: args.usize_or("sl-steps", 250),
+        rl_episodes: args.usize_or("rl-episodes", 30),
+        ..Default::default()
+    };
+    println!(
+        "training DL2: J={} incumbent={} sl_steps={} rl_episodes={}",
+        cfg.dl2.j,
+        cfg.incumbent.name(),
+        cfg.sl_steps,
+        cfg.rl_episodes
+    );
+    let result = run_pipeline(&cfg, engine)?;
+    let mut t = Table::new(
+        "training progress (validation avg JCT, slots)",
+        &["updates", "jct"],
+    );
+    for (u, j) in &result.history {
+        t.row(vec![u.to_string(), format!("{j:.3}")]);
+    }
+    t.emit("train_progress");
+    println!(
+        "SL-only JCT: {:.3}  final JCT: {:.3}",
+        result.sl_jct, result.final_jct
+    );
+
+    let out = std::path::PathBuf::from(args.str_or("out", "results/dl2_policy.bin"));
+    save_params(&out, &result.trainer.sched.pol.theta)?;
+    save_params(
+        &out.with_extension("value.bin"),
+        &result.trainer.sched.val.theta,
+    )?;
+    println!("saved policy to {}", out.display());
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
+    let engine = Engine::load(artifacts_dir(args))?;
+    let j = args.usize_or("j", 10);
+    let cfg = Dl2Config {
+        j,
+        ..Default::default()
+    };
+    let mut sched = Dl2Scheduler::new(engine, cfg);
+    let path = std::path::PathBuf::from(args.str_or("policy", "results/dl2_policy.bin"));
+    let theta = dl2::runtime::load_params(&path)?;
+    sched.pol.set_theta(&theta);
+    let ccfg = cluster_cfg(args);
+    let specs = validation_trace(&trace_cfg(args));
+    let jct = evaluate_policy(&mut sched, &ccfg, &specs, 3000);
+    println!("validation avg JCT: {jct:.3} slots over {} jobs", specs.len());
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let ccfg = cluster_cfg(args);
+    let specs = validation_trace(&trace_cfg(args));
+    let mut t = Table::new(
+        "scheduler comparison (validation avg JCT, slots)",
+        &["scheduler", "avg_jct"],
+    );
+    for name in ["drf", "fifo", "srtf", "tetris", "optimus"] {
+        let mut mk = || baseline_by_name(name).unwrap();
+        let jct = dl2::pipeline::baseline_jct(&mut mk, &ccfg, &specs, 3, 3000);
+        t.row(vec![name.into(), format!("{jct:.3}")]);
+    }
+    t.emit("compare");
+    println!("(train DL2 with `dl2 train` and evaluate with `dl2 evaluate` to add it)");
+    Ok(())
+}
+
+fn cmd_elastic(args: &Args) -> anyhow::Result<()> {
+    let model_mb = args.f64_or("model-mb", 98.0);
+    let cfg = ElasticConfig::default();
+    println!("starting elastic job: model={model_mb}MB, 2 workers, 2 PS");
+    let mut job = ElasticJob::start(cfg, model_mb, 2, 2);
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let mut t = Table::new(
+        "hot scaling timings (ms)",
+        &["op", "register", "assign", "migrate", "worker_update", "suspension"],
+    );
+    for op in ["add_ps", "add_ps", "remove_ps"] {
+        let r = if op == "add_ps" {
+            job.add_ps()
+        } else {
+            job.remove_ps()
+        };
+        assert!(job.verify_integrity(), "parameter blocks corrupted");
+        t.row(vec![
+            op.into(),
+            format!("{:.2}", r.registration_ms),
+            format!("{:.2}", r.assignment_ms),
+            format!("{:.2}", r.migration_ms),
+            format!("{:.2}", r.worker_update_ms),
+            format!("{:.2}", r.avg_suspension_ms),
+        ]);
+    }
+    t.emit("elastic_demo");
+    job.shutdown();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let engine = Engine::load(artifacts_dir(args))?;
+    let meta = &engine.meta;
+    println!("artifacts: {}", engine.artifacts_dir().display());
+    println!(
+        "L={} hidden={} batch={} J variants={:?}",
+        meta.num_types, meta.hidden, meta.batch, meta.js
+    );
+    for (&j, s) in &meta.specs {
+        println!(
+            "  J={j}: state={} actions={} policy_params={} value_params={}",
+            s.state_dim, s.num_actions, s.policy_params, s.value_params
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "dl2 — DL²: a deep-learning-driven scheduler for DL clusters
+
+USAGE: dl2 <train|evaluate|compare|elastic|info> [flags]
+
+  train     --j 10 --sl-steps 250 --rl-episodes 30 --incumbent drf --out results/dl2_policy.bin
+  evaluate  --policy results/dl2_policy.bin --j 10
+  compare   --servers 12 --jobs 40
+  elastic   --model-mb 98
+  info
+
+Common: --servers N --jobs N --seed S --interference F --artifacts DIR"
+    );
+}

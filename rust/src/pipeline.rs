@@ -1,0 +1,219 @@
+//! End-to-end experiment pipeline: the exact §3.2 recipe — offline
+//! supervised warm-up from an incumbent scheduler, then online
+//! actor-critic RL in the live environment — packaged so the CLI, the
+//! examples and every bench drive the same code path.
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::rl::{generate_dataset, train_sl, OnlineTrainer, RlOptions};
+use crate::runtime::Engine;
+use crate::scheduler::{
+    Dl2Config, Dl2Scheduler, Drf, Fifo, Optimus, Scheduler, Srtf, Tetris,
+};
+use crate::trace::{generate, JobSpec, TraceConfig};
+use crate::util::Rng;
+
+/// Which incumbent teaches the supervised warm-up (Fig 16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Incumbent {
+    Drf,
+    Fifo,
+    Srtf,
+}
+
+impl Incumbent {
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self {
+            Incumbent::Drf => Box::new(Drf),
+            Incumbent::Fifo => Box::new(Fifo::default()),
+            Incumbent::Srtf => Box::new(Srtf::default()),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Incumbent::Drf => "drf",
+            Incumbent::Fifo => "fifo",
+            Incumbent::Srtf => "srtf",
+        }
+    }
+}
+
+/// Everything one experiment needs.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub cluster: ClusterConfig,
+    pub trace: TraceConfig,
+    pub dl2: Dl2Config,
+    pub rl_opts: RlOptions,
+    pub incumbent: Incumbent,
+    /// Distinct traces used to build the SL dataset.
+    pub sl_traces: usize,
+    /// SL mini-batch updates (paper: repeat until the policy matches the
+    /// incumbent — hundreds of passes).
+    pub sl_steps: usize,
+    /// Online RL training episodes.
+    pub rl_episodes: usize,
+    /// Record validation JCT every this many episodes (0 = only at end).
+    pub eval_every: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            cluster: experiment_cluster(),
+            trace: experiment_trace(),
+            dl2: Dl2Config {
+                j: 10,
+                ..Default::default()
+            },
+            rl_opts: RlOptions::default(),
+            incumbent: Incumbent::Drf,
+            sl_traces: 4,
+            sl_steps: 250,
+            rl_episodes: 20,
+            eval_every: 5,
+        }
+    }
+}
+
+/// The standard contended-cluster setting used across experiments: jobs
+/// queue for GPUs, so allocation quality dominates JCT.
+pub fn experiment_cluster() -> ClusterConfig {
+    ClusterConfig {
+        num_servers: 12,
+        ..Default::default()
+    }
+}
+
+pub fn experiment_trace() -> TraceConfig {
+    TraceConfig {
+        num_jobs: 30,
+        peak_rate: 3.0,
+        ..Default::default()
+    }
+}
+
+/// Output of a pipeline run.
+pub struct PipelineResult {
+    /// (NN update count, validation avg JCT) samples over training.
+    pub history: Vec<(usize, f64)>,
+    /// Validation JCT after SL only (before any RL).
+    pub sl_jct: f64,
+    /// Final validation JCT.
+    pub final_jct: f64,
+    /// SL loss curve.
+    pub sl_losses: Vec<f32>,
+    /// The trained trainer (for param export / further use).
+    pub trainer: OnlineTrainer,
+}
+
+/// Run the full DL² pipeline: SL warm-up on `incumbent` traces, then
+/// `rl_episodes` of online RL, evaluating on the validation trace.
+pub fn run_pipeline(cfg: &PipelineConfig, engine: Engine) -> Result<PipelineResult> {
+    let mut sched = Dl2Scheduler::new(engine, cfg.dl2.clone());
+    let mut rng = Rng::new(cfg.dl2.seed ^ 0x51_11);
+
+    // --- Offline supervised learning (§4.2).
+    let sl_traces: Vec<Vec<JobSpec>> = (0..cfg.sl_traces)
+        .map(|i| {
+            generate(&TraceConfig {
+                seed: cfg.trace.seed.wrapping_add(10 + i as u64),
+                ..cfg.trace.clone()
+            })
+        })
+        .collect();
+    let mut incumbent = cfg.incumbent.build();
+    let dataset = generate_dataset(
+        incumbent.as_mut(),
+        &cfg.cluster,
+        &sl_traces,
+        cfg.dl2.j,
+        sched.engine.meta.num_types,
+        cfg.rl_opts.max_slots,
+    );
+    let sl_losses = train_sl(&mut sched, &dataset, cfg.sl_steps, &mut rng);
+
+    // --- Online RL (§4.3).
+    let val_specs = validation_trace(&cfg.trace);
+    let mut trainer = OnlineTrainer::new(sched, cfg.rl_opts.clone());
+    let sl_jct = trainer.evaluate(&cfg.cluster, &val_specs);
+    let mut history = vec![(0usize, sl_jct)];
+    // Best-validated-policy selection (standard model selection on the
+    // validation metric; the deployed scheduler is the best checkpoint).
+    let mut best = (sl_jct, trainer.sched.pol.theta.clone());
+    for ep in 0..cfg.rl_episodes {
+        let specs = generate(&TraceConfig {
+            seed: cfg.trace.seed.wrapping_add(1000 + ep as u64),
+            ..cfg.trace.clone()
+        });
+        let ecfg = ClusterConfig {
+            seed: cfg.cluster.seed.wrapping_add(ep as u64),
+            ..cfg.cluster.clone()
+        };
+        trainer.train_episode(&ecfg, &specs);
+        let should_eval = cfg.eval_every > 0 && (ep + 1) % cfg.eval_every == 0;
+        if should_eval || ep + 1 == cfg.rl_episodes {
+            let jct = trainer.evaluate(&cfg.cluster, &val_specs);
+            history.push((trainer.updates, jct));
+            if jct < best.0 {
+                best = (jct, trainer.sched.pol.theta.clone());
+            }
+        }
+    }
+    // Deploy the best validated checkpoint.
+    let final_jct = best.0;
+    trainer.sched.pol.set_theta(&best.1);
+    Ok(PipelineResult {
+        history,
+        sl_jct,
+        final_jct,
+        sl_losses,
+        trainer,
+    })
+}
+
+/// The held-out validation sequence for a trace config (§6.2: same
+/// distributions, different seed).
+pub fn validation_trace(tc: &TraceConfig) -> Vec<JobSpec> {
+    generate(&TraceConfig {
+        seed: tc.seed.wrapping_add(0x5EED_0FF5),
+        ..tc.clone()
+    })
+}
+
+/// Average JCT of a baseline scheduler on a validation sequence, averaged
+/// over `runs` environment seeds.
+pub fn baseline_jct(
+    mk: &mut dyn FnMut() -> Box<dyn Scheduler>,
+    cluster: &ClusterConfig,
+    specs: &[JobSpec],
+    runs: usize,
+    max_slots: usize,
+) -> f64 {
+    let mut total = 0.0;
+    for r in 0..runs {
+        let cfg = ClusterConfig {
+            seed: cluster.seed.wrapping_add(777 + r as u64),
+            ..cluster.clone()
+        };
+        let mut sched = mk();
+        let res =
+            crate::scheduler::run_episode(Cluster::new(cfg), specs, sched.as_mut(), 0.0, max_slots);
+        total += res.avg_jct_slots;
+    }
+    total / runs as f64
+}
+
+/// All heuristic baselines by name (for the CLI / Fig 9 bench).
+pub fn baseline_by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+    match name {
+        "drf" => Some(Box::new(Drf)),
+        "fifo" => Some(Box::new(Fifo::default())),
+        "srtf" => Some(Box::new(Srtf::default())),
+        "tetris" => Some(Box::new(Tetris::default())),
+        "optimus" => Some(Box::new(Optimus::default())),
+        _ => None,
+    }
+}

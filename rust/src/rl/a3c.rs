@@ -1,0 +1,132 @@
+//! Federated training (§6.4, Fig 18): multiple DL² schedulers — one per
+//! cluster, each with its own job traces and environment — collaboratively
+//! train a global policy, A3C-style.
+//!
+//! Round-robin parameter-server realization: every round, each cluster
+//! pulls the current global parameters, runs one training episode on its
+//! own environment (applying its updates locally), and pushes the result
+//! back as the new global model.  With k clusters a round performs k
+//! episodes' worth of updates, which is why convergence is ≈k× faster per
+//! round (the paper's observation).
+
+use super::train::{OnlineTrainer, RlOptions};
+use crate::cluster::ClusterConfig;
+use crate::runtime::Engine;
+use crate::scheduler::{Dl2Config, Dl2Scheduler};
+use crate::trace::{generate, TraceConfig};
+
+/// One federated cluster: trainer + its private trace stream.
+pub struct FederatedCluster {
+    pub trainer: OnlineTrainer,
+    pub trace_cfg: TraceConfig,
+    pub cluster_cfg: ClusterConfig,
+    episode: usize,
+}
+
+pub struct Federation {
+    pub clusters: Vec<FederatedCluster>,
+    /// Validation JCT after each round (on cluster 0's validation trace).
+    pub history: Vec<f64>,
+}
+
+impl Federation {
+    /// Build `k` clusters sharing one initial policy.  Each cluster gets
+    /// its own artifacts engine (PJRT compilation is per-instance), its own
+    /// seeded trace generator, and its own environment.
+    pub fn new(
+        k: usize,
+        artifacts_dir: &std::path::Path,
+        dl2_cfg: &Dl2Config,
+        cluster_cfg: &ClusterConfig,
+        trace_cfg: &TraceConfig,
+        opts: &RlOptions,
+    ) -> anyhow::Result<Federation> {
+        assert!(k >= 1);
+        let mut clusters = Vec::with_capacity(k);
+        let mut shared: Option<(Vec<f32>, Vec<f32>)> = None;
+        for c in 0..k {
+            let engine = Engine::load(artifacts_dir)?;
+            let cfg = Dl2Config {
+                seed: dl2_cfg.seed.wrapping_add(c as u64 * 101),
+                ..dl2_cfg.clone()
+            };
+            let mut sched = Dl2Scheduler::new(engine, cfg);
+            match &shared {
+                None => shared = Some((sched.pol.theta.clone(), sched.val.theta.clone())),
+                Some((p, v)) => {
+                    sched.pol.set_theta(p);
+                    sched.val.set_theta(v);
+                }
+            }
+            clusters.push(FederatedCluster {
+                trainer: OnlineTrainer::new(sched, opts.clone()),
+                trace_cfg: TraceConfig {
+                    seed: trace_cfg.seed.wrapping_add(c as u64 * 977),
+                    ..trace_cfg.clone()
+                },
+                cluster_cfg: ClusterConfig {
+                    seed: cluster_cfg.seed.wrapping_add(c as u64 * 31),
+                    ..cluster_cfg.clone()
+                },
+                episode: 0,
+            });
+        }
+        Ok(Federation {
+            clusters,
+            history: Vec::new(),
+        })
+    }
+
+    /// One federated round: each cluster trains one episode starting from
+    /// the global parameters; its result becomes the new global model.
+    pub fn round(&mut self) {
+        let k = self.clusters.len();
+        for c in 0..k {
+            // Pull global (= previous cluster's result).
+            if c > 0 {
+                let (p, v) = {
+                    let prev = &self.clusters[c - 1].trainer.sched;
+                    (prev.pol.theta.clone(), prev.val.theta.clone())
+                };
+                let cur = &mut self.clusters[c].trainer.sched;
+                cur.pol.set_theta(&p);
+                cur.val.set_theta(&v);
+            }
+            let fc = &mut self.clusters[c];
+            let specs = generate(&TraceConfig {
+                seed: fc.trace_cfg.seed.wrapping_add(fc.episode as u64 * 7919),
+                ..fc.trace_cfg.clone()
+            });
+            fc.episode += 1;
+            let cfg = ClusterConfig {
+                seed: fc.cluster_cfg.seed.wrapping_add(fc.episode as u64),
+                ..fc.cluster_cfg.clone()
+            };
+            fc.trainer.train_episode(&cfg, &specs);
+        }
+        // Propagate the last cluster's parameters back to cluster 0 (the
+        // global model) and evaluate.
+        if k > 1 {
+            let (p, v) = {
+                let last = &self.clusters[k - 1].trainer.sched;
+                (last.pol.theta.clone(), last.val.theta.clone())
+            };
+            let first = &mut self.clusters[0].trainer.sched;
+            first.pol.set_theta(&p);
+            first.val.set_theta(&v);
+        }
+    }
+
+    /// Validation JCT of the global model on a held-out trace.
+    pub fn evaluate(&mut self, val_specs: &[crate::trace::JobSpec]) -> f64 {
+        let cfg = self.clusters[0].cluster_cfg.clone();
+        let jct = self.clusters[0].trainer.evaluate(&cfg, val_specs);
+        self.history.push(jct);
+        jct
+    }
+
+    /// Total NN updates across all clusters.
+    pub fn total_updates(&self) -> usize {
+        self.clusters.iter().map(|c| c.trainer.updates).sum()
+    }
+}

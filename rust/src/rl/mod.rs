@@ -1,0 +1,17 @@
+//! The learning layer: supervised warm-up, online actor-critic RL,
+//! experience replay, and federated (A3C) training.
+//!
+//! All gradient math executes inside the AOT artifacts (`sl_step`,
+//! `rl_step`, `pg_step`) through the PJRT runtime; this module owns the
+//! *driver* logic — sample collection, returns, replay, baselines,
+//! evaluation — in pure rust.
+
+pub mod a3c;
+pub mod replay;
+pub mod sl;
+pub mod train;
+
+pub use a3c::Federation;
+pub use replay::{discounted_returns, Batch, ReplayBuffer, SampleG};
+pub use sl::{decompose_batch, decompose_batch_opts, generate_dataset, train_sl, Labeled};
+pub use train::{evaluate_policy, evaluate_policy_with_error, EpisodeStats, OnlineTrainer, RlOptions};

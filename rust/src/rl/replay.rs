@@ -1,0 +1,177 @@
+//! Experience replay (§4.3): a ring buffer of (state, action, return)
+//! samples from recent time slots, sampled into fixed-size mini-batches to
+//! decorrelate consecutive updates.
+
+use crate::util::Rng;
+
+/// One training sample: a recorded decision plus its discounted return G.
+#[derive(Debug, Clone)]
+pub struct SampleG {
+    pub state: Vec<f32>,
+    pub action: i32,
+    pub ret: f32,
+}
+
+/// Flat, batch-shaped view ready for `rl_step` / `pg_step` literals.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub states: Vec<f32>,
+    pub actions: Vec<i32>,
+    pub returns: Vec<f32>,
+}
+
+/// Ring-buffer replay memory (paper default capacity: 8192).
+pub struct ReplayBuffer {
+    capacity: usize,
+    buf: Vec<SampleG>,
+    next: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        ReplayBuffer {
+            capacity: capacity.max(1),
+            buf: Vec::new(),
+            next: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn push(&mut self, s: SampleG) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(s);
+        } else {
+            self.buf[self.next] = s;
+            self.next = (self.next + 1) % self.capacity;
+        }
+    }
+
+    /// Sample `batch` items uniformly (with replacement when the buffer is
+    /// smaller than the batch) into flat arrays.
+    pub fn sample(&self, rng: &mut Rng, batch: usize, state_dim: usize) -> Option<Batch> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let mut states = Vec::with_capacity(batch * state_dim);
+        let mut actions = Vec::with_capacity(batch);
+        let mut returns = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let s = &self.buf[rng.below(self.buf.len())];
+            debug_assert_eq!(s.state.len(), state_dim);
+            states.extend_from_slice(&s.state);
+            actions.push(s.action);
+            returns.push(s.ret);
+        }
+        Some(Batch {
+            states,
+            actions,
+            returns,
+        })
+    }
+
+    /// Build a batch from an explicit sample list (the "without experience
+    /// replay" ablation trains only on the newest slot's samples, repeating
+    /// them to fill the fixed artifact batch size).
+    pub fn batch_from(samples: &[SampleG], batch: usize, state_dim: usize) -> Option<Batch> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut states = Vec::with_capacity(batch * state_dim);
+        let mut actions = Vec::with_capacity(batch);
+        let mut returns = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let s = &samples[i % samples.len()];
+            states.extend_from_slice(&s.state);
+            actions.push(s.action);
+            returns.push(s.ret);
+        }
+        Some(Batch {
+            states,
+            actions,
+            returns,
+        })
+    }
+}
+
+/// Discounted per-slot returns: G_t = Σ_{k≥t} γ^{k-t} r_k.
+pub fn discounted_returns(rewards: &[f64], gamma: f64) -> Vec<f64> {
+    let mut g = vec![0.0; rewards.len()];
+    let mut acc = 0.0;
+    for t in (0..rewards.len()).rev() {
+        acc = rewards[t] + gamma * acc;
+        g[t] = acc;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(v: f32) -> SampleG {
+        SampleG {
+            state: vec![v; 3],
+            action: v as i32,
+            ret: v,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut rb = ReplayBuffer::new(3);
+        for i in 0..5 {
+            rb.push(sample(i as f32));
+        }
+        assert_eq!(rb.len(), 3);
+        let rets: Vec<f32> = rb.buf.iter().map(|s| s.ret).collect();
+        // 0 and 1 were overwritten by 3 and 4.
+        assert!(rets.contains(&2.0) && rets.contains(&3.0) && rets.contains(&4.0));
+    }
+
+    #[test]
+    fn sample_shapes() {
+        let mut rb = ReplayBuffer::new(10);
+        for i in 0..4 {
+            rb.push(sample(i as f32));
+        }
+        let mut rng = Rng::new(0);
+        let b = rb.sample(&mut rng, 8, 3).unwrap();
+        assert_eq!(b.states.len(), 24);
+        assert_eq!(b.actions.len(), 8);
+        assert_eq!(b.returns.len(), 8);
+    }
+
+    #[test]
+    fn empty_buffer_returns_none() {
+        let rb = ReplayBuffer::new(4);
+        let mut rng = Rng::new(0);
+        assert!(rb.sample(&mut rng, 2, 3).is_none());
+    }
+
+    #[test]
+    fn batch_from_repeats_to_fill() {
+        let s = vec![sample(1.0), sample(2.0)];
+        let b = ReplayBuffer::batch_from(&s, 5, 3).unwrap();
+        assert_eq!(b.actions, vec![1, 2, 1, 2, 1]);
+    }
+
+    #[test]
+    fn returns_discount_correctly() {
+        let g = discounted_returns(&[1.0, 1.0, 1.0], 0.5);
+        assert!((g[2] - 1.0).abs() < 1e-12);
+        assert!((g[1] - 1.5).abs() < 1e-12);
+        assert!((g[0] - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn returns_empty_ok() {
+        assert!(discounted_returns(&[], 0.9).is_empty());
+    }
+}

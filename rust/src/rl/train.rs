@@ -1,0 +1,258 @@
+//! Online reinforcement learning (§4.3): actor-critic REINFORCE over live
+//! episodes, with experience replay, entropy regularization, job-aware
+//! exploration (in the scheduler), and Table-2 ablation switches.
+//!
+//! Training protocol: an episode runs a job trace to completion; every
+//! slot's NN decisions (recorded by the scheduler) receive the slot's
+//! per-timeslot reward (Eqn 1), folded into discounted cumulative returns
+//! G_t at episode end; one NN update is performed per elapsed slot,
+//! sampling mini-batches from the replay buffer (matching the paper's
+//! one-update-per-scheduling-interval cadence).
+
+use super::replay::{discounted_returns, Batch, ReplayBuffer, SampleG};
+use crate::cluster::{Cluster, ClusterConfig, JobType};
+use crate::scheduler::{Dl2Scheduler, Scheduler};
+use crate::trace::JobSpec;
+use crate::util::stats::{mean, Ema};
+use crate::util::Rng;
+
+/// Training options + ablation switches (Table 2).
+#[derive(Debug, Clone)]
+pub struct RlOptions {
+    /// Replay capacity (paper: 8192 samples).
+    pub replay_capacity: usize,
+    /// false → "without actor-critic": EMA reward baseline + pg_step.
+    pub use_critic: bool,
+    /// false → "without experience replay": train on newest slot only.
+    pub use_replay: bool,
+    /// Runaway guard per episode.
+    pub max_slots: usize,
+    /// Epoch-estimation error injected into the env (Fig 14).
+    pub epoch_error: f64,
+}
+
+impl Default for RlOptions {
+    fn default() -> Self {
+        RlOptions {
+            replay_capacity: 8192,
+            use_critic: true,
+            use_replay: true,
+            max_slots: 3000,
+            epoch_error: 0.0,
+        }
+    }
+}
+
+/// Per-episode training statistics.
+#[derive(Debug, Clone)]
+pub struct EpisodeStats {
+    pub avg_jct: f64,
+    pub total_reward: f64,
+    pub updates: usize,
+    pub mean_entropy: f32,
+}
+
+/// The online RL driver around a [`Dl2Scheduler`].
+pub struct OnlineTrainer {
+    pub sched: Dl2Scheduler,
+    pub replay: ReplayBuffer,
+    pub opts: RlOptions,
+    /// Total NN updates performed ("steps" in Figs 10/15/16).
+    pub updates: usize,
+    baseline: Ema,
+    rng: Rng,
+}
+
+impl OnlineTrainer {
+    pub fn new(sched: Dl2Scheduler, opts: RlOptions) -> Self {
+        let rng = Rng::new(sched.cfg.seed ^ 0x0111_1e5);
+        OnlineTrainer {
+            replay: ReplayBuffer::new(opts.replay_capacity),
+            sched,
+            opts,
+            updates: 0,
+            baseline: Ema::new(0.05),
+            rng,
+        }
+    }
+
+    /// Run one training episode over `specs` on an env built by `mk_env`,
+    /// then perform one NN update per elapsed slot.
+    pub fn train_episode_on(
+        &mut self,
+        cfg: &ClusterConfig,
+        catalog: Option<Vec<JobType>>,
+        specs: &[JobSpec],
+    ) -> EpisodeStats {
+        let mut cluster = match catalog {
+            Some(cat) => Cluster::with_catalog(cfg.clone(), cat),
+            None => Cluster::new(cfg.clone()),
+        };
+        self.sched.training = true;
+
+        let mut next_spec = 0usize;
+        let mut rewards: Vec<f64> = Vec::new();
+        let mut slot_samples: Vec<Vec<(Vec<f32>, i32)>> = Vec::new();
+        loop {
+            while next_spec < specs.len() && specs[next_spec].arrival_slot <= cluster.slot {
+                let s = &specs[next_spec];
+                cluster.submit(s.type_idx, s.total_epochs, self.opts.epoch_error);
+                next_spec += 1;
+            }
+            let active = cluster.active_jobs();
+            let alloc = self.sched.schedule(&cluster, &active);
+            let transitions = self.sched.take_transitions();
+            let placement = cluster.apply_allocation(&alloc);
+            let outcome = cluster.advance(&placement);
+            rewards.push(outcome.reward);
+            slot_samples.push(
+                transitions
+                    .into_iter()
+                    .map(|t| (t.state, t.action as i32))
+                    .collect(),
+            );
+            if (next_spec >= specs.len() && cluster.all_finished())
+                || cluster.slot >= self.opts.max_slots
+            {
+                break;
+            }
+        }
+
+        // Returns + replay fill.
+        let g = discounted_returns(&rewards, self.sched.cfg.gamma as f64);
+        let mut newest: Vec<SampleG> = Vec::new();
+        for (t, samples) in slot_samples.into_iter().enumerate() {
+            for (state, action) in samples {
+                let s = SampleG {
+                    state,
+                    action,
+                    ret: g[t] as f32,
+                };
+                if self.opts.use_replay {
+                    self.replay.push(s);
+                } else {
+                    newest.push(s);
+                }
+            }
+        }
+
+        // One update per elapsed slot (paper cadence).
+        let n_updates = rewards.len();
+        let mut entropies = Vec::new();
+        for _ in 0..n_updates {
+            let batch = self.make_batch(&newest);
+            let Some(b) = batch else { break };
+            let e = self.apply_update(&b);
+            entropies.push(e);
+            self.updates += 1;
+        }
+
+        EpisodeStats {
+            avg_jct: cluster.avg_jct(),
+            total_reward: rewards.iter().sum(),
+            updates: n_updates,
+            mean_entropy: mean(&entropies.iter().map(|&x| x as f64).collect::<Vec<_>>())
+                as f32,
+        }
+    }
+
+    pub fn train_episode(&mut self, cfg: &ClusterConfig, specs: &[JobSpec]) -> EpisodeStats {
+        self.train_episode_on(cfg, None, specs)
+    }
+
+    fn make_batch(&mut self, newest: &[SampleG]) -> Option<Batch> {
+        let j = self.sched.cfg.j;
+        let state_dim = self.sched.engine.meta.spec(j).state_dim;
+        let batch = self.sched.engine.meta.batch;
+        if self.opts.use_replay {
+            self.replay.sample(&mut self.rng, batch, state_dim)
+        } else {
+            ReplayBuffer::batch_from(newest, batch, state_dim)
+        }
+    }
+
+    /// One NN update; returns the policy entropy.
+    fn apply_update(&mut self, b: &Batch) -> f32 {
+        let j = self.sched.cfg.j;
+        let cfg = self.sched.cfg.clone();
+        if self.opts.use_critic {
+            let losses = self
+                .sched
+                .engine
+                .rl_step(
+                    j,
+                    &mut self.sched.pol,
+                    &mut self.sched.val,
+                    &b.states,
+                    &b.actions,
+                    &b.returns,
+                    cfg.lr_rl_policy,
+                    cfg.lr_rl_value,
+                    cfg.beta,
+                )
+                .expect("rl_step failed");
+            losses.entropy
+        } else {
+            // EMA-of-returns baseline in place of the critic (Table 2).
+            let mean_ret = mean(&b.returns.iter().map(|&x| x as f64).collect::<Vec<_>>());
+            let base = self.baseline.update(mean_ret) as f32;
+            let adv: Vec<f32> = b.returns.iter().map(|r| r - base).collect();
+            let (_, entropy) = self
+                .sched
+                .engine
+                .pg_step(
+                    j,
+                    &mut self.sched.pol,
+                    &b.states,
+                    &b.actions,
+                    &adv,
+                    cfg.lr_rl_policy,
+                    cfg.beta,
+                )
+                .expect("pg_step failed");
+            entropy
+        }
+    }
+
+    /// Evaluate the current policy (no exploration, fixed decision seed) on
+    /// a validation sequence; returns average JCT in slots.
+    pub fn evaluate(&mut self, cfg: &ClusterConfig, specs: &[JobSpec]) -> f64 {
+        evaluate_policy(&mut self.sched, cfg, specs, self.opts.max_slots)
+    }
+}
+
+/// Evaluate a DL² policy on a validation sequence (training mode off,
+/// deterministic decision stream).
+pub fn evaluate_policy(
+    sched: &mut Dl2Scheduler,
+    cfg: &ClusterConfig,
+    specs: &[JobSpec],
+    max_slots: usize,
+) -> f64 {
+    evaluate_policy_with_error(sched, cfg, specs, max_slots, 0.0)
+}
+
+/// Like [`evaluate_policy`], with a Fig-14 epoch-estimation error injected
+/// into the environment (the scheduler still sees the declared epochs).
+pub fn evaluate_policy_with_error(
+    sched: &mut Dl2Scheduler,
+    cfg: &ClusterConfig,
+    specs: &[JobSpec],
+    max_slots: usize,
+    epoch_error: f64,
+) -> f64 {
+    let was_training = sched.training;
+    sched.training = false;
+    let saved_rng = sched.rng.clone();
+    sched.rng = Rng::new(0xE7A1_5EED ^ sched.cfg.seed);
+    let res = crate::scheduler::run_episode(
+        Cluster::new(cfg.clone()),
+        specs,
+        sched,
+        epoch_error,
+        max_slots,
+    );
+    sched.rng = saved_rng;
+    sched.training = was_training;
+    res.avg_jct_slots
+}

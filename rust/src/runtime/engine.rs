@@ -1,0 +1,306 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them once,
+//! and exposes typed entry points for the four artifact families.
+//!
+//! This is the ONLY place the coordinator touches XLA.  Python is never on
+//! this path — `make artifacts` ran once at build time; at runtime we load
+//! `artifacts/{name}_j{J}.hlo.txt`, compile on the CPU PJRT client, and
+//! execute with flat-vector literals.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::meta::Meta;
+use crate::runtime::params::TrainState;
+
+/// Losses reported by one `rl_step` execution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RlLosses {
+    pub policy_loss: f32,
+    pub value_loss: f32,
+    pub entropy: f32,
+}
+
+/// One compiled-artifact cache + PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub meta: Meta,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Device-resident policy parameters keyed by J: (TrainState.gen,
+    /// buffer).  Re-uploaded only when the parameters actually changed —
+    /// cuts ~600 KB of host→device traffic off every inference (§Perf).
+    policy_bufs: HashMap<usize, (u64, xla::PjRtBuffer)>,
+}
+
+impl Engine {
+    /// Load `meta.txt` from `dir` and create a CPU PJRT client.  Artifacts
+    /// are compiled lazily on first use and cached for the engine lifetime.
+    pub fn load<P: Into<PathBuf>>(dir: P) -> Result<Engine> {
+        let dir = dir.into();
+        let meta = Meta::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+        Ok(Engine {
+            client,
+            dir,
+            meta,
+            executables: HashMap::new(),
+            policy_bufs: HashMap::new(),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch cached) `{name}_j{J}`.
+    fn executable(&mut self, name: &str, j: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = format!("{name}_j{j}");
+        if !self.executables.contains_key(&key) {
+            let path = self.dir.join(format!("{key}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| {
+                anyhow::anyhow!("loading {} failed: {e:?} (run `make artifacts`)", path.display())
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {key} failed: {e:?}"))?;
+            self.executables.insert(key.clone(), exe);
+        }
+        Ok(&self.executables[&key])
+    }
+
+    /// Pre-compile every artifact for a given J (avoids first-use latency).
+    pub fn warmup(&mut self, j: usize) -> Result<()> {
+        for name in ["policy_infer", "value_infer", "sl_step", "rl_step", "pg_step"] {
+            self.executable(name, j)?;
+        }
+        Ok(())
+    }
+
+    fn run(&mut self, name: &str, j: usize, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name, j)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {name}_j{j} failed: {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name}_j{j} output failed: {e:?}"))?;
+        literal
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name}_j{j} output failed: {e:?}"))
+    }
+
+    /// π(a|s): single-state policy inference → probability vector [A].
+    pub fn policy_infer(&mut self, j: usize, theta: &[f32], state: &[f32]) -> Result<Vec<f32>> {
+        let spec = *self.meta.spec(j);
+        debug_assert_eq!(theta.len(), spec.policy_params);
+        debug_assert_eq!(state.len(), spec.state_dim);
+        let inputs = [xla::Literal::vec1(theta), xla::Literal::vec1(state)];
+        let out = self.run("policy_infer", j, &inputs)?;
+        let probs = out[0].to_vec::<f32>().map_err(err)?;
+        debug_assert_eq!(probs.len(), spec.num_actions);
+        Ok(probs)
+    }
+
+    /// Hot-path policy inference with device-resident parameters: `pol`'s
+    /// flat θ is uploaded once per parameter *generation* and then reused
+    /// across the slot's whole multi-inference sequence.
+    pub fn policy_infer_state(
+        &mut self,
+        j: usize,
+        pol: &TrainState,
+        state: &[f32],
+    ) -> Result<Vec<f32>> {
+        let spec = *self.meta.spec(j);
+        debug_assert_eq!(pol.theta.len(), spec.policy_params);
+        debug_assert_eq!(state.len(), spec.state_dim);
+        let stale = match self.policy_bufs.get(&j) {
+            Some((gen, _)) => *gen != pol.gen,
+            None => true,
+        };
+        if stale {
+            let buf = self
+                .client
+                .buffer_from_host_buffer(&pol.theta, &[pol.theta.len()], None)
+                .map_err(err)?;
+            self.policy_bufs.insert(j, (pol.gen, buf));
+        }
+        let state_buf = self
+            .client
+            .buffer_from_host_buffer(state, &[state.len()], None)
+            .map_err(err)?;
+        self.executable("policy_infer", j)?; // ensure compiled
+        let exe = &self.executables[&format!("policy_infer_j{j}")];
+        let theta_buf = &self.policy_bufs[&j].1;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&[theta_buf, &state_buf])
+            .map_err(|e| anyhow::anyhow!("executing policy_infer_j{j} failed: {e:?}"))?;
+        let literal = result[0][0].to_literal_sync().map_err(err)?;
+        let out = literal.to_tuple().map_err(err)?;
+        let probs = out[0].to_vec::<f32>().map_err(err)?;
+        debug_assert_eq!(probs.len(), spec.num_actions);
+        Ok(probs)
+    }
+
+    /// V(s): single-state critic evaluation.
+    pub fn value_infer(&mut self, j: usize, theta_v: &[f32], state: &[f32]) -> Result<f32> {
+        let inputs = [xla::Literal::vec1(theta_v), xla::Literal::vec1(state)];
+        let out = self.run("value_infer", j, &inputs)?;
+        Ok(out[0].to_vec::<f32>().map_err(err)?[0])
+    }
+
+    /// One supervised-learning step (cross-entropy imitation + Adam).
+    /// `states` is row-major [batch × S]; `labels` are action indices.
+    /// Returns the batch loss; updates `pol` in place.
+    pub fn sl_step(
+        &mut self,
+        j: usize,
+        pol: &mut TrainState,
+        states: &[f32],
+        labels: &[i32],
+        lr: f32,
+    ) -> Result<f32> {
+        let spec = *self.meta.spec(j);
+        let batch = self.meta.batch;
+        debug_assert_eq!(states.len(), batch * spec.state_dim);
+        debug_assert_eq!(labels.len(), batch);
+        let inputs = [
+            xla::Literal::vec1(&pol.theta),
+            xla::Literal::vec1(&pol.m),
+            xla::Literal::vec1(&pol.v),
+            xla::Literal::scalar(pol.t),
+            xla::Literal::vec1(states)
+                .reshape(&[batch as i64, spec.state_dim as i64])
+                .map_err(err)?,
+            xla::Literal::vec1(labels),
+            xla::Literal::scalar(lr),
+        ];
+        let out = self.run("sl_step", j, &inputs)?;
+        pol.theta = out[0].to_vec::<f32>().map_err(err)?;
+        pol.m = out[1].to_vec::<f32>().map_err(err)?;
+        pol.v = out[2].to_vec::<f32>().map_err(err)?;
+        pol.t = out[3].to_vec::<f32>().map_err(err)?[0];
+        pol.gen += 1;
+        Ok(out[4].to_vec::<f32>().map_err(err)?[0])
+    }
+
+    /// One actor-critic RL step on a replay mini-batch.  `returns` are the
+    /// discounted cumulative rewards G computed by the caller; the artifact
+    /// computes advantages against its critic internally (§4.3).
+    #[allow(clippy::too_many_arguments)]
+    pub fn rl_step(
+        &mut self,
+        j: usize,
+        pol: &mut TrainState,
+        val: &mut TrainState,
+        states: &[f32],
+        actions: &[i32],
+        returns: &[f32],
+        lr_p: f32,
+        lr_v: f32,
+        beta: f32,
+    ) -> Result<RlLosses> {
+        let spec = *self.meta.spec(j);
+        let batch = self.meta.batch;
+        debug_assert_eq!(states.len(), batch * spec.state_dim);
+        debug_assert_eq!(actions.len(), batch);
+        debug_assert_eq!(returns.len(), batch);
+        let inputs = [
+            xla::Literal::vec1(&pol.theta),
+            xla::Literal::vec1(&pol.m),
+            xla::Literal::vec1(&pol.v),
+            xla::Literal::scalar(pol.t),
+            xla::Literal::vec1(&val.theta),
+            xla::Literal::vec1(&val.m),
+            xla::Literal::vec1(&val.v),
+            xla::Literal::scalar(val.t),
+            xla::Literal::vec1(states)
+                .reshape(&[batch as i64, spec.state_dim as i64])
+                .map_err(err)?,
+            xla::Literal::vec1(actions),
+            xla::Literal::vec1(returns),
+            xla::Literal::scalar(lr_p),
+            xla::Literal::scalar(lr_v),
+            xla::Literal::scalar(beta),
+        ];
+        let out = self.run("rl_step", j, &inputs)?;
+        pol.theta = out[0].to_vec::<f32>().map_err(err)?;
+        pol.m = out[1].to_vec::<f32>().map_err(err)?;
+        pol.v = out[2].to_vec::<f32>().map_err(err)?;
+        pol.t = out[3].to_vec::<f32>().map_err(err)?[0];
+        val.theta = out[4].to_vec::<f32>().map_err(err)?;
+        val.m = out[5].to_vec::<f32>().map_err(err)?;
+        val.v = out[6].to_vec::<f32>().map_err(err)?;
+        val.t = out[7].to_vec::<f32>().map_err(err)?[0];
+        pol.gen += 1;
+        val.gen += 1;
+        Ok(RlLosses {
+            policy_loss: out[8].to_vec::<f32>().map_err(err)?[0],
+            value_loss: out[9].to_vec::<f32>().map_err(err)?[0],
+            entropy: out[10].to_vec::<f32>().map_err(err)?[0],
+        })
+    }
+}
+
+impl Engine {
+    /// Plain REINFORCE step with caller-provided advantages (no critic) —
+    /// the Table-2 "without actor-critic" ablation path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pg_step(
+        &mut self,
+        j: usize,
+        pol: &mut TrainState,
+        states: &[f32],
+        actions: &[i32],
+        advantages: &[f32],
+        lr: f32,
+        beta: f32,
+    ) -> Result<(f32, f32)> {
+        let spec = *self.meta.spec(j);
+        let batch = self.meta.batch;
+        debug_assert_eq!(states.len(), batch * spec.state_dim);
+        let inputs = [
+            xla::Literal::vec1(&pol.theta),
+            xla::Literal::vec1(&pol.m),
+            xla::Literal::vec1(&pol.v),
+            xla::Literal::scalar(pol.t),
+            xla::Literal::vec1(states)
+                .reshape(&[batch as i64, spec.state_dim as i64])
+                .map_err(err)?,
+            xla::Literal::vec1(actions),
+            xla::Literal::vec1(advantages),
+            xla::Literal::scalar(lr),
+            xla::Literal::scalar(beta),
+        ];
+        let out = self.run("pg_step", j, &inputs)?;
+        pol.theta = out[0].to_vec::<f32>().map_err(err)?;
+        pol.m = out[1].to_vec::<f32>().map_err(err)?;
+        pol.v = out[2].to_vec::<f32>().map_err(err)?;
+        pol.t = out[3].to_vec::<f32>().map_err(err)?[0];
+        pol.gen += 1;
+        Ok((
+            out[4].to_vec::<f32>().map_err(err)?[0],
+            out[5].to_vec::<f32>().map_err(err)?[0],
+        ))
+    }
+}
+
+fn err(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla error: {e:?}")
+}
+
+/// Locate the artifacts directory: `$DL2_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("DL2_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Convenience: engine from the default artifacts location.
+pub fn load_default_engine() -> Result<Engine> {
+    Engine::load(default_artifacts_dir()).context("loading AOT artifacts")
+}

@@ -1,0 +1,205 @@
+//! Parser for `artifacts/meta.txt` — the key=value manifest emitted by
+//! `python -m compile.aot` describing every artifact's static shapes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Static shape info for one J-parameterized artifact family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecMeta {
+    /// J — maximum number of concurrent jobs the NN sees.
+    pub max_jobs: usize,
+    /// S = J·(L+5), flattened state vector length.
+    pub state_dim: usize,
+    /// A = 3J+1 actions.
+    pub num_actions: usize,
+    /// P — flat policy parameter count.
+    pub policy_params: usize,
+    /// Pv — flat value parameter count.
+    pub value_params: usize,
+}
+
+impl SpecMeta {
+    /// Layer shapes [(in,out); 3] of the MLP for a given head width.
+    pub fn layer_dims(&self, hidden: usize, out: usize) -> [(usize, usize); 3] {
+        [(self.state_dim, hidden), (hidden, hidden), (hidden, out)]
+    }
+}
+
+/// Parsed `meta.txt`.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    /// L — number of job types (Table 1 => 8).
+    pub num_types: usize,
+    /// Hidden layer width (paper: 256).
+    pub hidden: usize,
+    /// Training mini-batch size baked into sl_step/rl_step (paper: 256).
+    pub batch: usize,
+    /// Available J values, ascending.
+    pub js: Vec<usize>,
+    pub specs: BTreeMap<usize, SpecMeta>,
+}
+
+impl Meta {
+    pub fn parse(text: &str) -> Result<Meta> {
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("malformed meta line: {line:?}"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<String> {
+            kv.get(k)
+                .cloned()
+                .with_context(|| format!("meta.txt missing key {k:?}"))
+        };
+        let num_types: usize = get("num_types")?.parse()?;
+        let hidden: usize = get("hidden")?.parse()?;
+        let batch: usize = get("batch")?.parse()?;
+        let js: Vec<usize> = get("js")?
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().map_err(Into::into))
+            .collect::<Result<_>>()?;
+        if js.is_empty() {
+            bail!("meta.txt lists no J values");
+        }
+        let mut specs = BTreeMap::new();
+        for &j in &js {
+            let g = |suffix: &str| -> Result<usize> {
+                Ok(get(&format!("j{j}.{suffix}"))?.parse()?)
+            };
+            let spec = SpecMeta {
+                max_jobs: j,
+                state_dim: g("S")?,
+                num_actions: g("A")?,
+                policy_params: g("P")?,
+                value_params: g("PV")?,
+            };
+            // Cross-check the invariants the rust side relies on.
+            if spec.state_dim != j * (num_types + 5) {
+                bail!("j{j}: S={} != J*(L+5)", spec.state_dim);
+            }
+            if spec.num_actions != 3 * j + 1 {
+                bail!("j{j}: A={} != 3J+1", spec.num_actions);
+            }
+            let expect = |out: usize| {
+                spec.state_dim * hidden
+                    + hidden
+                    + hidden * hidden
+                    + hidden
+                    + hidden * out
+                    + out
+            };
+            if spec.policy_params != expect(spec.num_actions) {
+                bail!("j{j}: P mismatch");
+            }
+            if spec.value_params != expect(1) {
+                bail!("j{j}: PV mismatch");
+            }
+            specs.insert(j, spec);
+        }
+        Ok(Meta {
+            num_types,
+            hidden,
+            batch,
+            js,
+            specs,
+        })
+    }
+
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Meta> {
+        let path = dir.as_ref().join("meta.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Smallest available J ≥ `want`, or the largest J if none fits.
+    pub fn pick_j(&self, want: usize) -> usize {
+        self.js
+            .iter()
+            .copied()
+            .find(|&j| j >= want)
+            .unwrap_or(*self.js.last().unwrap())
+    }
+
+    pub fn spec(&self, j: usize) -> &SpecMeta {
+        &self.specs[&j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+num_types=8
+hidden=256
+batch=256
+adam_b1=0.9
+adam_b2=0.999
+adam_eps=1e-08
+js=5,10
+j5.S=65
+j5.A=16
+j5.P=86800
+j5.PV=82945
+j10.S=130
+j10.A=31
+j10.P=107279
+j10.PV=99585
+";
+
+    fn expect(s: usize, h: usize, out: usize) -> usize {
+        s * h + h + h * h + h + h * out + out
+    }
+
+    #[test]
+    fn parses_sample() {
+        // Fix up P/PV to the true closed form so the invariant check passes.
+        let p5 = expect(65, 256, 16);
+        let pv5 = expect(65, 256, 1);
+        let p10 = expect(130, 256, 31);
+        let pv10 = expect(130, 256, 1);
+        let text = SAMPLE
+            .replace("j5.P=86800", &format!("j5.P={p5}"))
+            .replace("j5.PV=82945", &format!("j5.PV={pv5}"))
+            .replace("j10.P=107279", &format!("j10.P={p10}"))
+            .replace("j10.PV=99585", &format!("j10.PV={pv10}"));
+        let meta = Meta::parse(&text).unwrap();
+        assert_eq!(meta.num_types, 8);
+        assert_eq!(meta.js, vec![5, 10]);
+        assert_eq!(meta.spec(5).num_actions, 16);
+        assert_eq!(meta.spec(10).state_dim, 130);
+    }
+
+    #[test]
+    fn rejects_bad_invariant() {
+        let text = SAMPLE.replace("j5.A=16", "j5.A=17");
+        assert!(Meta::parse(&text).is_err());
+    }
+
+    #[test]
+    fn pick_j_prefers_smallest_fit() {
+        let p5 = expect(65, 256, 16);
+        let pv5 = expect(65, 256, 1);
+        let p10 = expect(130, 256, 31);
+        let pv10 = expect(130, 256, 1);
+        let text = SAMPLE
+            .replace("j5.P=86800", &format!("j5.P={p5}"))
+            .replace("j5.PV=82945", &format!("j5.PV={pv5}"))
+            .replace("j10.P=107279", &format!("j10.P={p10}"))
+            .replace("j10.PV=99585", &format!("j10.PV={pv10}"));
+        let meta = Meta::parse(&text).unwrap();
+        assert_eq!(meta.pick_j(3), 5);
+        assert_eq!(meta.pick_j(6), 10);
+        assert_eq!(meta.pick_j(99), 10);
+    }
+}

@@ -1,0 +1,15 @@
+//! Runtime layer: the rust ⇄ XLA bridge.
+//!
+//! `make artifacts` (Python, build-time only) lowers the L2 JAX model —
+//! which embeds the L1 Pallas kernels — to HLO text.  This module loads
+//! those artifacts via the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`), so the
+//! coordinator's hot path is pure rust + native XLA.
+
+pub mod engine;
+pub mod meta;
+pub mod params;
+
+pub use engine::{default_artifacts_dir, load_default_engine, Engine, RlLosses};
+pub use meta::{Meta, SpecMeta};
+pub use params::{load_params, save_params, TrainState};

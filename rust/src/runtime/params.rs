@@ -1,0 +1,155 @@
+//! Flat parameter vectors + optimizer state for the policy/value networks.
+//!
+//! The AOT artifacts treat each network as ONE flat f32 vector (layer
+//! boundaries recomputed from `(S, hidden, out)` on both sides), and each
+//! SL/RL step is a pure function `(θ, m, v, t, batch) → (θ', m', v', t')`.
+//! This module owns that caller-side state, including He-style
+//! initialization from the layer shapes.
+
+use crate::runtime::meta::SpecMeta;
+use crate::util::Rng;
+
+/// Flat parameters + Adam state for one network.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+    /// Mutation generation — bumped on every parameter change so the
+    /// engine can keep a device-resident copy of `theta` and re-upload
+    /// only when stale (the §Perf inference-latency optimization).
+    pub gen: u64,
+}
+
+impl TrainState {
+    /// He-uniform initialization: W ~ U(±sqrt(6/fan_in)), b = 0.
+    pub fn init(spec: &SpecMeta, hidden: usize, out: usize, rng: &mut Rng) -> Self {
+        let dims = spec.layer_dims(hidden, out);
+        let total: usize = dims.iter().map(|(i, o)| i * o + o).sum();
+        let mut theta = Vec::with_capacity(total);
+        for (fan_in, fan_out) in dims {
+            let limit = (6.0 / fan_in as f64).sqrt();
+            for _ in 0..fan_in * fan_out {
+                theta.push(rng.range_f64(-limit, limit) as f32);
+            }
+            theta.extend(std::iter::repeat(0.0f32).take(fan_out));
+        }
+        debug_assert_eq!(theta.len(), total);
+        TrainState {
+            m: vec![0.0; total],
+            v: vec![0.0; total],
+            t: 0.0,
+            gen: 0,
+            theta,
+        }
+    }
+
+    pub fn init_policy(spec: &SpecMeta, hidden: usize, rng: &mut Rng) -> Self {
+        let s = Self::init(spec, hidden, spec.num_actions, rng);
+        debug_assert_eq!(s.theta.len(), spec.policy_params);
+        s
+    }
+
+    pub fn init_value(spec: &SpecMeta, hidden: usize, rng: &mut Rng) -> Self {
+        let s = Self::init(spec, hidden, 1, rng);
+        debug_assert_eq!(s.theta.len(), spec.value_params);
+        s
+    }
+
+    /// Reset the optimizer state (used when switching SL → RL learning).
+    pub fn reset_optimizer(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 0.0;
+    }
+
+    /// Replace parameters in-place (A3C global-model sync).
+    pub fn set_theta(&mut self, theta: &[f32]) {
+        assert_eq!(theta.len(), self.theta.len());
+        self.theta.copy_from_slice(theta);
+        self.gen += 1;
+    }
+}
+
+/// Serialize parameters to a little-endian f32 binary file (checkpoints).
+pub fn save_params(path: &std::path::Path, theta: &[f32]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut bytes = Vec::with_capacity(theta.len() * 4);
+    for x in theta {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, bytes)
+}
+
+/// Load parameters saved by [`save_params`].
+pub fn load_params(path: &std::path::Path) -> std::io::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() % 4 != 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "param file length not a multiple of 4",
+        ));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SpecMeta {
+        SpecMeta {
+            max_jobs: 5,
+            state_dim: 65,
+            num_actions: 16,
+            policy_params: 65 * 256 + 256 + 256 * 256 + 256 + 256 * 16 + 16,
+            value_params: 65 * 256 + 256 + 256 * 256 + 256 + 256 + 1,
+        }
+    }
+
+    #[test]
+    fn init_sizes_match_meta() {
+        let mut rng = Rng::new(0);
+        let p = TrainState::init_policy(&spec(), 256, &mut rng);
+        let v = TrainState::init_value(&spec(), 256, &mut rng);
+        assert_eq!(p.theta.len(), spec().policy_params);
+        assert_eq!(v.theta.len(), spec().value_params);
+        assert_eq!(p.m.len(), p.theta.len());
+        assert_eq!(p.t, 0.0);
+    }
+
+    #[test]
+    fn init_is_bounded_and_nonzero() {
+        let mut rng = Rng::new(1);
+        let p = TrainState::init_policy(&spec(), 256, &mut rng);
+        let limit = (6.0f64 / 65.0).sqrt() as f32 + 1e-6;
+        let w1 = &p.theta[..65 * 256];
+        assert!(w1.iter().all(|x| x.abs() <= limit));
+        assert!(w1.iter().any(|x| *x != 0.0));
+        // biases of layer 1 are zero
+        let b1 = &p.theta[65 * 256..65 * 256 + 256];
+        assert!(b1.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("dl2_params_test");
+        let path = dir.join("theta.bin");
+        let theta = vec![1.5f32, -2.25, 0.0, 3.75];
+        save_params(&path, &theta).unwrap();
+        assert_eq!(load_params(&path).unwrap(), theta);
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = TrainState::init_policy(&spec(), 256, &mut Rng::new(7));
+        let b = TrainState::init_policy(&spec(), 256, &mut Rng::new(7));
+        assert_eq!(a.theta, b.theta);
+    }
+}

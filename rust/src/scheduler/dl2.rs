@@ -1,0 +1,311 @@
+//! The DL² scheduler (§4): policy-NN-driven incremental resource
+//! allocation, with job-aware ε-greedy exploration.
+//!
+//! Every slot, the policy network is queried repeatedly (multi-inference,
+//! §4.1): each inference yields one incremental action — +1 worker, +1 PS,
+//! or +1 of each for some job — the state is updated, and inference
+//! repeats until the void action is produced or nothing more fits.  In
+//! training mode the scheduler records every (state, action) transition so
+//! the RL driver (rl/) can attach per-slot rewards and discounted returns.
+//!
+//! Inference runs through the AOT `policy_infer` artifact on the PJRT
+//! runtime — no Python anywhere on this path.
+
+use super::state::{
+    action_mask, decode_action, encode_action, encode_state, mask_probs, void_action, Action,
+};
+use super::{Alloc, Scheduler};
+use crate::cluster::Cluster;
+use crate::runtime::{Engine, TrainState};
+use crate::util::Rng;
+
+/// Job-aware exploration (§4.3): ε-greedy overrides on "poor" states.
+#[derive(Debug, Clone, Copy)]
+pub struct ExploreConfig {
+    pub enabled: bool,
+    /// ε — probability of overriding the NN on a poor state (paper: 0.4).
+    pub epsilon: f64,
+    /// Worker:PS imbalance threshold (paper: 10).
+    pub ratio_threshold: f64,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig {
+            enabled: true,
+            epsilon: 0.4,
+            ratio_threshold: 10.0,
+        }
+    }
+}
+
+/// Hyper-parameters (paper §6.2 defaults).
+#[derive(Debug, Clone)]
+pub struct Dl2Config {
+    /// J — the NN's concurrent-job bound (must have artifacts).
+    pub j: usize,
+    pub lr_sl: f32,
+    pub lr_rl_policy: f32,
+    pub lr_rl_value: f32,
+    pub gamma: f32,
+    /// Entropy weight β.
+    pub beta: f32,
+    pub explore: ExploreConfig,
+    /// Hard guard on inferences per slot.
+    pub max_inferences: usize,
+    /// Evaluation decisions: greedy argmax (true) or stochastic sampling.
+    /// Training always samples (exploration); validation defaults to the
+    /// deterministic greedy policy.
+    pub argmax_eval: bool,
+    pub seed: u64,
+}
+
+impl Default for Dl2Config {
+    fn default() -> Self {
+        Dl2Config {
+            j: 20,
+            lr_sl: 0.005,
+            // The paper trains with lr = 1e-4 and β = 0.1; on this
+            // environment those collapse the policy entropy within a few
+            // episodes (documented in EXPERIMENTS.md §Perf) — the defaults
+            // below are the stable operating point from the same sweep.
+            lr_rl_policy: 2e-5,
+            lr_rl_value: 1e-3,
+            gamma: 0.9,
+            beta: 0.01,
+            explore: ExploreConfig::default(),
+            max_inferences: 2048,
+            argmax_eval: true,
+            seed: 7,
+        }
+    }
+}
+
+/// One recorded NN decision (for RL training).
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    pub action: usize,
+    /// Environment slot index the decision was taken in.
+    pub slot: usize,
+}
+
+pub struct Dl2Scheduler {
+    pub cfg: Dl2Config,
+    pub engine: Engine,
+    pub pol: TrainState,
+    pub val: TrainState,
+    pub rng: Rng,
+    /// Training mode: exploration on + transitions recorded.
+    pub training: bool,
+    /// Transitions since the last `take_transitions()`.
+    pub transitions: Vec<Transition>,
+    /// Count of exploration overrides (diagnostics).
+    pub explored: usize,
+}
+
+impl Dl2Scheduler {
+    /// Fresh scheduler with He-initialized policy/value networks.
+    pub fn new(engine: Engine, cfg: Dl2Config) -> Self {
+        let spec = *engine.meta.spec(cfg.j);
+        let hidden = engine.meta.hidden;
+        let mut rng = Rng::new(cfg.seed ^ 0xD12);
+        let pol = TrainState::init_policy(&spec, hidden, &mut rng);
+        let val = TrainState::init_value(&spec, hidden, &mut rng);
+        Dl2Scheduler {
+            cfg,
+            engine,
+            pol,
+            val,
+            rng,
+            training: true,
+            transitions: Vec::new(),
+            explored: 0,
+        }
+    }
+
+    /// Drain recorded transitions (RL driver calls this every slot).
+    pub fn take_transitions(&mut self) -> Vec<Transition> {
+        std::mem::take(&mut self.transitions)
+    }
+
+    /// Paper's poor-state detection: returns a corrective action index if
+    /// any batch job is in one of the three poor configurations.
+    fn poor_state_action(
+        &self,
+        mask: &[bool],
+        walloc: &[usize],
+        palloc: &[usize],
+        batch_len: usize,
+    ) -> Option<usize> {
+        let thr = self.cfg.explore.ratio_threshold;
+        for slot in 0..batch_len {
+            let (w, p) = (walloc[slot], palloc[slot]);
+            // (i) multiple workers but no PS → allocate one PS.
+            if w >= 2 && p == 0 && mask[encode_action(slot, 1)] {
+                return Some(encode_action(slot, 1));
+            }
+            // (ii) multiple PSs but no worker → allocate one worker.
+            if p >= 2 && w == 0 && mask[encode_action(slot, 0)] {
+                return Some(encode_action(slot, 0));
+            }
+            // (iii) imbalance beyond threshold → top up the lesser side.
+            if w > 0 && p > 0 {
+                let ratio = w as f64 / p as f64;
+                if ratio > thr && mask[encode_action(slot, 1)] {
+                    return Some(encode_action(slot, 1));
+                }
+                if ratio < 1.0 / thr && mask[encode_action(slot, 0)] {
+                    return Some(encode_action(slot, 0));
+                }
+            }
+        }
+        None
+    }
+
+    /// Run the multi-inference allocation sequence for one batch of jobs,
+    /// mutating the shared placement. Returns (workers, ps) per batch job.
+    fn allocate_batch(
+        &mut self,
+        cluster: &Cluster,
+        placement: &mut crate::cluster::Placement,
+        batch: &[usize],
+    ) -> (Vec<usize>, Vec<usize>) {
+        let j = self.cfg.j;
+        let num_types = self.engine.meta.num_types;
+        let mut walloc = vec![0usize; batch.len()];
+        let mut palloc = vec![0usize; batch.len()];
+        for _ in 0..self.cfg.max_inferences {
+            let state = encode_state(cluster, batch, &walloc, &palloc, j, num_types);
+            let mask = action_mask(cluster, placement, batch, &walloc, &palloc, j);
+            if mask.iter().filter(|&&m| m).count() <= 1 {
+                break; // only void remains
+            }
+            let probs = self
+                .engine
+                .policy_infer_state(j, &self.pol, &state)
+                .expect("policy_infer failed");
+            let masked = mask_probs(&probs, &mask);
+
+            // Job-aware ε-greedy exploration (§4.3), training mode only.
+            let mut action = None;
+            if self.training && self.cfg.explore.enabled {
+                if let Some(fix) =
+                    self.poor_state_action(&mask, &walloc, &palloc, batch.len())
+                {
+                    if self.rng.bool(self.cfg.explore.epsilon) {
+                        action = Some(fix);
+                        self.explored += 1;
+                    }
+                }
+            }
+            let action = action.unwrap_or_else(|| {
+                if !self.training && self.cfg.argmax_eval {
+                    // Greedy evaluation: the mode of the masked policy.
+                    masked
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap_or_else(|| void_action(j))
+                } else {
+                    self.rng.sample_probs(&masked)
+                }
+            });
+
+            if self.training {
+                self.transitions.push(Transition {
+                    state,
+                    action,
+                    slot: cluster.slot,
+                });
+            }
+            if action >= void_action(j) {
+                break;
+            }
+            match decode_action(action, j) {
+                Action::Void => break,
+                Action::Grow { job_slot, dw, dp } => {
+                    if job_slot >= batch.len() {
+                        break; // masked anyway; safety
+                    }
+                    let jt = &cluster.catalog[cluster.jobs[batch[job_slot]].type_idx];
+                    let mut ok = true;
+                    if dw > 0 {
+                        ok &= placement.try_place(&jt.worker_res).is_some();
+                    }
+                    if ok && dp > 0 {
+                        ok &= placement.try_place(&jt.ps_res).is_some();
+                    }
+                    if ok {
+                        walloc[job_slot] += dw;
+                        palloc[job_slot] += dp;
+                    }
+                }
+            }
+        }
+        (walloc, palloc)
+    }
+}
+
+impl Scheduler for Dl2Scheduler {
+    fn name(&self) -> &'static str {
+        "dl2"
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, active: &[usize]) -> Vec<Alloc> {
+        let j = self.cfg.j;
+        let mut placement = cluster.placement();
+        let mut out = Vec::with_capacity(active.len());
+        // More than J concurrent jobs → schedule in arrival-ordered batches
+        // of J (Fig 17).
+        for batch in active.chunks(j) {
+            let (w, p) = self.allocate_batch(cluster, &mut placement, batch);
+            for (k, &id) in batch.iter().enumerate() {
+                out.push((id, w[k], p[k]));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poor_state_rules() {
+        // Build a minimal scheduler-free harness around the rule fn by
+        // constructing the struct via new() only when artifacts exist.
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("meta.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::load(dir).unwrap();
+        let cfg = Dl2Config {
+            j: 5,
+            ..Default::default()
+        };
+        let s = Dl2Scheduler::new(engine, cfg);
+        let j = 5;
+        let mask = vec![true; 3 * j + 1];
+        // (i) w=3, p=0 → +1 PS for slot 0.
+        assert_eq!(
+            s.poor_state_action(&mask, &[3, 0], &[0, 0], 2),
+            Some(encode_action(0, 1))
+        );
+        // (ii) p=2, w=0 → +1 worker.
+        assert_eq!(
+            s.poor_state_action(&mask, &[0, 0], &[2, 0], 2),
+            Some(encode_action(0, 0))
+        );
+        // (iii) ratio 12:1 > 10 → +1 PS.
+        assert_eq!(
+            s.poor_state_action(&mask, &[12], &[1], 1),
+            Some(encode_action(0, 1))
+        );
+        // Balanced → no override.
+        assert_eq!(s.poor_state_action(&mask, &[2, 3], &[2, 3], 2), None);
+    }
+}

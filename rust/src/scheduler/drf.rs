@@ -1,0 +1,136 @@
+//! Dominant Resource Fairness (Ghodsi et al., NSDI'11) — the paper's
+//! default incumbent scheduler and the teacher for DL²'s supervised
+//! warm-up.
+//!
+//! Progressive filling: repeatedly give one (worker, PS) pair to the
+//! active job with the smallest dominant-resource share, until nothing
+//! more fits or every job hit the per-job cap.  This mirrors how YARN /
+//! Mesos DRF allocates task-granular ML jobs.
+
+use std::collections::BTreeMap;
+
+use super::{try_grow, Alloc, Scheduler};
+use crate::cluster::Cluster;
+
+#[derive(Debug, Default)]
+pub struct Drf;
+
+impl Drf {
+    /// The fill sequence (job picked at each round) — used by the SL trace
+    /// generator to reconstruct DRF's decisions as NN action labels.
+    pub fn fill_sequence(cluster: &Cluster, active: &[usize]) -> Vec<usize> {
+        let mut placement = cluster.placement();
+        let mut alloc: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+        let mut seq = Vec::new();
+        let mut blocked: Vec<bool> = vec![false; active.len()];
+        loop {
+            // Pick the unblocked job with the least dominant share.
+            let mut best: Option<(usize, f64)> = None;
+            for (k, &id) in active.iter().enumerate() {
+                if blocked[k] {
+                    continue;
+                }
+                let (w, p) = alloc.get(&id).copied().unwrap_or((0, 0));
+                let share = cluster.dominant_share_for(cluster.jobs[id].type_idx, w, p);
+                match best {
+                    None => best = Some((k, share)),
+                    Some((_, s)) if share < s => best = Some((k, share)),
+                    _ => {}
+                }
+            }
+            let Some((k, _)) = best else { break };
+            let id = active[k];
+            if try_grow(cluster, &mut placement, &mut alloc, id, 1, 1) {
+                seq.push(id);
+            } else {
+                blocked[k] = true;
+            }
+        }
+        seq
+    }
+
+    pub fn allocate(cluster: &Cluster, active: &[usize]) -> Vec<Alloc> {
+        let mut counts: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+        for id in Self::fill_sequence(cluster, active) {
+            let c = counts.entry(id).or_insert((0, 0));
+            c.0 += 1;
+            c.1 += 1;
+        }
+        active
+            .iter()
+            .map(|&id| {
+                let (w, p) = counts.get(&id).copied().unwrap_or((0, 0));
+                (id, w, p)
+            })
+            .collect()
+    }
+}
+
+impl Scheduler for Drf {
+    fn name(&self) -> &'static str {
+        "drf"
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, active: &[usize]) -> Vec<Alloc> {
+        Self::allocate(cluster, active)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+
+    fn cluster(n_servers: usize) -> Cluster {
+        Cluster::new(ClusterConfig {
+            num_servers: n_servers,
+            interference: 0.0,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn every_job_gets_balanced_pairs() {
+        let mut c = cluster(20);
+        let a = c.submit(0, 10.0, 0.0);
+        let b = c.submit(2, 10.0, 0.0);
+        let alloc = Drf::allocate(&c, &[a, b]);
+        for (_, w, p) in &alloc {
+            assert_eq!(w, p, "DRF fills worker+PS pairs");
+            assert!(*w >= 1, "both jobs should get resources");
+        }
+    }
+
+    #[test]
+    fn fairness_light_jobs_not_starved() {
+        let mut c = cluster(6);
+        // vgg16 workers are GPU-heavy (2 GPUs); ctc is light.
+        let heavy = c.submit(1, 10.0, 0.0);
+        let light = c.submit(5, 10.0, 0.0);
+        let alloc = Drf::allocate(&c, &[heavy, light]);
+        let get = |id: usize| alloc.iter().find(|a| a.0 == id).unwrap();
+        // Light job's dominant share stays lower, so it receives at least
+        // as many task pairs as the heavy one.
+        assert!(get(light).1 >= get(heavy).1);
+        assert!(get(light).1 >= 1 && get(heavy).1 >= 1);
+    }
+
+    #[test]
+    fn respects_per_job_cap() {
+        let mut c = Cluster::new(ClusterConfig {
+            num_servers: 100,
+            max_tasks_per_job: 4,
+            interference: 0.0,
+            ..Default::default()
+        });
+        let a = c.submit(0, 10.0, 0.0);
+        let alloc = Drf::allocate(&c, &[a]);
+        assert_eq!(alloc[0], (a, 4, 4));
+    }
+
+    #[test]
+    fn empty_active_set_ok() {
+        let c = cluster(4);
+        assert!(Drf::allocate(&c, &[]).is_empty());
+    }
+}

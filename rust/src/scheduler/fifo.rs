@@ -1,0 +1,95 @@
+//! First-In-First-Out: jobs receive a fixed user-requested allocation in
+//! arrival order until the cluster is full; later jobs wait.
+//!
+//! This is the "static allocation" strawman of §2.2: resources stay with a
+//! job for its entire life regardless of marginal utility.
+
+use std::collections::BTreeMap;
+
+use super::{try_grow, Alloc, Scheduler};
+use crate::cluster::Cluster;
+
+pub struct Fifo {
+    /// The fixed (workers, ps) each user asks for (paper default rule of
+    /// thumb: equal numbers, §2.2).
+    pub request: (usize, usize),
+}
+
+impl Default for Fifo {
+    fn default() -> Self {
+        Fifo { request: (4, 4) }
+    }
+}
+
+impl Scheduler for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, active: &[usize]) -> Vec<Alloc> {
+        let mut placement = cluster.placement();
+        let mut alloc: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+        for &id in active {
+            // All-or-nothing per job, in arrival order: the head of the
+            // queue gets its full request or (if the cluster is nearly
+            // full) whatever prefix of (1w,1p) pairs fits.
+            if !try_grow(
+                cluster,
+                &mut placement,
+                &mut alloc,
+                id,
+                self.request.0,
+                self.request.1,
+            ) {
+                // Try a minimal (1, 1) so the head job is never starved
+                // while space for a pair exists.
+                let _ = try_grow(cluster, &mut placement, &mut alloc, id, 1, 1);
+            }
+        }
+        active
+            .iter()
+            .map(|&id| {
+                let (w, p) = alloc.get(&id).copied().unwrap_or((0, 0));
+                (id, w, p)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+
+    #[test]
+    fn head_of_queue_gets_full_request() {
+        let mut c = Cluster::new(ClusterConfig {
+            interference: 0.0,
+            ..Default::default()
+        });
+        let a = c.submit(0, 10.0, 0.0);
+        let b = c.submit(0, 10.0, 0.0);
+        let mut f = Fifo::default();
+        let alloc = f.schedule(&c, &[a, b]);
+        assert_eq!(alloc[0], (a, 4, 4));
+        assert_eq!(alloc[1], (b, 4, 4));
+    }
+
+    #[test]
+    fn later_jobs_wait_when_full() {
+        // Roomy CPU/mem so GPUs are the binding constraint: 2 servers =
+        // 4 GPUs, exactly one full (4w, 4p) resnet50 request.
+        let mut c = Cluster::new(ClusterConfig {
+            num_servers: 2,
+            server_cap: crate::cluster::Res::new(2.0, 32.0, 200.0),
+            interference: 0.0,
+            ..Default::default()
+        });
+        let ids: Vec<usize> = (0..4).map(|_| c.submit(0, 10.0, 0.0)).collect();
+        let mut f = Fifo::default();
+        let alloc = f.schedule(&c, &ids);
+        // First job takes the 4 GPUs; the rest get nothing or minimal.
+        assert_eq!(alloc[0].1, 4);
+        assert_eq!(alloc[3].1, 0, "tail job must wait");
+    }
+}

@@ -1,0 +1,188 @@
+//! Scheduler interface + the episode driver.
+//!
+//! Every scheduler — heuristic baselines and the DL²/OfflineRL policies —
+//! implements [`Scheduler`]: once per time slot it maps the set of active
+//! jobs to a `(workers, ps)` allocation per job, subject to cluster
+//! capacity (checked via a shadow [`Placement`]).  The [`run_episode`]
+//! driver feeds a trace's arrivals in, applies allocations, advances the
+//! environment, and reports completion-time metrics.
+
+pub mod dl2;
+pub mod drf;
+pub mod fifo;
+pub mod offline_rl;
+pub mod optimus;
+pub mod srtf;
+pub mod state;
+pub mod tetris;
+
+pub use dl2::{Dl2Scheduler, Dl2Config, ExploreConfig};
+pub use drf::Drf;
+pub use fifo::Fifo;
+pub use offline_rl::offline_rl_trainer;
+pub use optimus::Optimus;
+pub use srtf::Srtf;
+pub use tetris::Tetris;
+
+use crate::cluster::{Cluster, Placement, SlotOutcome};
+use crate::trace::JobSpec;
+
+/// One job's allocation decision for a slot.
+pub type Alloc = (usize, usize, usize); // (job_id, workers, ps)
+
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Decide allocations for the active jobs (ordered by arrival).
+    fn schedule(&mut self, cluster: &Cluster, active: &[usize]) -> Vec<Alloc>;
+
+    /// Feedback after the slot ran (learning/fitting schedulers use this).
+    fn observe(&mut self, _cluster: &Cluster, _outcome: &SlotOutcome) {}
+}
+
+/// Shadow-placement helper shared by the heuristics: try to grow job
+/// `id`'s allocation by (`dw` workers, `dp` PSs); commits to `placement`
+/// and `alloc` on success.  Returns false if it did not fully fit.
+pub fn try_grow(
+    cluster: &Cluster,
+    placement: &mut Placement,
+    alloc: &mut std::collections::BTreeMap<usize, (usize, usize)>,
+    id: usize,
+    dw: usize,
+    dp: usize,
+) -> bool {
+    let jt = &cluster.catalog[cluster.jobs[id].type_idx];
+    let cap = cluster.cfg.max_tasks_per_job;
+    let cur = alloc.entry(id).or_insert((0, 0));
+    if cur.0 + dw > cap || cur.1 + dp > cap {
+        return false;
+    }
+    // Tentatively place; Placement has no undo, so check feasibility on a
+    // clone for multi-task grows.
+    let mut shadow = placement.clone();
+    for _ in 0..dw {
+        if shadow.try_place(&jt.worker_res).is_none() {
+            return false;
+        }
+    }
+    for _ in 0..dp {
+        if shadow.try_place(&jt.ps_res).is_none() {
+            return false;
+        }
+    }
+    *placement = shadow;
+    cur.0 += dw;
+    cur.1 += dp;
+    true
+}
+
+/// Result of running one job sequence to completion under a scheduler.
+#[derive(Debug, Clone)]
+pub struct EpisodeResult {
+    pub avg_jct_slots: f64,
+    pub makespan_slots: usize,
+    pub rewards: Vec<f64>,
+    pub gpu_util: Vec<f64>,
+    /// Completion time (slots) per job id.
+    pub jct_per_job: Vec<f64>,
+}
+
+/// Drive `specs` through a fresh `cluster` under `sched` until all jobs
+/// finish (or `max_slots` elapses as a runaway guard).
+pub fn run_episode(
+    mut cluster: Cluster,
+    specs: &[JobSpec],
+    sched: &mut dyn Scheduler,
+    epoch_error: f64,
+    max_slots: usize,
+) -> EpisodeResult {
+    let mut next_spec = 0usize;
+    let mut rewards = Vec::new();
+    loop {
+        // Arrivals scheduled for this slot.
+        while next_spec < specs.len() && specs[next_spec].arrival_slot <= cluster.slot {
+            let s = &specs[next_spec];
+            cluster.submit(s.type_idx, s.total_epochs, epoch_error);
+            next_spec += 1;
+        }
+        let active = cluster.active_jobs();
+        let alloc = sched.schedule(&cluster, &active);
+        let placement = cluster.apply_allocation(&alloc);
+        let outcome = cluster.advance(&placement);
+        sched.observe(&cluster, &outcome);
+        rewards.push(outcome.reward);
+
+        let done = next_spec >= specs.len() && cluster.all_finished();
+        if done || cluster.slot >= max_slots {
+            break;
+        }
+    }
+    let jct_per_job: Vec<f64> = cluster
+        .jobs
+        .iter()
+        .map(|j| {
+            j.completion_time()
+                .map(|t| t as f64)
+                // Unfinished at the guard: count elapsed time (pessimistic).
+                .unwrap_or((cluster.slot - j.arrival_slot) as f64)
+        })
+        .collect();
+    EpisodeResult {
+        avg_jct_slots: crate::util::stats::mean(&jct_per_job),
+        makespan_slots: cluster.slot,
+        rewards,
+        gpu_util: cluster.gpu_util_history.clone(),
+        jct_per_job,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::trace::TraceConfig;
+
+    /// A scheduler that gives every active job (2, 2).
+    struct Fixed;
+    impl Scheduler for Fixed {
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+        fn schedule(&mut self, _c: &Cluster, active: &[usize]) -> Vec<Alloc> {
+            active.iter().map(|&id| (id, 2, 2)).collect()
+        }
+    }
+
+    #[test]
+    fn episode_completes_all_jobs() {
+        let specs = crate::trace::generate(&TraceConfig {
+            num_jobs: 10,
+            ..Default::default()
+        });
+        let cluster = Cluster::new(ClusterConfig {
+            interference: 0.0,
+            ..Default::default()
+        });
+        let res = run_episode(cluster, &specs, &mut Fixed, 0.0, 10_000);
+        assert!(res.avg_jct_slots > 0.0);
+        assert!(res.makespan_slots < 10_000, "hit the runaway guard");
+        assert_eq!(res.jct_per_job.len(), 10);
+    }
+
+    #[test]
+    fn try_grow_respects_cap_and_capacity() {
+        let mut cluster = Cluster::new(ClusterConfig {
+            num_servers: 1,
+            max_tasks_per_job: 2,
+            interference: 0.0,
+            ..Default::default()
+        });
+        let id = cluster.submit(0, 10.0, 0.0);
+        let mut placement = cluster.placement();
+        let mut alloc = std::collections::BTreeMap::new();
+        assert!(try_grow(&cluster, &mut placement, &mut alloc, id, 1, 1));
+        // Job cap is 2 → a grow by 2 more workers must fail.
+        assert!(!try_grow(&cluster, &mut placement, &mut alloc, id, 2, 0));
+        assert_eq!(alloc[&id], (1, 1));
+    }
+}

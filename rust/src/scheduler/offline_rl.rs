@@ -1,0 +1,100 @@
+//! The OfflineRL baseline (§6.2): the same policy network as DL², but
+//! trained **purely offline** in a simulator driven by an analytical
+//! performance model — no live feedback.
+//!
+//! Per the paper's critique (§2.3), such simulators are built from an
+//! explicit resource-speed model and therefore (a) ignore interference in
+//! the multi-tenant cluster and (b) drift from the real framework's
+//! behaviour (e.g. Optimus' model predates comm/compute overlap).  We
+//! realize both inaccuracies: the offline env is noise-free
+//! (interference = 0, no per-run variation) and its catalog's speed
+//! constants are systematically perturbed from the live cluster's
+//! (communication under-estimated — "no network congestion on PSs",
+//! computation over-estimated).  The resulting policy is then FROZEN and
+//! evaluated on the realistic environment.
+
+use crate::cluster::{catalog, ClusterConfig, JobType};
+use crate::rl::{OnlineTrainer, RlOptions};
+use crate::trace::{generate, TraceConfig};
+
+/// The analytical model's view of job speeds: what an offline simulator
+/// would assume, systematically off from the live cluster.
+pub fn analytical_catalog() -> Vec<JobType> {
+    catalog()
+        .into_iter()
+        .map(|mut jt| {
+            // "assume no network congestion on PSs": halve the modeled
+            // communication cost and ignore PS sync overhead entirely.
+            jt.speed.comm *= 0.5;
+            jt.speed.sync = 0.0;
+            // Computation over-estimated (no overlap with communication in
+            // the analytical model).
+            jt.speed.comp *= 1.25;
+            jt
+        })
+        .collect()
+}
+
+/// The offline training environment: analytic speeds, zero noise.
+pub fn offline_env(cfg: &ClusterConfig) -> ClusterConfig {
+    ClusterConfig {
+        interference: 0.0,
+        speed_variation: 0.0,
+        ..cfg.clone()
+    }
+}
+
+/// Train `trainer`'s policy purely offline for `episodes` episodes of
+/// simulator-generated traces.  After this, freeze (`training = false`)
+/// and evaluate on the live env — the Fig-9 "OfflineRL" bar.
+pub fn offline_rl_trainer(
+    trainer: &mut OnlineTrainer,
+    cfg: &ClusterConfig,
+    trace_cfg: &TraceConfig,
+    episodes: usize,
+) {
+    let env = offline_env(cfg);
+    let cat = analytical_catalog();
+    for e in 0..episodes {
+        let specs = generate(&TraceConfig {
+            seed: trace_cfg.seed.wrapping_add(1000 + e as u64),
+            ..trace_cfg.clone()
+        });
+        let ecfg = ClusterConfig {
+            seed: env.seed.wrapping_add(e as u64),
+            ..env.clone()
+        };
+        trainer.train_episode_on(&ecfg, Some(cat.clone()), &specs);
+    }
+    trainer.sched.training = false;
+}
+
+/// Default options for the offline phase (same RL settings as DL²).
+pub fn offline_opts() -> RlOptions {
+    RlOptions::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_catalog_is_systematically_off() {
+        let real = catalog();
+        let model = analytical_catalog();
+        for (r, m) in real.iter().zip(&model) {
+            assert!(m.speed.comm < r.speed.comm, "{}", r.name);
+            assert_eq!(m.speed.sync, 0.0);
+            assert!(m.speed.comp > r.speed.comp);
+        }
+    }
+
+    #[test]
+    fn offline_env_is_noise_free() {
+        let live = ClusterConfig::default();
+        let off = offline_env(&live);
+        assert_eq!(off.interference, 0.0);
+        assert_eq!(off.speed_variation, 0.0);
+        assert_eq!(off.num_servers, live.num_servers);
+    }
+}

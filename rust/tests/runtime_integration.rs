@@ -1,0 +1,173 @@
+//! Integration tests: rust PJRT runtime × AOT artifacts.
+//!
+//! These require `make artifacts` to have run (they are skipped with a
+//! message otherwise).  They are the rust-side half of the L1/L2
+//! correctness story: the same HLO the coordinator uses in production is
+//! loaded, compiled and executed here, and its numerics are checked against
+//! closed-form expectations.
+
+use dl2::runtime::{default_artifacts_dir, Engine, TrainState};
+use dl2::util::Rng;
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = default_artifacts_dir();
+    if !dir.join("meta.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine load"))
+}
+
+const J: usize = 5;
+
+#[test]
+fn policy_infer_returns_distribution() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let spec = *eng.meta.spec(J);
+    let mut rng = Rng::new(1);
+    let pol = TrainState::init_policy(&spec, eng.meta.hidden, &mut rng);
+    let state: Vec<f32> = (0..spec.state_dim).map(|_| rng.f32()).collect();
+    let probs = eng.policy_infer(J, &pol.theta, &state).unwrap();
+    assert_eq!(probs.len(), spec.num_actions);
+    assert!(probs.iter().all(|p| *p >= 0.0 && *p <= 1.0));
+    let sum: f32 = probs.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-4, "sum={sum}");
+}
+
+#[test]
+fn policy_infer_is_deterministic() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let spec = *eng.meta.spec(J);
+    let mut rng = Rng::new(2);
+    let pol = TrainState::init_policy(&spec, eng.meta.hidden, &mut rng);
+    let state: Vec<f32> = (0..spec.state_dim).map(|_| rng.f32()).collect();
+    let a = eng.policy_infer(J, &pol.theta, &state).unwrap();
+    let b = eng.policy_infer(J, &pol.theta, &state).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn value_infer_runs() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let spec = *eng.meta.spec(J);
+    let mut rng = Rng::new(3);
+    let val = TrainState::init_value(&spec, eng.meta.hidden, &mut rng);
+    let state: Vec<f32> = (0..spec.state_dim).map(|_| rng.f32()).collect();
+    let v = eng.value_infer(J, &val.theta, &state).unwrap();
+    assert!(v.is_finite());
+}
+
+#[test]
+fn sl_step_overfits_fixed_labels() {
+    // Cross-entropy imitation on a fixed batch must drive loss down and the
+    // argmax decisions to the labels — the rust-side mirror of the python
+    // unit test, through the real artifact.
+    let Some(mut eng) = engine_or_skip() else { return };
+    let spec = *eng.meta.spec(J);
+    let batch = eng.meta.batch;
+    let mut rng = Rng::new(4);
+    let mut pol = TrainState::init_policy(&spec, eng.meta.hidden, &mut rng);
+
+    let states: Vec<f32> = (0..batch * spec.state_dim)
+        .map(|_| rng.f32() * 2.0 - 1.0)
+        .collect();
+    let labels: Vec<i32> = (0..batch)
+        .map(|i| (i % spec.num_actions) as i32)
+        .collect();
+
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..30 {
+        last = eng.sl_step(J, &mut pol, &states, &labels, 0.005).unwrap();
+        first.get_or_insert(last);
+    }
+    let first = first.unwrap();
+    assert!(
+        last < 0.5 * first,
+        "SL loss did not drop: first={first} last={last}"
+    );
+    assert!(pol.t >= 29.5, "adam step count not threaded: t={}", pol.t);
+}
+
+#[test]
+fn rl_step_improves_advantaged_action() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let spec = *eng.meta.spec(J);
+    let batch = eng.meta.batch;
+    let mut rng = Rng::new(5);
+    let mut pol = TrainState::init_policy(&spec, eng.meta.hidden, &mut rng);
+    let mut val = TrainState::init_value(&spec, eng.meta.hidden, &mut rng);
+
+    // Single repeated state; action 3 gets a high return, action 4 a low
+    // one.  (Advantages are z-scored inside the artifact, so a constant
+    // return batch would produce exactly zero gradient.)
+    let one_state: Vec<f32> = (0..spec.state_dim).map(|_| rng.f32()).collect();
+    let mut states = Vec::with_capacity(batch * spec.state_dim);
+    for _ in 0..batch {
+        states.extend_from_slice(&one_state);
+    }
+    let actions: Vec<i32> = (0..batch).map(|i| if i % 2 == 0 { 3 } else { 4 }).collect();
+    let returns: Vec<f32> = (0..batch)
+        .map(|i| if i % 2 == 0 { 5.0 } else { 0.5 })
+        .collect();
+
+    let before = eng.policy_infer(J, &pol.theta, &one_state).unwrap()[3];
+    let mut losses = None;
+    for _ in 0..5 {
+        losses = Some(
+            eng.rl_step(J, &mut pol, &mut val, &states, &actions, &returns, 1e-3, 1e-3, 0.0)
+                .unwrap(),
+        );
+    }
+    let after = eng.policy_infer(J, &pol.theta, &one_state).unwrap()[3];
+    assert!(
+        after > before,
+        "advantaged action prob should rise: {before} -> {after}"
+    );
+    let l = losses.unwrap();
+    assert!(l.entropy > 0.0 && l.entropy <= (spec.num_actions as f32).ln() + 1e-4);
+    assert!(l.value_loss.is_finite() && l.policy_loss.is_finite());
+}
+
+#[test]
+fn rl_step_critic_regresses_returns() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let spec = *eng.meta.spec(J);
+    let batch = eng.meta.batch;
+    let mut rng = Rng::new(6);
+    let mut pol = TrainState::init_policy(&spec, eng.meta.hidden, &mut rng);
+    let mut val = TrainState::init_value(&spec, eng.meta.hidden, &mut rng);
+
+    let states: Vec<f32> = (0..batch * spec.state_dim).map(|_| rng.f32()).collect();
+    let actions: Vec<i32> = (0..batch).map(|i| (i % spec.num_actions) as i32).collect();
+    let returns = vec![2.0f32; batch];
+
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..25 {
+        let l = eng
+            .rl_step(J, &mut pol, &mut val, &states, &actions, &returns, 0.0, 0.01, 0.0)
+            .unwrap();
+        last = l.value_loss;
+        first.get_or_insert(l.value_loss);
+    }
+    let first = first.unwrap();
+    assert!(
+        last < 0.3 * first,
+        "value loss did not drop: {first} -> {last}"
+    );
+}
+
+#[test]
+fn all_j_variants_load() {
+    let Some(mut eng) = engine_or_skip() else { return };
+    let js = eng.meta.js.clone();
+    for j in js {
+        let spec = *eng.meta.spec(j);
+        let mut rng = Rng::new(7 + j as u64);
+        let pol = TrainState::init_policy(&spec, eng.meta.hidden, &mut rng);
+        let state = vec![0.0f32; spec.state_dim];
+        let probs = eng.policy_infer(j, &pol.theta, &state).unwrap();
+        assert_eq!(probs.len(), spec.num_actions, "J={j}");
+    }
+}

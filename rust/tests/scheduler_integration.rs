@@ -1,0 +1,243 @@
+//! Integration tests across the scheduling stack (no NN required):
+//! baselines × environment × episode driver, plus property-based
+//! invariants over random workloads.
+
+use dl2::cluster::{Cluster, ClusterConfig};
+use dl2::prop_check;
+use dl2::scheduler::{run_episode, Drf, Fifo, Optimus, Scheduler, Srtf, Tetris};
+use dl2::trace::{generate, TraceConfig};
+
+fn all_baselines() -> Vec<Box<dyn Scheduler>> {
+    vec![
+        Box::new(Drf),
+        Box::new(Fifo::default()),
+        Box::new(Srtf::default()),
+        Box::new(Tetris::default()),
+        Box::new(Optimus::default()),
+    ]
+}
+
+#[test]
+fn every_baseline_completes_a_workload() {
+    let specs = generate(&TraceConfig {
+        num_jobs: 15,
+        seed: 11,
+        ..Default::default()
+    });
+    for mut sched in all_baselines() {
+        let cluster = Cluster::new(ClusterConfig {
+            num_servers: 12,
+            seed: 5,
+            ..Default::default()
+        });
+        let res = run_episode(cluster, &specs, sched.as_mut(), 0.0, 5_000);
+        assert!(
+            res.makespan_slots < 5_000,
+            "{}: hit runaway guard",
+            sched.name()
+        );
+        assert!(res.avg_jct_slots >= 1.0, "{}", sched.name());
+        assert_eq!(res.jct_per_job.len(), 15, "{}", sched.name());
+    }
+}
+
+#[test]
+fn drf_beats_fifo_under_contention() {
+    // FIFO head-of-line blocking should lose to DRF's fair sharing on a
+    // contended cluster, on average over seeds.
+    let mut drf_total = 0.0;
+    let mut fifo_total = 0.0;
+    for seed in 0..5u64 {
+        let specs = generate(&TraceConfig {
+            num_jobs: 25,
+            seed: 100 + seed,
+            ..Default::default()
+        });
+        let mk = |s: u64| {
+            Cluster::new(ClusterConfig {
+                num_servers: 10,
+                seed: s,
+                ..Default::default()
+            })
+        };
+        drf_total += run_episode(mk(seed), &specs, &mut Drf, 0.0, 5_000).avg_jct_slots;
+        fifo_total +=
+            run_episode(mk(seed), &specs, &mut Fifo::default(), 0.0, 5_000).avg_jct_slots;
+    }
+    assert!(
+        drf_total < fifo_total,
+        "DRF {drf_total:.1} should beat FIFO {fifo_total:.1} under contention"
+    );
+}
+
+#[test]
+fn srtf_beats_drf_on_mixed_lengths() {
+    // SRTF is the avg-JCT-optimal heuristic for single-resource queues;
+    // with a strongly bimodal workload it should beat fair sharing.
+    let mut srtf_total = 0.0;
+    let mut drf_total = 0.0;
+    for seed in 0..5u64 {
+        let specs = generate(&TraceConfig {
+            num_jobs: 25,
+            duration_sigma: 1.2, // heavy tail → big length disparity
+            seed: 200 + seed,
+            ..Default::default()
+        });
+        let mk = |s: u64| {
+            Cluster::new(ClusterConfig {
+                num_servers: 8,
+                seed: s,
+                ..Default::default()
+            })
+        };
+        srtf_total +=
+            run_episode(mk(seed), &specs, &mut Srtf::default(), 0.0, 5_000).avg_jct_slots;
+        drf_total += run_episode(mk(seed), &specs, &mut Drf, 0.0, 5_000).avg_jct_slots;
+    }
+    assert!(
+        srtf_total < drf_total * 1.15,
+        "SRTF {srtf_total:.1} should be at least competitive with DRF {drf_total:.1}"
+    );
+}
+
+#[test]
+fn optimus_oracle_beats_drf_without_interference() {
+    // With a *perfect* performance model, Optimus' marginal-gain greedy
+    // beats fair sharing in a clean env; the online-fitted variant must at
+    // least stay in range (its gap to the oracle is exactly the model
+    // inaccuracy the paper's Figs 9/13 exploit).
+    let mut oracle_total = 0.0;
+    let mut fit_total = 0.0;
+    let mut drf_total = 0.0;
+    for seed in 0..4u64 {
+        let specs = generate(&TraceConfig {
+            num_jobs: 20,
+            seed: 300 + seed,
+            ..Default::default()
+        });
+        let mk = |s: u64| {
+            Cluster::new(ClusterConfig {
+                num_servers: 10,
+                interference: 0.0,
+                seed: s,
+                ..Default::default()
+            })
+        };
+        oracle_total +=
+            run_episode(mk(seed), &specs, &mut Optimus::with_oracle(), 0.0, 5_000).avg_jct_slots;
+        fit_total +=
+            run_episode(mk(seed), &specs, &mut Optimus::default(), 0.0, 5_000).avg_jct_slots;
+        drf_total += run_episode(mk(seed), &specs, &mut Drf, 0.0, 5_000).avg_jct_slots;
+    }
+    assert!(
+        oracle_total < drf_total * 1.02,
+        "oracle Optimus {oracle_total:.1} should beat DRF {drf_total:.1} in a clean env"
+    );
+    assert!(
+        fit_total < drf_total * 1.35,
+        "fitted Optimus {fit_total:.1} far off DRF {drf_total:.1}"
+    );
+    assert!(
+        fit_total >= oracle_total,
+        "fit should not beat its own oracle"
+    );
+}
+
+#[test]
+fn prop_allocations_never_exceed_capacity() {
+    prop_check!(10, |rng: &mut dl2::util::Rng| {
+        let specs = generate(&TraceConfig {
+            num_jobs: rng.range(3, 12),
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let mut cluster = Cluster::new(ClusterConfig {
+            num_servers: rng.range(2, 8),
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let total_cap = cluster
+            .cfg
+            .server_cap
+            .scale(cluster.cfg.num_servers as f64);
+        let mut sched = Drf;
+        let mut next = 0usize;
+        for _ in 0..60 {
+            while next < specs.len() && specs[next].arrival_slot <= cluster.slot {
+                cluster.submit(specs[next].type_idx, specs[next].total_epochs, 0.0);
+                next += 1;
+            }
+            let active = cluster.active_jobs();
+            let alloc = sched.schedule(&cluster, &active);
+            let placement = cluster.apply_allocation(&alloc);
+            // Invariant: realized usage within cluster capacity.
+            let used = placement.total_used();
+            assert!(
+                dl2::cluster::Res::ZERO.fits(&used, &total_cap),
+                "over-allocated: {used} > {total_cap}"
+            );
+            cluster.advance(&placement);
+            if next >= specs.len() && cluster.all_finished() {
+                break;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_jobs_always_finish_with_nonzero_allocations() {
+    prop_check!(6, |rng: &mut dl2::util::Rng| {
+        let specs = generate(&TraceConfig {
+            num_jobs: rng.range(2, 8),
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let cluster = Cluster::new(ClusterConfig {
+            num_servers: rng.range(6, 16),
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let res = run_episode(cluster, &specs, &mut Drf, 0.0, 5_000);
+        assert!(res.makespan_slots < 5_000, "workload never finished");
+    });
+}
+
+#[test]
+fn interference_hurts_optimus_more_than_drf() {
+    // The paper's core motivation (Fig 13): white-box degradation.
+    let eval = |interference: f64, opt: bool| {
+        let mut total = 0.0;
+        for seed in 0..4u64 {
+            let specs = generate(&TraceConfig {
+                num_jobs: 20,
+                seed: 400 + seed,
+                ..Default::default()
+            });
+            let cluster = Cluster::new(ClusterConfig {
+                num_servers: 10,
+                interference,
+                speed_variation: interference, // compound the noise
+                seed,
+                ..Default::default()
+            });
+            let mut s: Box<dyn Scheduler> = if opt {
+                Box::new(Optimus::default())
+            } else {
+                Box::new(Drf)
+            };
+            total += run_episode(cluster, &specs, s.as_mut(), 0.0, 5_000).avg_jct_slots;
+        }
+        total / 4.0
+    };
+    let opt_clean = eval(0.0, true);
+    let opt_noisy = eval(0.35, true);
+    let drf_clean = eval(0.0, false);
+    let drf_noisy = eval(0.35, false);
+    let opt_deg = opt_noisy / opt_clean;
+    let drf_deg = drf_noisy / drf_clean;
+    // Allow slack: both degrade, Optimus at least as much as DRF - 15%.
+    assert!(
+        opt_deg > drf_deg - 0.15,
+        "unexpected: Optimus deg {opt_deg:.2} far below DRF deg {drf_deg:.2}"
+    );
+}
