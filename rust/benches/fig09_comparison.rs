@@ -6,15 +6,15 @@
 //! OfflineRL notably worse than online-trained DL² (its offline simulator
 //! uses an inaccurate analytical speed model and no interference).
 //!
-//! Scale with DL2_BENCH_SCALE (e.g. 0.2 for a quick run).
+//! Scale with DL2_BENCH_SCALE (e.g. 0.2 for a quick run); baseline
+//! episodes fan out across DL2_THREADS workers via the sim harness.
 
-use dl2::pipeline::{
-    baseline_by_name, baseline_jct, run_pipeline, validation_trace, PipelineConfig,
-};
+use dl2::pipeline::{run_pipeline, validation_trace, validation_trace_cfg, PipelineConfig};
 use dl2::rl::{evaluate_policy, OnlineTrainer};
 use dl2::runtime::Engine;
 use dl2::scheduler::offline_rl::{offline_opts, offline_rl_trainer};
 use dl2::scheduler::{Dl2Config, Dl2Scheduler};
+use dl2::sim::{mean_avg_jct, replica_specs, Harness};
 use dl2::util::{scaled, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -113,17 +113,22 @@ fn main() -> anyhow::Result<()> {
         cfg.rl_opts.max_slots,
     );
 
-    // --- Heuristic baselines.
+    // --- Heuristic baselines: one (scheduler × env-seed-replica) batch
+    // fanned across harness workers; per-scenario results are identical
+    // to the old serial loop.
     let mut t = Table::new(
         "Fig 9: average job completion time (slots), validation workload",
         &["scheduler", "avg_jct", "dl2_gain_%", "paper_gain_%"],
     );
     let paper = [("drf", 44.1), ("tetris", f64::NAN), ("optimus", 17.5)];
+    let baselines = ["drf", "tetris", "optimus"];
+    let val_cfg = validation_trace_cfg(&cfg.trace);
+    let scenarios = replica_specs("val", &cfg.cluster, &val_cfg, 777, 3, cfg.rl_opts.max_slots);
+    let results = Harness::from_env().run_named(&baselines, &scenarios);
     let mut jcts = std::collections::BTreeMap::new();
-    for name in ["drf", "tetris", "optimus"] {
-        let mut mk = || baseline_by_name(name).unwrap();
-        let jct = baseline_jct(&mut mk, &cfg.cluster, &val, 3, cfg.rl_opts.max_slots);
-        jcts.insert(name.to_string(), jct);
+    for (i, name) in baselines.iter().enumerate() {
+        let group = &results[i * scenarios.len()..(i + 1) * scenarios.len()];
+        jcts.insert(name.to_string(), mean_avg_jct(group));
     }
     for (name, paper_gain) in paper {
         let jct = jcts[name];

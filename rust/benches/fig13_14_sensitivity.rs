@@ -9,12 +9,10 @@
 //! mildly with the error and still beats DRF at 20% (paper: by 28%).
 
 use dl2::cluster::ClusterConfig;
-use dl2::pipeline::{
-    baseline_by_name, baseline_jct, run_pipeline, validation_trace, PipelineConfig,
-};
+use dl2::pipeline::{run_pipeline, validation_trace, validation_trace_cfg, PipelineConfig};
 use dl2::rl::evaluate_policy_with_error;
 use dl2::runtime::Engine;
-use dl2::scheduler::run_episode;
+use dl2::sim::{mean_avg_jct, replica_specs, Harness, ScenarioSpec};
 use dl2::util::{scaled, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -24,7 +22,10 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let val = validation_trace(&cfg.trace);
+    let val_cfg = validation_trace_cfg(&cfg.trace);
     let dir = dl2::runtime::default_artifacts_dir();
+    let harness = Harness::from_env();
+    let runs = 3u64;
 
     // Train DL2 once on the default environment; evaluate under each
     // perturbation (its policy is model-free, so no retraining is needed —
@@ -33,22 +34,37 @@ fn main() -> anyhow::Result<()> {
     let mut result = run_pipeline(&cfg, Engine::load(&dir)?)?;
     let sched = &mut result.trainer.sched;
 
-    // --- Fig 13: speed-variation sweep.
+    // --- Fig 13: speed-variation sweep.  All (variation × replica ×
+    // baseline) episodes run as one harness batch; DL2's evaluations stay
+    // serial on its engine.
+    let variations = [0.0, 0.1, 0.2, 0.3, 0.4];
+    let max_slots = cfg.rl_opts.max_slots;
+    let mut scenarios13: Vec<ScenarioSpec> = Vec::new();
+    for &v in &variations {
+        let env = ClusterConfig {
+            speed_variation: v,
+            ..cfg.cluster.clone()
+        };
+        let prefix = format!("var{:02}", (v * 100.0) as i64);
+        scenarios13.extend(replica_specs(&prefix, &env, &val_cfg, 777, runs, max_slots));
+    }
+    let res13 = harness.run_named(&["optimus", "drf"], &scenarios13);
+    let (opt_res, drf_res) = res13.split_at(scenarios13.len());
+
     let mut t13 = Table::new(
         "Fig 13: avg JCT vs training-speed variation",
         &["variation_%", "dl2", "optimus", "drf"],
     );
     let mut degradation: Vec<(f64, f64)> = Vec::new(); // (dl2, optimus) at extremes
-    for v in [0.0, 0.1, 0.2, 0.3, 0.4] {
+    for (k, &v) in variations.iter().enumerate() {
         let env = ClusterConfig {
             speed_variation: v,
             ..cfg.cluster.clone()
         };
         let dl2 = evaluate_policy_with_error(sched, &env, &val, cfg.rl_opts.max_slots, 0.0);
-        let mut mk_o = || baseline_by_name("optimus").unwrap();
-        let opt = baseline_jct(&mut mk_o, &env, &val, 3, cfg.rl_opts.max_slots);
-        let mut mk_d = || baseline_by_name("drf").unwrap();
-        let drf = baseline_jct(&mut mk_d, &env, &val, 3, cfg.rl_opts.max_slots);
+        let band = k * runs as usize..(k + 1) * runs as usize;
+        let opt = mean_avg_jct(&opt_res[band.clone()]);
+        let drf = mean_avg_jct(&drf_res[band]);
         if v == 0.0 || v == 0.4 {
             degradation.push((dl2, opt));
         }
@@ -64,32 +80,29 @@ fn main() -> anyhow::Result<()> {
     let opt_deg = degradation[1].1 / degradation[0].1;
     println!("JCT growth 0%→40% variation: DL2 ×{dl2_deg:.2}, Optimus ×{opt_deg:.2} (paper: Optimus more sensitive)");
 
-    // --- Fig 14: epoch-estimation error sweep.
+    // --- Fig 14: epoch-estimation error sweep.  DRF (oblivious to the
+    // estimate; its env still carries the error) runs as one harness
+    // batch over the (error × replica) grid.
+    let errors = [0.0, 0.05, 0.10, 0.15, 0.20];
+    let mut scenarios14: Vec<ScenarioSpec> = Vec::new();
+    for &e in &errors {
+        let prefix = format!("err{:02}", (e * 100.0) as i64);
+        let mut specs = replica_specs(&prefix, &cfg.cluster, &val_cfg, 555, runs, max_slots);
+        for spec in &mut specs {
+            spec.epoch_error = e;
+        }
+        scenarios14.extend(specs);
+    }
+    let drf14 = harness.run_named(&["drf"], &scenarios14);
+
     let mut t14 = Table::new(
         "Fig 14: avg JCT vs total-epoch estimation error",
         &["error_%", "dl2", "drf"],
     );
     let mut last = (0.0, 0.0);
-    for e in [0.0, 0.05, 0.10, 0.15, 0.20] {
-        let dl2 = evaluate_policy_with_error(sched, &cfg.cluster, &val, cfg.rl_opts.max_slots, e);
-        // DRF is oblivious to epoch estimates; its env still has the error.
-        let mut drf_total = 0.0;
-        for r in 0..3 {
-            let env = ClusterConfig {
-                seed: cfg.cluster.seed.wrapping_add(555 + r),
-                ..cfg.cluster.clone()
-            };
-            let mut drf = baseline_by_name("drf").unwrap();
-            drf_total += run_episode(
-                dl2::cluster::Cluster::new(env),
-                &val,
-                drf.as_mut(),
-                e,
-                cfg.rl_opts.max_slots,
-            )
-            .avg_jct_slots;
-        }
-        let drf = drf_total / 3.0;
+    for (k, &e) in errors.iter().enumerate() {
+        let dl2 = evaluate_policy_with_error(sched, &cfg.cluster, &val, max_slots, e);
+        let drf = mean_avg_jct(&drf14[k * runs as usize..(k + 1) * runs as usize]);
         last = (dl2, drf);
         t14.row(vec![
             format!("{:.0}", e * 100.0),

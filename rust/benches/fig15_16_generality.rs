@@ -10,11 +10,12 @@
 //! improves well beyond it (paper: 41.3% over SRTF).
 
 use dl2::pipeline::{
-    baseline_by_name, baseline_jct, run_pipeline, validation_trace, Incumbent, PipelineConfig,
+    run_pipeline, validation_trace, validation_trace_cfg, Incumbent, PipelineConfig,
 };
 use dl2::rl::{generate_dataset, train_sl, OnlineTrainer, RlOptions};
 use dl2::runtime::Engine;
 use dl2::scheduler::{Dl2Scheduler, Drf};
+use dl2::sim::{mean_avg_jct, replica_specs, Harness};
 use dl2::trace::{generate, TraceConfig};
 use dl2::util::{scaled, Rng, Table};
 
@@ -90,12 +91,20 @@ fn main() -> anyhow::Result<()> {
         ideal.final_jct
     );
 
-    // --- Fig 16.
+    // --- Fig 16.  All (incumbent × env-seed-replica) baseline episodes
+    // run as one harness batch up front; the SL+RL pipelines stay serial
+    // on their engines.
+    let incumbents = [Incumbent::Fifo, Incumbent::Srtf, Incumbent::Drf];
+    let val_cfg = validation_trace_cfg(&cfg.trace);
+    let scenarios = replica_specs("val", &cfg.cluster, &val_cfg, 777, 3, max_slots);
+    let names: Vec<&str> = incumbents.iter().map(|i| i.name()).collect();
+    let inc_results = Harness::from_env().run_named(&names, &scenarios);
+
     let mut t16 = Table::new(
         "Fig 16: SL from different incumbents (validation avg JCT)",
         &["incumbent", "incumbent_jct", "dl2_sl_only", "dl2_sl_rl", "speedup_vs_incumbent_%"],
     );
-    for inc in [Incumbent::Fifo, Incumbent::Srtf, Incumbent::Drf] {
+    for (k, &inc) in incumbents.iter().enumerate() {
         eprintln!("[fig16] incumbent {}...", inc.name());
         let res = run_pipeline(
             &PipelineConfig {
@@ -104,8 +113,7 @@ fn main() -> anyhow::Result<()> {
             },
             Engine::load(&dir)?,
         )?;
-        let mut mk = || baseline_by_name(inc.name()).unwrap();
-        let inc_jct = baseline_jct(&mut mk, &cfg.cluster, &val, 3, max_slots);
+        let inc_jct = mean_avg_jct(&inc_results[k * scenarios.len()..(k + 1) * scenarios.len()]);
         let speedup = 100.0 * (inc_jct - res.final_jct) / inc_jct;
         t16.row(vec![
             inc.name().into(),

@@ -13,6 +13,7 @@ use dl2::pipeline::{validation_trace, PipelineConfig};
 use dl2::rl::{Federation, RlOptions};
 use dl2::runtime::Engine;
 use dl2::scheduler::Dl2Config;
+use dl2::sim::Harness;
 use dl2::util::{scaled, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -23,13 +24,13 @@ fn main() -> anyhow::Result<()> {
     };
     let dir = dl2::runtime::default_artifacts_dir();
     let val = validation_trace(&base.trace);
+    let harness = Harness::from_env();
 
-    // --- Fig 17: J sweep over the available artifact families.
-    let mut t17 = Table::new(
-        "Fig 17: concurrent job bound J vs validation avg JCT",
-        &["J", "avg_jct"],
-    );
-    for j in [5usize, 10, 20, 40] {
+    // --- Fig 17: J sweep over the available artifact families.  The four
+    // pipelines are independent (each builds its own engine on its worker
+    // thread), so the whole sweep fans out on the harness.
+    let js = [5usize, 10, 20, 40];
+    let jcts: Vec<anyhow::Result<f64>> = harness.map(&js, |_, &j| {
         eprintln!("[fig17] training with J={j}...");
         let cfg = PipelineConfig {
             dl2: Dl2Config {
@@ -39,12 +40,20 @@ fn main() -> anyhow::Result<()> {
             ..base.clone()
         };
         let res = dl2::pipeline::run_pipeline(&cfg, Engine::load(&dir)?)?;
-        t17.row(vec![j.to_string(), format!("{:.3}", res.final_jct)]);
+        Ok(res.final_jct)
+    });
+    let mut t17 = Table::new(
+        "Fig 17: concurrent job bound J vs validation avg JCT",
+        &["J", "avg_jct"],
+    );
+    for (j, jct) in js.iter().zip(jcts) {
+        t17.row(vec![j.to_string(), format!("{:.3}", jct?)]);
     }
     t17.emit("fig17_jsweep");
     println!("paper shape: small J (batched scheduling) hurts; large-enough J plateaus");
 
-    // --- Fig 18: federation size sweep.
+    // --- Fig 18: federation size sweep, with each round's k episodes
+    // collected in parallel (A3C) and updates applied serially.
     let rounds = scaled(6, 2);
     let mut t18 = Table::new(
         "Fig 18: federated A3C — clusters vs global validation JCT",
@@ -61,7 +70,7 @@ fn main() -> anyhow::Result<()> {
             &RlOptions::default(),
         )?;
         for _ in 0..rounds {
-            fed.round();
+            fed.round_parallel(&harness, &dir)?;
         }
         let jct = fed.evaluate(&val);
         t18.row(vec![

@@ -7,7 +7,8 @@
 //! * **L3 (this crate)** — the scheduler/coordinator: time-slotted resource
 //!   allocation over a DL cluster, baseline schedulers (DRF, FIFO, SRTF,
 //!   Tetris, Optimus, OfflineRL), the online RL driver, the elastic-scaling
-//!   substrate (§5), metrics and benches.
+//!   substrate (§5), the scenario-matrix evaluation harness ([`sim`]),
+//!   metrics and benches.
 //! * **L2 (python/compile/model.py, build-time)** — policy/value networks,
 //!   SL and actor-critic RL update steps in JAX, AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/, build-time)** — fused Pallas
@@ -22,5 +23,6 @@ pub mod pipeline;
 pub mod rl;
 pub mod runtime;
 pub mod scheduler;
+pub mod sim;
 pub mod trace;
 pub mod util;

@@ -174,13 +174,19 @@ pub fn run_pipeline(cfg: &PipelineConfig, engine: Engine) -> Result<PipelineResu
     })
 }
 
-/// The held-out validation sequence for a trace config (§6.2: same
-/// distributions, different seed).
-pub fn validation_trace(tc: &TraceConfig) -> Vec<JobSpec> {
-    generate(&TraceConfig {
+/// Config of the held-out validation sequence for a trace config (§6.2:
+/// same distributions, different seed).  The scenario harness consumes
+/// the config; [`validation_trace`] materializes the jobs.
+pub fn validation_trace_cfg(tc: &TraceConfig) -> TraceConfig {
+    TraceConfig {
         seed: tc.seed.wrapping_add(0x5EED_0FF5),
         ..tc.clone()
-    })
+    }
+}
+
+/// The held-out validation sequence for a trace config.
+pub fn validation_trace(tc: &TraceConfig) -> Vec<JobSpec> {
+    generate(&validation_trace_cfg(tc))
 }
 
 /// Average JCT of a baseline scheduler on a validation sequence, averaged

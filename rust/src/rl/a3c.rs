@@ -9,11 +9,14 @@
 //! episodes' worth of updates, which is why convergence is ≈k× faster per
 //! round (the paper's observation).
 
-use super::train::{OnlineTrainer, RlOptions};
+use std::path::Path;
+
+use super::train::{collect_rollout, OnlineTrainer, RlOptions, Rollout};
 use crate::cluster::ClusterConfig;
 use crate::runtime::Engine;
 use crate::scheduler::{Dl2Config, Dl2Scheduler};
-use crate::trace::{generate, TraceConfig};
+use crate::sim::{derive_seed, Harness};
+use crate::trace::{generate, JobSpec, TraceConfig};
 
 /// One federated cluster: trainer + its private trace stream.
 pub struct FederatedCluster {
@@ -21,6 +24,25 @@ pub struct FederatedCluster {
     pub trace_cfg: TraceConfig,
     pub cluster_cfg: ClusterConfig,
     episode: usize,
+}
+
+impl FederatedCluster {
+    /// Trace + environment for this cluster's next episode.  Pure: the
+    /// episode counter is advanced separately (`episode += 1`) once the
+    /// round is committed, so a failed round can be retried without
+    /// skipping seeds.  Both `round` and `round_parallel` derive their
+    /// seed schedule from here — keep it the single source of truth.
+    fn next_episode_inputs(&self) -> (Vec<JobSpec>, ClusterConfig) {
+        let specs = generate(&TraceConfig {
+            seed: self.trace_cfg.seed.wrapping_add(self.episode as u64 * 7919),
+            ..self.trace_cfg.clone()
+        });
+        let env = ClusterConfig {
+            seed: self.cluster_cfg.seed.wrapping_add(self.episode as u64 + 1),
+            ..self.cluster_cfg.clone()
+        };
+        (specs, env)
+    }
 }
 
 pub struct Federation {
@@ -77,6 +99,29 @@ impl Federation {
         })
     }
 
+    /// Parameter pair of cluster `c` (pull side of the chain).
+    fn theta_pair(&self, c: usize) -> (Vec<f32>, Vec<f32>) {
+        let s = &self.clusters[c].trainer.sched;
+        (s.pol.theta.clone(), s.val.theta.clone())
+    }
+
+    /// Overwrite cluster `c`'s parameters (push side of the chain).
+    fn set_theta_pair(&mut self, c: usize, p: &[f32], v: &[f32]) {
+        let s = &mut self.clusters[c].trainer.sched;
+        s.pol.set_theta(p);
+        s.val.set_theta(v);
+    }
+
+    /// Propagate the last cluster's parameters back to cluster 0 (the
+    /// global model) at the end of a round.
+    fn push_global(&mut self) {
+        let k = self.clusters.len();
+        if k > 1 {
+            let (p, v) = self.theta_pair(k - 1);
+            self.set_theta_pair(0, &p, &v);
+        }
+    }
+
     /// One federated round: each cluster trains one episode starting from
     /// the global parameters; its result becomes the new global model.
     pub fn round(&mut self) {
@@ -84,37 +129,94 @@ impl Federation {
         for c in 0..k {
             // Pull global (= previous cluster's result).
             if c > 0 {
-                let (p, v) = {
-                    let prev = &self.clusters[c - 1].trainer.sched;
-                    (prev.pol.theta.clone(), prev.val.theta.clone())
-                };
-                let cur = &mut self.clusters[c].trainer.sched;
-                cur.pol.set_theta(&p);
-                cur.val.set_theta(&v);
+                let (p, v) = self.theta_pair(c - 1);
+                self.set_theta_pair(c, &p, &v);
             }
             let fc = &mut self.clusters[c];
-            let specs = generate(&TraceConfig {
-                seed: fc.trace_cfg.seed.wrapping_add(fc.episode as u64 * 7919),
-                ..fc.trace_cfg.clone()
-            });
+            let (specs, cfg) = fc.next_episode_inputs();
             fc.episode += 1;
-            let cfg = ClusterConfig {
-                seed: fc.cluster_cfg.seed.wrapping_add(fc.episode as u64),
-                ..fc.cluster_cfg.clone()
-            };
             fc.trainer.train_episode(&cfg, &specs);
         }
-        // Propagate the last cluster's parameters back to cluster 0 (the
-        // global model) and evaluate.
-        if k > 1 {
-            let (p, v) = {
-                let last = &self.clusters[k - 1].trainer.sched;
-                (last.pol.theta.clone(), last.val.theta.clone())
-            };
-            let first = &mut self.clusters[0].trainer.sched;
-            first.pol.set_theta(&p);
-            first.val.set_theta(&v);
+        self.push_global();
+    }
+
+    /// One federated round with **parallel episode collection** (the
+    /// paper's actual A3C shape): every cluster pulls the same global
+    /// parameters (cluster 0's), its episode rollout is collected on a
+    /// harness worker — each worker loads its own engine from
+    /// `artifacts_dir` and steps its own environment — and the NN updates
+    /// are then applied serially in cluster order through the exact
+    /// pull→train→push chain of [`Federation::round`].
+    ///
+    /// Trace/env seed advancement matches the serial round, and rollout
+    /// RNG streams derive from (cluster seed, episode index) alone, so
+    /// the outcome is independent of the worker count.
+    pub fn round_parallel(
+        &mut self,
+        harness: &Harness,
+        artifacts_dir: &Path,
+    ) -> anyhow::Result<()> {
+        let k = self.clusters.len();
+        // Pull: sync every cluster to the global model before collection.
+        let (gp, gv) = self.theta_pair(0);
+        for c in 1..k {
+            self.set_theta_pair(c, &gp, &gv);
         }
+        // Per-cluster episode inputs; counters are committed only after
+        // every rollout succeeded, so a failed round is retryable.
+        type Work = (Dl2Config, ClusterConfig, Vec<JobSpec>, f64, usize);
+        let work: Vec<Work> = self
+            .clusters
+            .iter()
+            .map(|fc| {
+                let (specs, env) = fc.next_episode_inputs();
+                let dl2_cfg = Dl2Config {
+                    seed: derive_seed(fc.trainer.sched.cfg.seed, fc.episode as u64 + 1),
+                    ..fc.trainer.sched.cfg.clone()
+                };
+                (
+                    dl2_cfg,
+                    env,
+                    specs,
+                    fc.trainer.opts.epoch_error,
+                    fc.trainer.opts.max_slots,
+                )
+            })
+            .collect();
+        // Collect: frozen global policy, one worker-confined engine each
+        // (see ROADMAP for the planned worker-pinned engine cache).
+        let rollouts = harness.map(&work, |_, item| -> anyhow::Result<Rollout> {
+            let (cfg, env, specs, epoch_error, max_slots) = item;
+            let engine = Engine::load(artifacts_dir)?;
+            let mut sched = Dl2Scheduler::new(engine, cfg.clone());
+            sched.pol.set_theta(&gp);
+            sched.val.set_theta(&gv);
+            Ok(collect_rollout(
+                &mut sched,
+                env,
+                None,
+                specs,
+                *epoch_error,
+                *max_slots,
+            ))
+        });
+        // All-or-nothing: validate every rollout before touching any
+        // cluster state, so a failed worker cannot leave the federation
+        // half-updated or its seed schedule advanced.
+        let rollouts: Vec<Rollout> = rollouts.into_iter().collect::<anyhow::Result<_>>()?;
+        for fc in self.clusters.iter_mut() {
+            fc.episode += 1;
+        }
+        // Update: serial parameter chain, identical flow to `round`.
+        for (c, rollout) in rollouts.into_iter().enumerate() {
+            if c > 0 {
+                let (p, v) = self.theta_pair(c - 1);
+                self.set_theta_pair(c, &p, &v);
+            }
+            self.clusters[c].trainer.apply_rollout(rollout);
+        }
+        self.push_global();
+        Ok(())
     }
 
     /// Validation JCT of the global model on a held-out trace.

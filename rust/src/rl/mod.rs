@@ -14,4 +14,7 @@ pub mod train;
 pub use a3c::Federation;
 pub use replay::{discounted_returns, Batch, ReplayBuffer, SampleG};
 pub use sl::{decompose_batch, decompose_batch_opts, generate_dataset, train_sl, Labeled};
-pub use train::{evaluate_policy, evaluate_policy_with_error, EpisodeStats, OnlineTrainer, RlOptions};
+pub use train::{
+    collect_rollout, evaluate_policy, evaluate_policy_with_error, EpisodeStats, OnlineTrainer,
+    RlOptions, Rollout,
+};

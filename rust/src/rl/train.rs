@@ -8,10 +8,23 @@
 //! G_t at episode end; one NN update is performed per elapsed slot,
 //! sampling mini-batches from the replay buffer (matching the paper's
 //! one-update-per-scheduling-interval cadence).
+//!
+//! The episode is split into two phases so the `sim` harness can
+//! parallelize the expensive half Decima-style: [`collect_rollout`] steps
+//! the environment with a (frozen) policy and records raw experience;
+//! [`OnlineTrainer::apply_rollout`] then performs the parameter updates
+//! serially.  [`OnlineTrainer::train_episodes_parallel`] fans rollout
+//! collection across harness workers — each builds its own engine and
+//! scheduler replica on its own thread — and applies the updates in
+//! episode order, so NN state evolution stays single-threaded.
+
+use std::path::Path;
 
 use super::replay::{discounted_returns, Batch, ReplayBuffer, SampleG};
 use crate::cluster::{Cluster, ClusterConfig, JobType};
-use crate::scheduler::{Dl2Scheduler, Scheduler};
+use crate::runtime::Engine;
+use crate::scheduler::{Dl2Config, Dl2Scheduler, Scheduler};
+use crate::sim::{derive_seed, Harness};
 use crate::trace::JobSpec;
 use crate::util::stats::{mean, Ema};
 use crate::util::Rng;
@@ -52,6 +65,66 @@ pub struct EpisodeStats {
     pub mean_entropy: f32,
 }
 
+/// Raw experience from one episode: per-slot rewards plus the scheduler's
+/// recorded (state, action) decisions per slot.  Plain data — safe to
+/// ship back from a harness worker thread.
+#[derive(Debug, Clone)]
+pub struct Rollout {
+    pub rewards: Vec<f64>,
+    pub slot_samples: Vec<Vec<(Vec<f32>, i32)>>,
+    /// Average JCT the episode achieved (for stats).
+    pub avg_jct: f64,
+}
+
+/// Run one training episode of `specs` on an environment built from
+/// `cfg` (+ optional catalog override), recording every NN decision.
+/// Pure environment interaction: no parameter updates happen here.
+pub fn collect_rollout(
+    sched: &mut Dl2Scheduler,
+    cfg: &ClusterConfig,
+    catalog: Option<Vec<JobType>>,
+    specs: &[JobSpec],
+    epoch_error: f64,
+    max_slots: usize,
+) -> Rollout {
+    let mut cluster = match catalog {
+        Some(cat) => Cluster::with_catalog(cfg.clone(), cat),
+        None => Cluster::new(cfg.clone()),
+    };
+    sched.training = true;
+
+    let mut next_spec = 0usize;
+    let mut rewards: Vec<f64> = Vec::new();
+    let mut slot_samples: Vec<Vec<(Vec<f32>, i32)>> = Vec::new();
+    loop {
+        while next_spec < specs.len() && specs[next_spec].arrival_slot <= cluster.slot {
+            let s = &specs[next_spec];
+            cluster.submit(s.type_idx, s.total_epochs, epoch_error);
+            next_spec += 1;
+        }
+        let active = cluster.active_jobs();
+        let alloc = sched.schedule(&cluster, &active);
+        let transitions = sched.take_transitions();
+        let placement = cluster.apply_allocation(&alloc);
+        let outcome = cluster.advance(&placement);
+        rewards.push(outcome.reward);
+        slot_samples.push(
+            transitions
+                .into_iter()
+                .map(|t| (t.state, t.action as i32))
+                .collect(),
+        );
+        if (next_spec >= specs.len() && cluster.all_finished()) || cluster.slot >= max_slots {
+            break;
+        }
+    }
+    Rollout {
+        rewards,
+        slot_samples,
+        avg_jct: cluster.avg_jct(),
+    }
+}
+
 /// The online RL driver around a [`Dl2Scheduler`].
 pub struct OnlineTrainer {
     pub sched: Dl2Scheduler,
@@ -61,6 +134,11 @@ pub struct OnlineTrainer {
     pub updates: usize,
     baseline: Ema,
     rng: Rng,
+    /// Batched-collection rounds served so far — folded into the
+    /// per-episode exploration seeds so successive
+    /// [`Self::train_episodes_parallel`] calls do not replay identical
+    /// RNG streams.
+    par_rounds: u64,
 }
 
 impl OnlineTrainer {
@@ -73,52 +151,43 @@ impl OnlineTrainer {
             updates: 0,
             baseline: Ema::new(0.05),
             rng,
+            par_rounds: 0,
         }
     }
 
-    /// Run one training episode over `specs` on an env built by `mk_env`,
-    /// then perform one NN update per elapsed slot.
+    /// Run one training episode over `specs` on an env built from `cfg`,
+    /// then perform one NN update per elapsed slot: rollout collection
+    /// followed by [`Self::apply_rollout`].
     pub fn train_episode_on(
         &mut self,
         cfg: &ClusterConfig,
         catalog: Option<Vec<JobType>>,
         specs: &[JobSpec],
     ) -> EpisodeStats {
-        let mut cluster = match catalog {
-            Some(cat) => Cluster::with_catalog(cfg.clone(), cat),
-            None => Cluster::new(cfg.clone()),
-        };
-        self.sched.training = true;
+        let rollout = collect_rollout(
+            &mut self.sched,
+            cfg,
+            catalog,
+            specs,
+            self.opts.epoch_error,
+            self.opts.max_slots,
+        );
+        self.apply_rollout(rollout)
+    }
 
-        let mut next_spec = 0usize;
-        let mut rewards: Vec<f64> = Vec::new();
-        let mut slot_samples: Vec<Vec<(Vec<f32>, i32)>> = Vec::new();
-        loop {
-            while next_spec < specs.len() && specs[next_spec].arrival_slot <= cluster.slot {
-                let s = &specs[next_spec];
-                cluster.submit(s.type_idx, s.total_epochs, self.opts.epoch_error);
-                next_spec += 1;
-            }
-            let active = cluster.active_jobs();
-            let alloc = self.sched.schedule(&cluster, &active);
-            let transitions = self.sched.take_transitions();
-            let placement = cluster.apply_allocation(&alloc);
-            let outcome = cluster.advance(&placement);
-            rewards.push(outcome.reward);
-            slot_samples.push(
-                transitions
-                    .into_iter()
-                    .map(|t| (t.state, t.action as i32))
-                    .collect(),
-            );
-            if (next_spec >= specs.len() && cluster.all_finished())
-                || cluster.slot >= self.opts.max_slots
-            {
-                break;
-            }
-        }
+    pub fn train_episode(&mut self, cfg: &ClusterConfig, specs: &[JobSpec]) -> EpisodeStats {
+        self.train_episode_on(cfg, None, specs)
+    }
 
-        // Returns + replay fill.
+    /// Fold a collected rollout into returns + replay, then perform one
+    /// NN update per elapsed slot (paper cadence).  Serial by design —
+    /// all parameter mutation funnels through here.
+    pub fn apply_rollout(&mut self, rollout: Rollout) -> EpisodeStats {
+        let Rollout {
+            rewards,
+            slot_samples,
+            avg_jct,
+        } = rollout;
         let g = discounted_returns(&rewards, self.sched.cfg.gamma as f64);
         let mut newest: Vec<SampleG> = Vec::new();
         for (t, samples) in slot_samples.into_iter().enumerate() {
@@ -136,7 +205,6 @@ impl OnlineTrainer {
             }
         }
 
-        // One update per elapsed slot (paper cadence).
         let n_updates = rewards.len();
         let mut entropies = Vec::new();
         for _ in 0..n_updates {
@@ -148,7 +216,7 @@ impl OnlineTrainer {
         }
 
         EpisodeStats {
-            avg_jct: cluster.avg_jct(),
+            avg_jct,
             total_reward: rewards.iter().sum(),
             updates: n_updates,
             mean_entropy: mean(&entropies.iter().map(|&x| x as f64).collect::<Vec<_>>())
@@ -156,8 +224,60 @@ impl OnlineTrainer {
         }
     }
 
-    pub fn train_episode(&mut self, cfg: &ClusterConfig, specs: &[JobSpec]) -> EpisodeStats {
-        self.train_episode_on(cfg, None, specs)
+    /// Decima-style batched training round: collect every episode's
+    /// rollout in parallel on the harness — each worker loads its own
+    /// engine from `artifacts_dir` and rolls out a scheduler replica
+    /// frozen at the current parameters — then apply the updates serially
+    /// in episode order.
+    ///
+    /// Within a batch every rollout sees the same policy (that is the
+    /// A3C/Decima trade-off buying the parallelism); exploration streams
+    /// are seeded per-(round, episode) via [`derive_seed`], so results
+    /// depend on neither worker scheduling nor prior calls replaying.
+    ///
+    /// Each worker loads a fresh engine per episode; see ROADMAP "Open
+    /// items" for the planned worker-pinned engine cache (with the real
+    /// PJRT backend, executable compilation is per-engine).
+    pub fn train_episodes_parallel(
+        &mut self,
+        harness: &Harness,
+        artifacts_dir: &Path,
+        episodes: &[(ClusterConfig, Vec<JobSpec>)],
+    ) -> anyhow::Result<Vec<EpisodeStats>> {
+        let base_cfg = self.sched.cfg.clone();
+        let pol = self.sched.pol.theta.clone();
+        let val = self.sched.val.theta.clone();
+        let (epoch_error, max_slots) = (self.opts.epoch_error, self.opts.max_slots);
+        let round = self.par_rounds;
+        let rollouts = harness.map(episodes, |i, item| -> anyhow::Result<Rollout> {
+            let (ccfg, specs) = item;
+            let engine = Engine::load(artifacts_dir)?;
+            let cfg = Dl2Config {
+                seed: derive_seed(base_cfg.seed, derive_seed(0xE715_0DE0 ^ round, i as u64)),
+                ..base_cfg.clone()
+            };
+            let mut sched = Dl2Scheduler::new(engine, cfg);
+            sched.pol.set_theta(&pol);
+            sched.val.set_theta(&val);
+            Ok(collect_rollout(
+                &mut sched,
+                ccfg,
+                None,
+                specs,
+                epoch_error,
+                max_slots,
+            ))
+        });
+        // Validate every rollout before applying any update or advancing
+        // the round counter, so a failed round can be retried with the
+        // same exploration streams and cannot leave the trainer
+        // half-updated.
+        let rollouts: Vec<Rollout> = rollouts.into_iter().collect::<anyhow::Result<_>>()?;
+        self.par_rounds += 1;
+        Ok(rollouts
+            .into_iter()
+            .map(|r| self.apply_rollout(r))
+            .collect())
     }
 
     fn make_batch(&mut self, newest: &[SampleG]) -> Option<Batch> {

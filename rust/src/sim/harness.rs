@@ -1,0 +1,212 @@
+//! Work-stealing episode pool over `std::thread::scope`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::scheduler::{EpisodeResult, Scheduler};
+use crate::util::stats::{self, Aggregate};
+
+use super::scenario::ScenarioSpec;
+
+/// Aggregated outcome of one (scheduler × scenario) episode.  Plain data
+/// only — results may cross thread boundaries, schedulers never do.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub scenario: String,
+    pub scheduler: String,
+    pub avg_jct_slots: f64,
+    /// Distribution of per-job completion times (mean/p50/p95/max).
+    pub jct: Aggregate,
+    pub makespan_slots: usize,
+    pub mean_gpu_util: f64,
+    pub jct_per_job: Vec<f64>,
+}
+
+impl ScenarioResult {
+    pub fn from_episode(spec: &ScenarioSpec, scheduler: &str, ep: &EpisodeResult) -> Self {
+        ScenarioResult {
+            scenario: spec.name.clone(),
+            scheduler: scheduler.to_string(),
+            avg_jct_slots: ep.avg_jct_slots,
+            jct: Aggregate::of(&ep.jct_per_job),
+            makespan_slots: ep.makespan_slots,
+            mean_gpu_util: stats::mean(&ep.gpu_util),
+            jct_per_job: ep.jct_per_job.clone(),
+        }
+    }
+}
+
+/// Mean of `avg_jct_slots` across results (the usual bench summary).
+pub fn mean_avg_jct(results: &[ScenarioResult]) -> f64 {
+    stats::mean(&results.iter().map(|r| r.avg_jct_slots).collect::<Vec<_>>())
+}
+
+/// Fixed-size scoped worker pool.  Work items are claimed from an atomic
+/// cursor and every result lands in its item's pre-allocated slot, so the
+/// output order — and, because items share no mutable state, the output
+/// *values* — are independent of the thread count.
+#[derive(Debug, Clone, Copy)]
+pub struct Harness {
+    threads: usize,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Harness::from_env()
+    }
+}
+
+impl Harness {
+    pub fn new(threads: usize) -> Harness {
+        Harness {
+            threads: threads.max(1),
+        }
+    }
+
+    /// `DL2_THREADS` if set, else the machine's available parallelism.
+    pub fn from_env() -> Harness {
+        let threads = std::env::var("DL2_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        Harness::new(threads)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Deterministic parallel map: `f(index, &items[index])` on the pool,
+    /// results in input order.  With `threads == 1` this is a plain serial
+    /// loop; any other thread count produces the identical vector as long
+    /// as `f` depends only on its arguments.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i, &items[i]);
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker left a slot empty"))
+            .collect()
+    }
+
+    /// Run every scenario once under a scheduler built per-episode by
+    /// `mk_sched` (invoked on the worker thread, so factories may build
+    /// thread-confined state such as a PJRT engine).
+    pub fn run<F>(&self, scenarios: &[ScenarioSpec], mk_sched: F) -> Vec<ScenarioResult>
+    where
+        F: Fn(&ScenarioSpec) -> Box<dyn Scheduler> + Sync,
+    {
+        self.map(scenarios, |_, spec| {
+            let mut sched = mk_sched(spec);
+            let ep = spec.episode(sched.as_mut());
+            ScenarioResult::from_episode(spec, sched.name(), &ep)
+        })
+    }
+
+    /// The full (scheduler × scenario) batch for named baseline
+    /// schedulers, flattened into one work list so the pool stays busy
+    /// across both axes.  Results are grouped by scheduler in `names`
+    /// order, scenarios in matrix order within each group.
+    pub fn run_named(&self, names: &[&str], scenarios: &[ScenarioSpec]) -> Vec<ScenarioResult> {
+        let work: Vec<(String, &ScenarioSpec)> = names
+            .iter()
+            .flat_map(|n| scenarios.iter().map(move |s| (n.to_string(), s)))
+            .collect();
+        self.map(&work, |_, (name, spec)| {
+            let mut sched = crate::pipeline::baseline_by_name(name)
+                .unwrap_or_else(|| panic!("unknown scheduler {name:?}"));
+            let ep = spec.episode(sched.as_mut());
+            ScenarioResult::from_episode(spec, sched.name(), &ep)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::sim::ScenarioMatrix;
+    use crate::trace::{ArrivalPattern, TraceConfig};
+
+    #[test]
+    fn map_preserves_order_and_matches_serial() {
+        let items: Vec<u64> = (0..50).collect();
+        let f = |i: usize, x: &u64| (i as u64) * 1000 + x * x;
+        let serial = Harness::new(1).map(&items, f);
+        let parallel = Harness::new(8).map(&items, f);
+        assert_eq!(serial, parallel);
+        assert_eq!(serial[3], 3 * 1000 + 9);
+    }
+
+    #[test]
+    fn map_handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(Harness::new(4).map(&empty, |_, x| *x).is_empty());
+        assert_eq!(Harness::new(4).map(&[7u32], |_, x| *x + 1), vec![8]);
+    }
+
+    fn tiny_matrix() -> ScenarioMatrix {
+        ScenarioMatrix::new(
+            ClusterConfig {
+                num_servers: 6,
+                ..Default::default()
+            },
+            TraceConfig {
+                num_jobs: 5,
+                ..Default::default()
+            },
+        )
+        .with_patterns(&[ArrivalPattern::Diurnal, ArrivalPattern::Steady])
+        .with_replicas(2)
+    }
+
+    #[test]
+    fn run_is_thread_count_invariant() {
+        let scenarios = tiny_matrix().expand();
+        assert_eq!(scenarios.len(), 4);
+        let mk = |_: &ScenarioSpec| -> Box<dyn Scheduler> { Box::new(crate::scheduler::Drf) };
+        let serial = Harness::new(1).run(&scenarios, mk);
+        let parallel = Harness::new(4).run(&scenarios, mk);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.avg_jct_slots, b.avg_jct_slots, "{}", a.scenario);
+            assert_eq!(a.jct_per_job, b.jct_per_job, "{}", a.scenario);
+            assert_eq!(a.makespan_slots, b.makespan_slots, "{}", a.scenario);
+        }
+    }
+
+    #[test]
+    fn run_named_covers_the_product() {
+        let scenarios = tiny_matrix().expand();
+        let results = Harness::new(4).run_named(&["drf", "fifo"], &scenarios);
+        assert_eq!(results.len(), 2 * scenarios.len());
+        assert!(results[..scenarios.len()].iter().all(|r| r.scheduler == "drf"));
+        assert!(results[scenarios.len()..].iter().all(|r| r.scheduler == "fifo"));
+        assert!(mean_avg_jct(&results) > 0.0);
+    }
+}

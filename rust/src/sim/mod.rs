@@ -1,0 +1,41 @@
+//! Scenario-matrix + parallel evaluation harness.
+//!
+//! DL²'s headline numbers come from running many simulated episodes over
+//! diverse workloads (Decima trains on 16 parallel workers; Pollux
+//! evaluates across heterogeneous cluster/arrival regimes).  This module
+//! is the substrate for both:
+//!
+//! * [`ScenarioSpec`] — one fully-specified experiment point: cluster
+//!   size/noise, arrival pattern, job-type mix, epoch-estimation error,
+//!   and seed.
+//! * [`ScenarioMatrix`] — a builder that expands axis lists into the
+//!   cross-product of scenarios.
+//! * [`Harness`] — fans (scheduler × scenario) episodes across
+//!   `std::thread::scope` workers and returns aggregated
+//!   [`ScenarioResult`]s.
+//!
+//! # Seed derivation
+//!
+//! Every scenario's cluster/trace seeds are derived with
+//! [`derive_seed`] — a SplitMix64 finalizer over the base seed and the
+//! scenario's own axis values (cluster size, pattern, error, type limit,
+//! replica index).  Seeds therefore depend only on *what the scenario
+//! is*, never on its position in the matrix or on which worker thread
+//! runs it: adding an axis value leaves every other scenario's stream
+//! untouched.
+//!
+//! # Serial ≡ parallel equivalence
+//!
+//! Episodes share no mutable state: each worker builds its own scheduler
+//! (via the caller's factory), its own [`Cluster`](crate::cluster::Cluster)
+//! and its own trace, all seeded purely from the [`ScenarioSpec`].  The
+//! harness hands out work by scenario index and writes each result into
+//! that scenario's dedicated slot, so the returned vector is in matrix
+//! order and **bitwise identical for any thread count** — asserted by
+//! `tests/scheduler_integration.rs::harness_parallel_matches_serial`.
+
+mod harness;
+mod scenario;
+
+pub use harness::{mean_avg_jct, Harness, ScenarioResult};
+pub use scenario::{derive_seed, replica_specs, ScenarioMatrix, ScenarioSpec};

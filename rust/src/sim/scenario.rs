@@ -1,0 +1,309 @@
+//! Scenario descriptions and the axis cross-product builder.
+
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::scheduler::{run_episode, EpisodeResult, Scheduler};
+use crate::trace::{generate, ArrivalPattern, TraceConfig};
+
+/// Mix `base` with a stream tag into an independent 64-bit seed
+/// (SplitMix64 finalizer).  Used everywhere a scenario, episode or worker
+/// needs its own deterministic RNG stream: the output depends only on the
+/// inputs, never on evaluation order or thread placement.
+pub fn derive_seed(base: u64, stream: u64) -> u64 {
+    let mut z = base ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One fully-specified experiment point of the matrix.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Stable human-readable identifier, e.g. `srv12_bursty_err10_types8_r0`.
+    pub name: String,
+    pub cluster: ClusterConfig,
+    pub trace: TraceConfig,
+    /// Fig-14 epoch-estimation error injected into the environment.
+    pub epoch_error: f64,
+    /// Runaway guard per episode.
+    pub max_slots: usize,
+}
+
+impl ScenarioSpec {
+    /// A single-scenario spec straight from configs (no matrix needed).
+    pub fn new(name: &str, cluster: ClusterConfig, trace: TraceConfig) -> ScenarioSpec {
+        ScenarioSpec {
+            name: name.to_string(),
+            cluster,
+            trace,
+            epoch_error: 0.0,
+            max_slots: 5_000,
+        }
+    }
+
+    /// Run one episode of this scenario under `sched`.  Everything —
+    /// trace, cluster RNG, job streams — is derived from the spec alone,
+    /// so repeated calls are bitwise identical.
+    pub fn episode(&self, sched: &mut dyn Scheduler) -> EpisodeResult {
+        let specs = generate(&self.trace);
+        run_episode(
+            Cluster::new(self.cluster.clone()),
+            &specs,
+            sched,
+            self.epoch_error,
+            self.max_slots,
+        )
+    }
+}
+
+/// `runs` seed-only replicas of one scenario: identical trace, cluster
+/// seeds `base + seed_offset + r` — the benches' classic
+/// mean-over-env-seeds pattern (`pipeline::baseline_jct`'s seeding)
+/// expressed as scenario specs, shared so replica seeding lives in one
+/// place.
+pub fn replica_specs(
+    prefix: &str,
+    cluster: &ClusterConfig,
+    trace: &TraceConfig,
+    seed_offset: u64,
+    runs: u64,
+    max_slots: usize,
+) -> Vec<ScenarioSpec> {
+    (0..runs)
+        .map(|r| {
+            let mut spec = ScenarioSpec::new(
+                &format!("{prefix}_r{r}"),
+                ClusterConfig {
+                    seed: cluster.seed.wrapping_add(seed_offset + r),
+                    ..cluster.clone()
+                },
+                trace.clone(),
+            );
+            spec.max_slots = max_slots;
+            spec
+        })
+        .collect()
+}
+
+/// Axis lists whose cross-product is the scenario set.  Every `with_*`
+/// call replaces one axis; unspecified axes stay at the base config's
+/// single value, so `ScenarioMatrix::new(c, t).expand()` is exactly one
+/// scenario equivalent to the classic serial setup.
+#[derive(Debug, Clone)]
+pub struct ScenarioMatrix {
+    base_cluster: ClusterConfig,
+    base_trace: TraceConfig,
+    cluster_sizes: Vec<usize>,
+    patterns: Vec<ArrivalPattern>,
+    epoch_errors: Vec<f64>,
+    type_limits: Vec<Option<usize>>,
+    /// Replica indices: same axes, independent derived seeds.
+    replicas: Vec<u64>,
+    max_slots: usize,
+}
+
+impl ScenarioMatrix {
+    pub fn new(base_cluster: ClusterConfig, base_trace: TraceConfig) -> ScenarioMatrix {
+        ScenarioMatrix {
+            cluster_sizes: vec![base_cluster.num_servers],
+            patterns: vec![base_trace.pattern],
+            epoch_errors: vec![0.0],
+            type_limits: vec![base_trace.type_limit],
+            replicas: vec![0],
+            max_slots: 5_000,
+            base_cluster,
+            base_trace,
+        }
+    }
+
+    pub fn with_cluster_sizes(mut self, sizes: &[usize]) -> Self {
+        assert!(!sizes.is_empty());
+        self.cluster_sizes = sizes.to_vec();
+        self
+    }
+
+    pub fn with_patterns(mut self, patterns: &[ArrivalPattern]) -> Self {
+        assert!(!patterns.is_empty());
+        self.patterns = patterns.to_vec();
+        self
+    }
+
+    pub fn with_epoch_errors(mut self, errors: &[f64]) -> Self {
+        assert!(!errors.is_empty());
+        self.epoch_errors = errors.to_vec();
+        self
+    }
+
+    pub fn with_type_limits(mut self, limits: &[Option<usize>]) -> Self {
+        assert!(!limits.is_empty());
+        self.type_limits = limits.to_vec();
+        self
+    }
+
+    /// `n` independent replicas (seed-only variation) of every axis point.
+    pub fn with_replicas(mut self, n: usize) -> Self {
+        assert!(n >= 1);
+        self.replicas = (0..n as u64).collect();
+        self
+    }
+
+    pub fn with_max_slots(mut self, max_slots: usize) -> Self {
+        self.max_slots = max_slots;
+        self
+    }
+
+    /// Number of scenarios `expand` will produce.
+    pub fn len(&self) -> usize {
+        self.cluster_sizes.len()
+            * self.patterns.len()
+            * self.epoch_errors.len()
+            * self.type_limits.len()
+            * self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cross-product expansion in a fixed axis order (sizes ▸ patterns ▸
+    /// errors ▸ type limits ▸ replicas).  Seeds are derived from the axis
+    /// values themselves — see the module doc.
+    pub fn expand(&self) -> Vec<ScenarioSpec> {
+        let mut out = Vec::with_capacity(self.len());
+        for &servers in &self.cluster_sizes {
+            for &pattern in &self.patterns {
+                for &err in &self.epoch_errors {
+                    for &limit in &self.type_limits {
+                        for &replica in &self.replicas {
+                            // Fold every axis value into the seed stream.
+                            let tag = derive_seed(
+                                derive_seed(
+                                    derive_seed(servers as u64, pattern as u64),
+                                    err.to_bits(),
+                                ),
+                                derive_seed(
+                                    limit.map(|l| l as u64 + 1).unwrap_or(0),
+                                    replica,
+                                ),
+                            );
+                            let cluster = ClusterConfig {
+                                num_servers: servers,
+                                seed: derive_seed(self.base_cluster.seed, tag),
+                                ..self.base_cluster.clone()
+                            };
+                            let trace = TraceConfig {
+                                pattern,
+                                type_limit: limit,
+                                seed: derive_seed(self.base_trace.seed, tag ^ 0x7ace),
+                                ..self.base_trace.clone()
+                            };
+                            let name = format!(
+                                "srv{servers}_{}_err{:02}_types{}_r{replica}",
+                                pattern.name(),
+                                (err * 100.0).round() as i64,
+                                limit.unwrap_or(crate::cluster::NUM_TYPES),
+                            );
+                            out.push(ScenarioSpec {
+                                name,
+                                cluster,
+                                trace,
+                                epoch_error: err,
+                                max_slots: self.max_slots,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derive_seed_is_stable_and_spreads() {
+        assert_eq!(derive_seed(1, 2), derive_seed(1, 2));
+        let mut seen = std::collections::BTreeSet::new();
+        for base in 0..8u64 {
+            for stream in 0..8u64 {
+                seen.insert(derive_seed(base, stream));
+            }
+        }
+        assert_eq!(seen.len(), 64, "derived seeds must not collide trivially");
+    }
+
+    #[test]
+    fn default_matrix_is_single_scenario() {
+        let m = ScenarioMatrix::new(ClusterConfig::default(), TraceConfig::default());
+        assert_eq!(m.len(), 1);
+        let s = m.expand();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].cluster.num_servers, ClusterConfig::default().num_servers);
+    }
+
+    #[test]
+    fn expansion_is_full_cross_product_with_unique_names() {
+        let m = ScenarioMatrix::new(ClusterConfig::default(), TraceConfig::default())
+            .with_cluster_sizes(&[8, 16])
+            .with_patterns(&ArrivalPattern::ALL)
+            .with_epoch_errors(&[0.0, 0.1])
+            .with_replicas(2);
+        assert_eq!(m.len(), 2 * 4 * 2 * 2);
+        let specs = m.expand();
+        assert_eq!(specs.len(), m.len());
+        let names: std::collections::BTreeSet<&str> =
+            specs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names.len(), specs.len(), "scenario names must be unique");
+        // Seeds differ across scenarios (independent streams).
+        let seeds: std::collections::BTreeSet<u64> =
+            specs.iter().map(|s| s.trace.seed).collect();
+        assert_eq!(seeds.len(), specs.len());
+    }
+
+    #[test]
+    fn adding_an_axis_value_keeps_existing_seeds() {
+        let base = ScenarioMatrix::new(ClusterConfig::default(), TraceConfig::default())
+            .with_cluster_sizes(&[8]);
+        let wider = base.clone().with_cluster_sizes(&[8, 16]);
+        let a = base.expand();
+        let b = wider.expand();
+        assert_eq!(a[0].trace.seed, b[0].trace.seed);
+        assert_eq!(a[0].cluster.seed, b[0].cluster.seed);
+    }
+
+    #[test]
+    fn replica_specs_offset_seeds_only() {
+        let c = ClusterConfig {
+            seed: 10,
+            ..Default::default()
+        };
+        let t = TraceConfig::default();
+        let specs = replica_specs("val", &c, &t, 777, 3, 2000);
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].cluster.seed, 787);
+        assert_eq!(specs[2].cluster.seed, 789);
+        assert_eq!(specs[1].name, "val_r1");
+        assert!(specs.iter().all(|s| s.trace.seed == t.seed && s.max_slots == 2000));
+    }
+
+    #[test]
+    fn episode_is_reproducible() {
+        let spec = ScenarioSpec::new(
+            "tiny",
+            ClusterConfig {
+                num_servers: 6,
+                ..Default::default()
+            },
+            TraceConfig {
+                num_jobs: 6,
+                ..Default::default()
+            },
+        );
+        let a = spec.episode(&mut crate::scheduler::Drf);
+        let b = spec.episode(&mut crate::scheduler::Drf);
+        assert_eq!(a.avg_jct_slots, b.avg_jct_slots);
+        assert_eq!(a.jct_per_job, b.jct_per_job);
+    }
+}

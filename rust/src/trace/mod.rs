@@ -19,6 +19,72 @@ pub struct JobSpec {
     pub total_epochs: f64,
 }
 
+/// Shape of the arrival-rate process over time.  `Diurnal` is the paper's
+/// Fig-8 production pattern; the others widen the scenario matrix the
+/// evaluation harness (`sim/`) sweeps over, Pollux-style.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ArrivalPattern {
+    /// Day/night sinusoid modulated by a weekly wave with a weekend dip
+    /// (Fig 8(a)) — the historical default.
+    #[default]
+    Diurnal,
+    /// Constant arrival rate (no temporal structure).
+    Steady,
+    /// Flash crowd: long quiet stretches punctuated by short, intense
+    /// bursts — heavier inter-arrival tails than `Steady` at the same
+    /// peak rate.
+    Bursty,
+    /// Off-peak / maintenance-window shape: the diurnal sinusoid in
+    /// anti-phase (load concentrates where `Diurnal` is quiet).
+    Trough,
+}
+
+impl ArrivalPattern {
+    /// Every pattern, for matrix expansion and tests.
+    pub const ALL: [ArrivalPattern; 4] = [
+        ArrivalPattern::Diurnal,
+        ArrivalPattern::Steady,
+        ArrivalPattern::Bursty,
+        ArrivalPattern::Trough,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalPattern::Diurnal => "diurnal",
+            ArrivalPattern::Steady => "steady",
+            ArrivalPattern::Bursty => "bursty",
+            ArrivalPattern::Trough => "trough",
+        }
+    }
+
+    /// Relative arrival intensity at `slot` (deterministic; multiplied by
+    /// `TraceConfig::peak_rate` to get the slot's Poisson mean).
+    pub fn intensity(&self, slot: usize) -> f64 {
+        let day = 72.0; // slots of 20 min
+        let t = slot as f64;
+        let phase = 2.0 * std::f64::consts::PI * t / day - 1.2;
+        match self {
+            ArrivalPattern::Diurnal => {
+                let week = 7.0 * day;
+                let diurnal = 0.55 + 0.45 * phase.sin();
+                let day_of_week = (t % week) / day; // 0..7
+                let weekly = if day_of_week >= 5.0 { 0.55 } else { 1.0 };
+                (diurnal * weekly).max(0.05)
+            }
+            ArrivalPattern::Steady => 1.0,
+            ArrivalPattern::Bursty => {
+                // 3-slot flash crowds every half day over a quiet floor.
+                if slot % 36 < 3 {
+                    4.0
+                } else {
+                    0.25
+                }
+            }
+            ArrivalPattern::Trough => (0.55 - 0.45 * phase.sin()).max(0.05),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
     /// Number of jobs to generate.
@@ -33,6 +99,8 @@ pub struct TraceConfig {
     /// Restrict generation to the first `k` job types (Fig 15 studies
     /// unseen types); None = all 8.
     pub type_limit: Option<usize>,
+    /// Temporal shape of the arrival process.
+    pub pattern: ArrivalPattern,
     pub seed: u64,
 }
 
@@ -44,6 +112,7 @@ impl Default for TraceConfig {
             mean_duration_slots: 7.0,
             duration_sigma: 0.6,
             type_limit: None,
+            pattern: ArrivalPattern::Diurnal,
             seed: 1,
         }
     }
@@ -51,15 +120,10 @@ impl Default for TraceConfig {
 
 /// Relative arrival intensity at `slot` — a diurnal sinusoid (period = 72
 /// slots of 20 min = 1 day) modulated by a weekly wave with a weekend dip,
-/// shaped like Fig 8(a).
+/// shaped like Fig 8(a).  Kept as the historical free function; see
+/// [`ArrivalPattern::intensity`] for the pattern-generic form.
 pub fn arrival_intensity(slot: usize) -> f64 {
-    let day = 72.0;
-    let week = 7.0 * day;
-    let t = slot as f64;
-    let diurnal = 0.55 + 0.45 * (2.0 * std::f64::consts::PI * t / day - 1.2).sin();
-    let day_of_week = (t % week) / day; // 0..7
-    let weekly = if day_of_week >= 5.0 { 0.55 } else { 1.0 };
-    (diurnal * weekly).max(0.05)
+    ArrivalPattern::Diurnal.intensity(slot)
 }
 
 /// Generate `cfg.num_jobs` job specs following the trace pattern.
@@ -70,7 +134,7 @@ pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
     let mut specs = Vec::with_capacity(cfg.num_jobs);
     let mut slot = 0usize;
     while specs.len() < cfg.num_jobs {
-        let lambda = cfg.peak_rate * arrival_intensity(slot);
+        let lambda = cfg.peak_rate * cfg.pattern.intensity(slot);
         let n = rng.poisson(lambda);
         for _ in 0..n {
             if specs.len() >= cfg.num_jobs {
@@ -187,5 +251,108 @@ mod tests {
             assert_eq!(x.arrival_slot, y.arrival_slot);
             assert_eq!(x.type_idx, y.type_idx);
         }
+    }
+
+    #[test]
+    fn steady_intensity_is_flat() {
+        let v0 = ArrivalPattern::Steady.intensity(0);
+        for slot in 0..500 {
+            assert_eq!(ArrivalPattern::Steady.intensity(slot), v0);
+        }
+        assert!(v0 > 0.0);
+    }
+
+    #[test]
+    fn bursty_intensity_alternates_extremes() {
+        let vals: Vec<f64> = (0..500).map(|s| ArrivalPattern::Bursty.intensity(s)).collect();
+        let max = vals.iter().cloned().fold(0.0f64, f64::max);
+        let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            max / min > 10.0,
+            "bursty should swing hard between quiet floor and flash crowds: {min}..{max}"
+        );
+    }
+
+    #[test]
+    fn trough_is_antiphase_to_diurnal() {
+        // Where diurnal peaks (weekday), trough should be quiet, and vice
+        // versa — compare the first weekday day slot-by-slot.
+        let mut anti = 0usize;
+        for slot in 0..72 {
+            let d = ArrivalPattern::Diurnal.intensity(slot);
+            let t = ArrivalPattern::Trough.intensity(slot);
+            if (d > 0.55) != (t > 0.55) {
+                anti += 1;
+            }
+        }
+        assert!(anti > 48, "trough not anti-phase: only {anti}/72 slots opposed");
+    }
+
+    /// Inter-arrival gaps of a generated trace, in slots.
+    fn gaps(specs: &[JobSpec]) -> Vec<f64> {
+        specs
+            .windows(2)
+            .map(|w| (w[1].arrival_slot - w[0].arrival_slot) as f64)
+            .collect()
+    }
+
+    #[test]
+    fn bursty_has_heavier_interarrival_tails_than_steady() {
+        // Sum the largest inter-arrival gap over several seeds: flash
+        // crowds + quiet floors must produce longer droughts than a flat
+        // rate at the same peak_rate.
+        let max_gap_sum = |pattern: ArrivalPattern| -> f64 {
+            (0..3u64)
+                .map(|seed| {
+                    let specs = generate(&TraceConfig {
+                        num_jobs: 300,
+                        pattern,
+                        seed: 40 + seed,
+                        ..Default::default()
+                    });
+                    gaps(&specs).into_iter().fold(0.0f64, f64::max)
+                })
+                .sum()
+        };
+        let bursty = max_gap_sum(ArrivalPattern::Bursty);
+        let steady = max_gap_sum(ArrivalPattern::Steady);
+        assert!(
+            bursty > steady,
+            "bursty max-gap sum {bursty} should exceed steady {steady}"
+        );
+    }
+
+    #[test]
+    fn all_patterns_deterministic_per_seed_and_distinct() {
+        for pattern in ArrivalPattern::ALL {
+            let cfg = TraceConfig {
+                num_jobs: 80,
+                pattern,
+                seed: 77,
+                ..Default::default()
+            };
+            let a = generate(&cfg);
+            let b = generate(&cfg);
+            assert_eq!(a.len(), b.len(), "{}", pattern.name());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival_slot, y.arrival_slot, "{}", pattern.name());
+                assert_eq!(x.type_idx, y.type_idx, "{}", pattern.name());
+                assert_eq!(x.total_epochs, y.total_epochs, "{}", pattern.name());
+            }
+        }
+        // Different patterns at the same seed should give different
+        // arrival-time profiles (same RNG stream, different intensities).
+        let arrivals = |pattern| {
+            generate(&TraceConfig {
+                num_jobs: 80,
+                pattern,
+                seed: 77,
+                ..Default::default()
+            })
+            .iter()
+            .map(|s| s.arrival_slot)
+            .collect::<Vec<_>>()
+        };
+        assert_ne!(arrivals(ArrivalPattern::Steady), arrivals(ArrivalPattern::Bursty));
     }
 }

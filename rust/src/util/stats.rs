@@ -46,6 +46,36 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// 95th percentile — the tail-latency summary the evaluation harness
+/// reports next to the mean.
+pub fn p95(xs: &[f64]) -> f64 {
+    percentile(xs, 95.0)
+}
+
+/// One-shot distribution summary (mean / p50 / p95 / max) used to
+/// aggregate per-job completion times across scenario-matrix episodes.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Aggregate {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Aggregate {
+    pub fn of(xs: &[f64]) -> Aggregate {
+        if xs.is_empty() {
+            return Aggregate::default();
+        }
+        Aggregate {
+            mean: mean(xs),
+            p50: percentile(xs, 50.0),
+            p95: percentile(xs, 95.0),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
 /// Simple online mean/min/max/count accumulator.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
@@ -243,6 +273,18 @@ mod tests {
             e.update(10.0);
         }
         assert!((e.get() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn p95_and_aggregate() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((p95(&xs) - 95.05).abs() < 1e-9);
+        let a = Aggregate::of(&xs);
+        assert!((a.mean - 50.5).abs() < 1e-12);
+        assert!((a.p50 - 50.5).abs() < 1e-9);
+        assert_eq!(a.max, 100.0);
+        assert_eq!(Aggregate::of(&[]), Aggregate::default());
+        assert_eq!(Aggregate::of(&[-3.0, -1.0]).max, -1.0);
     }
 
     #[test]

@@ -9,7 +9,8 @@ use dl2::rl::{
 };
 use dl2::runtime::{default_artifacts_dir, Engine};
 use dl2::scheduler::{Dl2Config, Dl2Scheduler, Drf, Scheduler};
-use dl2::trace::{generate, TraceConfig};
+use dl2::sim::Harness;
+use dl2::trace::{generate, JobSpec, TraceConfig};
 use dl2::util::Rng;
 
 fn artifacts() -> Option<std::path::PathBuf> {
@@ -141,6 +142,45 @@ fn exploration_fires_on_poor_states() {
         cluster.advance(&placement);
     }
     assert!(sched.explored > 0, "job-aware exploration never fired");
+}
+
+#[test]
+fn parallel_rollout_collection_is_thread_count_invariant() {
+    let Some(dir) = artifacts() else { return };
+    let (ccfg, tcfg, dcfg) = small_cfg();
+    let episodes: Vec<(ClusterConfig, Vec<JobSpec>)> = (0..2u64)
+        .map(|e| {
+            (
+                ClusterConfig {
+                    seed: ccfg.seed.wrapping_add(e),
+                    ..ccfg.clone()
+                },
+                generate(&TraceConfig {
+                    num_jobs: 6,
+                    seed: 60 + e,
+                    ..tcfg.clone()
+                }),
+            )
+        })
+        .collect();
+    let run = |threads: usize| -> (Vec<f32>, Vec<f64>) {
+        let engine = Engine::load(&dir).unwrap();
+        let sched = Dl2Scheduler::new(engine, dcfg.clone());
+        let mut trainer = OnlineTrainer::new(sched, RlOptions::default());
+        let stats = trainer
+            .train_episodes_parallel(&Harness::new(threads), &dir, &episodes)
+            .unwrap();
+        assert_eq!(stats.len(), 2);
+        assert!(stats.iter().all(|s| s.updates > 0), "no updates applied");
+        (
+            trainer.sched.pol.theta.clone(),
+            stats.iter().map(|s| s.avg_jct).collect(),
+        )
+    };
+    let (theta1, jct1) = run(1);
+    let (theta4, jct4) = run(4);
+    assert_eq!(jct1, jct4, "rollout outcomes depend on thread count");
+    assert_eq!(theta1, theta4, "parameter updates depend on thread count");
 }
 
 #[test]

@@ -5,7 +5,8 @@
 use dl2::cluster::{Cluster, ClusterConfig};
 use dl2::prop_check;
 use dl2::scheduler::{run_episode, Drf, Fifo, Optimus, Scheduler, Srtf, Tetris};
-use dl2::trace::{generate, TraceConfig};
+use dl2::sim::{Harness, ScenarioMatrix, ScenarioSpec};
+use dl2::trace::{generate, ArrivalPattern, TraceConfig};
 
 fn all_baselines() -> Vec<Box<dyn Scheduler>> {
     vec![
@@ -200,6 +201,146 @@ fn prop_jobs_always_finish_with_nonzero_allocations() {
         let res = run_episode(cluster, &specs, &mut Drf, 0.0, 5_000);
         assert!(res.makespan_slots < 5_000, "workload never finished");
     });
+}
+
+/// The tentpole guarantee: a ≥16-scenario matrix evaluated on 1 thread
+/// and on 8 threads produces bitwise-identical per-scenario results.
+#[test]
+fn harness_parallel_matches_serial() {
+    let matrix = ScenarioMatrix::new(
+        ClusterConfig {
+            num_servers: 8,
+            seed: 5,
+            ..Default::default()
+        },
+        TraceConfig {
+            num_jobs: 8,
+            seed: 11,
+            ..Default::default()
+        },
+    )
+    .with_cluster_sizes(&[6, 10])
+    .with_patterns(&ArrivalPattern::ALL)
+    .with_replicas(2);
+    let scenarios = matrix.expand();
+    assert!(scenarios.len() >= 16, "matrix too small: {}", scenarios.len());
+
+    let mk = |_: &ScenarioSpec| -> Box<dyn Scheduler> { Box::new(Drf) };
+    let serial = Harness::new(1).run(&scenarios, mk);
+    let parallel = Harness::new(8).run(&scenarios, mk);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.scenario, b.scenario);
+        assert!(
+            a.avg_jct_slots == b.avg_jct_slots,
+            "{}: {} vs {}",
+            a.scenario,
+            a.avg_jct_slots,
+            b.avg_jct_slots
+        );
+        assert_eq!(a.jct_per_job, b.jct_per_job, "{}", a.scenario);
+        assert_eq!(a.makespan_slots, b.makespan_slots, "{}", a.scenario);
+        assert!(a.mean_gpu_util == b.mean_gpu_util, "{}", a.scenario);
+    }
+    // The matrix must actually exercise distinct scenarios, not 16 copies
+    // of one episode.
+    let distinct: std::collections::BTreeSet<u64> =
+        serial.iter().map(|r| r.avg_jct_slots.to_bits()).collect();
+    assert!(distinct.len() > 4, "scenarios suspiciously identical");
+}
+
+/// Capacity / per-job-cap invariants hold for every scheduler under every
+/// arrival pattern, over randomized workloads and cluster sizes.
+#[test]
+fn prop_no_oversubscription_across_patterns() {
+    for pattern in ArrivalPattern::ALL {
+        prop_check!(3, |rng: &mut dl2::util::Rng| {
+            let specs = generate(&TraceConfig {
+                num_jobs: rng.range(4, 10),
+                pattern,
+                seed: rng.next_u64(),
+                ..Default::default()
+            });
+            for mut sched in all_baselines() {
+                let mut cluster = Cluster::new(ClusterConfig {
+                    num_servers: rng.range(3, 9),
+                    seed: rng.next_u64(),
+                    ..Default::default()
+                });
+                let cap = cluster.cfg.max_tasks_per_job;
+                let total_cap = cluster
+                    .cfg
+                    .server_cap
+                    .scale(cluster.cfg.num_servers as f64);
+                let mut next = 0usize;
+                for _ in 0..80 {
+                    while next < specs.len() && specs[next].arrival_slot <= cluster.slot {
+                        cluster.submit(specs[next].type_idx, specs[next].total_epochs, 0.0);
+                        next += 1;
+                    }
+                    let active = cluster.active_jobs();
+                    let alloc = sched.schedule(&cluster, &active);
+                    for &(id, w, p) in &alloc {
+                        assert!(
+                            w <= cap && p <= cap,
+                            "{} ({}): job {id} asked (w={w}, p={p}) over cap {cap}",
+                            sched.name(),
+                            pattern.name()
+                        );
+                    }
+                    let placement = cluster.apply_allocation(&alloc);
+                    let used = placement.total_used();
+                    assert!(
+                        dl2::cluster::Res::ZERO.fits(&used, &total_cap),
+                        "{} ({}): over-allocated {used} > {total_cap}",
+                        sched.name(),
+                        pattern.name()
+                    );
+                    for job in &cluster.jobs {
+                        assert!(
+                            job.workers <= cap && job.ps <= cap,
+                            "{} ({}): job {} holds (w={}, p={}) over cap {cap}",
+                            sched.name(),
+                            pattern.name(),
+                            job.id,
+                            job.workers,
+                            job.ps
+                        );
+                    }
+                    cluster.advance(&placement);
+                    if next >= specs.len() && cluster.all_finished() {
+                        break;
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// Every baseline completes a bursty flash-crowd workload (the new
+/// pattern stresses head-of-line behaviour the diurnal trace never hits).
+#[test]
+fn every_baseline_survives_flash_crowds() {
+    let specs = generate(&TraceConfig {
+        num_jobs: 12,
+        pattern: ArrivalPattern::Bursty,
+        seed: 23,
+        ..Default::default()
+    });
+    for mut sched in all_baselines() {
+        let cluster = Cluster::new(ClusterConfig {
+            num_servers: 10,
+            seed: 4,
+            ..Default::default()
+        });
+        let res = run_episode(cluster, &specs, sched.as_mut(), 0.0, 5_000);
+        assert!(
+            res.makespan_slots < 5_000,
+            "{}: runaway on bursty arrivals",
+            sched.name()
+        );
+        assert_eq!(res.jct_per_job.len(), 12, "{}", sched.name());
+    }
 }
 
 #[test]

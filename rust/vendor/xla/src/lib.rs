@@ -1,0 +1,264 @@
+//! API-compatible **stub** of the `xla` crate (PJRT bindings) used by the
+//! DL² runtime layer.
+//!
+//! The offline build environment does not ship the native XLA extension
+//! library that the real `xla` crate links against, so this path crate
+//! provides the exact API surface `dl2::runtime::engine` consumes —
+//! clients, executables, buffers, literals, HLO protos — with every
+//! backend entry point returning a descriptive [`Error`].
+//!
+//! Behaviour contract:
+//! * Pure host-side value types ([`Literal`] construction, `reshape`)
+//!   work, so input marshalling code is exercised by tests.
+//! * Anything that would need a real PJRT backend ([`PjRtClient::cpu`],
+//!   `compile`, `execute`) fails with [`Error::BackendUnavailable`].
+//!   Since `PjRtClient::cpu()` is the first call on every path (via
+//!   `Engine::load`, itself gated on `artifacts/meta.txt`), no execution
+//!   path can observe a half-working backend.
+//!
+//! To build against the real implementation, replace the `xla` entry in
+//! `rust/Cargo.toml` with the upstream crate (and its `XLA_EXTENSION_DIR`
+//! native library); no `dl2` source changes are required.
+
+use std::path::Path;
+
+/// Error type mirroring the real crate's (callers only `Debug`-format it).
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The stub backend cannot compile or execute computations.
+    BackendUnavailable(&'static str),
+    /// Malformed host-side usage (wrong shapes, missing files, ...).
+    Usage(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::BackendUnavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the native XLA/PJRT backend, which is not \
+                 available in this build (see rust/vendor/xla/src/lib.rs)"
+            ),
+            Error::Usage(msg) => write!(f, "xla stub: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] or device buffer can hold.
+pub trait ArrayElement: Copy + 'static {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+impl ArrayElement for u8 {}
+
+/// Host-side tensor value: flat little-endian storage + dims.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    bytes: Vec<u8>,
+    dims: Vec<i64>,
+    elem_size: usize,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: ArrayElement>(xs: &[T]) -> Literal {
+        let elem_size = std::mem::size_of::<T>();
+        let mut bytes = Vec::with_capacity(xs.len() * elem_size);
+        for x in xs {
+            let p = x as *const T as *const u8;
+            // Safe: T is Copy + 'static plain-old-data per ArrayElement.
+            bytes.extend_from_slice(unsafe { std::slice::from_raw_parts(p, elem_size) });
+        }
+        Literal {
+            bytes,
+            dims: vec![xs.len() as i64],
+            elem_size,
+        }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: ArrayElement>(x: T) -> Literal {
+        let mut l = Literal::vec1(&[x]);
+        l.dims.clear();
+        l
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = (self.bytes.len() / self.elem_size.max(1)) as i64;
+        if want != have {
+            return Err(Error::Usage(format!(
+                "reshape to {dims:?} ({want} elems) from {have} elems"
+            )));
+        }
+        Ok(Literal {
+            bytes: self.bytes.clone(),
+            dims: dims.to_vec(),
+            elem_size: self.elem_size,
+        })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        let elem_size = std::mem::size_of::<T>();
+        if elem_size != self.elem_size || self.bytes.len() % elem_size != 0 {
+            return Err(Error::Usage(format!(
+                "to_vec: element size {elem_size} vs literal {}",
+                self.elem_size
+            )));
+        }
+        let n = self.bytes.len() / elem_size;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let p = self.bytes[i * elem_size..].as_ptr() as *const T;
+            out.push(unsafe { std::ptr::read_unaligned(p) });
+        }
+        Ok(out)
+    }
+
+    /// Destructure a tuple literal.  Stub literals are never tuples (they
+    /// only exist as execution *outputs*, which the stub cannot produce).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::BackendUnavailable("Literal::to_tuple on an executed result"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto {
+    _path: std::path::PathBuf,
+}
+
+impl HloModuleProto {
+    /// The stub cannot parse HLO text; it reports the missing backend so
+    /// `Engine` surfaces a clear "run with the real xla crate" error.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let _ = path.as_ref();
+        Err(Error::BackendUnavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation handle built from a proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer (never constructible through the stub backend).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::BackendUnavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Values accepted as execution arguments.
+pub trait BufferArgument {}
+impl BufferArgument for Literal {}
+impl BufferArgument for &PjRtBuffer {}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with owned-literal arguments → per-device output buffers.
+    pub fn execute<L: BufferArgument>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::BackendUnavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    /// Execute with device-resident buffer arguments.
+    pub fn execute_b<L: BufferArgument>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::BackendUnavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// The real crate spins up the CPU PJRT plugin here; the stub fails
+    /// fast with an actionable message.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::BackendUnavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::BackendUnavailable("PjRtClient::compile"))
+    }
+
+    /// Upload a host slice as a device buffer.
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::BackendUnavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let xs = vec![1.0f32, -2.5, 3.25];
+        let l = Literal::vec1(&xs);
+        assert_eq!(l.dims(), &[3]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), xs);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let xs = vec![1i32, -7, 40_000];
+        assert_eq!(Literal::vec1(&xs).to_vec::<i32>().unwrap(), xs);
+    }
+
+    #[test]
+    fn scalar_is_rank0() {
+        let l = Literal::scalar(4.5f32);
+        assert!(l.dims().is_empty());
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![4.5]);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[0f32; 6]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn wrong_element_type_rejected() {
+        let l = Literal::vec1(&[1.0f64, 2.0]);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn backend_paths_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+    }
+}
