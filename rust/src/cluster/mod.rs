@@ -1,19 +1,42 @@
-//! The DL-cluster substrate: servers, jobs, training-speed model,
-//! interference, and the slot-by-slot environment the schedulers act on.
+//! The DL-cluster substrate: topology, servers, jobs, training-speed
+//! model, interference, and the slot-by-slot environment the schedulers
+//! act on.
 //!
 //! This is the simulated stand-in for the paper's 13-server testbed and
 //! 500-server trace-driven simulator (DESIGN.md §Substitutions): the
 //! scheduler-visible interface — job states in, (w, p) allocations out,
 //! per-slot epoch progress and rewards back — matches §3/§4.1 exactly.
+//!
+//! # Cluster model
+//!
+//! The machines are described by a [`Topology`] ([`topology`]): server
+//! classes (per-class capacity [`Res`] and speed multiplier) grouped
+//! into racks with a cross-rack progress penalty.  Each slot, the
+//! schedulers' allocations are realized by a [`Placement`]
+//! ([`server`]): per-task, locality-aware, least-loaded placement that
+//! checks every server against **its own class cap** and records each
+//! job's rack spread.  [`Cluster::advance`] then scales every job's
+//! analytic [`speed`] model by the placement's
+//! [`speed::topology_factor`] — the slowest hosting class's multiplier
+//! discounted per extra rack spanned — before interference noise.
+//!
+//! `ClusterConfig` keeps the legacy `(num_servers, server_cap)` pair as
+//! the default: with `topology: None` everything resolves to
+//! [`Topology::homogeneous`], which is bit-for-bit the pre-topology
+//! flat-pool behaviour (single class, one rack, factor 1.0).
 
 pub mod job;
 pub mod server;
 pub mod speed;
+pub mod topology;
 pub mod types;
 
 pub use job::Job;
 pub use server::Placement;
+pub use topology::{ServerClass, Topology};
 pub use types::{catalog, JobType, Res, SpeedParams, NUM_TYPES};
+
+use std::sync::Arc;
 
 use crate::util::Rng;
 
@@ -22,6 +45,11 @@ use crate::util::Rng;
 pub struct ClusterConfig {
     pub num_servers: usize,
     pub server_cap: Res,
+    /// Explicit heterogeneous topology.  `None` (the default) resolves to
+    /// `Topology::homogeneous(num_servers, server_cap)` — the legacy flat
+    /// pool, bit-for-bit.  When set, it overrides `num_servers` /
+    /// `server_cap` as the source of truth for the machine set.
+    pub topology: Option<Topology>,
     /// Upper bound on workers (and PSs) per job — keeps the action space
     /// meaningful; the paper observes diminishing returns past ~12 (Fig 1).
     pub max_tasks_per_job: usize,
@@ -40,6 +68,7 @@ impl Default for ClusterConfig {
         ClusterConfig {
             num_servers: 20,
             server_cap: Res::new(2.0, 8.0, 48.0),
+            topology: None,
             max_tasks_per_job: 12,
             interference: 0.18,
             speed_variation: 0.0,
@@ -56,11 +85,32 @@ impl ClusterConfig {
             ..Default::default()
         }
     }
+
+    /// Config backed by an explicit topology; `num_servers` / `server_cap`
+    /// are kept consistent with it (count and reference cap).
+    pub fn with_topology(topology: Topology) -> Self {
+        ClusterConfig {
+            num_servers: topology.num_servers(),
+            server_cap: topology.reference_cap(),
+            topology: Some(topology),
+            ..Default::default()
+        }
+    }
+
+    /// The topology this config resolves to: the explicit one if set,
+    /// else the homogeneous `(num_servers, server_cap)` pool.
+    pub fn effective_topology(&self) -> Topology {
+        self.topology
+            .clone()
+            .unwrap_or_else(|| Topology::homogeneous(self.num_servers, self.server_cap))
+    }
 }
 
 /// The live environment: jobs + per-slot dynamics.
 pub struct Cluster {
     pub cfg: ClusterConfig,
+    /// Resolved machine topology (shared with every per-slot `Placement`).
+    pub topology: Arc<Topology>,
     pub catalog: Vec<JobType>,
     pub jobs: Vec<Job>,
     pub slot: usize,
@@ -90,8 +140,10 @@ impl Cluster {
     /// speed model rather than the live cluster's behaviour (§2.3).
     pub fn with_catalog(cfg: ClusterConfig, catalog: Vec<JobType>) -> Cluster {
         let rng = Rng::new(cfg.seed ^ 0xC1_05_7E_12);
+        let topology = Arc::new(cfg.effective_topology());
         Cluster {
             cfg,
+            topology,
             catalog,
             jobs: Vec::new(),
             slot: 0,
@@ -132,9 +184,9 @@ impl Cluster {
         ids
     }
 
-    /// Fresh per-slot placement view.
+    /// Fresh per-slot placement view over the cluster's topology.
     pub fn placement(&self) -> Placement {
-        Placement::new(self.cfg.num_servers, self.cfg.server_cap)
+        Placement::with_topology(self.topology.clone())
     }
 
     /// Apply an allocation decided by a scheduler for this slot: job ->
@@ -158,10 +210,11 @@ impl Cluster {
             let mut got_w = 0;
             let mut got_p = 0;
             // Alternate worker/PS placement so partial fits stay balanced.
+            // Job-tagged placement records the rack spread `advance` uses.
             while got_w < want_w || got_p < want_p {
                 let mut progress = false;
                 if got_w < want_w {
-                    if placement.try_place(&jt.worker_res).is_some() {
+                    if placement.try_place_for(id, &jt.worker_res).is_some() {
                         got_w += 1;
                         progress = true;
                     } else {
@@ -169,7 +222,7 @@ impl Cluster {
                     }
                 }
                 if got_p < want_p {
-                    if placement.try_place(&jt.ps_res).is_some() {
+                    if placement.try_place_for(id, &jt.ps_res).is_some() {
                         got_p += 1;
                         progress = true;
                     }
@@ -186,10 +239,14 @@ impl Cluster {
     }
 
     /// Advance one slot: every active job progresses by
-    /// `epochs_per_slot(w, p) × speed_factor × interference-noise`.
+    /// `epochs_per_slot(w, p) × topology_factor × speed_factor ×
+    /// interference-noise`, where the topology factor is the slowest
+    /// hosting class's speed multiplier discounted per extra rack the
+    /// job's placement spans (1.0 on a homogeneous single-rack pool).
     pub fn advance(&mut self, placement: &Placement) -> SlotOutcome {
         let slot = self.slot;
         let interference = self.cfg.interference;
+        let cross_rack_penalty = self.topology.cross_rack_penalty();
         let mut reward = 0.0;
         let mut finished = Vec::new();
         let catalog = self.catalog.clone();
@@ -199,6 +256,13 @@ impl Cluster {
             }
             let jt = &catalog[job.type_idx];
             let mut eps = speed::epochs_per_slot(&jt.speed, job.workers, job.ps);
+            // Exactly 1.0 on homogeneous single-rack pools, where the
+            // multiply is a bitwise no-op (the drop-in guarantee).
+            eps *= speed::topology_factor(
+                placement.speed_multiplier(job.id),
+                placement.racks_spanned(job.id),
+                cross_rack_penalty,
+            );
             eps *= job.speed_factor;
             if interference > 0.0 && eps > 0.0 {
                 // Log-normal, mean-one multiplicative noise.
@@ -237,17 +301,16 @@ impl Cluster {
     }
 
     /// Dominant-resource share of one (w, p) allocation for a job type —
-    /// the state's r_i and DRF's ranking key.
+    /// the state's r_i and DRF's ranking key.  Shares are taken against
+    /// the topology's aggregate capacity, so heterogeneous pools rank
+    /// by what the machines actually provide.
     pub fn dominant_share_for(&self, type_idx: usize, w: usize, p: usize) -> f64 {
         let jt = &self.catalog[type_idx];
         let total = jt
             .worker_res
             .scale(w as f64)
             .add(&jt.ps_res.scale(p as f64));
-        let cap = self
-            .cfg
-            .server_cap
-            .scale(self.cfg.num_servers as f64);
+        let cap = self.topology.total_cap();
         total.dominant_share(&cap)
     }
 }
@@ -342,6 +405,102 @@ mod tests {
         let id = c.submit(0, 10.0, 0.2);
         let t = c.jobs[id].true_epochs;
         assert!((t - 12.0).abs() < 1e-9 || (t - 8.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn explicit_homogeneous_topology_is_a_drop_in() {
+        let base = ClusterConfig {
+            num_servers: 4,
+            interference: 0.0,
+            ..Default::default()
+        };
+        let explicit = ClusterConfig {
+            topology: Some(Topology::homogeneous(4, base.server_cap)),
+            ..base.clone()
+        };
+        let run = |cfg: ClusterConfig| {
+            let mut c = Cluster::new(cfg);
+            let a = c.submit(0, 20.0, 0.0);
+            let b = c.submit(1, 15.0, 0.0);
+            let mut trace = Vec::new();
+            for _ in 0..30 {
+                let p = c.apply_allocation(&[(a, 2, 2), (b, 3, 1)]);
+                let out = c.advance(&p);
+                trace.push((out.reward, out.gpu_util));
+                if c.all_finished() {
+                    break;
+                }
+            }
+            (trace, c.avg_jct())
+        };
+        assert_eq!(run(base), run(explicit));
+    }
+
+    #[test]
+    fn fast_class_speeds_up_progress() {
+        let cap = Res::new(2.0, 8.0, 48.0);
+        let mk = |speed: f64| {
+            let mut c = Cluster::new(ClusterConfig {
+                interference: 0.0,
+                ..ClusterConfig::with_topology(Topology::new(vec![ServerClass::new(
+                    "gen", 4, cap, speed,
+                )]))
+            });
+            let id = c.submit(0, 50.0, 0.0);
+            let p = c.apply_allocation(&[(id, 2, 2)]);
+            c.advance(&p);
+            c.jobs[id].epochs_done
+        };
+        let base = mk(1.0);
+        let fast = mk(2.0);
+        assert!((fast - 2.0 * base).abs() < 1e-9, "fast={fast} base={base}");
+    }
+
+    #[test]
+    fn rack_spread_penalizes_progress() {
+        let cap = Res::new(2.0, 8.0, 48.0);
+        let mk = |servers_per_rack: usize, penalty: f64| {
+            let topo =
+                Topology::homogeneous(4, cap).with_racks(servers_per_rack, penalty);
+            let mut c = Cluster::new(ClusterConfig {
+                interference: 0.0,
+                ..ClusterConfig::with_topology(topo)
+            });
+            let id = c.submit(0, 50.0, 0.0);
+            // 4 workers + 4 PSs of resnet50 need all 4 servers' GPUs/CPUs,
+            // so racks of 1 force a 4-rack spread.
+            let p = c.apply_allocation(&[(id, 4, 4)]);
+            let spanned = p.racks_spanned(id);
+            c.advance(&p);
+            (spanned, c.jobs[id].epochs_done)
+        };
+        let (one_rack_span, clean) = mk(4, 0.3);
+        let (spread_span, penalized) = mk(1, 0.3);
+        assert_eq!(one_rack_span, 1);
+        assert!(spread_span > 1, "spread placement should cross racks");
+        assert!(
+            penalized < clean,
+            "penalized={penalized} should trail clean={clean}"
+        );
+        let expect = clean * (1.0 - 0.3f64).powi(spread_span as i32 - 1);
+        assert!((penalized - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dominant_share_uses_topology_capacity() {
+        // Doubling capacity via a second class halves the share.
+        let cap = Res::new(2.0, 8.0, 48.0);
+        let small = Cluster::new(ClusterConfig {
+            num_servers: 4,
+            ..Default::default()
+        });
+        let big = Cluster::new(ClusterConfig::with_topology(Topology::new(vec![
+            ServerClass::new("a", 4, cap, 1.0),
+            ServerClass::new("b", 4, cap, 1.0),
+        ])));
+        let s = small.dominant_share_for(0, 2, 2);
+        let b = big.dominant_share_for(0, 2, 2);
+        assert!((s - 2.0 * b).abs() < 1e-12);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Server pool + load-balanced task placement.
+//! Topology-backed, locality-aware, load-balanced task placement.
 //!
 //! The paper uses the cluster's default placement policy (load balancing,
 //! §3.2/§6.1): every slot, each job's workers/PSs are placed on the
@@ -6,66 +6,175 @@
 //! (one worker / one PS at a time), so `Placement` supports online
 //! placement with capacity rejection — an allocation only "counts" if it
 //! actually fits somewhere in the cluster.
+//!
+//! On a heterogeneous [`Topology`] the policy is extended in two ways
+//! that both degenerate to the legacy behaviour on a homogeneous pool:
+//!
+//! * every server is checked against **its own class capacity**, and
+//! * placement is **locality-aware**: when the topology charges a
+//!   cross-rack penalty, racks the job already occupies are preferred
+//!   among the servers that fit, then ties break by least dominant-share
+//!   load, then lowest server index — exactly the old ordering when
+//!   there is a single rack or no penalty.
+//!
+//! Per-server dominant-share loads are kept **incrementally** (updated
+//! only for the server that just received a task) instead of being
+//! recomputed for every candidate of every scan: at 500 servers this is
+//! the episode hot loop (see `benches/perf_placement.rs`).  The cache is
+//! exact — `dominant_share` is a pure function of the server's usage —
+//! so results are identical to the recompute-per-candidate scan.
 
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use super::topology::Topology;
 use super::types::Res;
 
-/// Per-slot placement state over a homogeneous server pool.
+/// Per-slot placement state over a [`Topology`].
 #[derive(Debug, Clone)]
 pub struct Placement {
-    cap: Res,
+    topo: Arc<Topology>,
     used: Vec<Res>,
+    /// Cached `used[i].dominant_share(cap(i))` — kept in sync by
+    /// `place_on`.
+    loads: Vec<f64>,
+    /// Racks hosting each job's tasks so far this slot (the job's
+    /// rack-spread record).
+    job_racks: BTreeMap<usize, BTreeSet<usize>>,
+    /// Slowest class speed multiplier among each job's hosting servers
+    /// (synchronous training is gated by its slowest task).
+    job_mult: BTreeMap<usize, f64>,
 }
 
 impl Placement {
+    /// Legacy constructor: a homogeneous pool of `num_servers` × `cap`.
     pub fn new(num_servers: usize, cap: Res) -> Placement {
+        Placement::with_topology(Arc::new(Topology::homogeneous(num_servers, cap)))
+    }
+
+    pub fn with_topology(topo: Arc<Topology>) -> Placement {
+        let n = topo.num_servers();
         Placement {
-            cap,
-            used: vec![Res::ZERO; num_servers],
+            topo,
+            used: vec![Res::ZERO; n],
+            loads: vec![0.0; n],
+            job_racks: BTreeMap::new(),
+            job_mult: BTreeMap::new(),
         }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
     }
 
     pub fn num_servers(&self) -> usize {
         self.used.len()
     }
 
+    /// Reference per-server capacity (the first class's cap; the uniform
+    /// cap on homogeneous pools).  Normalization anchor for packing
+    /// scores — per-server checks use each server's own class cap.
     pub fn server_cap(&self) -> Res {
-        self.cap
+        self.topo.reference_cap()
     }
 
     /// Total capacity of the pool.
     pub fn total_cap(&self) -> Res {
-        self.cap.scale(self.used.len() as f64)
+        self.topo.total_cap()
     }
 
     /// Aggregate used resources.
     pub fn total_used(&self) -> Res {
-        self.used
-            .iter()
-            .fold(Res::ZERO, |acc, u| acc.add(u))
+        self.used.iter().fold(Res::ZERO, |acc, u| acc.add(u))
     }
 
-    /// Load-balanced placement: place `r` on the least-loaded server (by
-    /// dominant share) that fits.  Returns the server index or None.
-    pub fn try_place(&mut self, r: &Res) -> Option<usize> {
-        let mut best: Option<(usize, f64)> = None;
-        for (i, used) in self.used.iter().enumerate() {
-            if used.fits(r, &self.cap) {
-                let load = used.dominant_share(&self.cap);
-                match best {
-                    None => best = Some((i, load)),
-                    Some((_, b)) if load < b => best = Some((i, load)),
-                    _ => {}
-                }
+    /// Commit `r` to server `idx`, updating the load cache and (when the
+    /// task belongs to a job) the job's rack/class records.
+    fn place_on(&mut self, idx: usize, r: &Res, job: Option<usize>) {
+        self.used[idx] = self.used[idx].add(r);
+        let cap = self.topo.cap(idx);
+        self.loads[idx] = self.used[idx].dominant_share(&cap);
+        if let Some(id) = job {
+            self.job_racks
+                .entry(id)
+                .or_default()
+                .insert(self.topo.rack(idx));
+            let speed = self.topo.speed(idx);
+            let m = self.job_mult.entry(id).or_insert(speed);
+            if speed < *m {
+                *m = speed;
             }
         }
-        let (idx, _) = best?;
-        self.used[idx] = self.used[idx].add(r);
+    }
+
+    /// Least-loaded fitting server, preferring racks `job` already
+    /// occupies — but only when the topology actually charges a
+    /// cross-rack penalty (zero-penalty racks are pure bookkeeping and
+    /// must not distort load balancing).  Ordering: (new-rack-for-job,
+    /// cached load, index), strictly-less wins, so the first index takes
+    /// ties — identical to the legacy scan whenever there is a single
+    /// rack, no penalty, or no job context.
+    fn best_server(&self, r: &Res, job: Option<usize>) -> Option<usize> {
+        let racks = match job {
+            Some(id) if self.topo.cross_rack_penalty() > 0.0 => self.job_racks.get(&id),
+            _ => None,
+        };
+        let mut best: Option<(bool, f64, usize)> = None;
+        for (i, used) in self.used.iter().enumerate() {
+            let cap = self.topo.cap(i);
+            if !used.fits(r, &cap) {
+                continue;
+            }
+            let crosses = match racks {
+                Some(rs) => !rs.is_empty() && !rs.contains(&self.topo.rack(i)),
+                None => false,
+            };
+            let load = self.loads[i];
+            let better = match best {
+                None => true,
+                Some((bc, bl, _)) => (crosses, load) < (bc, bl),
+            };
+            if better {
+                best = Some((crosses, load, i));
+            }
+        }
+        best.map(|(_, _, i)| i)
+    }
+
+    /// Job-agnostic placement (no rack record, no locality preference):
+    /// place `r` on the least-loaded server that fits.  Returns the
+    /// server index or None.
+    pub fn try_place(&mut self, r: &Res) -> Option<usize> {
+        let idx = self.best_server(r, None)?;
+        self.place_on(idx, r, None);
+        Some(idx)
+    }
+
+    /// Place one of `job`'s tasks: locality-aware least-loaded, recording
+    /// the job's rack spread and slowest hosting class.
+    pub fn try_place_for(&mut self, job: usize, r: &Res) -> Option<usize> {
+        let idx = self.best_server(r, Some(job))?;
+        self.place_on(idx, r, Some(job));
         Some(idx)
     }
 
     /// Whether `r` could be placed without committing it.
     pub fn can_place(&self, r: &Res) -> bool {
-        self.used.iter().any(|u| u.fits(r, &self.cap))
+        self.used
+            .iter()
+            .enumerate()
+            .any(|(i, u)| u.fits(r, &self.topo.cap(i)))
+    }
+
+    /// Number of racks `job`'s tasks span (0 if it has none placed).
+    pub fn racks_spanned(&self, job: usize) -> usize {
+        self.job_racks.get(&job).map_or(0, |rs| rs.len())
+    }
+
+    /// Slowest class speed multiplier among `job`'s hosting servers
+    /// (1.0 if the job has no tasks placed).
+    pub fn speed_multiplier(&self, job: usize) -> f64 {
+        self.job_mult.get(&job).copied().unwrap_or(1.0)
     }
 
     /// Utilization of each resource dimension across the pool (0..1).
@@ -75,16 +184,40 @@ impl Placement {
 
     /// Per-server dominant loads (diagnostics / load-balance checks).
     pub fn loads(&self) -> Vec<f64> {
-        self.used
-            .iter()
-            .map(|u| u.dominant_share(&self.cap))
-            .collect()
+        self.loads.clone()
     }
+}
+
+/// The pre-refactor placement scan, frozen verbatim: shared cap,
+/// recompute-every-candidate least-loaded, first index wins ties.
+///
+/// This is the **single canonical reference implementation** for the
+/// homogeneous drop-in guarantee — the equivalence property test here,
+/// the fixed-episode mirror in `tests/topology_integration.rs` and the
+/// `perf_placement` micro-benchmark all call it.  Do not "improve" it:
+/// its value is being exactly what `Placement` used to do.
+#[doc(hidden)]
+pub fn legacy_try_place(used: &mut [Res], cap: &Res, r: &Res) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, u) in used.iter().enumerate() {
+        if u.fits(r, cap) {
+            let load = u.dominant_share(cap);
+            match best {
+                None => best = Some((i, load)),
+                Some((_, b)) if load < b => best = Some((i, load)),
+                _ => {}
+            }
+        }
+    }
+    let (idx, _) = best?;
+    used[idx] = used[idx].add(r);
+    Some(idx)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::topology::ServerClass;
     use crate::prop_check;
 
     fn pool() -> Placement {
@@ -128,7 +261,8 @@ mod tests {
     #[test]
     fn prop_never_exceeds_capacity() {
         prop_check!(25, |rng: &mut crate::util::Rng| {
-            let mut p = Placement::new(rng.range(1, 6), Res::new(2.0, 8.0, 48.0));
+            let cap = Res::new(2.0, 8.0, 48.0);
+            let mut p = Placement::new(rng.range(1, 6), cap);
             for _ in 0..rng.range(1, 100) {
                 let r = Res::new(
                     rng.below(3) as f64,
@@ -138,11 +272,149 @@ mod tests {
                 let _ = p.try_place(&r);
                 for (i, used) in p.used.iter().enumerate() {
                     assert!(
-                        Res::ZERO.fits(used, &p.cap),
+                        Res::ZERO.fits(used, &cap),
                         "server {i} over capacity: {used}"
                     );
                 }
             }
         });
+    }
+
+    /// Homogeneous topology reproduces the pre-refactor scan's server
+    /// choices exactly, placement by placement.
+    #[test]
+    fn prop_homogeneous_matches_naive_reference() {
+        prop_check!(20, |rng: &mut crate::util::Rng| {
+            let cap = Res::new(2.0, 8.0, 48.0);
+            let n = rng.range(1, 12);
+            let mut p = Placement::new(n, cap);
+            let mut naive_used = vec![Res::ZERO; n];
+            for step in 0..rng.range(10, 120) {
+                let r = Res::new(
+                    rng.below(3) as f64,
+                    rng.range(1, 5) as f64,
+                    rng.range(1, 13) as f64,
+                );
+                // Half job-tagged, half anonymous: both paths must match
+                // the naive scan on a single-rack homogeneous pool.
+                let got = if rng.bool(0.5) {
+                    p.try_place_for(rng.below(4), &r)
+                } else {
+                    p.try_place(&r)
+                };
+                let want = legacy_try_place(&mut naive_used, &cap, &r);
+                assert_eq!(got, want, "step {step} diverged");
+            }
+            assert_eq!(p.used, naive_used);
+        });
+    }
+
+    /// Incremental load cache always equals recomputation from scratch.
+    #[test]
+    fn prop_load_cache_is_exact() {
+        prop_check!(15, |rng: &mut crate::util::Rng| {
+            let topo = Topology::new(vec![
+                ServerClass::new("big", rng.range(1, 4), Res::new(4.0, 16.0, 96.0), 1.5),
+                ServerClass::new("small", rng.range(1, 4), Res::new(2.0, 8.0, 48.0), 1.0),
+            ]);
+            let mut p = Placement::with_topology(Arc::new(topo));
+            for _ in 0..rng.range(1, 60) {
+                let r = Res::new(
+                    rng.below(3) as f64,
+                    rng.range(1, 5) as f64,
+                    rng.range(1, 13) as f64,
+                );
+                let _ = p.try_place_for(rng.below(6), &r);
+            }
+            let loads = p.loads();
+            for (i, used) in p.used.iter().enumerate() {
+                let cap = p.topology().cap(i);
+                assert_eq!(loads[i], used.dominant_share(&cap), "server {i}");
+            }
+        });
+    }
+
+    /// No server of any class ever exceeds its own cap under random mixed
+    /// placements on a heterogeneous, racked topology.
+    #[test]
+    fn prop_mixed_classes_respect_own_caps() {
+        prop_check!(20, |rng: &mut crate::util::Rng| {
+            let topo = Topology::new(vec![
+                ServerClass::new("fast", rng.range(1, 5), Res::new(8.0, 32.0, 128.0), 2.0),
+                ServerClass::new("mid", rng.range(1, 5), Res::new(4.0, 16.0, 64.0), 1.3),
+                ServerClass::new("slow", rng.range(1, 5), Res::new(2.0, 8.0, 48.0), 1.0),
+            ])
+            .with_racks(rng.range(1, 5), 0.25);
+            let mut p = Placement::with_topology(Arc::new(topo));
+            for _ in 0..rng.range(20, 200) {
+                let r = Res::new(
+                    rng.below(4) as f64,
+                    rng.range(1, 9) as f64,
+                    rng.range(1, 25) as f64,
+                );
+                let job = rng.below(8);
+                if let Some(idx) = p.try_place_for(job, &r) {
+                    // The chosen server must be in the job's rack record.
+                    let rack = p.topology().rack(idx);
+                    assert!(p.job_racks[&job].contains(&rack));
+                }
+                for (i, used) in p.used.iter().enumerate() {
+                    let cap = p.topology().cap(i);
+                    assert!(
+                        Res::ZERO.fits(used, &cap),
+                        "server {i} over its class cap: {used} > {cap}"
+                    );
+                }
+            }
+            // Rack-spread records never name more racks than exist.
+            for (job, racks) in &p.job_racks {
+                assert!(
+                    racks.len() <= p.topology().num_racks(),
+                    "job {job} spans phantom racks"
+                );
+            }
+        });
+    }
+
+    /// Locality: a job's later tasks stay in its first rack while that
+    /// rack has room, even when other racks are emptier.
+    #[test]
+    fn locality_prefers_occupied_rack() {
+        let topo =
+            Topology::homogeneous(4, Res::new(2.0, 8.0, 48.0)).with_racks(2, 0.3);
+        let mut p = Placement::with_topology(Arc::new(topo));
+        let t = Res::new(1.0, 2.0, 4.0);
+        let first = p.try_place_for(7, &t).unwrap();
+        let first_rack = p.topology().rack(first);
+        // Three more single-GPU tasks: the second fills the sibling server
+        // in the same rack (despite equal load elsewhere), the next two
+        // exhaust the rack's GPUs in place before any task crosses.
+        for _ in 0..3 {
+            let idx = p.try_place_for(7, &t).unwrap();
+            assert_eq!(p.topology().rack(idx), first_rack);
+        }
+        assert_eq!(p.racks_spanned(7), 1);
+        // The rack is now GPU-full; the fifth task must cross.
+        let idx = p.try_place_for(7, &t).unwrap();
+        assert_ne!(p.topology().rack(idx), first_rack);
+        assert_eq!(p.racks_spanned(7), 2);
+    }
+
+    /// The job's speed multiplier is the slowest class hosting it.
+    #[test]
+    fn speed_multiplier_is_min_over_hosts() {
+        let topo = Topology::new(vec![
+            ServerClass::new("fast", 1, Res::new(2.0, 8.0, 48.0), 2.0),
+            ServerClass::new("slow", 1, Res::new(2.0, 8.0, 48.0), 1.0),
+        ]);
+        let mut p = Placement::with_topology(Arc::new(topo));
+        assert_eq!(p.speed_multiplier(3), 1.0, "no tasks yet: neutral");
+        let t = Res::new(1.0, 2.0, 4.0);
+        // Equal loads → index 0 (fast) wins the tie.
+        assert_eq!(p.try_place_for(3, &t), Some(0));
+        assert_eq!(p.speed_multiplier(3), 2.0);
+        // Next task lands on the emptier slow server → min drops to 1.0.
+        assert_eq!(p.try_place_for(3, &t), Some(1));
+        assert_eq!(p.speed_multiplier(3), 1.0);
     }
 }

@@ -50,6 +50,28 @@ pub fn epochs_per_slot(sp: &SpeedParams, w: usize, p: usize) -> f64 {
     sp.base_epochs_per_slot * relative_speed(sp, w, p)
 }
 
+/// Multiplicative factor a heterogeneous topology
+/// ([`crate::cluster::Topology`]) applies to a job's per-slot progress:
+///
+/// * `class_mult` — the slowest hosting class's speed multiplier
+///   (synchronous training is gated by its slowest task);
+/// * every rack beyond the first the job spans costs a fraction
+///   `cross_rack_penalty` of progress (gradient traffic crosses the
+///   aggregation switch), compounding as `(1 - penalty)^(racks - 1)`.
+///
+/// `1.0` exactly for the homogeneous single-rack case (multiplier 1.0,
+/// ≤ 1 rack), where multiplying by it is a bitwise no-op — that is the
+/// drop-in guarantee.
+pub fn topology_factor(class_mult: f64, racks_spanned: usize, cross_rack_penalty: f64) -> f64 {
+    debug_assert!((0.0..1.0).contains(&cross_rack_penalty));
+    let extra_racks = racks_spanned.saturating_sub(1);
+    if extra_racks == 0 || cross_rack_penalty == 0.0 {
+        class_mult
+    } else {
+        class_mult * (1.0 - cross_rack_penalty).powi(extra_racks as i32)
+    }
+}
+
 /// Best (w, p) split for a fixed task budget `total = w + p` — utility
 /// used by benches and sanity tests (exhaustive over the budget).
 pub fn best_split(sp: &SpeedParams, total: usize) -> (usize, usize) {
@@ -134,6 +156,27 @@ mod tests {
             assert_eq!(w + p, 12);
             assert!(w >= 1 && p >= 1);
         }
+    }
+
+    #[test]
+    fn topology_factor_neutral_cases() {
+        // Homogeneous single-rack: exactly 1 (the drop-in guarantee).
+        assert_eq!(topology_factor(1.0, 0, 0.0), 1.0);
+        assert_eq!(topology_factor(1.0, 1, 0.0), 1.0);
+        assert_eq!(topology_factor(1.0, 1, 0.3), 1.0, "one rack: no penalty");
+        // Class multiplier passes through untouched.
+        assert_eq!(topology_factor(2.0, 1, 0.3), 2.0);
+    }
+
+    #[test]
+    fn topology_factor_compounds_per_extra_rack() {
+        let f2 = topology_factor(1.0, 2, 0.2);
+        let f3 = topology_factor(1.0, 3, 0.2);
+        assert!((f2 - 0.8).abs() < 1e-12);
+        assert!((f3 - 0.64).abs() < 1e-12);
+        assert!(f3 < f2, "more racks, more penalty");
+        // Fast class partially offsets the spread penalty.
+        assert!((topology_factor(2.0, 2, 0.2) - 1.6).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! Cluster topology: server classes, racks, and locality penalties.
+//!
+//! Real DL clusters are not a flat pool: they mix GPU generations
+//! (per-class capacity and speed) and pay a bandwidth/latency cost when a
+//! job's workers and parameter servers span racks (Pollux; Gandiva).  A
+//! [`Topology`] describes both dimensions:
+//!
+//! * **Server classes** — groups of identical machines, each with its own
+//!   capacity vector [`Res`] and a *speed multiplier* applied to the
+//!   training progress of every job task hosted there (1.0 = the baseline
+//!   generation, 2.0 = twice the epochs per slot).
+//! * **Racks** — servers are laid out class-by-class and chunked into
+//!   racks of `servers_per_rack` machines.  A job whose tasks span `r > 1`
+//!   racks loses a fraction `1 - (1 - cross_rack_penalty)^(r-1)` of its
+//!   per-slot progress (gradient push/pull crosses the aggregation
+//!   switch).
+//!
+//! [`Topology::homogeneous`] reproduces the legacy single-pool model
+//! exactly: one class at multiplier 1.0, a single rack, zero penalty —
+//! every placement decision and progress number is bit-for-bit identical
+//! to the pre-topology code (asserted by `tests/topology_integration.rs`).
+
+use super::types::Res;
+
+/// A group of identical servers (one hardware generation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerClass {
+    /// Human-readable label ("a100", "k80", ...).
+    pub name: String,
+    /// Number of servers of this class.
+    pub count: usize,
+    /// Per-server capacity.
+    pub cap: Res,
+    /// Training-speed multiplier for tasks hosted on this class
+    /// (relative to the baseline generation; 1.0 = baseline).
+    pub speed: f64,
+}
+
+impl ServerClass {
+    pub fn new(name: &str, count: usize, cap: Res, speed: f64) -> ServerClass {
+        ServerClass {
+            name: name.to_string(),
+            count,
+            cap,
+            speed,
+        }
+    }
+}
+
+/// Immutable description of the cluster's machines and their grouping.
+///
+/// Derived per-server lookup tables (`class_of`, `rack_of`) are
+/// precomputed at construction so the placement hot loop never walks the
+/// class list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    classes: Vec<ServerClass>,
+    /// Servers per rack (class-order layout); 0 = everything in one rack.
+    servers_per_rack: usize,
+    /// Fractional progress lost per extra rack a job spans, in [0, 1).
+    cross_rack_penalty: f64,
+    /// Class index of each server (class-order layout).
+    class_of: Vec<usize>,
+    /// Rack index of each server.
+    rack_of: Vec<usize>,
+    num_racks: usize,
+}
+
+impl Topology {
+    /// Multi-class topology, single rack, no penalty.  Add racks with
+    /// [`Topology::with_racks`].
+    pub fn new(classes: Vec<ServerClass>) -> Topology {
+        Self::build(classes, 0, 0.0)
+    }
+
+    /// The legacy flat pool: `n` identical servers, one rack, zero
+    /// penalty.  Drop-in equivalent to the pre-topology `Placement`.
+    pub fn homogeneous(n: usize, cap: Res) -> Topology {
+        Self::build(vec![ServerClass::new("server", n, cap, 1.0)], 0, 0.0)
+    }
+
+    /// Re-group the servers into racks of `servers_per_rack` with the
+    /// given cross-rack penalty (fraction of per-slot progress lost per
+    /// extra rack spanned; must be in [0, 1)).
+    pub fn with_racks(self, servers_per_rack: usize, cross_rack_penalty: f64) -> Topology {
+        Self::build(self.classes, servers_per_rack, cross_rack_penalty)
+    }
+
+    fn build(classes: Vec<ServerClass>, servers_per_rack: usize, cross_rack_penalty: f64) -> Topology {
+        assert!(!classes.is_empty(), "topology needs at least one server class");
+        assert!(
+            (0.0..1.0).contains(&cross_rack_penalty),
+            "cross_rack_penalty must be in [0, 1), got {cross_rack_penalty}"
+        );
+        for c in &classes {
+            assert!(
+                c.speed > 0.0 && c.speed.is_finite(),
+                "class {:?} needs a positive finite speed multiplier, got {}",
+                c.name,
+                c.speed
+            );
+        }
+        let n: usize = classes.iter().map(|c| c.count).sum();
+        let mut class_of = Vec::with_capacity(n);
+        for (k, class) in classes.iter().enumerate() {
+            class_of.resize(class_of.len() + class.count, k);
+        }
+        let rack_of: Vec<usize> = (0..n)
+            .map(|i| if servers_per_rack == 0 { 0 } else { i / servers_per_rack })
+            .collect();
+        let num_racks = rack_of.iter().copied().max().map_or(1, |m| m + 1);
+        Topology {
+            classes,
+            servers_per_rack,
+            cross_rack_penalty,
+            class_of,
+            rack_of,
+            num_racks,
+        }
+    }
+
+    pub fn classes(&self) -> &[ServerClass] {
+        &self.classes
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.class_of.len()
+    }
+
+    pub fn num_racks(&self) -> usize {
+        self.num_racks
+    }
+
+    pub fn cross_rack_penalty(&self) -> f64 {
+        self.cross_rack_penalty
+    }
+
+    /// Capacity of server `i`.
+    pub fn cap(&self, i: usize) -> Res {
+        self.classes[self.class_of[i]].cap
+    }
+
+    /// Speed multiplier of server `i`'s class.
+    pub fn speed(&self, i: usize) -> f64 {
+        self.classes[self.class_of[i]].speed
+    }
+
+    /// Class index of server `i`.
+    pub fn class(&self, i: usize) -> usize {
+        self.class_of[i]
+    }
+
+    /// Rack index of server `i`.
+    pub fn rack(&self, i: usize) -> usize {
+        self.rack_of[i]
+    }
+
+    /// Total capacity across every server.
+    pub fn total_cap(&self) -> Res {
+        self.classes
+            .iter()
+            .fold(Res::ZERO, |acc, c| acc.add(&c.cap.scale(c.count as f64)))
+    }
+
+    /// The first class's per-server capacity — the normalization anchor
+    /// for demand-vs-server comparisons (Tetris alignment scores, legacy
+    /// `Placement::server_cap`).  Equals the uniform cap for homogeneous
+    /// topologies.
+    pub fn reference_cap(&self) -> Res {
+        self.classes[0].cap
+    }
+
+    /// True when this is a single-class, single-rack, zero-penalty pool.
+    pub fn is_homogeneous(&self) -> bool {
+        self.classes.len() == 1
+            && self.num_racks == 1
+            && self.cross_rack_penalty == 0.0
+            && self.classes[0].speed == 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_shape() {
+        let t = Topology::homogeneous(6, Res::new(2.0, 8.0, 48.0));
+        assert_eq!(t.num_servers(), 6);
+        assert_eq!(t.num_racks(), 1);
+        assert!(t.is_homogeneous());
+        assert_eq!(t.cap(5), Res::new(2.0, 8.0, 48.0));
+        assert_eq!(t.speed(0), 1.0);
+        assert_eq!(t.total_cap(), Res::new(12.0, 48.0, 288.0));
+        assert_eq!(t.reference_cap(), Res::new(2.0, 8.0, 48.0));
+    }
+
+    #[test]
+    fn two_class_layout_and_caps() {
+        let t = Topology::new(vec![
+            ServerClass::new("fast", 2, Res::new(4.0, 16.0, 96.0), 2.0),
+            ServerClass::new("slow", 3, Res::new(2.0, 8.0, 48.0), 1.0),
+        ]);
+        assert_eq!(t.num_servers(), 5);
+        assert!(!t.is_homogeneous());
+        // Class-order layout: servers 0..2 fast, 2..5 slow.
+        assert_eq!(t.class(0), 0);
+        assert_eq!(t.class(1), 0);
+        assert_eq!(t.class(2), 1);
+        assert_eq!(t.speed(0), 2.0);
+        assert_eq!(t.speed(4), 1.0);
+        assert_eq!(t.cap(0).gpu, 4.0);
+        assert_eq!(t.cap(4).gpu, 2.0);
+        let total = t.total_cap();
+        assert_eq!(total.gpu, 2.0 * 4.0 + 3.0 * 2.0);
+    }
+
+    #[test]
+    fn rack_chunking() {
+        let t = Topology::homogeneous(10, Res::new(2.0, 8.0, 48.0)).with_racks(4, 0.2);
+        assert_eq!(t.num_racks(), 3); // 4 + 4 + 2
+        assert_eq!(t.rack(0), 0);
+        assert_eq!(t.rack(3), 0);
+        assert_eq!(t.rack(4), 1);
+        assert_eq!(t.rack(9), 2);
+        assert!((t.cross_rack_penalty() - 0.2).abs() < 1e-12);
+        assert!(!t.is_homogeneous());
+    }
+
+    #[test]
+    fn homogeneous_total_cap_matches_scale() {
+        // The drop-in guarantee leans on this being *bitwise* the old
+        // `cap.scale(n)` formula.
+        let cap = Res::new(2.0, 8.0, 48.0);
+        for n in [1usize, 7, 20, 500] {
+            let t = Topology::homogeneous(n, cap);
+            let old = cap.scale(n as f64);
+            assert_eq!(t.total_cap(), old, "n={n}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_topology_panics() {
+        let _ = Topology::new(Vec::new());
+    }
+
+    #[test]
+    #[should_panic]
+    fn penalty_out_of_range_panics() {
+        let _ = Topology::homogeneous(2, Res::new(2.0, 8.0, 48.0)).with_racks(1, 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nonpositive_speed_panics() {
+        let _ = Topology::new(vec![ServerClass::new(
+            "bad",
+            2,
+            Res::new(2.0, 8.0, 48.0),
+            0.0,
+        )]);
+    }
+}

@@ -98,6 +98,13 @@ pub fn decompose_batch(
 
 /// Run episodes of `incumbent` over the given traces, collecting labeled
 /// decisions for supervised learning.
+///
+/// The episode itself rides on the shared
+/// [`run_episode_with_hook`](crate::scheduler::run_episode_with_hook)
+/// driver — the hook decomposes each slot's incumbent decision into
+/// imitation labels, so there is exactly one arrival/schedule/advance
+/// loop in the codebase (previously this function duplicated it; the
+/// equivalence is pinned by `dataset_matches_legacy_episode_loop`).
 pub fn generate_dataset(
     incumbent: &mut dyn Scheduler,
     cfg: &ClusterConfig,
@@ -108,41 +115,33 @@ pub fn generate_dataset(
 ) -> Vec<Labeled> {
     let mut dataset = Vec::new();
     for (e, specs) in traces.iter().enumerate() {
-        let mut cluster = Cluster::new(ClusterConfig {
+        let cluster = Cluster::new(ClusterConfig {
             seed: cfg.seed.wrapping_add(e as u64),
             ..cfg.clone()
         });
-        let mut next_spec = 0usize;
-        loop {
-            while next_spec < specs.len() && specs[next_spec].arrival_slot <= cluster.slot {
-                let s = &specs[next_spec];
-                cluster.submit(s.type_idx, s.total_epochs, 0.0);
-                next_spec += 1;
-            }
-            let active = cluster.active_jobs();
-            let alloc = incumbent.schedule(&cluster, &active);
-            // Label generation: decompose the incumbent's decision batch-wise.
-            let target_of = |id: usize| {
-                alloc
-                    .iter()
-                    .find(|a| a.0 == id)
-                    .map(|&(_, w, p)| (w, p))
-                    .unwrap_or((0, 0))
-            };
-            for batch in active.chunks(j) {
-                let targets: Vec<(usize, usize)> =
-                    batch.iter().map(|&id| target_of(id)).collect();
-                dataset.extend(decompose_batch(&cluster, batch, &targets, j, num_types));
-            }
-            let placement = cluster.apply_allocation(&alloc);
-            let outcome = cluster.advance(&placement);
-            incumbent.observe(&cluster, &outcome);
-            if (next_spec >= specs.len() && cluster.all_finished())
-                || cluster.slot >= max_slots
-            {
-                break;
-            }
-        }
+        crate::scheduler::run_episode_with_hook(
+            cluster,
+            specs,
+            incumbent,
+            0.0,
+            max_slots,
+            |cluster, active, alloc| {
+                // Label generation: decompose the incumbent's decision
+                // batch-wise.
+                let target_of = |id: usize| {
+                    alloc
+                        .iter()
+                        .find(|a| a.0 == id)
+                        .map(|&(_, w, p)| (w, p))
+                        .unwrap_or((0, 0))
+                };
+                for batch in active.chunks(j) {
+                    let targets: Vec<(usize, usize)> =
+                        batch.iter().map(|&id| target_of(id)).collect();
+                    dataset.extend(decompose_batch(cluster, batch, &targets, j, num_types));
+                }
+            },
+        );
     }
     dataset
 }
@@ -231,6 +230,84 @@ mod tests {
         // Default SL dataset: grow actions only (void excluded — see
         // decompose_batch doc).
         assert!(data.iter().all(|(_, l)| (0..15).contains(l)));
+    }
+
+    /// The pre-fold episode loop, verbatim — the before/after-equivalence
+    /// reference for folding `generate_dataset` onto `run_episode_with_hook`.
+    fn legacy_generate_dataset(
+        incumbent: &mut dyn crate::scheduler::Scheduler,
+        cfg: &ClusterConfig,
+        traces: &[Vec<crate::trace::JobSpec>],
+        j: usize,
+        num_types: usize,
+        max_slots: usize,
+    ) -> Vec<Labeled> {
+        let mut dataset = Vec::new();
+        for (e, specs) in traces.iter().enumerate() {
+            let mut cluster = Cluster::new(ClusterConfig {
+                seed: cfg.seed.wrapping_add(e as u64),
+                ..cfg.clone()
+            });
+            let mut next_spec = 0usize;
+            loop {
+                while next_spec < specs.len()
+                    && specs[next_spec].arrival_slot <= cluster.slot
+                {
+                    let s = &specs[next_spec];
+                    cluster.submit(s.type_idx, s.total_epochs, 0.0);
+                    next_spec += 1;
+                }
+                let active = cluster.active_jobs();
+                let alloc = incumbent.schedule(&cluster, &active);
+                let target_of = |id: usize| {
+                    alloc
+                        .iter()
+                        .find(|a| a.0 == id)
+                        .map(|&(_, w, p)| (w, p))
+                        .unwrap_or((0, 0))
+                };
+                for batch in active.chunks(j) {
+                    let targets: Vec<(usize, usize)> =
+                        batch.iter().map(|&id| target_of(id)).collect();
+                    dataset.extend(decompose_batch(&cluster, batch, &targets, j, num_types));
+                }
+                let placement = cluster.apply_allocation(&alloc);
+                let outcome = cluster.advance(&placement);
+                incumbent.observe(&cluster, &outcome);
+                if (next_spec >= specs.len() && cluster.all_finished())
+                    || cluster.slot >= max_slots
+                {
+                    break;
+                }
+            }
+        }
+        dataset
+    }
+
+    #[test]
+    fn dataset_matches_legacy_episode_loop() {
+        let traces: Vec<_> = (0..2u64)
+            .map(|s| {
+                crate::trace::generate(&crate::trace::TraceConfig {
+                    num_jobs: 8,
+                    seed: 30 + s,
+                    ..Default::default()
+                })
+            })
+            .collect();
+        let cfg = ClusterConfig {
+            num_servers: 8,
+            seed: 17,
+            ..Default::default()
+        };
+        let new = generate_dataset(&mut Drf, &cfg, &traces, 5, 8, 500);
+        let old = legacy_generate_dataset(&mut Drf, &cfg, &traces, 5, 8, 500);
+        assert!(!new.is_empty());
+        assert_eq!(new.len(), old.len());
+        for (i, ((sa, la), (sb, lb))) in new.iter().zip(&old).enumerate() {
+            assert_eq!(la, lb, "label {i} diverged");
+            assert_eq!(sa, sb, "state {i} diverged");
+        }
     }
 
     #[test]

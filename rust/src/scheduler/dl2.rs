@@ -229,13 +229,14 @@ impl Dl2Scheduler {
                     if job_slot >= batch.len() {
                         break; // masked anyway; safety
                     }
-                    let jt = &cluster.catalog[cluster.jobs[batch[job_slot]].type_idx];
+                    let id = batch[job_slot];
+                    let jt = &cluster.catalog[cluster.jobs[id].type_idx];
                     let mut ok = true;
                     if dw > 0 {
-                        ok &= placement.try_place(&jt.worker_res).is_some();
+                        ok &= placement.try_place_for(id, &jt.worker_res).is_some();
                     }
                     if ok && dp > 0 {
-                        ok &= placement.try_place(&jt.ps_res).is_some();
+                        ok &= placement.try_place_for(id, &jt.ps_res).is_some();
                     }
                     if ok {
                         walloc[job_slot] += dw;

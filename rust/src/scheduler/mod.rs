@@ -43,6 +43,9 @@ pub trait Scheduler {
 /// Shadow-placement helper shared by the heuristics: try to grow job
 /// `id`'s allocation by (`dw` workers, `dp` PSs); commits to `placement`
 /// and `alloc` on success.  Returns false if it did not fully fit.
+/// Placement is job-tagged, so on heterogeneous topologies the shadow
+/// sees per-class caps and prefers the racks the job already occupies —
+/// on a homogeneous pool this is exactly the legacy least-loaded fill.
 pub fn try_grow(
     cluster: &Cluster,
     placement: &mut Placement,
@@ -61,12 +64,12 @@ pub fn try_grow(
     // clone for multi-task grows.
     let mut shadow = placement.clone();
     for _ in 0..dw {
-        if shadow.try_place(&jt.worker_res).is_none() {
+        if shadow.try_place_for(id, &jt.worker_res).is_none() {
             return false;
         }
     }
     for _ in 0..dp {
-        if shadow.try_place(&jt.ps_res).is_none() {
+        if shadow.try_place_for(id, &jt.ps_res).is_none() {
             return false;
         }
     }
@@ -90,12 +93,31 @@ pub struct EpisodeResult {
 /// Drive `specs` through a fresh `cluster` under `sched` until all jobs
 /// finish (or `max_slots` elapses as a runaway guard).
 pub fn run_episode(
-    mut cluster: Cluster,
+    cluster: Cluster,
     specs: &[JobSpec],
     sched: &mut dyn Scheduler,
     epoch_error: f64,
     max_slots: usize,
 ) -> EpisodeResult {
+    run_episode_with_hook(cluster, specs, sched, epoch_error, max_slots, |_, _, _| {})
+}
+
+/// [`run_episode`] with a per-slot observation hook, called after the
+/// scheduler decides but before the allocation is applied.  This is the
+/// single episode loop every driver shares: plain evaluation passes a
+/// no-op, the SL dataset generator (`rl::sl::generate_dataset`) decomposes
+/// each slot's decision into imitation labels.
+pub fn run_episode_with_hook<F>(
+    mut cluster: Cluster,
+    specs: &[JobSpec],
+    sched: &mut dyn Scheduler,
+    epoch_error: f64,
+    max_slots: usize,
+    mut hook: F,
+) -> EpisodeResult
+where
+    F: FnMut(&Cluster, &[usize], &[Alloc]),
+{
     let mut next_spec = 0usize;
     let mut rewards = Vec::new();
     loop {
@@ -107,6 +129,7 @@ pub fn run_episode(
         }
         let active = cluster.active_jobs();
         let alloc = sched.schedule(&cluster, &active);
+        hook(&cluster, &active, &alloc);
         let placement = cluster.apply_allocation(&alloc);
         let outcome = cluster.advance(&placement);
         sched.observe(&cluster, &outcome);

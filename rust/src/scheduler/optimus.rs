@@ -175,9 +175,11 @@ impl Scheduler for Optimus {
                     // Normalize the time reduction by the job's current
                     // remaining time (so short jobs are not starved by the
                     // absolute gains of long ones) and by the task's
-                    // dominant resource share (utility per resource unit).
+                    // dominant resource share (utility per resource unit;
+                    // the topology's reference cap, which equals
+                    // cfg.server_cap on legacy flat pools).
                     let cost = res
-                        .dominant_share(&cluster.cfg.server_cap)
+                        .dominant_share(&cluster.topology.reference_cap())
                         .max(1e-6);
                     let utility = gain / (base.max(1e-6) * cost);
                     match best {

@@ -7,6 +7,13 @@
 //! Jobs are ordered by arrival time; when more than J jobs are active they
 //! are scheduled in batches of J (Fig 17).
 //!
+//! Capacity is topology-aware end to end: the r_i share is taken against
+//! the cluster [`Topology`](crate::cluster::Topology)'s aggregate
+//! capacity (`Cluster::dominant_share_for`), and the action mask's
+//! feasibility checks run through the per-class, locality-aware
+//! `Placement` — on a homogeneous pool both reduce to the legacy flat
+//! arithmetic bit-for-bit.
+//!
 //! The action space has 3J+1 entries: for job i, (i,0)=+1 worker,
 //! (i,1)=+1 PS, (i,2)=+1 worker and +1 PS; the last index is the void
 //! action that ends the slot's allocation sequence.
@@ -73,8 +80,10 @@ pub fn encode_state(
         let share =
             cluster.dominant_share_for(job.type_idx, walloc[slot], palloc[slot]);
         // Scale the cluster-wide share up so it is O(1) for typical
-        // allocations regardless of cluster size.
-        let r = (share * cluster.cfg.num_servers as f64 / R_SCALE).min(4.0);
+        // allocations regardless of cluster size.  The topology is the
+        // source of truth for the machine count (cfg.num_servers may be
+        // stale when an explicit topology is set).
+        let r = (share * cluster.topology.num_servers() as f64 / R_SCALE).min(4.0);
         s[base + num_types + 2] = r as f32;
         s[base + num_types + 3] = (walloc[slot] as f64 / T_SCALE) as f32;
         s[base + num_types + 4] = (palloc[slot] as f64 / T_SCALE) as f32;
@@ -102,11 +111,13 @@ pub fn action_mask(
         let can_p = palloc[slot] < cap && placement.can_place(&jt.ps_res);
         mask[encode_action(slot, 0)] = can_w;
         mask[encode_action(slot, 1)] = can_p;
-        // Both: conservative check (worker then PS on a clone).
+        // Both: conservative check (worker then PS on a clone, job-tagged
+        // so heterogeneous topologies apply their per-class caps and
+        // rack preference exactly as the real placement would).
         if can_w && can_p {
             let mut shadow = placement.clone();
-            let ok = shadow.try_place(&jt.worker_res).is_some()
-                && shadow.try_place(&jt.ps_res).is_some();
+            let ok = shadow.try_place_for(id, &jt.worker_res).is_some()
+                && shadow.try_place_for(id, &jt.ps_res).is_some();
             mask[encode_action(slot, 2)] = ok;
         }
     }

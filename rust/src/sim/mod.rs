@@ -6,10 +6,12 @@
 //! is the substrate for both:
 //!
 //! * [`ScenarioSpec`] — one fully-specified experiment point: cluster
-//!   size/noise, arrival pattern, job-type mix, epoch-estimation error,
-//!   and seed.
+//!   size/topology/noise, arrival pattern, job-type mix,
+//!   epoch-estimation error, and seed.
 //! * [`ScenarioMatrix`] — a builder that expands axis lists into the
-//!   cross-product of scenarios.
+//!   cross-product of scenarios; the server-topology axis
+//!   ([`TopologySpec`]) sweeps heterogeneous GPU generations and rack
+//!   locality against every cluster size.
 //! * [`Harness`] — fans (scheduler × scenario) episodes across
 //!   `std::thread::scope` workers and returns aggregated
 //!   [`ScenarioResult`]s.
@@ -38,4 +40,4 @@ mod harness;
 mod scenario;
 
 pub use harness::{mean_avg_jct, Harness, ScenarioResult};
-pub use scenario::{derive_seed, replica_specs, ScenarioMatrix, ScenarioSpec};
+pub use scenario::{derive_seed, replica_specs, ScenarioMatrix, ScenarioSpec, TopologySpec};

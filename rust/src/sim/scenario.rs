@@ -1,8 +1,8 @@
 //! Scenario descriptions and the axis cross-product builder.
 
-use crate::cluster::{Cluster, ClusterConfig};
+use crate::cluster::{Cluster, ClusterConfig, Res, ServerClass, Topology};
 use crate::scheduler::{run_episode, EpisodeResult, Scheduler};
-use crate::trace::{generate, ArrivalPattern, TraceConfig};
+use crate::trace::{generate, ArrivalPattern, TraceConfig, TraceSource};
 
 /// Mix `base` with a stream tag into an independent 64-bit seed
 /// (SplitMix64 finalizer).  Used everywhere a scenario, episode or worker
@@ -13,6 +13,133 @@ pub fn derive_seed(base: u64, stream: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     z ^ (z >> 31)
+}
+
+/// Parametric cluster-topology axis value for [`ScenarioMatrix`]: a
+/// recipe that is instantiated against each cluster-size axis point
+/// (`num_servers`, `server_cap`), Pollux-style.
+///
+/// `Homogeneous` is the identity element: it builds no explicit
+/// [`Topology`] (the base config's, if any, is inherited at its own
+/// size; other cluster-size axis points fall back to a flat pool) and
+/// its seed [`tag`](TopologySpec::tag) is 0, so matrices that never call
+/// `with_topologies` — and the `Homogeneous` point of those that do —
+/// keep every pre-existing scenario seed unchanged.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TopologySpec {
+    /// The base flat pool (legacy behaviour, identity tag).
+    Homogeneous,
+    /// Two GPU generations: `frac_fast` of the servers run `speedup`×
+    /// faster, the rest are baseline.  Same per-server capacity.
+    TwoClass { frac_fast: f64, speedup: f64 },
+    /// Flat pool chunked into racks of `servers_per_rack` with a
+    /// cross-rack progress penalty in [0, 1).
+    Racked { servers_per_rack: usize, penalty: f64 },
+    /// Both: two generations *and* rack locality.
+    HeteroRacked {
+        frac_fast: f64,
+        speedup: f64,
+        servers_per_rack: usize,
+        penalty: f64,
+    },
+}
+
+impl TopologySpec {
+    /// Short identifier used in scenario names and bench tables.
+    pub fn name(&self) -> String {
+        match *self {
+            TopologySpec::Homogeneous => "homog".to_string(),
+            TopologySpec::TwoClass { frac_fast, speedup } => format!(
+                "fast{:02}x{:03}",
+                (frac_fast * 100.0).round() as i64,
+                (speedup * 100.0).round() as i64
+            ),
+            TopologySpec::Racked {
+                servers_per_rack,
+                penalty,
+            } => format!(
+                "rack{servers_per_rack}p{:02}",
+                (penalty * 100.0).round() as i64
+            ),
+            TopologySpec::HeteroRacked {
+                frac_fast,
+                speedup,
+                servers_per_rack,
+                penalty,
+            } => format!(
+                "fast{:02}x{:03}rack{servers_per_rack}p{:02}",
+                (frac_fast * 100.0).round() as i64,
+                (speedup * 100.0).round() as i64,
+                (penalty * 100.0).round() as i64
+            ),
+        }
+    }
+
+    /// Seed-stream tag.  `Homogeneous` is 0 so XOR-folding it into the
+    /// axis tag is the identity — existing matrix seeds are untouched.
+    pub fn tag(&self) -> u64 {
+        match *self {
+            TopologySpec::Homogeneous => 0,
+            TopologySpec::TwoClass { frac_fast, speedup } => derive_seed(
+                0x7090_0001,
+                derive_seed(frac_fast.to_bits(), speedup.to_bits()),
+            ),
+            TopologySpec::Racked {
+                servers_per_rack,
+                penalty,
+            } => derive_seed(
+                0x7090_0002,
+                derive_seed(servers_per_rack as u64, penalty.to_bits()),
+            ),
+            TopologySpec::HeteroRacked {
+                frac_fast,
+                speedup,
+                servers_per_rack,
+                penalty,
+            } => derive_seed(
+                0x7090_0003,
+                derive_seed(
+                    derive_seed(frac_fast.to_bits(), speedup.to_bits()),
+                    derive_seed(servers_per_rack as u64, penalty.to_bits()),
+                ),
+            ),
+        }
+    }
+
+    /// Instantiate against a cluster-size axis point.  `None` for
+    /// `Homogeneous` (the base config's pool/topology applies).
+    pub fn build(&self, num_servers: usize, server_cap: Res) -> Option<Topology> {
+        match *self {
+            TopologySpec::Homogeneous => None,
+            TopologySpec::TwoClass { frac_fast, speedup } => {
+                Some(two_class(num_servers, server_cap, frac_fast, speedup))
+            }
+            TopologySpec::Racked {
+                servers_per_rack,
+                penalty,
+            } => Some(
+                Topology::homogeneous(num_servers, server_cap)
+                    .with_racks(servers_per_rack, penalty),
+            ),
+            TopologySpec::HeteroRacked {
+                frac_fast,
+                speedup,
+                servers_per_rack,
+                penalty,
+            } => Some(
+                two_class(num_servers, server_cap, frac_fast, speedup)
+                    .with_racks(servers_per_rack, penalty),
+            ),
+        }
+    }
+}
+
+fn two_class(num_servers: usize, cap: Res, frac_fast: f64, speedup: f64) -> Topology {
+    let n_fast = ((num_servers as f64 * frac_fast).round() as usize).min(num_servers);
+    Topology::new(vec![
+        ServerClass::new("fast", n_fast, cap, speedup),
+        ServerClass::new("base", num_servers - n_fast, cap, 1.0),
+    ])
 }
 
 /// One fully-specified experiment point of the matrix.
@@ -96,6 +223,7 @@ pub struct ScenarioMatrix {
     patterns: Vec<ArrivalPattern>,
     epoch_errors: Vec<f64>,
     type_limits: Vec<Option<usize>>,
+    topologies: Vec<TopologySpec>,
     /// Replica indices: same axes, independent derived seeds.
     replicas: Vec<u64>,
     max_slots: usize,
@@ -108,6 +236,7 @@ impl ScenarioMatrix {
             patterns: vec![base_trace.pattern],
             epoch_errors: vec![0.0],
             type_limits: vec![base_trace.type_limit],
+            topologies: vec![TopologySpec::Homogeneous],
             replicas: vec![0],
             max_slots: 5_000,
             base_cluster,
@@ -139,6 +268,15 @@ impl ScenarioMatrix {
         self
     }
 
+    /// Server-topology axis: each [`TopologySpec`] is instantiated against
+    /// every cluster-size point.  `TopologySpec::Homogeneous` entries keep
+    /// the base pool *and* the pre-axis scenario seeds (identity tag).
+    pub fn with_topologies(mut self, topologies: &[TopologySpec]) -> Self {
+        assert!(!topologies.is_empty());
+        self.topologies = topologies.to_vec();
+        self
+    }
+
     /// `n` independent replicas (seed-only variation) of every axis point.
     pub fn with_replicas(mut self, n: usize) -> Self {
         assert!(n >= 1);
@@ -157,6 +295,7 @@ impl ScenarioMatrix {
             * self.patterns.len()
             * self.epoch_errors.len()
             * self.type_limits.len()
+            * self.topologies.len()
             * self.replicas.len()
     }
 
@@ -165,50 +304,85 @@ impl ScenarioMatrix {
     }
 
     /// Cross-product expansion in a fixed axis order (sizes ▸ patterns ▸
-    /// errors ▸ type limits ▸ replicas).  Seeds are derived from the axis
-    /// values themselves — see the module doc.
+    /// errors ▸ type limits ▸ topologies ▸ replicas).  Seeds are derived
+    /// from the axis values themselves — see the module doc; the topology
+    /// tag XOR-folds in, with `Homogeneous` as the 0/identity tag, so
+    /// matrices built before this axis existed expand to identical seeds.
     pub fn expand(&self) -> Vec<ScenarioSpec> {
+        // Replay sources feed the recorded sequence back verbatim, so the
+        // generator-side trace axes would silently no-op while scenario
+        // names still claimed a pattern/type mix — reject the combination
+        // rather than emit misleading results.
+        if matches!(self.base_trace.source, TraceSource::Replay(_)) {
+            assert!(
+                self.patterns.len() == 1 && self.type_limits.len() == 1,
+                "trace-replay matrices cannot sweep arrival patterns or type limits: \
+                 the recorded job sequence is replayed verbatim"
+            );
+        }
         let mut out = Vec::with_capacity(self.len());
         for &servers in &self.cluster_sizes {
             for &pattern in &self.patterns {
                 for &err in &self.epoch_errors {
                     for &limit in &self.type_limits {
-                        for &replica in &self.replicas {
-                            // Fold every axis value into the seed stream.
-                            let tag = derive_seed(
-                                derive_seed(
-                                    derive_seed(servers as u64, pattern as u64),
-                                    err.to_bits(),
-                                ),
-                                derive_seed(
-                                    limit.map(|l| l as u64 + 1).unwrap_or(0),
-                                    replica,
-                                ),
-                            );
-                            let cluster = ClusterConfig {
-                                num_servers: servers,
-                                seed: derive_seed(self.base_cluster.seed, tag),
-                                ..self.base_cluster.clone()
-                            };
-                            let trace = TraceConfig {
-                                pattern,
-                                type_limit: limit,
-                                seed: derive_seed(self.base_trace.seed, tag ^ 0x7ace),
-                                ..self.base_trace.clone()
-                            };
-                            let name = format!(
-                                "srv{servers}_{}_err{:02}_types{}_r{replica}",
-                                pattern.name(),
-                                (err * 100.0).round() as i64,
-                                limit.unwrap_or(crate::cluster::NUM_TYPES),
-                            );
-                            out.push(ScenarioSpec {
-                                name,
-                                cluster,
-                                trace,
-                                epoch_error: err,
-                                max_slots: self.max_slots,
-                            });
+                        for topo in &self.topologies {
+                            for &replica in &self.replicas {
+                                // Fold every axis value into the seed stream.
+                                let tag = derive_seed(
+                                    derive_seed(
+                                        derive_seed(servers as u64, pattern as u64),
+                                        err.to_bits(),
+                                    ),
+                                    derive_seed(
+                                        limit.map(|l| l as u64 + 1).unwrap_or(0),
+                                        replica,
+                                    ),
+                                ) ^ topo.tag();
+                                // Homogeneous points inherit the base
+                                // config's explicit topology, but only at
+                                // the size it describes — other size-axis
+                                // points fall back to a flat pool so that
+                                // `num_servers`, the scenario name and the
+                                // actual machine set always agree.
+                                let topology = match topo.build(servers, self.base_cluster.server_cap)
+                                {
+                                    Some(t) => Some(t),
+                                    None => self
+                                        .base_cluster
+                                        .topology
+                                        .clone()
+                                        .filter(|t| t.num_servers() == servers),
+                                };
+                                let cluster = ClusterConfig {
+                                    num_servers: servers,
+                                    topology,
+                                    seed: derive_seed(self.base_cluster.seed, tag),
+                                    ..self.base_cluster.clone()
+                                };
+                                let trace = TraceConfig {
+                                    pattern,
+                                    type_limit: limit,
+                                    seed: derive_seed(self.base_trace.seed, tag ^ 0x7ace),
+                                    ..self.base_trace.clone()
+                                };
+                                let topo_part = match topo {
+                                    TopologySpec::Homogeneous => String::new(),
+                                    t => format!("_{}", t.name()),
+                                };
+                                let name = format!(
+                                    "srv{servers}_{}_err{:02}_types{}{topo_part}_r{replica}",
+                                    pattern.name(),
+                                    (err * 100.0).round() as i64,
+                                    limit.unwrap_or(crate::cluster::NUM_TYPES),
+                                );
+                                out.push(ScenarioSpec {
+                                    name,
+                                    cluster,
+                                    trace,
+                                    epoch_error: err,
+                                    max_slots: self.max_slots,
+                                });
+                            }
                         }
                     }
                 }
@@ -271,6 +445,140 @@ mod tests {
         let b = wider.expand();
         assert_eq!(a[0].trace.seed, b[0].trace.seed);
         assert_eq!(a[0].cluster.seed, b[0].cluster.seed);
+    }
+
+    #[test]
+    fn topology_axis_preserves_default_seeds_and_multiplies() {
+        let base = ScenarioMatrix::new(ClusterConfig::default(), TraceConfig::default())
+            .with_cluster_sizes(&[8, 16])
+            .with_replicas(2);
+        let with_topo = base.clone().with_topologies(&[
+            TopologySpec::Homogeneous,
+            TopologySpec::TwoClass { frac_fast: 0.5, speedup: 2.0 },
+            TopologySpec::Racked { servers_per_rack: 4, penalty: 0.2 },
+        ]);
+        assert_eq!(with_topo.len(), base.len() * 3);
+        let plain = base.expand();
+        let specs = with_topo.expand();
+        assert_eq!(specs.len(), plain.len() * 3);
+        // Topologies iterate outside replicas: for each (size, replica-set)
+        // block of 3×2 specs, the first 2 are the Homogeneous ones and
+        // must match the pre-axis expansion exactly.
+        for (i, old) in plain.iter().enumerate() {
+            let block = i / 2; // replica pairs per size point
+            let j = block * 6 + (i % 2);
+            let new = &specs[j];
+            assert_eq!(new.name, old.name);
+            assert_eq!(new.cluster.seed, old.cluster.seed);
+            assert_eq!(new.trace.seed, old.trace.seed);
+            assert!(new.cluster.topology.is_none());
+        }
+        // Non-homogeneous points carry built topologies, distinct seeds
+        // and suffixed names.
+        let names: std::collections::BTreeSet<&str> =
+            specs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names.len(), specs.len(), "names must stay unique");
+        let hetero: Vec<_> = specs
+            .iter()
+            .filter(|s| s.cluster.topology.is_some())
+            .collect();
+        assert_eq!(hetero.len(), plain.len() * 2);
+        for s in &hetero {
+            let topo = s.cluster.topology.as_ref().unwrap();
+            assert_eq!(topo.num_servers(), s.cluster.num_servers);
+            assert!(plain.iter().all(|o| o.cluster.seed != s.cluster.seed));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn replay_source_rejects_pattern_sweep() {
+        let replay = TraceConfig::replay(vec![crate::trace::JobSpec {
+            arrival_slot: 0,
+            type_idx: 0,
+            total_epochs: 5.0,
+        }]);
+        let _ = ScenarioMatrix::new(ClusterConfig::default(), replay)
+            .with_patterns(&ArrivalPattern::ALL)
+            .expand();
+    }
+
+    #[test]
+    fn replay_source_allows_replica_and_size_sweeps() {
+        let replay = TraceConfig::replay(vec![crate::trace::JobSpec {
+            arrival_slot: 0,
+            type_idx: 0,
+            total_epochs: 5.0,
+        }]);
+        let specs = ScenarioMatrix::new(ClusterConfig::default(), replay)
+            .with_cluster_sizes(&[8, 16])
+            .with_replicas(2)
+            .expand();
+        assert_eq!(specs.len(), 4);
+        // Every scenario replays the same recorded job.
+        for s in &specs {
+            let jobs = crate::trace::generate(&s.trace);
+            assert_eq!(jobs.len(), 1);
+            assert_eq!(jobs[0].total_epochs, 5.0);
+        }
+    }
+
+    #[test]
+    fn base_topology_inherited_only_at_its_own_size() {
+        let topo = Topology::new(vec![
+            ServerClass::new("fast", 6, ClusterConfig::default().server_cap, 2.0),
+            ServerClass::new("base", 6, ClusterConfig::default().server_cap, 1.0),
+        ]);
+        let m = ScenarioMatrix::new(
+            ClusterConfig::with_topology(topo.clone()),
+            TraceConfig::default(),
+        )
+        .with_cluster_sizes(&[8, 12]);
+        let specs = m.expand();
+        assert_eq!(specs.len(), 2);
+        // srv8 point: size disagrees with the 12-server base topology →
+        // flat pool, so num_servers and the machine set agree.
+        assert_eq!(specs[0].cluster.num_servers, 8);
+        assert!(specs[0].cluster.topology.is_none());
+        assert_eq!(specs[0].cluster.effective_topology().num_servers(), 8);
+        // srv12 point: matches the base topology's size → inherited.
+        assert_eq!(specs[1].cluster.num_servers, 12);
+        assert_eq!(specs[1].cluster.topology.as_ref(), Some(&topo));
+    }
+
+    #[test]
+    fn topology_spec_builds_match_size_axis() {
+        let cap = ClusterConfig::default().server_cap;
+        let t = TopologySpec::TwoClass { frac_fast: 0.25, speedup: 2.0 }
+            .build(8, cap)
+            .unwrap();
+        assert_eq!(t.num_servers(), 8);
+        assert_eq!(t.classes()[0].count, 2);
+        assert_eq!(t.classes()[0].speed, 2.0);
+        assert_eq!(t.classes()[1].count, 6);
+        let r = TopologySpec::Racked { servers_per_rack: 3, penalty: 0.1 }
+            .build(8, cap)
+            .unwrap();
+        assert_eq!(r.num_racks(), 3);
+        assert!(TopologySpec::Homogeneous.build(8, cap).is_none());
+        assert_eq!(TopologySpec::Homogeneous.tag(), 0);
+        // Distinct specs → distinct tags and names.
+        let specs = [
+            TopologySpec::TwoClass { frac_fast: 0.5, speedup: 2.0 },
+            TopologySpec::TwoClass { frac_fast: 0.5, speedup: 1.5 },
+            TopologySpec::Racked { servers_per_rack: 4, penalty: 0.2 },
+            TopologySpec::HeteroRacked {
+                frac_fast: 0.5,
+                speedup: 2.0,
+                servers_per_rack: 4,
+                penalty: 0.2,
+            },
+        ];
+        let tags: std::collections::BTreeSet<u64> = specs.iter().map(|s| s.tag()).collect();
+        assert_eq!(tags.len(), specs.len());
+        let names: std::collections::BTreeSet<String> =
+            specs.iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), specs.len());
     }
 
     #[test]

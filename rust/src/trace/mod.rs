@@ -6,9 +6,19 @@
 //! The real 75-day Alibaba trace is proprietary — this generator is the
 //! documented substitution (DESIGN.md §Substitutions).  Train vs validation
 //! job sequences differ only by seed, exactly as §6.2 prescribes.
+//!
+//! Recorded traces can also be **replayed verbatim**: [`write_trace_csv`]
+//! saves a job sequence in the `util::table` CSV format and
+//! [`TraceConfig::replay_csv`] builds a config whose
+//! [`TraceSource::Replay`] source feeds those exact rows back through
+//! [`generate`], so real cluster logs sweep through the same scenario
+//! matrix as the synthetic workloads.
+
+use std::path::Path;
+use std::sync::Arc;
 
 use crate::cluster::{catalog, NUM_TYPES};
-use crate::util::Rng;
+use crate::util::{Rng, Table};
 
 /// One job to be submitted to the environment.
 #[derive(Debug, Clone)]
@@ -85,6 +95,18 @@ impl ArrivalPattern {
     }
 }
 
+/// Where [`generate`] gets its jobs from.
+#[derive(Debug, Clone, Default)]
+pub enum TraceSource {
+    /// Sample the synthetic Fig-8 workload model.
+    #[default]
+    Synthetic,
+    /// Replay a recorded job sequence verbatim (arrival slots, types and
+    /// epochs are taken as-is; the synthetic-model fields of
+    /// [`TraceConfig`] are ignored).
+    Replay(Arc<Vec<JobSpec>>),
+}
+
 #[derive(Debug, Clone)]
 pub struct TraceConfig {
     /// Number of jobs to generate.
@@ -101,6 +123,8 @@ pub struct TraceConfig {
     pub type_limit: Option<usize>,
     /// Temporal shape of the arrival process.
     pub pattern: ArrivalPattern,
+    /// Synthetic model vs recorded-trace replay.
+    pub source: TraceSource,
     pub seed: u64,
 }
 
@@ -113,7 +137,28 @@ impl Default for TraceConfig {
             duration_sigma: 0.6,
             type_limit: None,
             pattern: ArrivalPattern::Diurnal,
+            source: TraceSource::Synthetic,
             seed: 1,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Replay config for a recorded trace CSV (the [`write_trace_csv`] /
+    /// `util::table` format).  `num_jobs` reflects the recorded count.
+    pub fn replay_csv<P: AsRef<Path>>(path: P) -> anyhow::Result<TraceConfig> {
+        Ok(Self::replay(read_trace_csv(path)?))
+    }
+
+    /// Replay config over an in-memory job sequence.  Jobs are sorted by
+    /// arrival slot — the episode driver's arrival loop requires monotone
+    /// arrival times.
+    pub fn replay(mut specs: Vec<JobSpec>) -> TraceConfig {
+        specs.sort_by_key(|s| s.arrival_slot);
+        TraceConfig {
+            num_jobs: specs.len(),
+            source: TraceSource::Replay(Arc::new(specs)),
+            ..Default::default()
         }
     }
 }
@@ -126,8 +171,81 @@ pub fn arrival_intensity(slot: usize) -> f64 {
     ArrivalPattern::Diurnal.intensity(slot)
 }
 
-/// Generate `cfg.num_jobs` job specs following the trace pattern.
+/// The `(arrival_slot, type, epochs)` rows of a job sequence as a
+/// [`Table`] — the exact shape [`read_trace_csv`] parses back.
+pub fn trace_table(specs: &[JobSpec]) -> Table {
+    let cat = catalog();
+    let mut t = Table::new("recorded job trace", &["arrival_slot", "type", "epochs"]);
+    for s in specs {
+        t.row(vec![
+            s.arrival_slot.to_string(),
+            cat[s.type_idx].name.to_string(),
+            s.total_epochs.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Save a job sequence as CSV in the `util::table` output format
+/// (`# title` comment, header row, one row per job).
+pub fn write_trace_csv<P: AsRef<Path>>(specs: &[JobSpec], path: P) -> std::io::Result<()> {
+    trace_table(specs).write_csv(path)
+}
+
+/// Load a recorded `(arrival_slot, type, epochs)` trace from CSV.
+/// Accepts the [`write_trace_csv`] format: `#`-prefixed comment lines and
+/// the header are skipped; the type column may be a Table-1 model name or
+/// a bare catalog index.
+pub fn read_trace_csv<P: AsRef<Path>>(path: P) -> anyhow::Result<Vec<JobSpec>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
+    let cat = catalog();
+    let mut specs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cells == ["arrival_slot", "type", "epochs"] {
+            continue; // header
+        }
+        let fail = |what: &str| {
+            anyhow::anyhow!("{}:{}: bad {what} in {line:?}", path.display(), lineno + 1)
+        };
+        if cells.len() != 3 {
+            return Err(fail("row (want 3 columns)"));
+        }
+        let arrival_slot: usize = cells[0].parse().map_err(|_| fail("arrival_slot"))?;
+        let type_idx = match cat.iter().position(|jt| jt.name == cells[1]) {
+            Some(i) => i,
+            None => {
+                let i: usize = cells[1].parse().map_err(|_| fail("type"))?;
+                if i >= NUM_TYPES {
+                    return Err(fail("type index"));
+                }
+                i
+            }
+        };
+        let total_epochs: f64 = cells[2].parse().map_err(|_| fail("epochs"))?;
+        specs.push(JobSpec {
+            arrival_slot,
+            type_idx,
+            total_epochs,
+        });
+    }
+    specs.sort_by_key(|s| s.arrival_slot);
+    Ok(specs)
+}
+
+/// Generate `cfg.num_jobs` job specs following the trace pattern, or
+/// replay the recorded sequence when `cfg.source` is a
+/// [`TraceSource::Replay`].
 pub fn generate(cfg: &TraceConfig) -> Vec<JobSpec> {
+    if let TraceSource::Replay(specs) = &cfg.source {
+        return specs.as_ref().clone();
+    }
     let mut rng = Rng::new(cfg.seed ^ 0x7ace_0000);
     let cat = catalog();
     let num_types = cfg.type_limit.unwrap_or(NUM_TYPES).min(NUM_TYPES);
@@ -219,6 +337,68 @@ mod tests {
             "mean duration {m} vs target {}",
             cfg.mean_duration_slots
         );
+    }
+
+    #[test]
+    fn trace_csv_round_trips_exactly() {
+        let specs = generate(&TraceConfig {
+            num_jobs: 40,
+            seed: 123,
+            ..Default::default()
+        });
+        let dir = std::env::temp_dir().join("dl2_trace_roundtrip");
+        let path = dir.join("trace.csv");
+        write_trace_csv(&specs, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("# recorded job trace"));
+        assert!(text.contains("arrival_slot,type,epochs"));
+        let back = read_trace_csv(&path).unwrap();
+        assert_eq!(back.len(), specs.len());
+        for (a, b) in specs.iter().zip(&back) {
+            assert_eq!(a.arrival_slot, b.arrival_slot);
+            assert_eq!(a.type_idx, b.type_idx);
+            assert_eq!(a.total_epochs, b.total_epochs, "epochs must round-trip bitwise");
+        }
+        // And the replay source feeds them back through generate().
+        let cfg = TraceConfig::replay_csv(&path).unwrap();
+        assert_eq!(cfg.num_jobs, specs.len());
+        let replayed = generate(&cfg);
+        assert_eq!(replayed.len(), specs.len());
+        for (a, b) in specs.iter().zip(&replayed) {
+            assert_eq!(a.arrival_slot, b.arrival_slot);
+            assert_eq!(a.type_idx, b.type_idx);
+            assert_eq!(a.total_epochs, b.total_epochs);
+        }
+        // Replay ignores the generator seed: same jobs for any seed.
+        let reseeded = generate(&TraceConfig { seed: 999, ..cfg });
+        assert_eq!(reseeded.len(), specs.len());
+        assert!(reseeded
+            .iter()
+            .zip(&specs)
+            .all(|(x, y)| x.arrival_slot == y.arrival_slot && x.type_idx == y.type_idx));
+    }
+
+    #[test]
+    fn trace_csv_accepts_indices_and_rejects_garbage() {
+        let dir = std::env::temp_dir().join("dl2_trace_parse");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manual.csv");
+        std::fs::write(&path, "# hand-written\narrival_slot,type,epochs\n5,2,14.5\n0,vgg16,7\n").unwrap();
+        let specs = read_trace_csv(&path).unwrap();
+        // Rows are sorted by arrival.
+        assert_eq!(specs[0].arrival_slot, 0);
+        assert_eq!(specs[0].type_idx, 1, "vgg16 resolves via the catalog");
+        assert_eq!(specs[1].arrival_slot, 5);
+        assert_eq!(specs[1].type_idx, 2);
+        assert_eq!(specs[1].total_epochs, 14.5);
+
+        let bad = dir.join("bad.csv");
+        std::fs::write(&bad, "1,not_a_model,3.0\n").unwrap();
+        assert!(read_trace_csv(&bad).is_err());
+        let wide = dir.join("wide.csv");
+        std::fs::write(&wide, "1,2\n").unwrap();
+        assert!(read_trace_csv(&wide).is_err());
+        assert!(read_trace_csv(dir.join("missing.csv")).is_err());
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Integration tests for the heterogeneous cluster topology:
+//!
+//! * `Topology::homogeneous` is a **drop-in** for the pre-refactor flat
+//!   pool — same per-task server choices on a fixed episode (checked
+//!   against a verbatim copy of the old least-loaded scan) and bitwise
+//!   identical episode results through `run_episode`.
+//! * No server of any class ever exceeds **its own** capacity under
+//!   random mixed placements driven by real schedulers.
+//! * Heterogeneous speeds and rack penalties measurably change episode
+//!   outcomes (the scenario-matrix axis actually sweeps something).
+
+use dl2::cluster::{Cluster, ClusterConfig, Res, ServerClass, Topology};
+use dl2::pipeline::baseline_by_name;
+use dl2::prop_check;
+use dl2::scheduler::{run_episode, Drf, Scheduler};
+use dl2::trace::{generate, TraceConfig};
+
+/// The pre-refactor placement, backed by the canonical frozen reference
+/// scan (`dl2::cluster::server::legacy_try_place`).
+struct NaivePlacement {
+    cap: Res,
+    used: Vec<Res>,
+}
+
+impl NaivePlacement {
+    fn new(n: usize, cap: Res) -> Self {
+        NaivePlacement {
+            cap,
+            used: vec![Res::ZERO; n],
+        }
+    }
+
+    fn try_place(&mut self, r: &Res) -> Option<usize> {
+        dl2::cluster::server::legacy_try_place(&mut self.used, &self.cap, r)
+    }
+}
+
+/// Replays `Cluster::apply_allocation`'s exact placement sequence
+/// (alternating worker/PS per job) on both placements, asserting every
+/// server choice matches.
+fn mirror_apply(
+    cluster: &Cluster,
+    naive: &mut NaivePlacement,
+    alloc: &[(usize, usize, usize)],
+) {
+    let mut placement = cluster.placement();
+    for &(id, want_w, want_p) in alloc {
+        let jt = cluster.catalog[cluster.jobs[id].type_idx].clone();
+        let cap = cluster.cfg.max_tasks_per_job;
+        let (want_w, want_p) = (want_w.min(cap), want_p.min(cap));
+        let (mut got_w, mut got_p) = (0, 0);
+        while got_w < want_w || got_p < want_p {
+            let mut progress = false;
+            if got_w < want_w {
+                let new = placement.try_place_for(id, &jt.worker_res);
+                assert_eq!(new, naive.try_place(&jt.worker_res), "worker of job {id}");
+                if new.is_some() {
+                    got_w += 1;
+                    progress = true;
+                } else {
+                    break;
+                }
+            }
+            if got_p < want_p {
+                let new = placement.try_place_for(id, &jt.ps_res);
+                assert_eq!(new, naive.try_place(&jt.ps_res), "ps of job {id}");
+                if new.is_some() {
+                    got_p += 1;
+                    progress = true;
+                }
+            }
+            if !progress {
+                break;
+            }
+        }
+    }
+}
+
+/// Homogeneous topology reproduces the pre-refactor `Placement`'s exact
+/// server allocations, task by task, over a fixed DRF episode.
+#[test]
+fn homogeneous_reproduces_prerefactor_allocations_on_fixed_episode() {
+    let specs = generate(&TraceConfig {
+        num_jobs: 14,
+        seed: 42,
+        ..Default::default()
+    });
+    let cfg = ClusterConfig {
+        num_servers: 8,
+        seed: 7,
+        interference: 0.0,
+        ..Default::default()
+    };
+    let mut cluster = Cluster::new(cfg.clone());
+    let mut sched = Drf;
+    let mut next = 0usize;
+    let mut slots = 0usize;
+    loop {
+        while next < specs.len() && specs[next].arrival_slot <= cluster.slot {
+            cluster.submit(specs[next].type_idx, specs[next].total_epochs, 0.0);
+            next += 1;
+        }
+        let active = cluster.active_jobs();
+        let alloc = sched.schedule(&cluster, &active);
+        let mut naive = NaivePlacement::new(cfg.num_servers, cfg.server_cap);
+        mirror_apply(&cluster, &mut naive, &alloc);
+        let placement = cluster.apply_allocation(&alloc);
+        cluster.advance(&placement);
+        slots += 1;
+        if (next >= specs.len() && cluster.all_finished()) || slots > 2_000 {
+            break;
+        }
+    }
+    assert!(cluster.all_finished(), "episode hit the guard");
+}
+
+/// `topology: None` vs an explicit `Topology::homogeneous` produce
+/// bitwise-identical episode results for every baseline scheduler.
+#[test]
+fn explicit_homogeneous_topology_is_bitwise_dropin() {
+    let specs = generate(&TraceConfig {
+        num_jobs: 12,
+        seed: 9,
+        ..Default::default()
+    });
+    let implicit = ClusterConfig {
+        num_servers: 10,
+        seed: 3,
+        ..Default::default()
+    };
+    let explicit = ClusterConfig {
+        topology: Some(Topology::homogeneous(10, implicit.server_cap)),
+        ..implicit.clone()
+    };
+    for name in ["drf", "srtf", "tetris"] {
+        let mut sa = baseline_by_name(name).unwrap();
+        let mut sb = baseline_by_name(name).unwrap();
+        let a = run_episode(Cluster::new(implicit.clone()), &specs, sa.as_mut(), 0.0, 5_000);
+        let b = run_episode(Cluster::new(explicit.clone()), &specs, sb.as_mut(), 0.0, 5_000);
+        assert_eq!(a.jct_per_job, b.jct_per_job, "{name}: JCTs diverged");
+        assert_eq!(a.rewards, b.rewards, "{name}: rewards diverged");
+        assert_eq!(a.gpu_util, b.gpu_util, "{name}: utilization diverged");
+        assert_eq!(a.makespan_slots, b.makespan_slots, "{name}");
+    }
+}
+
+/// Schedulers driving a heterogeneous, racked topology never push any
+/// server past its own class cap, and per-job caps still hold.
+#[test]
+fn prop_hetero_servers_never_exceed_class_caps() {
+    prop_check!(6, |rng: &mut dl2::util::Rng| {
+        let topo = Topology::new(vec![
+            ServerClass::new("fast", rng.range(2, 5), Res::new(8.0, 32.0, 128.0), 2.0),
+            ServerClass::new("base", rng.range(2, 7), Res::new(2.0, 8.0, 48.0), 1.0),
+        ])
+        .with_racks(rng.range(2, 5), 0.2);
+        let specs = generate(&TraceConfig {
+            num_jobs: rng.range(4, 10),
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        for sched_name in ["drf", "srtf", "tetris", "optimus", "fifo"] {
+            let mut sched = baseline_by_name(sched_name).unwrap();
+            let mut cluster = Cluster::new(ClusterConfig {
+                seed: rng.next_u64(),
+                ..ClusterConfig::with_topology(topo.clone())
+            });
+            let mut next = 0usize;
+            for _ in 0..120 {
+                while next < specs.len() && specs[next].arrival_slot <= cluster.slot {
+                    cluster.submit(specs[next].type_idx, specs[next].total_epochs, 0.0);
+                    next += 1;
+                }
+                let active = cluster.active_jobs();
+                let alloc = sched.schedule(&cluster, &active);
+                let placement = cluster.apply_allocation(&alloc);
+                // Aggregate check: usage within the topology's total cap.
+                let used = placement.total_used();
+                let total = cluster.topology.total_cap();
+                assert!(
+                    Res::ZERO.fits(&used, &total),
+                    "{sched_name}: aggregate over-allocation {used} > {total}"
+                );
+                // Per-server check: a dominant-share load over 1 would
+                // mean some server exceeded its own class cap.
+                for (i, load) in placement.loads().iter().enumerate() {
+                    assert!(
+                        *load <= 1.0 + 1e-9,
+                        "{sched_name}: server {i} over its class cap (load {load})"
+                    );
+                }
+                // Per-job rack records are bounded by reality.
+                for job in &cluster.jobs {
+                    assert!(
+                        placement.racks_spanned(job.id) <= cluster.topology.num_racks(),
+                        "{sched_name}: phantom racks"
+                    );
+                    assert!(
+                        job.workers <= cluster.cfg.max_tasks_per_job
+                            && job.ps <= cluster.cfg.max_tasks_per_job,
+                        "{sched_name}: per-job cap violated"
+                    );
+                }
+                cluster.advance(&placement);
+                if next >= specs.len() && cluster.all_finished() {
+                    break;
+                }
+            }
+        }
+    });
+}
+
+/// The axis sweeps something real: fast classes and rack penalties move
+/// the deterministic episode outcome, in the expected directions at the
+/// per-slot level (JCT-level direction is asserted loosely — queueing
+/// anomalies aside, a 2× class should not *hurt* the mean by much).
+#[test]
+fn heterogeneous_topologies_change_outcomes() {
+    let specs = generate(&TraceConfig {
+        num_jobs: 15,
+        seed: 21,
+        ..Default::default()
+    });
+    let cap = ClusterConfig::default().server_cap;
+    let run = |topology: Option<Topology>| {
+        let cfg = ClusterConfig {
+            num_servers: 8,
+            topology,
+            interference: 0.0,
+            seed: 5,
+            ..Default::default()
+        };
+        run_episode(Cluster::new(cfg), &specs, &mut Drf, 0.0, 5_000).avg_jct_slots
+    };
+    let homog = run(None);
+    let fast = run(Some(Topology::new(vec![
+        ServerClass::new("fast", 4, cap, 2.0),
+        ServerClass::new("base", 4, cap, 1.0),
+    ])));
+    let racked = run(Some(Topology::homogeneous(8, cap).with_racks(2, 0.4)));
+    assert_ne!(homog, fast, "2-class speeds must move the JCT");
+    assert_ne!(homog, racked, "rack penalty must move the JCT");
+    assert!(
+        racked > homog,
+        "cross-rack penalty should slow completion: racked={racked} homog={homog}"
+    );
+    assert!(
+        fast < homog * 1.05,
+        "a strictly-faster class should not hurt much: fast={fast} homog={homog}"
+    );
+}
