@@ -12,6 +12,8 @@
 //! make artifacts && cargo run --release --example end_to_end_training
 //! # faster smoke run:
 //! DL2_BENCH_SCALE=0.2 cargo run --release --example end_to_end_training
+//! # serial reference path (same episode seeds, for wall-clock A/B):
+//! cargo run --release --example end_to_end_training -- --serial
 //! ```
 
 use std::time::Instant;
@@ -20,22 +22,27 @@ use dl2::pipeline::{
     baseline_by_name, baseline_jct, run_pipeline, validation_trace, PipelineConfig,
 };
 use dl2::runtime::load_default_engine;
-use dl2::util::{scaled, Table};
+use dl2::util::{scaled, Args, Table};
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
     let engine = load_default_engine()?;
     let cfg = PipelineConfig {
         sl_steps: scaled(250, 30),
-        rl_episodes: scaled(30, 4),
+        rl_rounds: scaled(8, 2),
+        rl_round_episodes: 4,
+        parallel: !args.bool_or("serial", false),
         ..Default::default()
     };
     println!(
-        "end-to-end: {} servers, {} jobs/trace, J={}, SL {} steps, RL {} episodes",
+        "end-to-end: {} servers, {} jobs/trace, J={}, SL {} steps, RL {} rounds x {} episodes ({})",
         cfg.cluster.num_servers,
         cfg.trace.num_jobs,
         cfg.dl2.j,
         cfg.sl_steps,
-        cfg.rl_episodes
+        cfg.rl_rounds,
+        cfg.rl_round_episodes,
+        if cfg.parallel { "parallel" } else { "serial" }
     );
 
     let t0 = Instant::now();

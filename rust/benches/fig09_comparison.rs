@@ -20,14 +20,18 @@ use dl2::util::{scaled, Table};
 fn main() -> anyhow::Result<()> {
     let cfg = PipelineConfig {
         sl_steps: scaled(250, 30),
-        rl_episodes: scaled(40, 4),
+        rl_rounds: scaled(10, 2),
+        rl_round_episodes: 4,
         ..Default::default()
     };
     let val = validation_trace(&cfg.trace);
     let dir = dl2::runtime::default_artifacts_dir();
 
-    // --- DL2: SL warm-up + online RL.
-    eprintln!("[fig09] training DL2 (SL {} steps + RL {} episodes)...", cfg.sl_steps, cfg.rl_episodes);
+    // --- DL2: SL warm-up + online RL (batched parallel rounds).
+    eprintln!(
+        "[fig09] training DL2 (SL {} steps + RL {} rounds x {} episodes)...",
+        cfg.sl_steps, cfg.rl_rounds, cfg.rl_round_episodes
+    );
     let result = run_pipeline(&cfg, Engine::load(&dir)?)?;
     let dl2_jct = result.final_jct;
 

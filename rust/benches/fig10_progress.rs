@@ -5,95 +5,93 @@
 //! Paper shape: pure RL needs hundreds of steps to reach DRF's level; SL
 //! converges near DRF within tens of updates; SL+RL then improves well
 //! beyond DRF.
+//!
+//! The RL curves run through `pipeline::run_pipeline`'s round-structured
+//! schedule — batched parallel collection by default; pass `--serial`
+//! (e.g. `cargo bench --bench fig10_progress -- --serial`) for the
+//! one-episode-at-a-time reference path over the identical episode seed
+//! schedule, and compare the reported RL wall-clock between the two.
 
-use dl2::pipeline::{validation_trace, PipelineConfig};
-use dl2::rl::{generate_dataset, train_sl, OnlineTrainer, RlOptions};
+use std::time::Instant;
+
+use dl2::pipeline::{run_pipeline, validation_trace, PipelineConfig};
+use dl2::rl::{generate_dataset, train_sl};
 use dl2::runtime::Engine;
 use dl2::scheduler::{Dl2Config, Dl2Scheduler, Drf};
 use dl2::trace::{generate, TraceConfig};
-use dl2::util::{scaled, Rng, Table};
+use dl2::util::{scaled, Args, Rng, Table};
 
 fn main() -> anyhow::Result<()> {
-    let cfg = PipelineConfig::default();
+    let args = Args::from_env();
+    let serial = args.bool_or("serial", false);
+    let base = PipelineConfig {
+        rl_rounds: scaled(15, 2),
+        rl_round_episodes: 2,
+        eval_every: 2,
+        parallel: !serial,
+        ..Default::default()
+    };
     let dir = dl2::runtime::default_artifacts_dir();
-    let val = validation_trace(&cfg.trace);
-    let max_slots = cfg.rl_opts.max_slots;
+    let val = validation_trace(&base.trace);
+    let max_slots = base.rl_opts.max_slots;
 
     // DRF reference line.
     let mut mk = || dl2::pipeline::baseline_by_name("drf").unwrap();
-    let drf = dl2::pipeline::baseline_jct(&mut mk, &cfg.cluster, &val, 3, max_slots);
+    let drf = dl2::pipeline::baseline_jct(&mut mk, &base.cluster, &val, 3, max_slots);
 
-    // --- (a) SL only: evaluate every few SL updates.
+    // --- (a) SL only: evaluate every few SL updates (SL-update
+    // granularity — finer than the pipeline's RL-round history).
     eprintln!("[fig10] SL-only curve...");
     let mut sl_curve: Vec<(usize, f64)> = Vec::new();
     {
         let engine = Engine::load(&dir)?;
-        let mut sched = Dl2Scheduler::new(engine, cfg.dl2.clone());
-        let traces: Vec<_> = (0..cfg.sl_traces)
+        let mut sched = Dl2Scheduler::new(engine, base.dl2.clone());
+        let traces: Vec<_> = (0..base.sl_traces)
             .map(|i| {
                 generate(&TraceConfig {
-                    seed: cfg.trace.seed.wrapping_add(10 + i as u64),
-                    ..cfg.trace.clone()
+                    seed: base.trace.seed.wrapping_add(10 + i as u64),
+                    ..base.trace.clone()
                 })
             })
             .collect();
-        let dataset = generate_dataset(&mut Drf, &cfg.cluster, &traces, cfg.dl2.j, 8, max_slots);
+        let dataset = generate_dataset(&mut Drf, &base.cluster, &traces, base.dl2.j, 8, max_slots);
         let mut rng = Rng::new(1);
         let chunk = scaled(25, 5);
         let mut updates = 0usize;
         for _ in 0..10 {
             train_sl(&mut sched, &dataset, chunk, &mut rng);
             updates += chunk;
-            let jct = dl2::rl::evaluate_policy(&mut sched, &cfg.cluster, &val, max_slots);
+            let jct = dl2::rl::evaluate_policy(&mut sched, &base.cluster, &val, max_slots);
             sl_curve.push((updates, jct));
         }
     }
 
-    // --- (b) pure online RL from scratch, (c) SL + online RL.
-    let rl_episodes = scaled(30, 4);
+    // --- (b) pure online RL from scratch, (c) SL + online RL — both
+    // through the round-structured pipeline.
     let mut curves: Vec<(&str, Vec<(usize, f64)>)> = Vec::new();
-    for (label, warmup) in [("rl_only", false), ("sl_plus_rl", true)] {
-        eprintln!("[fig10] {label} curve...");
-        let engine = Engine::load(&dir)?;
-        let mut sched = Dl2Scheduler::new(
-            engine,
-            Dl2Config {
-                seed: cfg.dl2.seed ^ (label.len() as u64),
-                ..cfg.dl2.clone()
-            },
+    let mode = if serial { "serial" } else { "parallel" };
+    for (label, sl_steps) in [("rl_only", 0), ("sl_plus_rl", scaled(250, 30))] {
+        eprintln!(
+            "[fig10] {label} curve ({mode}, {} rounds x {} episodes)...",
+            base.rl_rounds, base.rl_round_episodes
         );
-        if warmup {
-            let traces: Vec<_> = (0..cfg.sl_traces)
-                .map(|i| {
-                    generate(&TraceConfig {
-                        seed: cfg.trace.seed.wrapping_add(10 + i as u64),
-                        ..cfg.trace.clone()
-                    })
-                })
-                .collect();
-            let dataset =
-                generate_dataset(&mut Drf, &cfg.cluster, &traces, cfg.dl2.j, 8, max_slots);
-            let mut rng = Rng::new(2);
-            train_sl(&mut sched, &dataset, scaled(250, 30), &mut rng);
-        }
-        let mut trainer = OnlineTrainer::new(sched, RlOptions::default());
-        let mut curve = vec![(0usize, trainer.evaluate(&cfg.cluster, &val))];
-        for ep in 0..rl_episodes {
-            let specs = generate(&TraceConfig {
-                seed: cfg.trace.seed.wrapping_add(1000 + ep as u64),
-                ..cfg.trace.clone()
-            });
-            let ecfg = dl2::cluster::ClusterConfig {
-                seed: cfg.cluster.seed.wrapping_add(ep as u64),
-                ..cfg.cluster.clone()
-            };
-            trainer.train_episode(&ecfg, &specs);
-            if (ep + 1) % 2 == 0 || ep + 1 == rl_episodes {
-                let jct = trainer.evaluate(&cfg.cluster, &val);
-                curve.push((trainer.updates, jct));
-            }
-        }
-        curves.push((label, curve));
+        let cfg = PipelineConfig {
+            sl_steps,
+            dl2: Dl2Config {
+                seed: base.dl2.seed ^ (label.len() as u64),
+                ..base.dl2.clone()
+            },
+            ..base.clone()
+        };
+        let t0 = Instant::now();
+        let res = run_pipeline(&cfg, Engine::load(&dir)?)?;
+        eprintln!(
+            "[fig10] {label}: pipeline (SL {} steps + RL {} episodes, {mode}) in {:.1?}",
+            cfg.sl_steps,
+            cfg.rl_total_episodes(),
+            t0.elapsed()
+        );
+        curves.push((label, res.history));
     }
 
     // --- Emit.

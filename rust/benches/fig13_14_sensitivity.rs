@@ -18,7 +18,8 @@ use dl2::util::{scaled, Table};
 fn main() -> anyhow::Result<()> {
     let cfg = PipelineConfig {
         sl_steps: scaled(250, 30),
-        rl_episodes: scaled(30, 4),
+        rl_rounds: scaled(10, 2),
+        rl_round_episodes: 3,
         ..Default::default()
     };
     let val = validation_trace(&cfg.trace);

@@ -22,7 +22,8 @@ use dl2::util::{scaled, Rng, Table};
 fn main() -> anyhow::Result<()> {
     let cfg = PipelineConfig {
         sl_steps: scaled(250, 30),
-        rl_episodes: scaled(24, 4),
+        rl_rounds: scaled(8, 2),
+        rl_round_episodes: 3,
         ..Default::default()
     };
     let dir = dl2::runtime::default_artifacts_dir();
@@ -67,7 +68,9 @@ fn main() -> anyhow::Result<()> {
     eprintln!("[fig15] ideal (all types) baseline...");
     let ideal = run_pipeline(
         &PipelineConfig {
-            rl_episodes: 3 * phase,
+            // Match the 3-phase adaptive run's episode budget.
+            rl_rounds: 3,
+            rl_round_episodes: phase,
             ..cfg.clone()
         },
         Engine::load(&dir)?,

@@ -11,7 +11,7 @@
 
 use dl2::pipeline::{validation_trace, PipelineConfig};
 use dl2::rl::{Federation, RlOptions};
-use dl2::runtime::Engine;
+use dl2::runtime::{Engine, EnginePool};
 use dl2::scheduler::Dl2Config;
 use dl2::sim::Harness;
 use dl2::util::{scaled, Table};
@@ -19,7 +19,8 @@ use dl2::util::{scaled, Table};
 fn main() -> anyhow::Result<()> {
     let base = PipelineConfig {
         sl_steps: scaled(200, 25),
-        rl_episodes: scaled(16, 3),
+        rl_rounds: scaled(4, 1),
+        rl_round_episodes: 4,
         ..Default::default()
     };
     let dir = dl2::runtime::default_artifacts_dir();
@@ -53,7 +54,9 @@ fn main() -> anyhow::Result<()> {
     println!("paper shape: small J (batched scheduling) hurts; large-enough J plateaus");
 
     // --- Fig 18: federation size sweep, with each round's k episodes
-    // collected in parallel (A3C) and updates applied serially.
+    // collected in parallel (A3C) on pooled worker-pinned engines and
+    // updates applied serially.
+    let pool = EnginePool::shared(&dir);
     let rounds = scaled(6, 2);
     let mut t18 = Table::new(
         "Fig 18: federated A3C — clusters vs global validation JCT",
@@ -70,7 +73,7 @@ fn main() -> anyhow::Result<()> {
             &RlOptions::default(),
         )?;
         for _ in 0..rounds {
-            fed.round_parallel(&harness, &dir)?;
+            fed.round_parallel(&harness, &pool)?;
         }
         let jct = fed.evaluate(&val);
         t18.row(vec![

@@ -1,0 +1,149 @@
+//! Engine-pool micro-bench: counts `Engine::load`s (and executable
+//! compilations) for k workers × r rounds of parallel collection,
+//! pooled vs load-per-episode.
+//!
+//! The claim under measurement: with the shared [`EnginePool`], k
+//! workers × r rounds pay **k** engine setups; the old load-per-episode
+//! pattern paid k·r (episodes·r with more episodes than workers).  The
+//! load/compile counting half runs anywhere — it fabricates a minimal
+//! `meta.txt` when AOT artifacts are absent, since `Engine::load` is a
+//! pure host-side operation.  When `make artifacts` has run, a second
+//! section also times real `OnlineTrainer::train_episodes_parallel`
+//! rounds with a shared pool vs a fresh pool per round (= the old
+//! behavior's load count).
+//!
+//! Flags: `--rounds N --workers K --episodes E` (defaults 6 / 4 / 8).
+
+use std::time::Instant;
+
+use dl2::runtime::{compile_count, engine_loads, Engine, EnginePool, Meta};
+use dl2::sim::Harness;
+use dl2::util::{Args, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rounds = args.usize_or("rounds", 6);
+    let workers = args.usize_or("workers", 4);
+    let episodes = args.usize_or("episodes", 8);
+    let harness = Harness::new(workers);
+    let items: Vec<usize> = (0..episodes).collect();
+
+    let mut t = Table::new(
+        &format!("engine setups for {workers} workers x {rounds} rounds ({episodes} episodes/round)"),
+        &["strategy", "engine_loads", "compiles", "wall"],
+    );
+
+    // --- Load counting (runs without the native backend).
+    let real = dl2::runtime::default_artifacts_dir();
+    let dir = if real.join("meta.txt").exists() {
+        real.clone()
+    } else {
+        let dir = std::env::temp_dir().join("dl2_perf_pool_meta");
+        Meta::write_minimal(&dir, 8, 16, 4, &[2])?;
+        eprintln!("[perf_pool] no artifacts; using synthetic meta at {}", dir.display());
+        dir
+    };
+
+    // Pooled: workers check an engine out per round; the pool recycles.
+    let pool = EnginePool::new(&dir);
+    let before = engine_loads();
+    let compiles_before = compile_count();
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        let touched = harness.map_with(
+            &items,
+            || pool.checkout(),
+            |guard, i, _| {
+                let engine = guard.as_mut().expect("engine checkout failed");
+                engine.meta.num_types + i
+            },
+        );
+        assert_eq!(touched.len(), episodes);
+    }
+    let pooled_loads = engine_loads() - before;
+    t.row(vec![
+        "pooled (shared across rounds)".into(),
+        pooled_loads.to_string(),
+        (compile_count() - compiles_before).to_string(),
+        format!("{:.1?}", t0.elapsed()),
+    ]);
+
+    // Load-per-episode: what every round cost before the pool.
+    let before = engine_loads();
+    let compiles_before = compile_count();
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        harness.map(&items, |i, _| {
+            let engine = Engine::load(&dir).expect("engine load failed");
+            engine.meta.num_types + i
+        });
+    }
+    let per_episode_loads = engine_loads() - before;
+    t.row(vec![
+        "load per episode (old behavior)".into(),
+        per_episode_loads.to_string(),
+        (compile_count() - compiles_before).to_string(),
+        format!("{:.1?}", t0.elapsed()),
+    ]);
+
+    assert!(
+        pooled_loads <= workers.min(episodes),
+        "pooled loads {pooled_loads} exceed worker count {workers}"
+    );
+    assert_eq!(per_episode_loads, rounds * episodes);
+    println!(
+        "pooled: {pooled_loads} loads for {} checkouts ({} rounds); per-episode: {per_episode_loads}",
+        pool.checkouts(),
+        rounds
+    );
+
+    // --- Real training rounds (needs AOT artifacts + native backend).
+    if real.join("meta.txt").exists() {
+        use dl2::cluster::ClusterConfig;
+        use dl2::rl::{OnlineTrainer, RlOptions};
+        use dl2::scheduler::{Dl2Config, Dl2Scheduler};
+        use dl2::trace::{generate, TraceConfig};
+
+        let dcfg = Dl2Config { j: 5, ..Default::default() };
+        let ccfg = ClusterConfig { num_servers: 8, ..Default::default() };
+        let eps: Vec<(ClusterConfig, Vec<dl2::trace::JobSpec>)> = (0..episodes as u64)
+            .map(|e| {
+                (
+                    ClusterConfig { seed: ccfg.seed.wrapping_add(e), ..ccfg.clone() },
+                    generate(&TraceConfig { num_jobs: 8, seed: 60 + e, ..Default::default() }),
+                )
+            })
+            .collect();
+        for (label, shared) in [("train: shared pool", true), ("train: pool per round", false)] {
+            eprintln!("[perf_pool] {label}...");
+            let mut trainer = OnlineTrainer::new(
+                Dl2Scheduler::new(Engine::load(&real)?, dcfg.clone()),
+                RlOptions::default(),
+            );
+            let shared_pool = EnginePool::new(&real);
+            let before = engine_loads();
+            let compiles_before = compile_count();
+            let t0 = Instant::now();
+            for _ in 0..rounds {
+                if shared {
+                    trainer.train_episodes_parallel(&harness, &shared_pool, &eps)?;
+                } else {
+                    // Fresh pool each round = the pre-pool cost model.
+                    let fresh = EnginePool::new(&real);
+                    trainer.train_episodes_parallel(&harness, &fresh, &eps)?;
+                }
+            }
+            t.row(vec![
+                label.into(),
+                (engine_loads() - before).to_string(),
+                (compile_count() - compiles_before).to_string(),
+                format!("{:.1?}", t0.elapsed()),
+            ]);
+        }
+    } else {
+        eprintln!("[perf_pool] skipping real training section (run `make artifacts`)");
+    }
+
+    t.emit("perf_pool");
+    Ok(())
+}

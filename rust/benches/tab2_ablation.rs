@@ -23,7 +23,8 @@ fn main() -> anyhow::Result<()> {
     let seeds = scaled(3, 2) as u64;
     let base = PipelineConfig {
         sl_steps: scaled(250, 30),
-        rl_episodes: scaled(24, 4),
+        rl_rounds: scaled(8, 2),
+        rl_round_episodes: 3,
         ..Default::default()
     };
     let dir = dl2::runtime::default_artifacts_dir();

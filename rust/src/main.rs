@@ -79,17 +79,26 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         },
         incumbent,
         sl_steps: args.usize_or("sl-steps", 250),
-        rl_episodes: args.usize_or("rl-episodes", 30),
+        rl_rounds: args.usize_or("rl-rounds", 8),
+        rl_round_episodes: args.usize_or("round-episodes", 4),
+        // --serial: the one-episode-at-a-time reference path (identical
+        // episode seed schedule; useful for wall-clock comparisons).
+        parallel: !args.bool_or("serial", false),
+        workers: args.get("workers").map(|_| args.usize_or("workers", 1)),
         ..Default::default()
     };
     println!(
-        "training DL2: J={} incumbent={} sl_steps={} rl_episodes={}",
+        "training DL2: J={} incumbent={} sl_steps={} rl {} rounds x {} episodes ({})",
         cfg.dl2.j,
         cfg.incumbent.name(),
         cfg.sl_steps,
-        cfg.rl_episodes
+        cfg.rl_rounds,
+        cfg.rl_round_episodes,
+        if cfg.parallel { "parallel" } else { "serial" }
     );
+    let t0 = std::time::Instant::now();
     let result = run_pipeline(&cfg, engine)?;
+    println!("RL phase + SL trained in {:.1?}", t0.elapsed());
     let mut t = Table::new(
         "training progress (validation avg JCT, slots)",
         &["updates", "jct"],
@@ -121,6 +130,7 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
         ..Default::default()
     };
     let mut sched = Dl2Scheduler::new(engine, cfg);
+    sched.engine.warmup(j)?; // fail fast if the backend is missing
     let path = std::path::PathBuf::from(args.str_or("policy", "results/dl2_policy.bin"));
     let theta = dl2::runtime::load_params(&path)?;
     sched.pol.set_theta(&theta);
@@ -202,7 +212,8 @@ fn print_help() {
 
 USAGE: dl2 <train|evaluate|compare|elastic|info> [flags]
 
-  train     --j 10 --sl-steps 250 --rl-episodes 30 --incumbent drf --out results/dl2_policy.bin
+  train     --j 10 --sl-steps 250 --rl-rounds 8 --round-episodes 4 [--serial] [--workers N]
+            --incumbent drf --out results/dl2_policy.bin
   evaluate  --policy results/dl2_policy.bin --j 10
   compare   --servers 12 --jobs 40
   elastic   --model-mb 98

@@ -2,15 +2,33 @@
 //! supervised warm-up from an incumbent scheduler, then online
 //! actor-critic RL in the live environment — packaged so the CLI, the
 //! examples and every bench drive the same code path.
+//!
+//! # Round-structured online RL
+//!
+//! The RL phase runs `rl_rounds` **rounds** of `rl_round_episodes`
+//! episodes each.  The default (`parallel = true`) collects every
+//! episode of a round concurrently on the `sim` harness against
+//! parameters frozen at round start — Decima's batched-rollout shape,
+//! with worker engines drawn from the shared per-artifacts-dir
+//! [`EnginePool`] so repeated rounds reuse compiled executables — and
+//! applies the NN updates serially in episode order.  Results are
+//! bitwise independent of the worker count (episode seeds derive from
+//! the episode index alone) but *not* of the round structure: within a
+//! round rollouts see round-start parameters, the A3C/Decima staleness
+//! trade-off described in [`crate::rl::train`].  `parallel = false`
+//! degrades to the paper-faithful serial loop — one episode at a time,
+//! each seeing all previous updates — kept as the regression reference;
+//! both paths consume the identical episode seed schedule.
 
 use anyhow::Result;
 
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::rl::{generate_dataset, train_sl, OnlineTrainer, RlOptions};
-use crate::runtime::Engine;
+use crate::runtime::{Engine, EnginePool};
 use crate::scheduler::{
     Dl2Config, Dl2Scheduler, Drf, Fifo, Optimus, Scheduler, Srtf, Tetris,
 };
+use crate::sim::Harness;
 use crate::trace::{generate, JobSpec, TraceConfig};
 use crate::util::Rng;
 
@@ -51,12 +69,32 @@ pub struct PipelineConfig {
     /// Distinct traces used to build the SL dataset.
     pub sl_traces: usize,
     /// SL mini-batch updates (paper: repeat until the policy matches the
-    /// incumbent — hundreds of passes).
+    /// incumbent — hundreds of passes).  0 skips the warm-up (pure RL).
     pub sl_steps: usize,
-    /// Online RL training episodes.
-    pub rl_episodes: usize,
+    /// Online RL rounds (see the module doc).
+    pub rl_rounds: usize,
+    /// Episodes collected per round.  On the parallel path this is the
+    /// batch width — and the staleness bound: rollouts within a round
+    /// share round-start parameters.
+    pub rl_round_episodes: usize,
+    /// true (default): batched parallel rounds on the harness + engine
+    /// pool.  false: the serial reference path (identical episode seeds,
+    /// one update stream, no intra-round staleness).
+    pub parallel: bool,
+    /// Harness worker threads for parallel collection
+    /// (`None` → [`Harness::from_env`], i.e. `DL2_THREADS` or all cores).
+    pub workers: Option<usize>,
     /// Record validation JCT every this many episodes (0 = only at end).
+    /// The parallel path evaluates at round boundaries, whenever the
+    /// episode count crosses a multiple of this.
     pub eval_every: usize,
+}
+
+impl PipelineConfig {
+    /// Total RL episodes the schedule will run.
+    pub fn rl_total_episodes(&self) -> usize {
+        self.rl_rounds * self.rl_round_episodes
+    }
 }
 
 impl Default for PipelineConfig {
@@ -72,7 +110,10 @@ impl Default for PipelineConfig {
             incumbent: Incumbent::Drf,
             sl_traces: 4,
             sl_steps: 250,
-            rl_episodes: 20,
+            rl_rounds: 5,
+            rl_round_episodes: 4,
+            parallel: true,
+            workers: None,
             eval_every: 5,
         }
     }
@@ -110,30 +151,42 @@ pub struct PipelineResult {
 }
 
 /// Run the full DL² pipeline: SL warm-up on `incumbent` traces, then
-/// `rl_episodes` of online RL, evaluating on the validation trace.
+/// `rl_rounds × rl_round_episodes` of online RL — batched parallel
+/// rounds by default, serial reference with `parallel = false` —
+/// evaluating on the validation trace.
 pub fn run_pipeline(cfg: &PipelineConfig, engine: Engine) -> Result<PipelineResult> {
     let mut sched = Dl2Scheduler::new(engine, cfg.dl2.clone());
+    // Compile everything up front: fails fast with a clean error when the
+    // native backend is missing (Engine::load no longer touches it), and
+    // takes first-use compilation latency off the training path.
+    sched.engine.warmup(cfg.dl2.j)?;
     let mut rng = Rng::new(cfg.dl2.seed ^ 0x51_11);
 
-    // --- Offline supervised learning (§4.2).
-    let sl_traces: Vec<Vec<JobSpec>> = (0..cfg.sl_traces)
-        .map(|i| {
-            generate(&TraceConfig {
-                seed: cfg.trace.seed.wrapping_add(10 + i as u64),
-                ..cfg.trace.clone()
+    // --- Offline supervised learning (§4.2).  sl_steps == 0 is the
+    // pure-RL ablation: skip the incumbent episodes entirely, not just
+    // the updates.
+    let sl_losses = if cfg.sl_steps > 0 {
+        let sl_traces: Vec<Vec<JobSpec>> = (0..cfg.sl_traces)
+            .map(|i| {
+                generate(&TraceConfig {
+                    seed: cfg.trace.seed.wrapping_add(10 + i as u64),
+                    ..cfg.trace.clone()
+                })
             })
-        })
-        .collect();
-    let mut incumbent = cfg.incumbent.build();
-    let dataset = generate_dataset(
-        incumbent.as_mut(),
-        &cfg.cluster,
-        &sl_traces,
-        cfg.dl2.j,
-        sched.engine.meta.num_types,
-        cfg.rl_opts.max_slots,
-    );
-    let sl_losses = train_sl(&mut sched, &dataset, cfg.sl_steps, &mut rng);
+            .collect();
+        let mut incumbent = cfg.incumbent.build();
+        let dataset = generate_dataset(
+            incumbent.as_mut(),
+            &cfg.cluster,
+            &sl_traces,
+            cfg.dl2.j,
+            sched.engine.meta.num_types,
+            cfg.rl_opts.max_slots,
+        );
+        train_sl(&mut sched, &dataset, cfg.sl_steps, &mut rng)
+    } else {
+        Vec::new()
+    };
 
     // --- Online RL (§4.3).
     let val_specs = validation_trace(&cfg.trace);
@@ -143,22 +196,58 @@ pub fn run_pipeline(cfg: &PipelineConfig, engine: Engine) -> Result<PipelineResu
     // Best-validated-policy selection (standard model selection on the
     // validation metric; the deployed scheduler is the best checkpoint).
     let mut best = (sl_jct, trainer.sched.pol.theta.clone());
-    for ep in 0..cfg.rl_episodes {
-        let specs = generate(&TraceConfig {
-            seed: cfg.trace.seed.wrapping_add(1000 + ep as u64),
-            ..cfg.trace.clone()
-        });
-        let ecfg = ClusterConfig {
-            seed: cfg.cluster.seed.wrapping_add(ep as u64),
-            ..cfg.cluster.clone()
+
+    // One flat episode-index seed schedule shared by both paths, so the
+    // serial reference trains on exactly the traces/environments the
+    // parallel rounds batch over.
+    let episode_inputs = |ep: usize| -> (ClusterConfig, Vec<JobSpec>) {
+        (
+            ClusterConfig {
+                seed: cfg.cluster.seed.wrapping_add(ep as u64),
+                ..cfg.cluster.clone()
+            },
+            generate(&TraceConfig {
+                seed: cfg.trace.seed.wrapping_add(1000 + ep as u64),
+                ..cfg.trace.clone()
+            }),
+        )
+    };
+    let total = cfg.rl_total_episodes();
+    let eval_at = |trainer: &mut OnlineTrainer,
+                       history: &mut Vec<(usize, f64)>,
+                       best: &mut (f64, Vec<f32>)| {
+        let jct = trainer.evaluate(&cfg.cluster, &val_specs);
+        history.push((trainer.updates, jct));
+        if jct < best.0 {
+            *best = (jct, trainer.sched.pol.theta.clone());
+        }
+    };
+
+    if cfg.parallel {
+        let harness = match cfg.workers {
+            Some(w) => Harness::new(w),
+            None => Harness::from_env(),
         };
-        trainer.train_episode(&ecfg, &specs);
-        let should_eval = cfg.eval_every > 0 && (ep + 1) % cfg.eval_every == 0;
-        if should_eval || ep + 1 == cfg.rl_episodes {
-            let jct = trainer.evaluate(&cfg.cluster, &val_specs);
-            history.push((trainer.updates, jct));
-            if jct < best.0 {
-                best = (jct, trainer.sched.pol.theta.clone());
+        let pool = EnginePool::shared(trainer.sched.engine.artifacts_dir().to_path_buf());
+        for round in 0..cfg.rl_rounds {
+            let episodes: Vec<(ClusterConfig, Vec<JobSpec>)> = (0..cfg.rl_round_episodes)
+                .map(|k| episode_inputs(round * cfg.rl_round_episodes + k))
+                .collect();
+            trainer.train_episodes_parallel(&harness, &pool, &episodes)?;
+            let done = (round + 1) * cfg.rl_round_episodes;
+            let crossed = cfg.eval_every > 0
+                && (done - cfg.rl_round_episodes) / cfg.eval_every != done / cfg.eval_every;
+            if crossed || round + 1 == cfg.rl_rounds {
+                eval_at(&mut trainer, &mut history, &mut best);
+            }
+        }
+    } else {
+        for ep in 0..total {
+            let (ecfg, specs) = episode_inputs(ep);
+            trainer.train_episode(&ecfg, &specs);
+            let should_eval = cfg.eval_every > 0 && (ep + 1) % cfg.eval_every == 0;
+            if should_eval || ep + 1 == total {
+                eval_at(&mut trainer, &mut history, &mut best);
             }
         }
     }

@@ -9,11 +9,9 @@
 //! episodes' worth of updates, which is why convergence is ≈k× faster per
 //! round (the paper's observation).
 
-use std::path::Path;
-
 use super::train::{collect_rollout, OnlineTrainer, RlOptions, Rollout};
 use crate::cluster::ClusterConfig;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, EnginePool};
 use crate::scheduler::{Dl2Config, Dl2Scheduler};
 use crate::sim::{derive_seed, Harness};
 use crate::trace::{generate, JobSpec, TraceConfig};
@@ -143,18 +141,19 @@ impl Federation {
     /// One federated round with **parallel episode collection** (the
     /// paper's actual A3C shape): every cluster pulls the same global
     /// parameters (cluster 0's), its episode rollout is collected on a
-    /// harness worker — each worker loads its own engine from
-    /// `artifacts_dir` and steps its own environment — and the NN updates
-    /// are then applied serially in cluster order through the exact
+    /// harness worker — each worker checks an engine out of `pool` for
+    /// the round and steps its own environment — and the NN updates are
+    /// then applied serially in cluster order through the exact
     /// pull→train→push chain of [`Federation::round`].
     ///
     /// Trace/env seed advancement matches the serial round, and rollout
     /// RNG streams derive from (cluster seed, episode index) alone, so
-    /// the outcome is independent of the worker count.
+    /// the outcome is independent of the worker count — and of engine
+    /// reuse, since the pool resets device-resident state on checkout.
     pub fn round_parallel(
         &mut self,
         harness: &Harness,
-        artifacts_dir: &Path,
+        pool: &EnginePool,
     ) -> anyhow::Result<()> {
         let k = self.clusters.len();
         // Pull: sync every cluster to the global model before collection.
@@ -183,23 +182,37 @@ impl Federation {
                 )
             })
             .collect();
-        // Collect: frozen global policy, one worker-confined engine each
-        // (see ROADMAP for the planned worker-pinned engine cache).
-        let rollouts = harness.map(&work, |_, item| -> anyhow::Result<Rollout> {
-            let (cfg, env, specs, epoch_error, max_slots) = item;
-            let engine = Engine::load(artifacts_dir)?;
-            let mut sched = Dl2Scheduler::new(engine, cfg.clone());
-            sched.pol.set_theta(&gp);
-            sched.val.set_theta(&gv);
-            Ok(collect_rollout(
-                &mut sched,
-                env,
-                None,
-                specs,
-                *epoch_error,
-                *max_slots,
-            ))
-        });
+        // Collect: frozen global policy, one pooled worker-pinned engine
+        // per harness worker.
+        let rollouts = harness.map_with(
+            &work,
+            || pool.checkout(),
+            |guard, _, item| -> anyhow::Result<Rollout> {
+                let (cfg, env, specs, epoch_error, max_slots) = item;
+                let guard = guard
+                    .as_mut()
+                    .map_err(|e| anyhow::anyhow!("engine checkout failed: {e:#}"))?;
+                let mut sched = Dl2Scheduler::new(guard.take(), cfg.clone());
+                // Same fail-fast contract as the trainer's round: a broken
+                // backend surfaces as the round's Err, engine returned.
+                if let Err(e) = sched.engine.warmup(sched.cfg.j) {
+                    guard.put_back(sched.engine);
+                    return Err(e.context("worker engine warmup failed"));
+                }
+                sched.pol.set_theta(&gp);
+                sched.val.set_theta(&gv);
+                let rollout = collect_rollout(
+                    &mut sched,
+                    env,
+                    None,
+                    specs,
+                    *epoch_error,
+                    *max_slots,
+                );
+                guard.put_back(sched.engine);
+                Ok(rollout)
+            },
+        );
         // All-or-nothing: validate every rollout before touching any
         // cluster state, so a failed worker cannot leave the federation
         // half-updated or its seed schedule advanced.

@@ -9,20 +9,37 @@
 //! sampling mini-batches from the replay buffer (matching the paper's
 //! one-update-per-scheduling-interval cadence).
 //!
+//! # The round-based parallel protocol (Decima/A3C-style)
+//!
 //! The episode is split into two phases so the `sim` harness can
-//! parallelize the expensive half Decima-style: [`collect_rollout`] steps
-//! the environment with a (frozen) policy and records raw experience;
+//! parallelize the expensive half: [`collect_rollout`] steps the
+//! environment with a (frozen) policy and records raw experience;
 //! [`OnlineTrainer::apply_rollout`] then performs the parameter updates
-//! serially.  [`OnlineTrainer::train_episodes_parallel`] fans rollout
-//! collection across harness workers — each builds its own engine and
-//! scheduler replica on its own thread — and applies the updates in
-//! episode order, so NN state evolution stays single-threaded.
-
-use std::path::Path;
+//! serially.  [`OnlineTrainer::train_episodes_parallel`] runs one
+//! **round**: every episode's rollout is collected concurrently on
+//! harness workers against the parameters frozen at round start, then
+//! the updates are applied in episode order, so NN state evolution stays
+//! single-threaded and bitwise independent of the worker count.  Worker
+//! engines come from a shared [`EnginePool`]: each worker checks one out
+//! for the whole round (worker-pinned via `Harness::map_with`) and the
+//! pool recycles it — with compiled executables intact — into the next
+//! round, so r rounds × k workers pay k engine setups instead of k·r.
+//!
+//! **The staleness trade-off** this buys parallelism with: within a
+//! round, episode e's rollout does *not* see the updates from episodes
+//! 0..e the way the serial path does — every rollout uses round-start
+//! parameters, exactly like A3C workers acting on a stale global model
+//! or Decima's batched rollout rounds.  Gradients remain unbiased for
+//! the round-start policy; the per-round update sequence just replays
+//! them against parameters up to one round old.  Small
+//! episodes-per-round keeps the staleness bounded; the serial
+//! one-episode-at-a-time path ([`OnlineTrainer::train_episode`], driven
+//! by `pipeline::run_pipeline` with `parallel = false`) remains the
+//! paper-faithful regression reference.
 
 use super::replay::{discounted_returns, Batch, ReplayBuffer, SampleG};
 use crate::cluster::{Cluster, ClusterConfig, JobType};
-use crate::runtime::Engine;
+use crate::runtime::EnginePool;
 use crate::scheduler::{Dl2Config, Dl2Scheduler, Scheduler};
 use crate::sim::{derive_seed, Harness};
 use crate::trace::JobSpec;
@@ -205,9 +222,11 @@ impl OnlineTrainer {
             }
         }
 
-        let n_updates = rewards.len();
+        // One update per elapsed slot (paper cadence) — but report the
+        // number actually applied: `make_batch` yields `None` until
+        // enough samples exist, and that break must not be counted.
         let mut entropies = Vec::new();
-        for _ in 0..n_updates {
+        for _ in 0..rewards.len() {
             let batch = self.make_batch(&newest);
             let Some(b) = batch else { break };
             let e = self.apply_update(&b);
@@ -218,30 +237,32 @@ impl OnlineTrainer {
         EpisodeStats {
             avg_jct,
             total_reward: rewards.iter().sum(),
-            updates: n_updates,
+            updates: entropies.len(),
             mean_entropy: mean(&entropies.iter().map(|&x| x as f64).collect::<Vec<_>>())
                 as f32,
         }
     }
 
     /// Decima-style batched training round: collect every episode's
-    /// rollout in parallel on the harness — each worker loads its own
-    /// engine from `artifacts_dir` and rolls out a scheduler replica
+    /// rollout in parallel on the harness — each worker checks one engine
+    /// out of `pool` for the whole round and rolls out scheduler replicas
     /// frozen at the current parameters — then apply the updates serially
     /// in episode order.
     ///
-    /// Within a batch every rollout sees the same policy (that is the
-    /// A3C/Decima trade-off buying the parallelism); exploration streams
-    /// are seeded per-(round, episode) via [`derive_seed`], so results
-    /// depend on neither worker scheduling nor prior calls replaying.
+    /// Within a round every rollout sees the same policy (the A3C/Decima
+    /// staleness trade-off buying the parallelism; see the module doc);
+    /// exploration streams are seeded per-(round, episode) via
+    /// [`derive_seed`], so results depend on neither worker scheduling
+    /// nor prior calls replaying.
     ///
-    /// Each worker loads a fresh engine per episode; see ROADMAP "Open
-    /// items" for the planned worker-pinned engine cache (with the real
-    /// PJRT backend, executable compilation is per-engine).
+    /// Engine economics: `min(threads, episodes)` checkouts per round,
+    /// and — because the pool recycles engines with their compiled
+    /// executables — new `Engine::load`s only on the first round (or when
+    /// other pool users hold engines concurrently).
     pub fn train_episodes_parallel(
         &mut self,
         harness: &Harness,
-        artifacts_dir: &Path,
+        pool: &EnginePool,
         episodes: &[(ClusterConfig, Vec<JobSpec>)],
     ) -> anyhow::Result<Vec<EpisodeStats>> {
         let base_cfg = self.sched.cfg.clone();
@@ -249,25 +270,40 @@ impl OnlineTrainer {
         let val = self.sched.val.theta.clone();
         let (epoch_error, max_slots) = (self.opts.epoch_error, self.opts.max_slots);
         let round = self.par_rounds;
-        let rollouts = harness.map(episodes, |i, item| -> anyhow::Result<Rollout> {
-            let (ccfg, specs) = item;
-            let engine = Engine::load(artifacts_dir)?;
-            let cfg = Dl2Config {
-                seed: derive_seed(base_cfg.seed, derive_seed(0xE715_0DE0 ^ round, i as u64)),
-                ..base_cfg.clone()
-            };
-            let mut sched = Dl2Scheduler::new(engine, cfg);
-            sched.pol.set_theta(&pol);
-            sched.val.set_theta(&val);
-            Ok(collect_rollout(
-                &mut sched,
-                ccfg,
-                None,
-                specs,
-                epoch_error,
-                max_slots,
-            ))
-        });
+        let rollouts = harness.map_with(
+            episodes,
+            || pool.checkout(),
+            |guard, i, item| -> anyhow::Result<Rollout> {
+                let (ccfg, specs) = item;
+                let guard = guard
+                    .as_mut()
+                    .map_err(|e| anyhow::anyhow!("engine checkout failed: {e:#}"))?;
+                let cfg = Dl2Config {
+                    seed: derive_seed(base_cfg.seed, derive_seed(0xE715_0DE0 ^ round, i as u64)),
+                    ..base_cfg.clone()
+                };
+                let mut sched = Dl2Scheduler::new(guard.take(), cfg);
+                // Fail fast (and return the engine) when the backend or
+                // artifacts are broken, instead of panicking mid-episode
+                // — keeps the all-or-nothing round error path intact.
+                if let Err(e) = sched.engine.warmup(sched.cfg.j) {
+                    guard.put_back(sched.engine);
+                    return Err(e.context("worker engine warmup failed"));
+                }
+                sched.pol.set_theta(&pol);
+                sched.val.set_theta(&val);
+                let rollout = collect_rollout(
+                    &mut sched,
+                    ccfg,
+                    None,
+                    specs,
+                    epoch_error,
+                    max_slots,
+                );
+                guard.put_back(sched.engine);
+                Ok(rollout)
+            },
+        );
         // Validate every rollout before applying any update or advancing
         // the round counter, so a failed round can be retried with the
         // same exploration streams and cannot leave the trainer

@@ -8,11 +8,34 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{Context, Result};
 
 use crate::runtime::meta::Meta;
 use crate::runtime::params::TrainState;
+
+/// Process-wide engine construction count (one per [`Engine::load`]).
+/// With the real PJRT backend every load eventually pays client creation
+/// plus per-executable compilation, so this — together with
+/// [`compile_count`] — is the redundant-work metric the engine pool
+/// (`runtime::pool`) exists to minimize: k workers × r rounds should cost
+/// k loads, not k·r.  Read by `benches/perf_pool.rs` and the pool tests.
+static ENGINE_LOADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Process-wide executable compilation count (one per `{name}_j{J}`
+/// compiled by some engine; cache hits inside an engine don't count).
+static ENGINE_COMPILES: AtomicUsize = AtomicUsize::new(0);
+
+/// Total [`Engine::load`] calls so far in this process.
+pub fn engine_loads() -> usize {
+    ENGINE_LOADS.load(Ordering::Relaxed)
+}
+
+/// Total executable compilations so far in this process.
+pub fn compile_count() -> usize {
+    ENGINE_COMPILES.load(Ordering::Relaxed)
+}
 
 /// Losses reported by one `rl_step` execution.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -24,7 +47,11 @@ pub struct RlLosses {
 
 /// One compiled-artifact cache + PJRT client.
 pub struct Engine {
-    client: xla::PjRtClient,
+    /// Created lazily on the first compile/upload so that `load` is a
+    /// pure host-side operation (metadata parse): pools and schedulers
+    /// can be constructed, sized and tested without the native backend,
+    /// which only has to exist once a computation actually runs.
+    client: Option<xla::PjRtClient>,
     dir: PathBuf,
     pub meta: Meta,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
@@ -35,15 +62,16 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Load `meta.txt` from `dir` and create a CPU PJRT client.  Artifacts
-    /// are compiled lazily on first use and cached for the engine lifetime.
+    /// Load `meta.txt` from `dir`.  The PJRT client is created on first
+    /// use and artifacts are compiled lazily and cached for the engine
+    /// lifetime; call [`Engine::warmup`] to force both up front (and to
+    /// fail fast when the native backend is missing).
     pub fn load<P: Into<PathBuf>>(dir: P) -> Result<Engine> {
         let dir = dir.into();
         let meta = Meta::load(&dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+        ENGINE_LOADS.fetch_add(1, Ordering::Relaxed);
         Ok(Engine {
-            client,
+            client: None,
             dir,
             meta,
             executables: HashMap::new(),
@@ -53,6 +81,25 @@ impl Engine {
 
     pub fn artifacts_dir(&self) -> &std::path::Path {
         &self.dir
+    }
+
+    /// Create the CPU PJRT client if this engine doesn't have one yet.
+    fn ensure_client(&mut self) -> Result<&xla::PjRtClient> {
+        if self.client.is_none() {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+            self.client = Some(client);
+        }
+        Ok(self.client.as_ref().unwrap())
+    }
+
+    /// Drop device-resident parameter buffers (compiled executables are
+    /// kept).  The engine pool calls this on checkout: `TrainState.gen`
+    /// counts mutations per *instance*, so a recycled engine could
+    /// otherwise mistake a fresh scheduler's parameters for the cached
+    /// generation of the previous owner.
+    pub fn reset_device_cache(&mut self) {
+        self.policy_bufs.clear();
     }
 
     /// Compile (or fetch cached) `{name}_j{J}`.
@@ -65,9 +112,10 @@ impl Engine {
             })?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
-                .client
+                .ensure_client()?
                 .compile(&comp)
                 .map_err(|e| anyhow::anyhow!("compiling {key} failed: {e:?}"))?;
+            ENGINE_COMPILES.fetch_add(1, Ordering::Relaxed);
             self.executables.insert(key.clone(), exe);
         }
         Ok(&self.executables[&key])
@@ -124,13 +172,13 @@ impl Engine {
         };
         if stale {
             let buf = self
-                .client
+                .ensure_client()?
                 .buffer_from_host_buffer(&pol.theta, &[pol.theta.len()], None)
                 .map_err(err)?;
             self.policy_bufs.insert(j, (pol.gen, buf));
         }
         let state_buf = self
-            .client
+            .ensure_client()?
             .buffer_from_host_buffer(state, &[state.len()], None)
             .map_err(err)?;
         self.executable("policy_infer", j)?; // ensure compiled

@@ -121,6 +121,43 @@ impl Meta {
         Self::parse(&text)
     }
 
+    /// Write a self-consistent `meta.txt` for the given shapes to `dir`
+    /// (P/PV derived from the closed form [`Meta::parse`] checks).  This
+    /// is the host-side half of `make artifacts` — enough for everything
+    /// that never executes a computation: engines load, parameter vectors
+    /// size themselves, pools hand out replicas.  Used by the pool/cache
+    /// tests and `benches/perf_pool.rs` to exercise the runtime layer
+    /// without the native backend.
+    pub fn write_minimal<P: AsRef<Path>>(
+        dir: P,
+        num_types: usize,
+        hidden: usize,
+        batch: usize,
+        js: &[usize],
+    ) -> Result<()> {
+        use std::fmt::Write as _;
+        assert!(!js.is_empty(), "need at least one J value");
+        let mut text = String::new();
+        writeln!(text, "num_types={num_types}").unwrap();
+        writeln!(text, "hidden={hidden}").unwrap();
+        writeln!(text, "batch={batch}").unwrap();
+        let js_list: Vec<String> = js.iter().map(|j| j.to_string()).collect();
+        writeln!(text, "js={}", js_list.join(",")).unwrap();
+        for &j in js {
+            let s = j * (num_types + 5);
+            let a = 3 * j + 1;
+            let params =
+                |out: usize| s * hidden + hidden + hidden * hidden + hidden + hidden * out + out;
+            writeln!(text, "j{j}.S={s}").unwrap();
+            writeln!(text, "j{j}.A={a}").unwrap();
+            writeln!(text, "j{j}.P={}", params(a)).unwrap();
+            writeln!(text, "j{j}.PV={}", params(1)).unwrap();
+        }
+        std::fs::create_dir_all(dir.as_ref())?;
+        std::fs::write(dir.as_ref().join("meta.txt"), text)?;
+        Ok(())
+    }
+
     /// Smallest available J ≥ `want`, or the largest J if none fits.
     pub fn pick_j(&self, want: usize) -> usize {
         self.js
@@ -184,6 +221,19 @@ j10.PV=99585
     fn rejects_bad_invariant() {
         let text = SAMPLE.replace("j5.A=16", "j5.A=17");
         assert!(Meta::parse(&text).is_err());
+    }
+
+    #[test]
+    fn write_minimal_round_trips_through_load() {
+        let dir = std::env::temp_dir().join("dl2_meta_minimal_test");
+        Meta::write_minimal(&dir, 8, 16, 4, &[2, 5]).unwrap();
+        let meta = Meta::load(&dir).unwrap();
+        assert_eq!(meta.num_types, 8);
+        assert_eq!(meta.hidden, 16);
+        assert_eq!(meta.batch, 4);
+        assert_eq!(meta.js, vec![2, 5]);
+        assert_eq!(meta.spec(2).state_dim, 2 * 13);
+        assert_eq!(meta.spec(5).num_actions, 16);
     }
 
     #[test]

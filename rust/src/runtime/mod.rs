@@ -9,7 +9,11 @@
 pub mod engine;
 pub mod meta;
 pub mod params;
+pub mod pool;
 
-pub use engine::{default_artifacts_dir, load_default_engine, Engine, RlLosses};
+pub use engine::{
+    compile_count, default_artifacts_dir, engine_loads, load_default_engine, Engine, RlLosses,
+};
 pub use meta::{Meta, SpecMeta};
 pub use params::{load_params, save_params, TrainState};
+pub use pool::{EnginePool, Pool, Pooled};

@@ -1,0 +1,305 @@
+//! Worker-pinned engine pool: one compiled-executable cache per artifacts
+//! dir, shared by every training round in the process.
+//!
+//! With the real PJRT backend an [`Engine::load`] eventually pays client
+//! creation plus per-artifact executable compilation, so the old
+//! load-per-episode pattern cost k workers × r rounds loads.  A pool
+//! amortizes that to k: each harness worker checks an engine out for the
+//! duration of a round (worker-pinned via
+//! [`Harness::map_with`](crate::sim::Harness::map_with)), the checked-in
+//! engine keeps its compiled executables, and the next round's checkout
+//! reuses it.
+//!
+//! Determinism: pooled reuse cannot change results.  Episode outcomes
+//! depend only on (scenario, θ); the single piece of cross-owner engine
+//! state — the device-resident parameter cache keyed by
+//! `TrainState.gen`, which counts mutations per *instance* — is cleared
+//! by the checkout hook ([`Engine::reset_device_cache`]), so a recycled
+//! engine can never serve a previous owner's parameters.
+//!
+//! [`Pool`] is deliberately generic: the checkout/recycle/counting
+//! machinery is property-tested against cheap fake resources, and
+//! [`EnginePool`] is the `T = Engine` instantiation with a per-dir shared
+//! registry ([`EnginePool::shared`]).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+
+/// A lazily-grown pool of reusable resources.  `checkout` pops an idle
+/// resource or builds a fresh one via the factory; dropping the returned
+/// [`Pooled`] guard checks it back in.  The pool never shrinks: its
+/// high-water size is the maximum number of concurrent checkouts so far
+/// (= the worker count when driven by the harness).
+pub struct Pool<T> {
+    make: Box<dyn Fn() -> Result<T> + Send + Sync>,
+    /// Applied to every resource on checkout (cross-owner state reset).
+    recycle: Box<dyn Fn(&mut T) + Send + Sync>,
+    idle: Mutex<Vec<T>>,
+    built: AtomicUsize,
+    checkouts: AtomicUsize,
+}
+
+impl<T> Pool<T> {
+    /// Pool over `make`, with a no-op recycle hook.
+    pub fn with_factory<F>(make: F) -> Pool<T>
+    where
+        F: Fn() -> Result<T> + Send + Sync + 'static,
+    {
+        Self::with_factory_and_recycle(make, |_| {})
+    }
+
+    /// Pool over `make`; `recycle` runs on every checkout (fresh builds
+    /// included) and must clear any state a previous owner left behind.
+    pub fn with_factory_and_recycle<F, R>(make: F, recycle: R) -> Pool<T>
+    where
+        F: Fn() -> Result<T> + Send + Sync + 'static,
+        R: Fn(&mut T) + Send + Sync + 'static,
+    {
+        Pool {
+            make: Box::new(make),
+            recycle: Box::new(recycle),
+            idle: Mutex::new(Vec::new()),
+            built: AtomicUsize::new(0),
+            checkouts: AtomicUsize::new(0),
+        }
+    }
+
+    /// Check a resource out (idle one if available, else a fresh build).
+    pub fn checkout(&self) -> Result<Pooled<'_, T>> {
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        let reused = self.idle.lock().unwrap().pop();
+        let mut item = match reused {
+            Some(item) => item,
+            None => {
+                let item = (self.make)()?;
+                self.built.fetch_add(1, Ordering::Relaxed);
+                item
+            }
+        };
+        (self.recycle)(&mut item);
+        Ok(Pooled {
+            pool: self,
+            item: Some(item),
+        })
+    }
+
+    /// Resources built so far (the pool's high-water concurrency).
+    pub fn built(&self) -> usize {
+        self.built.load(Ordering::Relaxed)
+    }
+
+    /// Total checkouts served (built + reused).
+    pub fn checkouts(&self) -> usize {
+        self.checkouts.load(Ordering::Relaxed)
+    }
+
+    /// Currently checked-in resources.
+    pub fn idle_len(&self) -> usize {
+        self.idle.lock().unwrap().len()
+    }
+
+    fn check_in(&self, item: T) {
+        self.idle.lock().unwrap().push(item);
+    }
+}
+
+impl<T> std::fmt::Debug for Pool<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool")
+            .field("built", &self.built())
+            .field("checkouts", &self.checkouts())
+            .field("idle", &self.idle_len())
+            .finish()
+    }
+}
+
+/// Checkout guard: derefs to the resource and checks it back in on drop.
+///
+/// Consumers that need the resource *by value* (e.g.
+/// `Dl2Scheduler::new(engine, ..)` owns its engine) [`take`](Self::take)
+/// it out and [`put_back`](Self::put_back) when done; a guard dropped
+/// while empty returns nothing, so a panic between the two simply costs
+/// one rebuild on some later checkout instead of poisoning the pool.
+pub struct Pooled<'p, T> {
+    pool: &'p Pool<T>,
+    item: Option<T>,
+}
+
+impl<T> Pooled<'_, T> {
+    /// Move the resource out of the guard (panics if already taken).
+    pub fn take(&mut self) -> T {
+        self.item.take().expect("resource already taken from guard")
+    }
+
+    /// Return a resource taken with [`take`](Self::take).
+    pub fn put_back(&mut self, item: T) {
+        assert!(self.item.is_none(), "guard already holds a resource");
+        self.item = Some(item);
+    }
+}
+
+impl<T> std::ops::Deref for Pooled<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.item.as_ref().expect("resource taken from guard")
+    }
+}
+
+impl<T> std::ops::DerefMut for Pooled<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.item.as_mut().expect("resource taken from guard")
+    }
+}
+
+impl<T> Drop for Pooled<'_, T> {
+    fn drop(&mut self) {
+        if let Some(item) = self.item.take() {
+            self.pool.check_in(item);
+        }
+    }
+}
+
+/// Pool of worker-pinned [`Engine`] replicas for one artifacts dir.
+pub type EnginePool = Pool<Engine>;
+
+impl EnginePool {
+    /// Fresh (unshared) pool loading engines from `dir`.
+    pub fn new<P: Into<PathBuf>>(dir: P) -> EnginePool {
+        let dir = dir.into();
+        Pool::with_factory_and_recycle(
+            move || Engine::load(&dir),
+            Engine::reset_device_cache,
+        )
+    }
+
+    /// The process-wide shared pool for `dir`: every call site (trainer
+    /// rounds, federation rounds, benches) keyed to the same artifacts
+    /// dir reuses one set of compiled engines.  The key is canonicalized
+    /// so relative and absolute spellings of one directory share a pool;
+    /// a path that doesn't exist yet keys as spelled (its pool only
+    /// hands out errors until the artifacts appear anyway).
+    pub fn shared<P: AsRef<Path>>(dir: P) -> Arc<EnginePool> {
+        static REGISTRY: OnceLock<Mutex<HashMap<PathBuf, Arc<EnginePool>>>> = OnceLock::new();
+        let registry = REGISTRY.get_or_init(|| Mutex::new(HashMap::new()));
+        let key = std::fs::canonicalize(dir.as_ref())
+            .unwrap_or_else(|_| dir.as_ref().to_path_buf());
+        registry
+            .lock()
+            .unwrap()
+            .entry(key.clone())
+            .or_insert_with(|| Arc::new(EnginePool::new(key)))
+            .clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn counting_pool() -> (Arc<AtomicUsize>, Pool<usize>) {
+        let made = Arc::new(AtomicUsize::new(0));
+        let m = made.clone();
+        let pool = Pool::with_factory(move || Ok(m.fetch_add(1, Ordering::SeqCst)));
+        (made, pool)
+    }
+
+    #[test]
+    fn checkout_reuses_after_check_in() {
+        let (made, pool) = counting_pool();
+        {
+            let a = pool.checkout().unwrap();
+            let b = pool.checkout().unwrap();
+            assert_eq!((*a, *b), (0, 1));
+        } // both returned
+        assert_eq!(pool.idle_len(), 2);
+        let _c = pool.checkout().unwrap();
+        let _d = pool.checkout().unwrap();
+        assert_eq!(made.load(Ordering::SeqCst), 2, "reuse must not rebuild");
+        assert_eq!(pool.built(), 2);
+        assert_eq!(pool.checkouts(), 4);
+    }
+
+    #[test]
+    fn concurrent_checkout_builds_at_most_worker_count() {
+        let (made, pool) = counting_pool();
+        let rounds = 5;
+        let workers = 4;
+        for _ in 0..rounds {
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| {
+                        let guard = pool.checkout().unwrap();
+                        // Hold across a yield so checkouts overlap.
+                        std::thread::yield_now();
+                        drop(guard);
+                    });
+                }
+            });
+        }
+        assert!(
+            made.load(Ordering::SeqCst) <= workers,
+            "built {} > {workers} workers",
+            made.load(Ordering::SeqCst)
+        );
+        assert_eq!(pool.checkouts(), rounds * workers);
+    }
+
+    #[test]
+    fn recycle_hook_runs_on_every_checkout() {
+        let recycled = Arc::new(AtomicUsize::new(0));
+        let r = recycled.clone();
+        let pool: Pool<u8> =
+            Pool::with_factory_and_recycle(|| Ok(0), move |_| {
+                r.fetch_add(1, Ordering::SeqCst);
+            });
+        drop(pool.checkout().unwrap());
+        drop(pool.checkout().unwrap()); // reused — hook must still run
+        assert_eq!(recycled.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn take_and_put_back_round_trip() {
+        let (_made, pool) = counting_pool();
+        {
+            let mut g = pool.checkout().unwrap();
+            let v = g.take();
+            g.put_back(v);
+        }
+        assert_eq!(pool.idle_len(), 1);
+        // A guard dropped while empty returns nothing.
+        {
+            let mut g = pool.checkout().unwrap();
+            let _lost = g.take();
+        }
+        assert_eq!(pool.idle_len(), 0);
+        // The pool recovers by building anew.
+        let g = pool.checkout().unwrap();
+        assert_eq!(pool.built(), 2);
+        drop(g);
+    }
+
+    #[test]
+    fn factory_errors_propagate() {
+        let pool: Pool<u8> = Pool::with_factory(|| anyhow::bail!("no backend"));
+        assert!(pool.checkout().is_err());
+        assert_eq!(pool.built(), 0);
+    }
+
+    #[test]
+    fn shared_registry_is_per_dir() {
+        let dir_a = std::env::temp_dir().join("dl2_pool_shared_a");
+        let dir_b = std::env::temp_dir().join("dl2_pool_shared_b");
+        let a1 = EnginePool::shared(&dir_a);
+        let a2 = EnginePool::shared(&dir_a);
+        let b = EnginePool::shared(&dir_b);
+        assert!(Arc::ptr_eq(&a1, &a2), "same dir must share one pool");
+        assert!(!Arc::ptr_eq(&a1, &b), "different dirs must not share");
+    }
+}

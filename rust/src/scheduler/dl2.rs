@@ -14,10 +14,11 @@
 use super::state::{
     action_mask, decode_action, encode_action, encode_state, mask_probs, void_action, Action,
 };
-use super::{Alloc, Scheduler};
+use super::{Alloc, CacheTag, Scheduler};
 use crate::cluster::Cluster;
 use crate::runtime::{Engine, TrainState};
-use crate::util::Rng;
+use crate::sim::derive_seed;
+use crate::util::{fnv1a_f32s, Rng};
 
 /// Job-aware exploration (§4.3): ε-greedy overrides on "poor" states.
 #[derive(Debug, Clone, Copy)]
@@ -252,6 +253,25 @@ impl Dl2Scheduler {
 impl Scheduler for Dl2Scheduler {
     fn name(&self) -> &'static str {
         "dl2"
+    }
+
+    /// Greedy evaluation is a pure function of (spec, θ, J,
+    /// max_inferences): cacheable under a fingerprint of exactly those —
+    /// every `rl_step`/`sl_step`/`set_theta` changes θ, so a policy
+    /// update keys past all cached results of the previous parameters,
+    /// and sweeping the NN bound or the inference budget can never be
+    /// served another configuration's episodes.  Training mode and
+    /// stochastic evaluation consume the scheduler's RNG stream, so
+    /// their results depend on instance history: bypass.
+    fn cache_tag(&self) -> CacheTag {
+        if !self.training && self.cfg.argmax_eval {
+            CacheTag::Policy(derive_seed(
+                fnv1a_f32s(&self.pol.theta),
+                derive_seed(self.cfg.j as u64, self.cfg.max_inferences as u64),
+            ))
+        } else {
+            CacheTag::Bypass
+        }
     }
 
     fn schedule(&mut self, cluster: &Cluster, active: &[usize]) -> Vec<Alloc> {

@@ -16,7 +16,7 @@ pub mod srtf;
 pub mod state;
 pub mod tetris;
 
-pub use dl2::{Dl2Scheduler, Dl2Config, ExploreConfig};
+pub use dl2::{Dl2Config, Dl2Scheduler, ExploreConfig};
 pub use drf::Drf;
 pub use fifo::Fifo;
 pub use offline_rl::offline_rl_trainer;
@@ -30,6 +30,25 @@ use crate::trace::JobSpec;
 /// One job's allocation decision for a slot.
 pub type Alloc = (usize, usize, usize); // (job_id, workers, ps)
 
+/// Cacheability of a scheduler's episode results (consumed by
+/// [`sim::ResultCache`](crate::sim::ResultCache)).  The contract is about
+/// the *instance in its current state*: a freshly-built heuristic is
+/// `Pure`, a frozen greedy policy is `Policy(fingerprint-of-θ)`, and
+/// anything whose decisions depend on hidden evolving state (training
+/// mode, advancing RNG streams, carried-over fitted models) must report
+/// `Bypass` so stale results can never be served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheTag {
+    /// Episode results are a pure function of the scenario spec.
+    Pure,
+    /// Pure given the spec *and* this parameter fingerprint — a policy
+    /// update changes the fingerprint, which invalidates (by keying past)
+    /// every cached result of the previous parameters.
+    Policy(u64),
+    /// Results must never be cached for this instance.
+    Bypass,
+}
+
 pub trait Scheduler {
     fn name(&self) -> &'static str;
 
@@ -38,6 +57,13 @@ pub trait Scheduler {
 
     /// Feedback after the slot ran (learning/fitting schedulers use this).
     fn observe(&mut self, _cluster: &Cluster, _outcome: &SlotOutcome) {}
+
+    /// See [`CacheTag`].  The default is `Pure`, which is correct for
+    /// every scheduler built fresh per episode from its spec; stateful
+    /// instances reused across episodes must override.
+    fn cache_tag(&self) -> CacheTag {
+        CacheTag::Pure
+    }
 }
 
 /// Shadow-placement helper shared by the heuristics: try to grow job

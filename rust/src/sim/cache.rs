@@ -1,0 +1,266 @@
+//! Scenario-level result cache: skip episodes that have already run.
+//!
+//! Pollux-style evaluation sweeps and the figure benches repeatedly
+//! evaluate the *same* (scenario, scheduler) pair — baseline reference
+//! lines, shared validation replicas, overlapping matrix slices.  Every
+//! such episode is a pure function of its [`ScenarioSpec`] and the
+//! scheduler's [`CacheTag`], so the second run is pure waste.  This cache
+//! memoizes aggregated [`ScenarioResult`]s keyed by
+//! (spec fingerprint, scheduler name, policy fingerprint).
+//!
+//! # Invalidation story for policy-bearing schedulers
+//!
+//! A learned scheduler's results are only reusable while its parameters
+//! are frozen.  The contract lives in [`CacheTag`]:
+//!
+//! * `Pure` heuristics cache under policy fingerprint 0 forever — their
+//!   results can never go stale.
+//! * `Policy(fp)` schedulers (DL² in greedy evaluation mode) cache under
+//!   the fingerprint of their parameter vector.  A policy update changes
+//!   `fp`, so stale entries are *keyed past*, never served; they linger
+//!   only as memory, reclaimable via [`ResultCache::invalidate_scheduler`]
+//!   or [`ResultCache::clear`].
+//! * `Bypass` instances (training mode, stochastic evaluation, carried
+//!   fitted state) produce no key and always run.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::scheduler::{CacheTag, Scheduler};
+use crate::util::fnv1a;
+
+use super::harness::ScenarioResult;
+use super::scenario::ScenarioSpec;
+
+/// Stable fingerprint of everything that determines an episode's outcome
+/// on the scenario side: name, cluster config (topology included), trace
+/// config, epoch error, slot guard.
+pub fn spec_fingerprint(spec: &ScenarioSpec) -> u64 {
+    // The Debug form covers every field (and every nested config field)
+    // without hand-maintaining a hash impl per config struct; FNV keeps
+    // it deterministic across runs.
+    fnv1a(format!("{spec:?}").as_bytes())
+}
+
+/// Cache key for one (scenario, scheduler-state) episode.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct EpisodeKey {
+    spec_fp: u64,
+    scheduler: String,
+    policy_fp: u64,
+}
+
+impl EpisodeKey {
+    /// Key for `scheduler` on `spec`, or `None` when the tag says the
+    /// instance must bypass the cache.
+    pub fn new(spec: &ScenarioSpec, scheduler: &str, tag: CacheTag) -> Option<EpisodeKey> {
+        let policy_fp = match tag {
+            CacheTag::Pure => 0,
+            CacheTag::Policy(fp) => fp,
+            CacheTag::Bypass => return None,
+        };
+        Some(EpisodeKey {
+            spec_fp: spec_fingerprint(spec),
+            scheduler: scheduler.to_string(),
+            policy_fp,
+        })
+    }
+
+    /// Key for a scheduler instance (name + current cache tag).
+    pub fn for_scheduler(spec: &ScenarioSpec, sched: &dyn Scheduler) -> Option<EpisodeKey> {
+        Self::new(spec, sched.name(), sched.cache_tag())
+    }
+}
+
+/// Thread-safe memo of episode results.  Shareable across harness
+/// workers; [`ResultCache::global`] is the process-wide instance the
+/// harness uses by default.
+#[derive(Default)]
+pub struct ResultCache {
+    map: Mutex<HashMap<EpisodeKey, ScenarioResult>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl ResultCache {
+    pub fn new() -> ResultCache {
+        ResultCache::default()
+    }
+
+    /// The process-wide cache (what `Harness::run_named` consults).
+    pub fn global() -> &'static ResultCache {
+        static GLOBAL: OnceLock<ResultCache> = OnceLock::new();
+        GLOBAL.get_or_init(ResultCache::new)
+    }
+
+    /// Cached result for `key`, or run `episode`, cache and return it.
+    /// `key = None` (a [`CacheTag::Bypass`] instance) always runs and
+    /// never caches.
+    ///
+    /// No single-flight guarantee: the lock is *not* held while the
+    /// episode runs (that would serialize the whole harness), so two
+    /// workers missing on the same key concurrently both simulate it and
+    /// one result wins the insert.  Harmless for correctness — cacheable
+    /// episodes are deterministic — and the duplicate work only arises
+    /// when one batch contains the same (spec, scheduler) twice.
+    pub fn get_or_run<F>(&self, key: Option<EpisodeKey>, episode: F) -> ScenarioResult
+    where
+        F: FnOnce() -> ScenarioResult,
+    {
+        let Some(key) = key else { return episode() };
+        if let Some(hit) = self.map.lock().unwrap().get(&key).cloned() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let result = episode();
+        self.map
+            .lock()
+            .unwrap()
+            .insert(key, result.clone());
+        result
+    }
+
+    /// Drop every cached entry for `scheduler` (explicit invalidation,
+    /// e.g. after deploying new DL² parameters when the stale entries'
+    /// memory should be reclaimed too).
+    pub fn invalidate_scheduler(&self, scheduler: &str) {
+        self.map
+            .lock()
+            .unwrap()
+            .retain(|k, _| k.scheduler != scheduler);
+    }
+
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cache hits served so far.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Misses (episodes actually run on behalf of a cacheable key).
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for ResultCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResultCache")
+            .field("len", &self.len())
+            .field("hits", &self.hits())
+            .field("misses", &self.misses())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::trace::TraceConfig;
+
+    fn spec(seed: u64) -> ScenarioSpec {
+        ScenarioSpec::new(
+            "cache_test",
+            ClusterConfig {
+                seed,
+                ..Default::default()
+            },
+            TraceConfig::default(),
+        )
+    }
+
+    fn fake_result(tag: &str) -> ScenarioResult {
+        ScenarioResult {
+            scenario: tag.to_string(),
+            scheduler: "t".to_string(),
+            avg_jct_slots: 1.0,
+            jct: crate::util::stats::Aggregate::of(&[1.0]),
+            makespan_slots: 1,
+            mean_gpu_util: 0.5,
+            jct_per_job: vec![1.0],
+        }
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_specs() {
+        assert_eq!(spec_fingerprint(&spec(1)), spec_fingerprint(&spec(1)));
+        assert_ne!(spec_fingerprint(&spec(1)), spec_fingerprint(&spec(2)));
+    }
+
+    #[test]
+    fn hit_after_miss_same_key() {
+        let cache = ResultCache::new();
+        let key = || EpisodeKey::new(&spec(1), "drf", CacheTag::Pure);
+        let a = cache.get_or_run(key(), || fake_result("first"));
+        let b = cache.get_or_run(key(), || panic!("must be served from cache"));
+        assert_eq!(a.scenario, b.scenario);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_spec_scheduler_or_policy_miss() {
+        let cache = ResultCache::new();
+        cache.get_or_run(EpisodeKey::new(&spec(1), "drf", CacheTag::Pure), || {
+            fake_result("a")
+        });
+        cache.get_or_run(EpisodeKey::new(&spec(2), "drf", CacheTag::Pure), || {
+            fake_result("b")
+        });
+        cache.get_or_run(EpisodeKey::new(&spec(1), "fifo", CacheTag::Pure), || {
+            fake_result("c")
+        });
+        cache.get_or_run(EpisodeKey::new(&spec(1), "drf", CacheTag::Policy(9)), || {
+            fake_result("d")
+        });
+        assert_eq!(cache.hits(), 0);
+        assert_eq!(cache.misses(), 4);
+        assert_eq!(cache.len(), 4);
+    }
+
+    #[test]
+    fn bypass_never_caches() {
+        let cache = ResultCache::new();
+        assert!(EpisodeKey::new(&spec(1), "dl2", CacheTag::Bypass).is_none());
+        let mut runs = 0;
+        for _ in 0..2 {
+            cache.get_or_run(None, || {
+                runs += 1;
+                fake_result("x")
+            });
+        }
+        assert_eq!(runs, 2);
+        assert!(cache.is_empty());
+        assert_eq!((cache.hits(), cache.misses()), (0, 0));
+    }
+
+    #[test]
+    fn policy_update_keys_past_stale_entries() {
+        let cache = ResultCache::new();
+        let old = EpisodeKey::new(&spec(1), "dl2", CacheTag::Policy(111));
+        let new = EpisodeKey::new(&spec(1), "dl2", CacheTag::Policy(222));
+        cache.get_or_run(old.clone(), || fake_result("old"));
+        let served = cache.get_or_run(new, || fake_result("new"));
+        assert_eq!(served.scenario, "new", "stale policy result was served");
+        // Explicit reclamation of the stale generation.
+        cache.invalidate_scheduler("dl2");
+        assert!(cache.is_empty());
+        assert_eq!(cache.misses(), 2);
+        // After invalidation, the old key recomputes.
+        let again = cache.get_or_run(old, || fake_result("old2"));
+        assert_eq!(again.scenario, "old2");
+    }
+}

@@ -1,4 +1,6 @@
-//! Work-stealing episode pool over `std::thread::scope`.
+//! Work-stealing episode pool over `std::thread::scope`, with
+//! worker-pinned state ([`Harness::map_with`]) and scenario-result
+//! caching ([`Harness::run_named`] / [`Harness::run_cached`]).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -6,6 +8,7 @@ use std::sync::Mutex;
 use crate::scheduler::{EpisodeResult, Scheduler};
 use crate::util::stats::{self, Aggregate};
 
+use super::cache::{EpisodeKey, ResultCache};
 use super::scenario::ScenarioSpec;
 
 /// Aggregated outcome of one (scheduler × scenario) episode.  Plain data
@@ -88,22 +91,56 @@ impl Harness {
         R: Send,
         F: Fn(usize, &T) -> R + Sync,
     {
+        self.map_with(items, || (), |_, i, t| f(i, t))
+    }
+
+    /// [`Harness::map`] with **worker-pinned state**: every spawned
+    /// worker thread calls `init()` exactly once and threads the
+    /// resulting value mutably through all the items it claims — the
+    /// substrate for expensive per-worker resources such as a pooled
+    /// PJRT engine, which this way is set up `min(threads, items)` times
+    /// per call instead of once per item.
+    ///
+    /// Determinism contract: results must depend only on `(index, item)`
+    /// — the state may cache work (compiled executables, buffers) but
+    /// must not leak information between items, because which items share
+    /// a worker's state is scheduling-dependent.  Under that contract the
+    /// output is bitwise identical for any thread count (`threads == 1`
+    /// runs one state serially).
+    pub fn map_with<T, R, S, I, F>(&self, items: &[T], init: I, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        I: Fn() -> S + Sync,
+        F: Fn(&mut S, usize, &T) -> R + Sync,
+    {
         let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
         let workers = self.threads.min(n);
         if workers <= 1 {
-            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+            let mut state = init();
+            return items
+                .iter()
+                .enumerate()
+                .map(|(i, t)| f(&mut state, i, t))
+                .collect();
         }
         let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
         std::thread::scope(|scope| {
             for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+                scope.spawn(|| {
+                    let mut state = init();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let r = f(&mut state, i, &items[i]);
+                        *slots[i].lock().unwrap() = Some(r);
                     }
-                    let r = f(i, &items[i]);
-                    *slots[i].lock().unwrap() = Some(r);
                 });
             }
         });
@@ -115,7 +152,10 @@ impl Harness {
 
     /// Run every scenario once under a scheduler built per-episode by
     /// `mk_sched` (invoked on the worker thread, so factories may build
-    /// thread-confined state such as a PJRT engine).
+    /// thread-confined state such as a PJRT engine).  Uncached — the
+    /// regression-test path whose serial ≡ parallel guarantee must not be
+    /// satisfied trivially by a memo; production sweeps want
+    /// [`Harness::run_cached`].
     pub fn run<F>(&self, scenarios: &[ScenarioSpec], mk_sched: F) -> Vec<ScenarioResult>
     where
         F: Fn(&ScenarioSpec) -> Box<dyn Scheduler> + Sync,
@@ -127,20 +167,53 @@ impl Harness {
         })
     }
 
+    /// [`Harness::run`] through a result cache: each episode is looked up
+    /// by (spec fingerprint, scheduler name, policy fingerprint) before
+    /// running, per the scheduler's
+    /// [`CacheTag`](crate::scheduler::CacheTag) — `Bypass` instances
+    /// always run.  Results are bitwise identical to the uncached path.
+    pub fn run_cached<F>(
+        &self,
+        cache: &ResultCache,
+        scenarios: &[ScenarioSpec],
+        mk_sched: F,
+    ) -> Vec<ScenarioResult>
+    where
+        F: Fn(&ScenarioSpec) -> Box<dyn Scheduler> + Sync,
+    {
+        self.map(scenarios, |_, spec| {
+            let mut sched = mk_sched(spec);
+            let key = EpisodeKey::for_scheduler(spec, sched.as_ref());
+            cache.get_or_run(key, || {
+                let ep = spec.episode(sched.as_mut());
+                ScenarioResult::from_episode(spec, sched.name(), &ep)
+            })
+        })
+    }
+
     /// The full (scheduler × scenario) batch for named baseline
     /// schedulers, flattened into one work list so the pool stays busy
     /// across both axes.  Results are grouped by scheduler in `names`
     /// order, scenarios in matrix order within each group.
+    ///
+    /// Served through [`ResultCache::global`]: baseline schedulers are
+    /// pure functions of the spec, so repeated sweeps over overlapping
+    /// (scheduler × scenario) sets within one process skip the episodes
+    /// they have already run.
     pub fn run_named(&self, names: &[&str], scenarios: &[ScenarioSpec]) -> Vec<ScenarioResult> {
         let work: Vec<(String, &ScenarioSpec)> = names
             .iter()
             .flat_map(|n| scenarios.iter().map(move |s| (n.to_string(), s)))
             .collect();
+        let cache = ResultCache::global();
         self.map(&work, |_, (name, spec)| {
             let mut sched = crate::pipeline::baseline_by_name(name)
                 .unwrap_or_else(|| panic!("unknown scheduler {name:?}"));
-            let ep = spec.episode(sched.as_mut());
-            ScenarioResult::from_episode(spec, sched.name(), &ep)
+            let key = EpisodeKey::for_scheduler(spec, sched.as_ref());
+            cache.get_or_run(key, || {
+                let ep = spec.episode(sched.as_mut());
+                ScenarioResult::from_episode(spec, sched.name(), &ep)
+            })
         })
     }
 }
@@ -160,6 +233,34 @@ mod tests {
         let parallel = Harness::new(8).map(&items, f);
         assert_eq!(serial, parallel);
         assert_eq!(serial[3], 3 * 1000 + 9);
+    }
+
+    #[test]
+    fn map_with_pins_state_per_worker_and_matches_serial() {
+        use std::sync::atomic::AtomicUsize;
+        let items: Vec<u64> = (0..40).collect();
+        let inits = AtomicUsize::new(0);
+        let f = |calls: &mut usize, i: usize, x: &u64| {
+            *calls += 1; // worker-local: must never race
+            (i as u64) * 100 + x
+        };
+        let serial = Harness::new(1).map_with(&items, || 0usize, f);
+        let init_counting = || {
+            inits.fetch_add(1, Ordering::SeqCst);
+            0usize
+        };
+        let parallel = Harness::new(4).map_with(&items, init_counting, f);
+        assert_eq!(serial, parallel);
+        assert_eq!(
+            inits.load(Ordering::SeqCst),
+            4,
+            "each spawned worker must init exactly once"
+        );
+        // Empty input: no workers, no init.
+        let none: Vec<u64> = Vec::new();
+        assert!(Harness::new(4)
+            .map_with(&none, || panic!("init on empty input"), f)
+            .is_empty());
     }
 
     #[test]

@@ -14,7 +14,15 @@
 //!   locality against every cluster size.
 //! * [`Harness`] — fans (scheduler × scenario) episodes across
 //!   `std::thread::scope` workers and returns aggregated
-//!   [`ScenarioResult`]s.
+//!   [`ScenarioResult`]s.  Workers carry pinned state
+//!   ([`Harness::map_with`]): a pooled PJRT engine survives across the
+//!   items one worker claims, so a training round pays `min(threads,
+//!   episodes)` engine setups, not one per episode.
+//! * [`ResultCache`] — memoizes (scenario, scheduler) episode results by
+//!   (spec fingerprint, scheduler tag), so repeated sweeps skip episodes
+//!   they have already run; policy-bearing schedulers key by parameter
+//!   fingerprint or bypass entirely (see `cache.rs` for the invalidation
+//!   story).
 //!
 //! # Seed derivation
 //!
@@ -36,8 +44,10 @@
 //! order and **bitwise identical for any thread count** — asserted by
 //! `tests/scheduler_integration.rs::harness_parallel_matches_serial`.
 
+mod cache;
 mod harness;
 mod scenario;
 
+pub use cache::{spec_fingerprint, EpisodeKey, ResultCache};
 pub use harness::{mean_avg_jct, Harness, ScenarioResult};
 pub use scenario::{derive_seed, replica_specs, ScenarioMatrix, ScenarioSpec, TopologySpec};

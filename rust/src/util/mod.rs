@@ -38,6 +38,28 @@ macro_rules! prop_check {
     }};
 }
 
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a_step(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(FNV_PRIME)
+}
+
+/// FNV-1a 64-bit hash — the stable fingerprint used by the scenario
+/// result cache (spec and parameter-vector keys).  Dependency-free and
+/// deterministic across runs, unlike `std`'s `DefaultHasher`.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    bytes.iter().fold(FNV_OFFSET, |h, &b| fnv1a_step(h, b))
+}
+
+/// [`fnv1a`] over an f32 slice's bit patterns (policy fingerprints),
+/// without materializing the byte buffer.
+pub fn fnv1a_f32s(xs: &[f32]) -> u64 {
+    xs.iter()
+        .flat_map(|x| x.to_le_bytes())
+        .fold(FNV_OFFSET, fnv1a_step)
+}
+
 /// Read `DL2_BENCH_SCALE` (0 < s ≤ 1) to shrink bench workloads; default 1.
 pub fn bench_scale() -> f64 {
     std::env::var("DL2_BENCH_SCALE")

@@ -1,0 +1,211 @@
+//! Integration tests for the engine pool and the scenario result cache —
+//! the layers that make parallel training pay k engine setups (not k·r)
+//! and repeated sweeps skip episodes they already ran.
+//!
+//! Everything here runs WITHOUT the native XLA backend: `Engine::load`
+//! is a pure host-side metadata parse, so a synthetic `meta.txt`
+//! (`Meta::write_minimal`) is enough to exercise pooling, pinning and
+//! caching for real.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use dl2::cluster::{Cluster, ClusterConfig};
+use dl2::runtime::{EnginePool, Meta};
+use dl2::scheduler::{Alloc, CacheTag, Drf, Scheduler};
+use dl2::sim::{Harness, ResultCache, ScenarioMatrix, ScenarioSpec};
+use dl2::trace::TraceConfig;
+
+fn meta_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dl2_pool_cache_{tag}"));
+    Meta::write_minimal(&dir, 8, 16, 4, &[2, 5]).unwrap();
+    dir
+}
+
+#[test]
+fn worker_pinned_engines_load_once_per_worker_not_per_item() {
+    let dir = meta_dir("pinned");
+    let pool = EnginePool::new(&dir);
+    let workers = 3;
+    let harness = Harness::new(workers);
+    let items: Vec<u64> = (0..12).collect();
+    let rounds = 3;
+    // The barrier holds every worker at checkout until all three hold an
+    // engine, pinning the worst case: maximum concurrent demand per
+    // round, exactly like a round whose episodes all run long.
+    let barrier = std::sync::Barrier::new(workers);
+    for _ in 0..rounds {
+        let out = harness.map_with(
+            &items,
+            || {
+                let guard = pool.checkout();
+                barrier.wait();
+                guard
+            },
+            |guard, _, x| {
+                let engine = guard.as_mut().expect("checkout failed");
+                engine.meta.batch as u64 + x
+            },
+        );
+        assert_eq!(out, items.iter().map(|x| 4 + x).collect::<Vec<_>>());
+    }
+    // 3 workers spawned per round, each checking out exactly once:
+    // engines built == workers (round 1), reused thereafter — never
+    // rounds × items (36) or even rounds × workers (9).
+    assert_eq!(pool.built(), workers, "engine loads must equal the worker count");
+    assert_eq!(pool.checkouts(), rounds * workers);
+    assert_eq!(pool.idle_len(), workers);
+}
+
+#[test]
+fn serial_harness_uses_a_single_pooled_engine() {
+    let dir = meta_dir("serial");
+    let pool = EnginePool::new(&dir);
+    let items: Vec<u64> = (0..5).collect();
+    let out = Harness::new(1).map_with(
+        &items,
+        || pool.checkout(),
+        |guard, i, _| guard.as_mut().unwrap().meta.num_types + i,
+    );
+    assert_eq!(out, vec![8, 9, 10, 11, 12]);
+    assert_eq!(pool.built(), 1);
+    assert_eq!(pool.checkouts(), 1);
+}
+
+#[test]
+fn pool_checkout_surfaces_missing_artifacts_as_errors() {
+    let pool = EnginePool::new(std::env::temp_dir().join("dl2_no_such_artifacts"));
+    assert!(pool.checkout().is_err());
+    assert_eq!(pool.built(), 0);
+}
+
+fn scenarios(seed: u64) -> Vec<ScenarioSpec> {
+    ScenarioMatrix::new(
+        ClusterConfig {
+            num_servers: 6,
+            seed,
+            ..Default::default()
+        },
+        TraceConfig {
+            num_jobs: 5,
+            seed: seed ^ 0xABCD,
+            ..Default::default()
+        },
+    )
+    .with_replicas(2)
+    .expand()
+}
+
+#[test]
+fn run_cached_skips_repeated_episodes_and_matches_uncached() {
+    let specs = scenarios(901);
+    let harness = Harness::new(2);
+    let cache = ResultCache::new();
+    let mk = |_: &ScenarioSpec| -> Box<dyn Scheduler> { Box::new(Drf) };
+    let uncached = harness.run(&specs, mk);
+    let first = harness.run_cached(&cache, &specs, mk);
+    assert_eq!(cache.misses(), specs.len());
+    assert_eq!(cache.hits(), 0);
+    let second = harness.run_cached(&cache, &specs, mk);
+    assert_eq!(cache.hits(), specs.len(), "second sweep must be all hits");
+    assert_eq!(cache.misses(), specs.len());
+    for ((u, a), b) in uncached.iter().zip(&first).zip(&second) {
+        assert_eq!(u.scenario, a.scenario);
+        assert_eq!(u.avg_jct_slots, a.avg_jct_slots, "{}", u.scenario);
+        assert_eq!(u.jct_per_job, a.jct_per_job, "{}", u.scenario);
+        assert_eq!(a.avg_jct_slots, b.avg_jct_slots, "{}", a.scenario);
+        assert_eq!(a.jct_per_job, b.jct_per_job, "{}", a.scenario);
+        assert_eq!(a.makespan_slots, b.makespan_slots, "{}", a.scenario);
+    }
+}
+
+#[test]
+fn run_named_repeat_serves_identical_results_from_global_cache() {
+    // Distinct seeds so this test owns its keys in the global cache.
+    let specs = scenarios(31_337);
+    let harness = Harness::new(2);
+    let a = harness.run_named(&["drf", "fifo"], &specs);
+    let hits_before = ResultCache::global().hits();
+    let b = harness.run_named(&["drf", "fifo"], &specs);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.scenario, y.scenario);
+        assert_eq!(x.scheduler, y.scheduler);
+        assert_eq!(x.avg_jct_slots, y.avg_jct_slots, "{}", x.scenario);
+        assert_eq!(x.jct_per_job, y.jct_per_job, "{}", x.scenario);
+    }
+    assert!(
+        ResultCache::global().hits() >= hits_before + a.len(),
+        "repeat sweep did not hit the global cache"
+    );
+}
+
+/// A policy-bearing scheduler for the invalidation guard: delegates its
+/// decisions to DRF but advertises a parameter fingerprint (or refuses
+/// caching entirely), and counts how often it actually schedules.
+struct PolicySched {
+    tag: CacheTag,
+    ran: Arc<AtomicUsize>,
+}
+
+impl Scheduler for PolicySched {
+    fn name(&self) -> &'static str {
+        "policy_guard"
+    }
+    fn schedule(&mut self, cluster: &Cluster, active: &[usize]) -> Vec<Alloc> {
+        self.ran.fetch_add(1, Ordering::SeqCst);
+        Drf.schedule(cluster, active)
+    }
+    fn cache_tag(&self) -> CacheTag {
+        self.tag
+    }
+}
+
+#[test]
+fn policy_update_invalidates_and_bypass_never_caches() {
+    let specs = vec![ScenarioSpec::new(
+        "guard",
+        ClusterConfig {
+            num_servers: 6,
+            seed: 77,
+            ..Default::default()
+        },
+        TraceConfig {
+            num_jobs: 4,
+            seed: 78,
+            ..Default::default()
+        },
+    )];
+    let harness = Harness::new(1);
+    let cache = ResultCache::new();
+    let ran = Arc::new(AtomicUsize::new(0));
+    let run = |tag: CacheTag| {
+        let counter = ran.clone();
+        let before = ran.load(Ordering::SeqCst);
+        let res = harness.run_cached(&cache, &specs, move |_: &ScenarioSpec| -> Box<dyn Scheduler> {
+            Box::new(PolicySched {
+                tag,
+                ran: counter.clone(),
+            })
+        });
+        assert_eq!(res.len(), 1);
+        (ran.load(Ordering::SeqCst) > before, res[0].avg_jct_slots)
+    };
+
+    // Fresh policy: first run computes, repeat is served from cache.
+    let (computed, jct_a) = run(CacheTag::Policy(0xAAAA));
+    assert!(computed);
+    let (computed, jct_b) = run(CacheTag::Policy(0xAAAA));
+    assert!(!computed, "unchanged policy must hit the cache");
+    assert_eq!(jct_a, jct_b);
+    // Policy update: new fingerprint keys past every stale entry.
+    let (computed, _) = run(CacheTag::Policy(0xBBBB));
+    assert!(computed, "a policy update must invalidate cached results");
+    // Training-mode / stochastic instances bypass the cache entirely.
+    for _ in 0..2 {
+        let (computed, _) = run(CacheTag::Bypass);
+        assert!(computed, "Bypass results must never be cached");
+    }
+    assert_eq!(cache.len(), 2, "one entry per policy fingerprint");
+}

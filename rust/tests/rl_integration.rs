@@ -7,7 +7,7 @@ use dl2::pipeline::{validation_trace, PipelineConfig};
 use dl2::rl::{
     evaluate_policy, generate_dataset, train_sl, Federation, OnlineTrainer, RlOptions,
 };
-use dl2::runtime::{default_artifacts_dir, Engine};
+use dl2::runtime::{default_artifacts_dir, Engine, EnginePool};
 use dl2::scheduler::{Dl2Config, Dl2Scheduler, Drf, Scheduler};
 use dl2::sim::Harness;
 use dl2::trace::{generate, JobSpec, TraceConfig};
@@ -167,11 +167,17 @@ fn parallel_rollout_collection_is_thread_count_invariant() {
         let engine = Engine::load(&dir).unwrap();
         let sched = Dl2Scheduler::new(engine, dcfg.clone());
         let mut trainer = OnlineTrainer::new(sched, RlOptions::default());
+        let pool = EnginePool::new(&dir);
         let stats = trainer
-            .train_episodes_parallel(&Harness::new(threads), &dir, &episodes)
+            .train_episodes_parallel(&Harness::new(threads), &pool, &episodes)
             .unwrap();
         assert_eq!(stats.len(), 2);
         assert!(stats.iter().all(|s| s.updates > 0), "no updates applied");
+        assert!(
+            pool.built() <= threads.min(episodes.len()),
+            "loaded {} engines for {threads} workers",
+            pool.built()
+        );
         (
             trainer.sched.pol.theta.clone(),
             stats.iter().map(|s| s.avg_jct).collect(),
@@ -181,6 +187,81 @@ fn parallel_rollout_collection_is_thread_count_invariant() {
     let (theta4, jct4) = run(4);
     assert_eq!(jct1, jct4, "rollout outcomes depend on thread count");
     assert_eq!(theta1, theta4, "parameter updates depend on thread count");
+}
+
+/// Pooled engine reuse across rounds must not change training outcomes:
+/// two rounds on one shared pool ≡ two rounds on fresh per-round pools.
+#[test]
+fn pooled_engine_reuse_is_transparent_across_rounds() {
+    let Some(dir) = artifacts() else { return };
+    let (ccfg, tcfg, dcfg) = small_cfg();
+    let episodes: Vec<(ClusterConfig, Vec<JobSpec>)> = (0..2u64)
+        .map(|e| {
+            (
+                ClusterConfig {
+                    seed: ccfg.seed.wrapping_add(e),
+                    ..ccfg.clone()
+                },
+                generate(&TraceConfig {
+                    num_jobs: 6,
+                    seed: 80 + e,
+                    ..tcfg.clone()
+                }),
+            )
+        })
+        .collect();
+    let harness = Harness::new(2);
+    let run = |shared: bool| -> Vec<f32> {
+        let engine = Engine::load(&dir).unwrap();
+        let mut trainer =
+            OnlineTrainer::new(Dl2Scheduler::new(engine, dcfg.clone()), RlOptions::default());
+        let pool = EnginePool::new(&dir);
+        for _ in 0..2 {
+            if shared {
+                trainer.train_episodes_parallel(&harness, &pool, &episodes).unwrap();
+            } else {
+                let fresh = EnginePool::new(&dir);
+                trainer.train_episodes_parallel(&harness, &fresh, &episodes).unwrap();
+            }
+        }
+        if shared {
+            // Round 2 reused round 1's engines: no further builds.
+            assert!(pool.built() <= 2, "pool rebuilt engines across rounds");
+            assert_eq!(pool.checkouts(), 4, "2 workers x 2 rounds");
+        }
+        trainer.sched.pol.theta.clone()
+    };
+    assert_eq!(run(true), run(false), "engine reuse changed training results");
+}
+
+/// Regression: `EpisodeStats.updates` once reported one update per
+/// elapsed slot even when `make_batch` yielded nothing and the update
+/// loop broke immediately.  Runs without artifacts or the native
+/// backend — `Engine::load` is a pure host-side metadata parse.
+#[test]
+fn apply_rollout_reports_only_applied_updates() {
+    let dir = std::env::temp_dir().join("dl2_updates_count_meta");
+    dl2::runtime::Meta::write_minimal(&dir, 8, 16, 4, &[5]).unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    let sched = Dl2Scheduler::new(
+        engine,
+        Dl2Config {
+            j: 5,
+            ..Default::default()
+        },
+    );
+    let mut trainer = OnlineTrainer::new(sched, RlOptions::default());
+    // Three slots elapsed, but no NN decision was recorded in any of
+    // them: the replay buffer stays empty and no update can be applied.
+    let rollout = dl2::rl::Rollout {
+        rewards: vec![1.0, 0.5, 0.25],
+        slot_samples: vec![Vec::new(), Vec::new(), Vec::new()],
+        avg_jct: 2.0,
+    };
+    let stats = trainer.apply_rollout(rollout);
+    assert_eq!(stats.updates, 0, "reported updates that were never applied");
+    assert_eq!(trainer.updates, 0);
+    assert!(stats.total_reward > 1.7);
 }
 
 #[test]
@@ -222,13 +303,66 @@ fn pipeline_smoke() {
         dl2: dcfg,
         sl_traces: 2,
         sl_steps: 40,
-        rl_episodes: 2,
+        rl_rounds: 2,
+        rl_round_episodes: 1,
         eval_every: 1,
         ..Default::default()
     };
     let engine = Engine::load(dir).unwrap();
     let res = dl2::pipeline::run_pipeline(&cfg, engine).unwrap();
-    assert!(res.history.len() >= 3); // SL point + ≥2 RL evals
+    assert!(res.history.len() >= 3); // SL point + ≥2 round evals
     assert!(res.final_jct > 0.0);
     assert!(res.sl_losses.last().unwrap() < &res.sl_losses[0]);
+}
+
+/// Acceptance pin for the parallel-by-default pipeline: the batched path
+/// is bitwise identical across 1 vs N harness workers, engine loads per
+/// round stay bounded by the worker count (not the episode count), and
+/// the round-granular schedule reproduces a fixed validation-JCT
+/// trajectory on a re-run.
+#[test]
+fn parallel_pipeline_is_worker_count_invariant_and_load_bounded() {
+    let Some(dir) = artifacts() else { return };
+    let (ccfg, tcfg, dcfg) = small_cfg();
+    let base = PipelineConfig {
+        cluster: ccfg,
+        trace: TraceConfig { num_jobs: 8, ..tcfg },
+        dl2: dcfg,
+        sl_traces: 2,
+        sl_steps: 30,
+        rl_rounds: 2,
+        rl_round_episodes: 3,
+        parallel: true,
+        eval_every: 3,
+        ..Default::default()
+    };
+    let run = |workers: usize| -> (Vec<(usize, f64)>, Vec<f32>) {
+        let cfg = PipelineConfig {
+            workers: Some(workers),
+            ..base.clone()
+        };
+        let res = dl2::pipeline::run_pipeline(&cfg, Engine::load(&dir).unwrap()).unwrap();
+        (res.history, res.trainer.sched.pol.theta.clone())
+    };
+    let (hist1, theta1) = run(1);
+    // run_pipeline draws worker engines from the shared per-dir pool;
+    // its build count may only grow by the worker count per run — never
+    // by rounds × episodes (6 here).  The bound is per-pool (robust to
+    // other tests loading their own engines); +1 slack covers another
+    // artifact-gated test checking out of the same shared pool
+    // concurrently.
+    let pool = EnginePool::shared(&dir);
+    let built_before = pool.built();
+    let (hist2, theta2) = run(2);
+    let growth = pool.built() - built_before;
+    assert!(
+        growth <= 2 + 1,
+        "2-worker run grew the shared pool by {growth} engines (episodes leaked past the pool?)"
+    );
+    assert_eq!(hist1, hist2, "validation trajectory depends on worker count");
+    assert_eq!(theta1, theta2, "deployed parameters depend on worker count");
+    // Round-granular training reproduces a fixed trajectory.
+    let (hist2b, theta2b) = run(2);
+    assert_eq!(hist2, hist2b, "round trajectory is not reproducible");
+    assert_eq!(theta2, theta2b);
 }

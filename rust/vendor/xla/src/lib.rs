@@ -12,9 +12,11 @@
 //!   work, so input marshalling code is exercised by tests.
 //! * Anything that would need a real PJRT backend ([`PjRtClient::cpu`],
 //!   `compile`, `execute`) fails with [`Error::BackendUnavailable`].
-//!   Since `PjRtClient::cpu()` is the first call on every path (via
-//!   `Engine::load`, itself gated on `artifacts/meta.txt`), no execution
-//!   path can observe a half-working backend.
+//!   The engine creates its client lazily on the first compile/upload,
+//!   so host-side work (loading `meta.txt`, sizing parameter vectors,
+//!   pooling engines) runs fine on the stub and every execution path
+//!   still fails fast at its first backend call — no path can observe a
+//!   half-working backend.
 //!
 //! To build against the real implementation, replace the `xla` entry in
 //! `rust/Cargo.toml` with the upstream crate (and its `XLA_EXTENSION_DIR`
