@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
             })
         })
         .collect();
-    let dataset = generate_dataset(&mut Drf, &cluster_cfg, &traces, 10, 8, 3000);
+    let dataset = generate_dataset(&mut Drf, &cluster_cfg, &traces, 10, &sched.schema, 3000);
     println!("SL dataset: {} labeled decisions", dataset.len());
     let mut rng = Rng::new(0);
     let losses = train_sl(&mut sched, &dataset, 150, &mut rng);

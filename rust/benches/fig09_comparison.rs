@@ -88,7 +88,11 @@ fn main() -> anyhow::Result<()> {
                 for batch in active.chunks(cfg.dl2.j) {
                     let targets: Vec<_> = batch.iter().map(|&id| target_of(id)).collect();
                     dataset.extend(dl2::rl::decompose_batch(
-                        &cluster, batch, &targets, cfg.dl2.j, 8,
+                        &cluster,
+                        batch,
+                        &targets,
+                        cfg.dl2.j,
+                        &off_sched.schema,
                     ));
                 }
                 let placement = cluster.apply_allocation(&alloc);

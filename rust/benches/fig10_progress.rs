@@ -54,7 +54,8 @@ fn main() -> anyhow::Result<()> {
                 })
             })
             .collect();
-        let dataset = generate_dataset(&mut Drf, &base.cluster, &traces, base.dl2.j, 8, max_slots);
+        let dataset =
+            generate_dataset(&mut Drf, &base.cluster, &traces, base.dl2.j, &sched.schema, max_slots);
         let mut rng = Rng::new(1);
         let chunk = scaled(25, 5);
         let mut updates = 0usize;

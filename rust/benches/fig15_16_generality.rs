@@ -46,7 +46,8 @@ fn main() -> anyhow::Result<()> {
         let traces: Vec<_> = (0..cfg.sl_traces)
             .map(|i| generate(&TraceConfig { seed: 10 + i as u64, ..restricted.clone() }))
             .collect();
-        let data = generate_dataset(&mut Drf, &cfg.cluster, &traces, cfg.dl2.j, 8, max_slots);
+        let data =
+            generate_dataset(&mut Drf, &cfg.cluster, &traces, cfg.dl2.j, &sched.schema, max_slots);
         train_sl(&mut sched, &data, cfg.sl_steps, &mut Rng::new(5));
         let mut trainer = OnlineTrainer::new(sched, RlOptions::default());
         // Phase 1: restricted types; phases 2 and 3: progressively all 8.

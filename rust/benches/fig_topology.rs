@@ -12,9 +12,18 @@
 //! one: the 2-class mix lowers JCTs (some jobs land entirely on 2×
 //! machines), the racked columns raise them (spread jobs lose progress).
 //!
+//! A second matrix sweeps the **feature-set axis** (`--features v1|v2`'s
+//! scenario-matrix counterpart) across the heterogeneous/rack-penalized
+//! topologies: v1/v2 points share identical environment seeds by design
+//! (the observation schema changes what a *policy* sees, never the
+//! cluster), so heuristic baselines must reproduce bitwise-identical
+//! results on every v1/v2 pair — asserted below — while DL² evaluations
+//! key their caches (and their artifacts) per schema.
+//!
 //! Scale with DL2_BENCH_SCALE; episodes fan out across DL2_THREADS.
 
 use dl2::cluster::ClusterConfig;
+use dl2::scheduler::FeatureSet;
 use dl2::sim::{mean_avg_jct, Harness, ScenarioMatrix, TopologySpec};
 use dl2::trace::TraceConfig;
 use dl2::util::{scaled, Table};
@@ -88,4 +97,77 @@ fn main() {
         );
     }
     println!("topology axis produces distinct JCTs for every scheduler ✓");
+
+    // --- Feature-set axis: v1 vs v2 on the hetero/racked topologies.
+    let feature_sets = [FeatureSet::V1, FeatureSet::V2];
+    let hetero_topologies = &topologies[1..]; // skip the homogeneous point
+    let feat_replicas = scaled(3, 2);
+    let feat_scenarios = ScenarioMatrix::new(
+        ClusterConfig {
+            num_servers: 12,
+            ..Default::default()
+        },
+        TraceConfig {
+            num_jobs: scaled(30, 12),
+            ..Default::default()
+        },
+    )
+    .with_topologies(hetero_topologies)
+    .with_feature_sets(&feature_sets)
+    .with_replicas(feat_replicas)
+    .expand();
+    eprintln!(
+        "[fig_topology] feature axis: {} scenarios ({} topologies x {} feature sets x {} replicas)",
+        feat_scenarios.len(),
+        hetero_topologies.len(),
+        feature_sets.len(),
+        feat_replicas,
+    );
+    let feat_schedulers = ["drf", "tetris"];
+    let feat_results = Harness::from_env().run_named(&feat_schedulers, &feat_scenarios);
+
+    // Expansion order per topology block: v1 replicas, then v2 replicas.
+    let mut t = Table::new(
+        "Feature-set axis: avg JCT (slots) by topology x feature set (baselines)",
+        &["topology", "features", "drf", "tetris", "dl2_state_dims(J=10)"],
+    );
+    for (ti, topo) in hetero_topologies.iter().enumerate() {
+        for (fi, fs) in feature_sets.iter().enumerate() {
+            let schema = fs.schema(dl2::cluster::NUM_TYPES);
+            let mut row = vec![topo.name(), fs.name().to_string()];
+            for (si, _) in feat_schedulers.iter().enumerate() {
+                let group =
+                    &feat_results[si * feat_scenarios.len()..(si + 1) * feat_scenarios.len()];
+                let base = ti * feature_sets.len() * feat_replicas + fi * feat_replicas;
+                row.push(format!("{:.2}", mean_avg_jct(&group[base..base + feat_replicas])));
+            }
+            row.push(schema.state_dim(10).to_string());
+            t.row(row);
+        }
+    }
+    t.emit("fig_topology_features");
+
+    // The observation axis must not perturb the environment: baselines
+    // never read the NN state, so every v1/v2 pair is bitwise identical.
+    for (si, name) in feat_schedulers.iter().enumerate() {
+        let group = &feat_results[si * feat_scenarios.len()..(si + 1) * feat_scenarios.len()];
+        for ti in 0..hetero_topologies.len() {
+            let base = ti * feature_sets.len() * feat_replicas;
+            for r in 0..feat_replicas {
+                let v1 = &group[base + r];
+                let v2 = &group[base + feat_replicas + r];
+                assert_eq!(
+                    v1.jct_per_job, v2.jct_per_job,
+                    "{name}: feature axis perturbed the environment ({} vs {})",
+                    v1.scenario, v2.scenario
+                );
+            }
+        }
+    }
+    // ...while the NN input dimensionality genuinely changes.
+    assert!(
+        FeatureSet::V2.schema(dl2::cluster::NUM_TYPES).row_width()
+            > FeatureSet::V1.schema(dl2::cluster::NUM_TYPES).row_width()
+    );
+    println!("feature axis: env invariant for baselines, v2 widens the NN state ✓");
 }

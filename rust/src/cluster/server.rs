@@ -182,6 +182,33 @@ impl Placement {
         self.total_used().norm(&self.total_cap())
     }
 
+    /// Free dominant-share fraction per server class, in class order:
+    /// `1 − (aggregate used on the class's servers).dominant_share(class
+    /// total cap)`, 0.0 for empty (count-zero) classes.  This is the
+    /// [`PerClassFreeCapacity`](crate::scheduler::FeatureBlock::PerClassFreeCapacity)
+    /// observation: on a homogeneous pool it is one number — how much of
+    /// the cluster is left — and on a heterogeneous one it tells the
+    /// policy *which hardware generation* still has room.
+    pub fn class_free_shares(&self) -> Vec<f64> {
+        let classes = self.topo.classes();
+        let mut used = vec![Res::ZERO; classes.len()];
+        for (i, u) in self.used.iter().enumerate() {
+            let k = self.topo.class(i);
+            used[k] = used[k].add(u);
+        }
+        classes
+            .iter()
+            .zip(&used)
+            .map(|(c, u)| {
+                if c.count == 0 {
+                    0.0
+                } else {
+                    1.0 - u.dominant_share(&c.cap.scale(c.count as f64))
+                }
+            })
+            .collect()
+    }
+
     /// Per-server dominant loads (diagnostics / load-balance checks).
     pub fn loads(&self) -> Vec<f64> {
         self.loads.clone()
@@ -398,6 +425,27 @@ mod tests {
         let idx = p.try_place_for(7, &t).unwrap();
         assert_ne!(p.topology().rack(idx), first_rack);
         assert_eq!(p.racks_spanned(7), 2);
+    }
+
+    /// Per-class free shares start at 1, shrink with placements on the
+    /// touched class only, and report 0 for empty classes.
+    #[test]
+    fn class_free_shares_track_per_class_usage() {
+        let cap = Res::new(2.0, 8.0, 48.0);
+        let topo = Topology::new(vec![
+            ServerClass::new("fast", 2, cap, 2.0),
+            ServerClass::new("slow", 2, cap, 1.0),
+            ServerClass::new("retired", 0, cap, 1.0),
+        ]);
+        let mut p = Placement::with_topology(Arc::new(topo));
+        assert_eq!(p.class_free_shares(), vec![1.0, 1.0, 0.0]);
+        // One GPU task lands on server 0 (fast class): fast free share
+        // drops to 1 - 1/4, slow untouched.
+        assert_eq!(p.try_place_for(1, &Res::new(1.0, 2.0, 4.0)), Some(0));
+        let shares = p.class_free_shares();
+        assert!((shares[0] - 0.75).abs() < 1e-12, "fast share {}", shares[0]);
+        assert_eq!(shares[1], 1.0);
+        assert_eq!(shares[2], 0.0);
     }
 
     /// The job's speed multiplier is the slowest class hosting it.

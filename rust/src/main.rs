@@ -16,7 +16,7 @@ use dl2::pipeline::{
 };
 use dl2::rl::evaluate_policy;
 use dl2::runtime::{save_params, Engine};
-use dl2::scheduler::{Dl2Config, Dl2Scheduler};
+use dl2::scheduler::{Dl2Config, Dl2Scheduler, FeatureSet};
 use dl2::trace::TraceConfig;
 use dl2::util::{Args, Table};
 
@@ -62,6 +62,14 @@ fn trace_cfg(args: &Args) -> TraceConfig {
     }
 }
 
+/// `--features v1|v2` — the observation schema (must match the
+/// artifacts' meta.txt).
+fn feature_set(args: &Args) -> FeatureSet {
+    let name = args.str_or("features", "v1");
+    FeatureSet::parse(name)
+        .unwrap_or_else(|| panic!("--features expects v1|v2, got {name:?}"))
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let engine = Engine::load(artifacts_dir(args))?;
     let incumbent = match args.str_or("incumbent", "drf") {
@@ -74,6 +82,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         trace: trace_cfg(args),
         dl2: Dl2Config {
             j: args.usize_or("j", 10),
+            features: feature_set(args),
             seed: args.u64_or("seed", 7),
             ..Default::default()
         },
@@ -88,8 +97,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         ..Default::default()
     };
     println!(
-        "training DL2: J={} incumbent={} sl_steps={} rl {} rounds x {} episodes ({})",
+        "training DL2: J={} features={} incumbent={} sl_steps={} rl {} rounds x {} episodes ({})",
         cfg.dl2.j,
+        cfg.dl2.features.name(),
         cfg.incumbent.name(),
         cfg.sl_steps,
         cfg.rl_rounds,
@@ -127,9 +137,10 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     let j = args.usize_or("j", 10);
     let cfg = Dl2Config {
         j,
+        features: feature_set(args),
         ..Default::default()
     };
-    let mut sched = Dl2Scheduler::new(engine, cfg);
+    let mut sched = Dl2Scheduler::try_new(engine, cfg)?;
     sched.engine.warmup(j)?; // fail fast if the backend is missing
     let path = std::path::PathBuf::from(args.str_or("policy", "results/dl2_policy.bin"));
     let theta = dl2::runtime::load_params(&path)?;
@@ -197,6 +208,12 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
         "L={} hidden={} batch={} J variants={:?}",
         meta.num_types, meta.hidden, meta.batch, meta.js
     );
+    println!(
+        "features={} row_width={} fingerprint={:#018x}",
+        meta.features.name(),
+        meta.schema().row_width(),
+        meta.feature_fp
+    );
     for (&j, s) in &meta.specs {
         println!(
             "  J={j}: state={} actions={} policy_params={} value_params={}",
@@ -213,8 +230,8 @@ fn print_help() {
 USAGE: dl2 <train|evaluate|compare|elastic|info> [flags]
 
   train     --j 10 --sl-steps 250 --rl-rounds 8 --round-episodes 4 [--serial] [--workers N]
-            --incumbent drf --out results/dl2_policy.bin
-  evaluate  --policy results/dl2_policy.bin --j 10
+            --incumbent drf --features v1|v2 --out results/dl2_policy.bin
+  evaluate  --policy results/dl2_policy.bin --j 10 --features v1|v2
   compare   --servers 12 --jobs 40
   elastic   --model-mb 98
   info

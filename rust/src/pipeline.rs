@@ -19,6 +19,14 @@
 //! degrades to the paper-faithful serial loop — one episode at a time,
 //! each seeing all previous updates — kept as the regression reference;
 //! both paths consume the identical episode seed schedule.
+//!
+//! Validation on the parallel path is itself batched: each round
+//! boundary's frozen-greedy episodes run through
+//! [`Harness::run_cached`] on pooled engines, keyed by the policy's
+//! θ-fingerprint (`eval_replicas` environment replicas; the default of
+//! 1 records the same history the serial reference does).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -26,9 +34,9 @@ use crate::cluster::{Cluster, ClusterConfig};
 use crate::rl::{generate_dataset, train_sl, OnlineTrainer, RlOptions};
 use crate::runtime::{Engine, EnginePool};
 use crate::scheduler::{
-    Dl2Config, Dl2Scheduler, Drf, Fifo, Optimus, Scheduler, Srtf, Tetris,
+    Alloc, CacheTag, Dl2Config, Dl2Scheduler, Drf, Fifo, Optimus, Scheduler, Srtf, Tetris,
 };
-use crate::sim::Harness;
+use crate::sim::{mean_avg_jct, replica_specs, Harness, ResultCache, ScenarioSpec};
 use crate::trace::{generate, JobSpec, TraceConfig};
 use crate::util::Rng;
 
@@ -88,6 +96,15 @@ pub struct PipelineConfig {
     /// The parallel path evaluates at round boundaries, whenever the
     /// episode count crosses a multiple of this.
     pub eval_every: usize,
+    /// Validation replicas per evaluation point on the parallel path:
+    /// the frozen greedy policy runs `eval_replicas` environment-seed
+    /// replicas of the validation trace, batched through
+    /// [`Harness::run_cached`] on pooled engines, and the recorded JCT
+    /// is their mean.  1 (the default) evaluates exactly the
+    /// environment the serial reference's `trainer.evaluate` uses, so
+    /// both paths record identical histories.  The serial path always
+    /// evaluates singly (paper-faithful reference).
+    pub eval_replicas: usize,
 }
 
 impl PipelineConfig {
@@ -115,6 +132,7 @@ impl Default for PipelineConfig {
             parallel: true,
             workers: None,
             eval_every: 5,
+            eval_replicas: 1,
         }
     }
 }
@@ -155,7 +173,7 @@ pub struct PipelineResult {
 /// rounds by default, serial reference with `parallel = false` —
 /// evaluating on the validation trace.
 pub fn run_pipeline(cfg: &PipelineConfig, engine: Engine) -> Result<PipelineResult> {
-    let mut sched = Dl2Scheduler::new(engine, cfg.dl2.clone());
+    let mut sched = Dl2Scheduler::try_new(engine, cfg.dl2.clone())?;
     // Compile everything up front: fails fast with a clean error when the
     // native backend is missing (Engine::load no longer touches it), and
     // takes first-use compilation latency off the training path.
@@ -180,7 +198,7 @@ pub fn run_pipeline(cfg: &PipelineConfig, engine: Engine) -> Result<PipelineResu
             &cfg.cluster,
             &sl_traces,
             cfg.dl2.j,
-            sched.engine.meta.num_types,
+            &sched.schema,
             cfg.rl_opts.max_slots,
         );
         train_sl(&mut sched, &dataset, cfg.sl_steps, &mut rng)
@@ -213,14 +231,22 @@ pub fn run_pipeline(cfg: &PipelineConfig, engine: Engine) -> Result<PipelineResu
         )
     };
     let total = cfg.rl_total_episodes();
-    let eval_at = |trainer: &mut OnlineTrainer,
+    // Single bookkeeping site for both paths: history sample + best-
+    // checkpoint selection.
+    let record_eval = |trainer: &OnlineTrainer,
+                       jct: f64,
                        history: &mut Vec<(usize, f64)>,
                        best: &mut (f64, Vec<f32>)| {
-        let jct = trainer.evaluate(&cfg.cluster, &val_specs);
         history.push((trainer.updates, jct));
         if jct < best.0 {
             *best = (jct, trainer.sched.pol.theta.clone());
         }
+    };
+    let eval_at = |trainer: &mut OnlineTrainer,
+                   history: &mut Vec<(usize, f64)>,
+                   best: &mut (f64, Vec<f32>)| {
+        let jct = trainer.evaluate(&cfg.cluster, &val_specs);
+        record_eval(trainer, jct, history, best);
     };
 
     if cfg.parallel {
@@ -229,6 +255,26 @@ pub fn run_pipeline(cfg: &PipelineConfig, engine: Engine) -> Result<PipelineResu
             None => Harness::from_env(),
         };
         let pool = EnginePool::shared(trainer.sched.engine.artifacts_dir().to_path_buf());
+        // Eval-on-the-harness: the per-round validation runs as frozen
+        // greedy episodes on pooled engines through the result cache —
+        // the policy-fingerprint path (`CacheTag::Policy`) in the
+        // default pipeline.  Rounds that applied no update leave θ (and
+        // so the fingerprint) unchanged and are served from the cache.
+        let eval_cache = ResultCache::new();
+        let eval_specs: Vec<ScenarioSpec> = {
+            let mut specs = replica_specs(
+                "pipeline_val",
+                &cfg.cluster,
+                &validation_trace_cfg(&cfg.trace),
+                0, // replica 0 is exactly the serial reference's env
+                cfg.eval_replicas.max(1) as u64,
+                cfg.rl_opts.max_slots,
+            );
+            for s in &mut specs {
+                s.features = cfg.dl2.features;
+            }
+            specs
+        };
         for round in 0..cfg.rl_rounds {
             let episodes: Vec<(ClusterConfig, Vec<JobSpec>)> = (0..cfg.rl_round_episodes)
                 .map(|k| episode_inputs(round * cfg.rl_round_episodes + k))
@@ -238,7 +284,8 @@ pub fn run_pipeline(cfg: &PipelineConfig, engine: Engine) -> Result<PipelineResu
             let crossed = cfg.eval_every > 0
                 && (done - cfg.rl_round_episodes) / cfg.eval_every != done / cfg.eval_every;
             if crossed || round + 1 == cfg.rl_rounds {
-                eval_at(&mut trainer, &mut history, &mut best);
+                let jct = eval_on_harness(&harness, &pool, &eval_cache, &eval_specs, &trainer);
+                record_eval(&trainer, jct, &mut history, &mut best);
             }
         }
     } else {
@@ -261,6 +308,89 @@ pub fn run_pipeline(cfg: &PipelineConfig, engine: Engine) -> Result<PipelineResu
         sl_losses,
         trainer,
     })
+}
+
+/// Batch the frozen greedy policy over the validation replica specs via
+/// [`Harness::run_cached`]: each episode draws an engine from the shared
+/// pool (compiled executables survive across rounds), is keyed in the
+/// cache by the policy's θ-fingerprint
+/// ([`CacheTag::Policy`]), and returns the engine on drop.  Replica 0
+/// reproduces `trainer.evaluate` exactly — same environment, same
+/// deterministic greedy decisions — so the default single-replica
+/// configuration records the identical history the serial reference
+/// path does.
+///
+/// Note: `run_cached` constructs the scheduler before consulting the
+/// cache (the instance carries the cache tag), so every eval point —
+/// hits included — pays one checkout plus a parameter init that
+/// `set_theta` then overwrites.  Negligible next to an episode; revisit
+/// only if `eval_replicas` grows large.
+fn eval_on_harness(
+    harness: &Harness,
+    pool: &Arc<EnginePool>,
+    cache: &ResultCache,
+    specs: &[ScenarioSpec],
+    trainer: &OnlineTrainer,
+) -> f64 {
+    let theta = &trainer.sched.pol.theta;
+    let theta_v = &trainer.sched.val.theta;
+    let dcfg = &trainer.sched.cfg;
+    let results = harness.run_cached(cache, specs, |_spec: &ScenarioSpec| -> Box<dyn Scheduler> {
+        let mut guard = pool
+            .checkout()
+            .expect("pooled engine checkout for validation failed");
+        let engine = guard.take();
+        drop(guard);
+        let mut sched = Dl2Scheduler::new(engine, dcfg.clone());
+        // Exactly `evaluate_policy`'s frozen setup: no exploration, no
+        // transition recording, deterministic decision stream.
+        sched.training = false;
+        sched.rng = Rng::new(0xE7A1_5EED ^ sched.cfg.seed);
+        sched.pol.set_theta(theta);
+        sched.val.set_theta(theta_v);
+        Box::new(PooledGreedyEval {
+            sched: Some(sched),
+            pool: Arc::clone(pool),
+        })
+    });
+    mean_avg_jct(&results)
+}
+
+/// Frozen greedy DL² validation replica built around a pooled engine:
+/// schedules (and cache-tags) exactly like the wrapped [`Dl2Scheduler`],
+/// and returns the engine — compiled executables intact — to the shared
+/// [`EnginePool`] when the episode drops it.
+struct PooledGreedyEval {
+    sched: Option<Dl2Scheduler>,
+    pool: Arc<EnginePool>,
+}
+
+impl Scheduler for PooledGreedyEval {
+    fn name(&self) -> &'static str {
+        "dl2"
+    }
+
+    fn schedule(&mut self, cluster: &Cluster, active: &[usize]) -> Vec<Alloc> {
+        self.sched
+            .as_mut()
+            .expect("eval scheduler already released")
+            .schedule(cluster, active)
+    }
+
+    fn cache_tag(&self) -> CacheTag {
+        self.sched
+            .as_ref()
+            .expect("eval scheduler already released")
+            .cache_tag()
+    }
+}
+
+impl Drop for PooledGreedyEval {
+    fn drop(&mut self) {
+        if let Some(sched) = self.sched.take() {
+            self.pool.release(sched.engine);
+        }
+    }
 }
 
 /// Config of the held-out validation sequence for a trace config (§6.2:

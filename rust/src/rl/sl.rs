@@ -7,8 +7,8 @@
 //! cross-entropy against those labels via the AOT `sl_step` artifact.
 
 use crate::cluster::{Cluster, ClusterConfig};
-use crate::scheduler::state::{encode_action, encode_state, void_action};
-use crate::scheduler::Scheduler;
+use crate::scheduler::state::{encode_action, void_action};
+use crate::scheduler::{FeatureSchema, Scheduler};
 use crate::trace::JobSpec;
 use crate::util::Rng;
 
@@ -18,12 +18,18 @@ pub type Labeled = (Vec<f32>, i32);
 /// Decompose target allocations for one batch of ≤J jobs into the action
 /// sequence the NN should imitate, emitting a (state, label) pair per
 /// step; `include_void` appends the terminal void label.
+///
+/// States are built by `schema` without a placement context (the
+/// decomposition labels the incumbent's *targets*, it does not simulate
+/// placement), so v2's topology blocks encode the slot-start view —
+/// every class fully free, no rack spread; see
+/// [`FeatureSchema::encode`].
 pub fn decompose_batch_opts(
     cluster: &Cluster,
     batch: &[usize],
     targets: &[(usize, usize)],
     j: usize,
-    num_types: usize,
+    schema: &FeatureSchema,
     include_void: bool,
 ) -> Vec<Labeled> {
     debug_assert_eq!(batch.len(), targets.len());
@@ -55,7 +61,7 @@ pub fn decompose_batch_opts(
                 break;
             }
         }
-        let state = encode_state(cluster, batch, &walloc, &palloc, j, num_types);
+        let state = schema.encode(cluster, None, batch, &walloc, &palloc, j);
         match action {
             Some((slot, kind)) => {
                 out.push((state, encode_action(slot, kind) as i32));
@@ -91,9 +97,9 @@ pub fn decompose_batch(
     batch: &[usize],
     targets: &[(usize, usize)],
     j: usize,
-    num_types: usize,
+    schema: &FeatureSchema,
 ) -> Vec<Labeled> {
-    decompose_batch_opts(cluster, batch, targets, j, num_types, false)
+    decompose_batch_opts(cluster, batch, targets, j, schema, false)
 }
 
 /// Run episodes of `incumbent` over the given traces, collecting labeled
@@ -110,7 +116,7 @@ pub fn generate_dataset(
     cfg: &ClusterConfig,
     traces: &[Vec<JobSpec>],
     j: usize,
-    num_types: usize,
+    schema: &FeatureSchema,
     max_slots: usize,
 ) -> Vec<Labeled> {
     let mut dataset = Vec::new();
@@ -138,7 +144,7 @@ pub fn generate_dataset(
                 for batch in active.chunks(j) {
                     let targets: Vec<(usize, usize)> =
                         batch.iter().map(|&id| target_of(id)).collect();
-                    dataset.extend(decompose_batch(cluster, batch, &targets, j, num_types));
+                    dataset.extend(decompose_batch(cluster, batch, &targets, j, schema));
                 }
             },
         );
@@ -184,6 +190,10 @@ mod tests {
     use crate::scheduler::state::decode_action;
     use crate::scheduler::Drf;
 
+    fn v1_schema() -> FeatureSchema {
+        FeatureSchema::v1(8)
+    }
+
     #[test]
     fn decompose_reaches_targets_and_ends_void() {
         let mut c = Cluster::new(ClusterConfig {
@@ -192,7 +202,8 @@ mod tests {
         });
         let a = c.submit(0, 10.0, 0.0);
         let b = c.submit(3, 10.0, 0.0);
-        let labeled = decompose_batch_opts(&c, &[a, b], &[(2, 1), (0, 2)], 5, 8, true);
+        let labeled =
+            decompose_batch_opts(&c, &[a, b], &[(2, 1), (0, 2)], 5, &v1_schema(), true);
         // Replay the labels and check final counts.
         let mut w = [0usize; 2];
         let mut p = [0usize; 2];
@@ -223,7 +234,7 @@ mod tests {
             interference: 0.0,
             ..Default::default()
         };
-        let data = generate_dataset(&mut Drf, &cfg, &[specs], 5, 8, 500);
+        let data = generate_dataset(&mut Drf, &cfg, &[specs], 5, &v1_schema(), 500);
         assert!(!data.is_empty());
         let state_dim = 5 * 13;
         assert!(data.iter().all(|(s, _)| s.len() == state_dim));
@@ -239,7 +250,7 @@ mod tests {
         cfg: &ClusterConfig,
         traces: &[Vec<crate::trace::JobSpec>],
         j: usize,
-        num_types: usize,
+        schema: &FeatureSchema,
         max_slots: usize,
     ) -> Vec<Labeled> {
         let mut dataset = Vec::new();
@@ -269,7 +280,7 @@ mod tests {
                 for batch in active.chunks(j) {
                     let targets: Vec<(usize, usize)> =
                         batch.iter().map(|&id| target_of(id)).collect();
-                    dataset.extend(decompose_batch(&cluster, batch, &targets, j, num_types));
+                    dataset.extend(decompose_batch(&cluster, batch, &targets, j, schema));
                 }
                 let placement = cluster.apply_allocation(&alloc);
                 let outcome = cluster.advance(&placement);
@@ -300,8 +311,9 @@ mod tests {
             seed: 17,
             ..Default::default()
         };
-        let new = generate_dataset(&mut Drf, &cfg, &traces, 5, 8, 500);
-        let old = legacy_generate_dataset(&mut Drf, &cfg, &traces, 5, 8, 500);
+        let schema = v1_schema();
+        let new = generate_dataset(&mut Drf, &cfg, &traces, 5, &schema, 500);
+        let old = legacy_generate_dataset(&mut Drf, &cfg, &traces, 5, &schema, 500);
         assert!(!new.is_empty());
         assert_eq!(new.len(), old.len());
         for (i, ((sa, la), (sb, lb))) in new.iter().zip(&old).enumerate() {
@@ -317,7 +329,7 @@ mod tests {
             ..Default::default()
         });
         let a = c.submit(0, 10.0, 0.0);
-        let labeled = decompose_batch(&c, &[a], &[(2, 2)], 5, 8);
+        let labeled = decompose_batch(&c, &[a], &[(2, 2)], 5, &v1_schema());
         assert_eq!(labeled.len(), 2); // two paired grows, no terminal void
         assert!(labeled.iter().all(|(_, l)| *l != void_action(5) as i32));
     }

@@ -253,7 +253,10 @@ impl OnlineTrainer {
     /// staleness trade-off buying the parallelism; see the module doc);
     /// exploration streams are seeded per-(round, episode) via
     /// [`derive_seed`], so results depend on neither worker scheduling
-    /// nor prior calls replaying.
+    /// nor prior calls replaying.  Worker replicas are built from the
+    /// trainer's `Dl2Config` clone, so they materialize the identical
+    /// observation [`FeatureSchema`](crate::scheduler::FeatureSchema)
+    /// (validated against each pooled engine's artifacts).
     ///
     /// Engine economics: `min(threads, episodes)` checkouts per round,
     /// and — because the pool recycles engines with their compiled

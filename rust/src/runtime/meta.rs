@@ -1,17 +1,27 @@
 //! Parser for `artifacts/meta.txt` — the key=value manifest emitted by
 //! `python -m compile.aot` describing every artifact's static shapes.
+//!
+//! The manifest names the feature schema the artifacts were compiled
+//! against (`features=v1|v2` plus its `feat_fp` fingerprint; manifests
+//! that predate the keys default to v1), and every `jJ.S` entry is
+//! cross-checked against `J · row_width(schema)` — so artifacts built
+//! for one observation layout can never be loaded under another and
+//! silently mis-shape tensors.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::scheduler::features::{FeatureSchema, FeatureSet};
+
 /// Static shape info for one J-parameterized artifact family.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SpecMeta {
     /// J — maximum number of concurrent jobs the NN sees.
     pub max_jobs: usize,
-    /// S = J·(L+5), flattened state vector length.
+    /// S = J·row_width(schema) — flattened state vector length
+    /// (J·(L+5) under the v1 schema).
     pub state_dim: usize,
     /// A = 3J+1 actions.
     pub num_actions: usize,
@@ -37,6 +47,12 @@ pub struct Meta {
     pub hidden: usize,
     /// Training mini-batch size baked into sl_step/rl_step (paper: 256).
     pub batch: usize,
+    /// Feature schema the artifacts were compiled against
+    /// (`features=` key; v1 when the manifest predates the schema keys).
+    pub features: FeatureSet,
+    /// Fingerprint of that schema (validated against the manifest's
+    /// `feat_fp` key when present).
+    pub feature_fp: u64,
     /// Available J values, ascending.
     pub js: Vec<usize>,
     pub specs: BTreeMap<usize, SpecMeta>,
@@ -63,6 +79,29 @@ impl Meta {
         let num_types: usize = get("num_types")?.parse()?;
         let hidden: usize = get("hidden")?.parse()?;
         let batch: usize = get("batch")?.parse()?;
+        // Feature schema: named by the manifest (default v1 for
+        // pre-schema manifests), fingerprint-checked when recorded so a
+        // stale `feat_fp` — artifacts built against a schema this build
+        // no longer produces — fails here rather than at tensor time.
+        let features = match kv.get("features") {
+            None => FeatureSet::V1,
+            Some(name) => FeatureSet::parse(name)
+                .with_context(|| format!("meta.txt names unknown feature set {name:?}"))?,
+        };
+        let schema = features.schema(num_types);
+        let feature_fp = schema.fingerprint();
+        if let Some(fp) = kv.get("feat_fp") {
+            let fp: u64 = fp
+                .parse()
+                .with_context(|| format!("malformed feat_fp {fp:?}"))?;
+            if fp != feature_fp {
+                bail!(
+                    "meta.txt feature fingerprint {fp:#018x} does not match schema {} \
+                     ({feature_fp:#018x}): stale artifacts — rerun `make artifacts`",
+                    features.name()
+                );
+            }
+        }
         let js: Vec<usize> = get("js")?
             .split(',')
             .map(|s| s.trim().parse::<usize>().map_err(Into::into))
@@ -83,8 +122,13 @@ impl Meta {
                 value_params: g("PV")?,
             };
             // Cross-check the invariants the rust side relies on.
-            if spec.state_dim != j * (num_types + 5) {
-                bail!("j{j}: S={} != J*(L+5)", spec.state_dim);
+            if spec.state_dim != schema.state_dim(j) {
+                bail!(
+                    "j{j}: S={} != J*row_width = {} under feature schema {}",
+                    spec.state_dim,
+                    schema.state_dim(j),
+                    features.name()
+                );
             }
             if spec.num_actions != 3 * j + 1 {
                 bail!("j{j}: A={} != 3J+1", spec.num_actions);
@@ -109,9 +153,16 @@ impl Meta {
             num_types,
             hidden,
             batch,
+            features,
+            feature_fp,
             js,
             specs,
         })
+    }
+
+    /// The feature schema these artifacts were compiled against.
+    pub fn schema(&self) -> FeatureSchema {
+        self.features.schema(self.num_types)
     }
 
     pub fn load<P: AsRef<Path>>(dir: P) -> Result<Meta> {
@@ -135,16 +186,33 @@ impl Meta {
         batch: usize,
         js: &[usize],
     ) -> Result<()> {
+        Self::write_minimal_with(dir, num_types, hidden, batch, js, FeatureSet::V1)
+    }
+
+    /// [`Meta::write_minimal`] for an explicit feature schema: records
+    /// the schema name + fingerprint and sizes every `S` entry from the
+    /// schema's row width.
+    pub fn write_minimal_with<P: AsRef<Path>>(
+        dir: P,
+        num_types: usize,
+        hidden: usize,
+        batch: usize,
+        js: &[usize],
+        features: FeatureSet,
+    ) -> Result<()> {
         use std::fmt::Write as _;
         assert!(!js.is_empty(), "need at least one J value");
+        let schema = features.schema(num_types);
         let mut text = String::new();
         writeln!(text, "num_types={num_types}").unwrap();
         writeln!(text, "hidden={hidden}").unwrap();
         writeln!(text, "batch={batch}").unwrap();
+        writeln!(text, "features={}", features.name()).unwrap();
+        writeln!(text, "feat_fp={}", schema.fingerprint()).unwrap();
         let js_list: Vec<String> = js.iter().map(|j| j.to_string()).collect();
         writeln!(text, "js={}", js_list.join(",")).unwrap();
         for &j in js {
-            let s = j * (num_types + 5);
+            let s = schema.state_dim(j);
             let a = 3 * j + 1;
             let params =
                 |out: usize| s * hidden + hidden + hidden * hidden + hidden + hidden * out + out;
@@ -198,19 +266,23 @@ j10.PV=99585
         s * h + h + h * h + h + h * out + out
     }
 
-    #[test]
-    fn parses_sample() {
-        // Fix up P/PV to the true closed form so the invariant check passes.
+    /// [`SAMPLE`] with P/PV fixed up to the true closed form so the
+    /// invariant check passes — the one place the fix-up lives.
+    fn fixed_sample() -> String {
         let p5 = expect(65, 256, 16);
         let pv5 = expect(65, 256, 1);
         let p10 = expect(130, 256, 31);
         let pv10 = expect(130, 256, 1);
-        let text = SAMPLE
+        SAMPLE
             .replace("j5.P=86800", &format!("j5.P={p5}"))
             .replace("j5.PV=82945", &format!("j5.PV={pv5}"))
             .replace("j10.P=107279", &format!("j10.P={p10}"))
-            .replace("j10.PV=99585", &format!("j10.PV={pv10}"));
-        let meta = Meta::parse(&text).unwrap();
+            .replace("j10.PV=99585", &format!("j10.PV={pv10}"))
+    }
+
+    #[test]
+    fn parses_sample() {
+        let meta = Meta::parse(&fixed_sample()).unwrap();
         assert_eq!(meta.num_types, 8);
         assert_eq!(meta.js, vec![5, 10]);
         assert_eq!(meta.spec(5).num_actions, 16);
@@ -231,23 +303,70 @@ j10.PV=99585
         assert_eq!(meta.num_types, 8);
         assert_eq!(meta.hidden, 16);
         assert_eq!(meta.batch, 4);
+        assert_eq!(meta.features, FeatureSet::V1);
+        assert_eq!(meta.feature_fp, FeatureSchema::v1(8).fingerprint());
         assert_eq!(meta.js, vec![2, 5]);
         assert_eq!(meta.spec(2).state_dim, 2 * 13);
         assert_eq!(meta.spec(5).num_actions, 16);
     }
 
     #[test]
+    fn manifest_without_schema_keys_defaults_to_v1() {
+        // The python-side `make artifacts` manifest predates the schema
+        // keys; it must keep loading as v1.
+        let meta = Meta::parse(&fixed_sample()).unwrap();
+        assert_eq!(meta.features, FeatureSet::V1);
+        assert_eq!(meta.schema().fingerprint(), meta.feature_fp);
+    }
+
+    #[test]
+    fn v2_schema_round_trips_and_sizes_state_dim() {
+        let dir = std::env::temp_dir().join("dl2_meta_minimal_v2_test");
+        Meta::write_minimal_with(&dir, 8, 16, 4, &[2, 5], FeatureSet::V2).unwrap();
+        let meta = Meta::load(&dir).unwrap();
+        let schema = FeatureSchema::v2(8);
+        assert_eq!(meta.features, FeatureSet::V2);
+        assert_eq!(meta.feature_fp, schema.fingerprint());
+        assert_eq!(meta.spec(2).state_dim, schema.state_dim(2));
+        assert_eq!(meta.spec(5).state_dim, 5 * schema.row_width());
+        assert_ne!(meta.spec(5).state_dim, 5 * 13, "v2 must change S");
+    }
+
+    #[test]
+    fn rejects_stale_feature_fingerprint() {
+        let dir = std::env::temp_dir().join("dl2_meta_stale_fp_test");
+        Meta::write_minimal_with(&dir, 8, 16, 4, &[5], FeatureSet::V2).unwrap();
+        let text = std::fs::read_to_string(dir.join("meta.txt")).unwrap();
+        let fp = FeatureSchema::v2(8).fingerprint();
+        let tampered = text.replace(
+            &format!("feat_fp={fp}"),
+            &format!("feat_fp={}", fp.wrapping_add(1)),
+        );
+        assert_ne!(text, tampered, "tamper target not found");
+        let err = Meta::parse(&tampered).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("stale artifacts"),
+            "unexpected error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn rejects_schema_inconsistent_state_dim() {
+        // A manifest claiming v2 but shaped for v1 must not load.
+        let dir = std::env::temp_dir().join("dl2_meta_wrong_shape_test");
+        Meta::write_minimal_with(&dir, 8, 16, 4, &[5], FeatureSet::V1).unwrap();
+        let text = std::fs::read_to_string(dir.join("meta.txt")).unwrap();
+        let v1_fp = FeatureSchema::v1(8).fingerprint();
+        let v2_fp = FeatureSchema::v2(8).fingerprint();
+        let tampered = text
+            .replace("features=v1", "features=v2")
+            .replace(&format!("feat_fp={v1_fp}"), &format!("feat_fp={v2_fp}"));
+        assert!(Meta::parse(&tampered).is_err());
+    }
+
+    #[test]
     fn pick_j_prefers_smallest_fit() {
-        let p5 = expect(65, 256, 16);
-        let pv5 = expect(65, 256, 1);
-        let p10 = expect(130, 256, 31);
-        let pv10 = expect(130, 256, 1);
-        let text = SAMPLE
-            .replace("j5.P=86800", &format!("j5.P={p5}"))
-            .replace("j5.PV=82945", &format!("j5.PV={pv5}"))
-            .replace("j10.P=107279", &format!("j10.P={p10}"))
-            .replace("j10.PV=99585", &format!("j10.PV={pv10}"));
-        let meta = Meta::parse(&text).unwrap();
+        let meta = Meta::parse(&fixed_sample()).unwrap();
         assert_eq!(meta.pick_j(3), 5);
         assert_eq!(meta.pick_j(6), 10);
         assert_eq!(meta.pick_j(99), 10);

@@ -104,6 +104,18 @@ impl<T> Pool<T> {
         self.idle.lock().unwrap().len()
     }
 
+    /// Return a resource that was moved out of its guard with
+    /// [`Pooled::take`] and outlived it — the escape hatch for consumers
+    /// that own the resource by value beyond the guard's lifetime (e.g.
+    /// a scheduler built around a pooled engine, returning it on drop).
+    /// The resource must be one this pool's factory could have built
+    /// (for an [`EnginePool`]: same artifacts dir) — releasing a foreign
+    /// resource poisons the idle set, and later checkouts will hand it
+    /// to consumers expecting this pool's configuration.
+    pub fn release(&self, item: T) {
+        self.check_in(item);
+    }
+
     fn check_in(&self, item: T) {
         self.idle.lock().unwrap().push(item);
     }
@@ -283,6 +295,21 @@ mod tests {
         let g = pool.checkout().unwrap();
         assert_eq!(pool.built(), 2);
         drop(g);
+    }
+
+    #[test]
+    fn release_returns_taken_resources() {
+        let (made, pool) = counting_pool();
+        let taken = {
+            let mut g = pool.checkout().unwrap();
+            g.take()
+        }; // guard dropped empty: nothing checked in
+        assert_eq!(pool.idle_len(), 0);
+        pool.release(taken);
+        assert_eq!(pool.idle_len(), 1);
+        // The released resource is reused, not rebuilt.
+        drop(pool.checkout().unwrap());
+        assert_eq!(made.load(Ordering::SeqCst), 1);
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //! Inference runs through the AOT `policy_infer` artifact on the PJRT
 //! runtime — no Python anywhere on this path.
 
+use super::features::{FeatureSchema, FeatureSet};
 use super::state::{
-    action_mask, decode_action, encode_action, encode_state, mask_probs, void_action, Action,
+    action_mask, decode_action, encode_action, mask_probs, void_action, Action,
 };
 use super::{Alloc, CacheTag, Scheduler};
 use crate::cluster::Cluster;
@@ -45,6 +46,10 @@ impl Default for ExploreConfig {
 pub struct Dl2Config {
     /// J — the NN's concurrent-job bound (must have artifacts).
     pub j: usize,
+    /// Observation schema (must match the artifacts' `meta.txt`; see
+    /// [`super::features`]).  V1 is the paper's state; V2 adds the
+    /// topology-aware blocks.
+    pub features: FeatureSet,
     pub lr_sl: f32,
     pub lr_rl_policy: f32,
     pub lr_rl_value: f32,
@@ -65,6 +70,7 @@ impl Default for Dl2Config {
     fn default() -> Self {
         Dl2Config {
             j: 20,
+            features: FeatureSet::V1,
             lr_sl: 0.005,
             // The paper trains with lr = 1e-4 and β = 0.1; on this
             // environment those collapse the policy entropy within a few
@@ -94,6 +100,9 @@ pub struct Transition {
 pub struct Dl2Scheduler {
     pub cfg: Dl2Config,
     pub engine: Engine,
+    /// The observation schema (materialized from `cfg.features`,
+    /// validated against the artifacts at construction).
+    pub schema: FeatureSchema,
     pub pol: TrainState,
     pub val: TrainState,
     pub rng: Rng,
@@ -107,22 +116,49 @@ pub struct Dl2Scheduler {
 
 impl Dl2Scheduler {
     /// Fresh scheduler with He-initialized policy/value networks.
+    /// Panics when the configured feature schema does not match the
+    /// artifacts (use [`Dl2Scheduler::try_new`] to handle that
+    /// gracefully).
     pub fn new(engine: Engine, cfg: Dl2Config) -> Self {
+        Self::try_new(engine, cfg).expect("building Dl2Scheduler")
+    }
+
+    /// Fallible constructor: rejects artifacts compiled against a
+    /// different [`FeatureSchema`] than `cfg.features` asks for, so a
+    /// schema/artifact mismatch surfaces as one clear error instead of
+    /// a shape panic deep inside the PJRT runtime.
+    pub fn try_new(engine: Engine, cfg: Dl2Config) -> anyhow::Result<Self> {
+        let schema = cfg.features.schema(engine.meta.num_types);
+        if schema.fingerprint() != engine.meta.feature_fp {
+            anyhow::bail!(
+                "artifacts at {} were compiled for feature schema {} ({:#018x}), but the \
+                 scheduler is configured for {} ({:#018x}); rebuild the artifacts or select \
+                 --features {}",
+                engine.artifacts_dir().display(),
+                engine.meta.features.name(),
+                engine.meta.feature_fp,
+                cfg.features.name(),
+                schema.fingerprint(),
+                engine.meta.features.name(),
+            );
+        }
         let spec = *engine.meta.spec(cfg.j);
+        debug_assert_eq!(spec.state_dim, schema.state_dim(cfg.j));
         let hidden = engine.meta.hidden;
         let mut rng = Rng::new(cfg.seed ^ 0xD12);
         let pol = TrainState::init_policy(&spec, hidden, &mut rng);
         let val = TrainState::init_value(&spec, hidden, &mut rng);
-        Dl2Scheduler {
+        Ok(Dl2Scheduler {
             cfg,
             engine,
+            schema,
             pol,
             val,
             rng,
             training: true,
             transitions: Vec::new(),
             explored: 0,
-        }
+        })
     }
 
     /// Drain recorded transitions (RL driver calls this every slot).
@@ -173,11 +209,17 @@ impl Dl2Scheduler {
         batch: &[usize],
     ) -> (Vec<usize>, Vec<usize>) {
         let j = self.cfg.j;
-        let num_types = self.engine.meta.num_types;
         let mut walloc = vec![0usize; batch.len()];
         let mut palloc = vec![0usize; batch.len()];
         for _ in 0..self.cfg.max_inferences {
-            let state = encode_state(cluster, batch, &walloc, &palloc, j, num_types);
+            // Schema-driven observation: the in-progress placement feeds
+            // the topology blocks (v2), so successive inferences of the
+            // slot see capacity shrink and rack spreads grow as the
+            // sequence allocates.  V1 schemas ignore the placement — the
+            // legacy bitwise-identical path.
+            let state =
+                self.schema
+                    .encode(cluster, Some(&*placement), batch, &walloc, &palloc, j);
             let mask = action_mask(cluster, placement, batch, &walloc, &palloc, j);
             if mask.iter().filter(|&&m| m).count() <= 1 {
                 break; // only void remains
@@ -256,18 +298,23 @@ impl Scheduler for Dl2Scheduler {
     }
 
     /// Greedy evaluation is a pure function of (spec, θ, J,
-    /// max_inferences): cacheable under a fingerprint of exactly those —
-    /// every `rl_step`/`sl_step`/`set_theta` changes θ, so a policy
-    /// update keys past all cached results of the previous parameters,
-    /// and sweeping the NN bound or the inference budget can never be
-    /// served another configuration's episodes.  Training mode and
-    /// stochastic evaluation consume the scheduler's RNG stream, so
+    /// max_inferences, feature schema): cacheable under a fingerprint of
+    /// exactly those — every `rl_step`/`sl_step`/`set_theta` changes θ,
+    /// so a policy update keys past all cached results of the previous
+    /// parameters; sweeping the NN bound or the inference budget can
+    /// never be served another configuration's episodes; and a feature
+    /// schema change ([`FeatureSchema::fingerprint`]) invalidates every
+    /// result produced under the old observation layout.  Training mode
+    /// and stochastic evaluation consume the scheduler's RNG stream, so
     /// their results depend on instance history: bypass.
     fn cache_tag(&self) -> CacheTag {
         if !self.training && self.cfg.argmax_eval {
             CacheTag::Policy(derive_seed(
                 fnv1a_f32s(&self.pol.theta),
-                derive_seed(self.cfg.j as u64, self.cfg.max_inferences as u64),
+                derive_seed(
+                    self.schema.fingerprint(),
+                    derive_seed(self.cfg.j as u64, self.cfg.max_inferences as u64),
+                ),
             ))
         } else {
             CacheTag::Bypass

@@ -1,0 +1,465 @@
+//! Declarative observation schema: what the policy network sees (§4.1),
+//! as data instead of scattered arithmetic.
+//!
+//! The NN input used to be a hardcoded `J×(L+5)` matrix whose layout,
+//! dimension math and scaling constants were duplicated across the
+//! encoder, the artifact manifest, the SL decomposer and the scheduler.
+//! A [`FeatureSchema`] makes the layout a first-class value: an ordered
+//! list of [`FeatureBlock`]s, each owning its width and its encoding
+//! rule.  Every layer derives from the schema —
+//!
+//! * [`FeatureSchema::encode`] builds the flattened `J×row_width` state
+//!   vector (schema [v1](FeatureSet::V1) reproduces the legacy encoder
+//!   bit-for-bit, pinned by `tests/feature_schema.rs`);
+//! * [`crate::runtime::Meta`] validates `state_dim == J · row_width` and
+//!   records the schema's [fingerprint](FeatureSchema::fingerprint) in
+//!   `meta.txt`, so artifacts compiled against another feature set are
+//!   rejected at load time instead of silently mis-shaping tensors;
+//! * [`Dl2Scheduler`](super::Dl2Scheduler) folds the fingerprint into
+//!   its cache tag, so the scenario
+//!   [`ResultCache`](crate::sim::ResultCache) keys past results produced
+//!   under a different observation schema.
+//!
+//! # Feature sets
+//!
+//! [`FeatureSet::V1`] is the paper's observation: one-hot job type,
+//! slots run, remaining epochs, dominant share, and the slot's partial
+//! worker/PS allocation.  [`FeatureSet::V2`] appends the two
+//! topology-aware blocks (Decima/Pollux-style richer cluster state):
+//!
+//! * [`FeatureBlock::PerClassFreeCapacity`] — the free dominant-share
+//!   fraction of each server class (padded to [`MAX_CLASSES`]), so the
+//!   policy can see *which hardware generation* still has room instead
+//!   of one aggregate share;
+//! * [`FeatureBlock::JobRackSpread`] — the fraction of racks the job's
+//!   tasks placed so far this slot span, so the policy can trade
+//!   locality against parallelism instead of inheriting locality from
+//!   the placement heuristic.
+//!
+//! Both topology blocks read the slot's in-progress
+//! [`Placement`](crate::cluster::Placement) when one is supplied (the
+//! DL² multi-inference loop passes its own); encoding without one — the
+//! SL decomposer labels the incumbent's targets without simulating
+//! placement — falls back to the slot-start view: every class fully
+//! free, no rack spread.
+
+use crate::cluster::{Cluster, Placement};
+use crate::util::fnv1a;
+
+/// Feature scaling constants (keep inputs roughly O(1) for the NN).
+/// Part of the schema semantics, so they are folded into the
+/// [fingerprint](FeatureSchema::fingerprint).
+pub const D_SCALE: f64 = 20.0; // slots run
+/// Remaining-epochs scale.
+pub const E_SCALE: f64 = 50.0;
+/// Dominant-share scale (the share is already 0..1).
+pub const R_SCALE: f64 = 1.0;
+/// Task-count scale (max_tasks_per_job default).
+pub const T_SCALE: f64 = 12.0;
+
+/// Width of the [`FeatureBlock::PerClassFreeCapacity`] block: server
+/// classes beyond this many are truncated, topologies with fewer are
+/// zero-padded.  Fixed so `state_dim` stays a compile-time property of
+/// the artifacts rather than of the cluster at hand.
+pub const MAX_CLASSES: usize = 4;
+
+/// One contiguous group of per-job feature columns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureBlock {
+    /// One-hot job type (width = L).
+    OneHotType,
+    /// Time slots the job has run, / [`D_SCALE`].
+    SlotsRun,
+    /// Remaining training epochs, / [`E_SCALE`].
+    RemainingEpochs,
+    /// Dominant-resource share of the slot's partial allocation, scaled
+    /// by the machine count (topology-aware; see
+    /// [`Cluster::dominant_share_for`]).
+    DominantShare,
+    /// Workers allocated so far in this slot's inference sequence,
+    /// / [`T_SCALE`].
+    WorkerAlloc,
+    /// PSs allocated so far in this slot's inference sequence,
+    /// / [`T_SCALE`].
+    PsAlloc,
+    /// Free dominant-share fraction per server class, zero-padded to
+    /// [`MAX_CLASSES`] columns.  Global cluster state, replicated into
+    /// every job row of the flat `J×row_width` matrix.
+    PerClassFreeCapacity,
+    /// Fraction of the topology's racks this job's tasks placed so far
+    /// this slot span (0 while nothing is placed).
+    JobRackSpread,
+}
+
+impl FeatureBlock {
+    /// Number of state-vector columns the block occupies.
+    pub fn width(&self, num_types: usize) -> usize {
+        match self {
+            FeatureBlock::OneHotType => num_types,
+            FeatureBlock::PerClassFreeCapacity => MAX_CLASSES,
+            _ => 1,
+        }
+    }
+
+    /// Stable identifier used in the schema descriptor / fingerprint.
+    pub fn id(&self) -> &'static str {
+        match self {
+            FeatureBlock::OneHotType => "onehot_type",
+            FeatureBlock::SlotsRun => "slots_run",
+            FeatureBlock::RemainingEpochs => "remaining_epochs",
+            FeatureBlock::DominantShare => "dominant_share",
+            FeatureBlock::WorkerAlloc => "walloc",
+            FeatureBlock::PsAlloc => "palloc",
+            FeatureBlock::PerClassFreeCapacity => "class_free_cap",
+            FeatureBlock::JobRackSpread => "rack_spread",
+        }
+    }
+}
+
+/// Named feature-set selector — the `--features v1|v2` surface of the
+/// CLI / [`Dl2Config`](super::Dl2Config) / scenario matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FeatureSet {
+    /// The paper's observation (`J×(L+5)`): bitwise drop-in for the
+    /// pre-schema encoder.
+    #[default]
+    V1,
+    /// V1 + per-class free capacity + job rack spread
+    /// (`J×(L+5+MAX_CLASSES+1)`).
+    V2,
+}
+
+impl FeatureSet {
+    /// Parse a CLI/manifest spelling ("v1" / "v2").
+    pub fn parse(s: &str) -> Option<FeatureSet> {
+        match s {
+            "v1" | "V1" => Some(FeatureSet::V1),
+            "v2" | "V2" => Some(FeatureSet::V2),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (what `meta.txt` and scenario names record).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FeatureSet::V1 => "v1",
+            FeatureSet::V2 => "v2",
+        }
+    }
+
+    /// Materialize the schema for `num_types` job types.
+    pub fn schema(&self, num_types: usize) -> FeatureSchema {
+        match self {
+            FeatureSet::V1 => FeatureSchema::v1(num_types),
+            FeatureSet::V2 => FeatureSchema::v2(num_types),
+        }
+    }
+}
+
+/// An ordered list of [`FeatureBlock`]s: the single source of truth for
+/// the NN input layout, its dimension math and its stable fingerprint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FeatureSchema {
+    set: FeatureSet,
+    num_types: usize,
+    blocks: Vec<FeatureBlock>,
+}
+
+impl FeatureSchema {
+    /// The paper's `J×(L+5)` observation.
+    pub fn v1(num_types: usize) -> FeatureSchema {
+        FeatureSchema {
+            set: FeatureSet::V1,
+            num_types,
+            blocks: vec![
+                FeatureBlock::OneHotType,
+                FeatureBlock::SlotsRun,
+                FeatureBlock::RemainingEpochs,
+                FeatureBlock::DominantShare,
+                FeatureBlock::WorkerAlloc,
+                FeatureBlock::PsAlloc,
+            ],
+        }
+    }
+
+    /// V1 plus the topology-aware blocks.
+    pub fn v2(num_types: usize) -> FeatureSchema {
+        let mut schema = Self::v1(num_types);
+        schema.set = FeatureSet::V2;
+        schema.blocks.push(FeatureBlock::PerClassFreeCapacity);
+        schema.blocks.push(FeatureBlock::JobRackSpread);
+        schema
+    }
+
+    /// The [`FeatureSet`] this schema materializes.
+    pub fn set(&self) -> FeatureSet {
+        self.set
+    }
+
+    /// Number of job types L the one-hot block encodes.
+    pub fn num_types(&self) -> usize {
+        self.num_types
+    }
+
+    /// The ordered blocks.
+    pub fn blocks(&self) -> &[FeatureBlock] {
+        &self.blocks
+    }
+
+    /// Columns per job row (Σ block widths).
+    pub fn row_width(&self) -> usize {
+        self.blocks.iter().map(|b| b.width(self.num_types)).sum()
+    }
+
+    /// Flattened state-vector length for an NN bound of `j` jobs.
+    pub fn state_dim(&self, j: usize) -> usize {
+        j * self.row_width()
+    }
+
+    /// Canonical human-readable descriptor — the fingerprint preimage.
+    /// Covers everything that changes the meaning of a state vector:
+    /// set name, type count, block order/widths, scaling constants.
+    pub fn descriptor(&self) -> String {
+        let blocks: Vec<String> = self
+            .blocks
+            .iter()
+            .map(|b| format!("{}:{}", b.id(), b.width(self.num_types)))
+            .collect();
+        format!(
+            "{};types={};blocks={};scales=d{}|e{}|r{}|t{};max_classes={}",
+            self.set.name(),
+            self.num_types,
+            blocks.join("+"),
+            D_SCALE,
+            E_SCALE,
+            R_SCALE,
+            T_SCALE,
+            MAX_CLASSES,
+        )
+    }
+
+    /// Stable FNV-1a fingerprint of the [descriptor](Self::descriptor):
+    /// recorded in `meta.txt` (stale-artifact rejection), folded into
+    /// DL²'s cache tag (result-cache invalidation).
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a(self.descriptor().as_bytes())
+    }
+
+    /// Build the flattened state vector for a batch of ≤ J active jobs
+    /// with this slot's partial allocation (`walloc`/`palloc`,
+    /// batch-local).
+    ///
+    /// `placement` is the slot's in-progress placement, consumed only by
+    /// the topology blocks ([`FeatureBlock::PerClassFreeCapacity`],
+    /// [`FeatureBlock::JobRackSpread`]); `None` encodes the slot-start
+    /// view (all capacity free, nothing spread).  V1 schemas ignore it
+    /// entirely, which is what makes v1 a bitwise drop-in for the
+    /// legacy encoder.
+    pub fn encode(
+        &self,
+        cluster: &Cluster,
+        placement: Option<&Placement>,
+        batch: &[usize],
+        walloc: &[usize],
+        palloc: &[usize],
+        j: usize,
+    ) -> Vec<f32> {
+        debug_assert!(batch.len() <= j);
+        let row = self.row_width();
+        let mut s = vec![0.0f32; j * row];
+        // Global blocks are identical in every row: compute once.
+        let class_free: Option<Vec<f64>> = self
+            .blocks
+            .contains(&FeatureBlock::PerClassFreeCapacity)
+            .then(|| match placement {
+                Some(p) => p.class_free_shares(),
+                None => cluster
+                    .topology
+                    .classes()
+                    .iter()
+                    .map(|c| if c.count == 0 { 0.0 } else { 1.0 })
+                    .collect(),
+            });
+        let num_racks = cluster.topology.num_racks().max(1);
+        for (slot, &id) in batch.iter().enumerate() {
+            let job = &cluster.jobs[id];
+            let base = slot * row;
+            let mut off = 0usize;
+            for block in &self.blocks {
+                match block {
+                    FeatureBlock::OneHotType => {
+                        let t = job.type_idx.min(self.num_types - 1);
+                        s[base + off + t] = 1.0;
+                    }
+                    FeatureBlock::SlotsRun => {
+                        s[base + off] = (job.slots_run as f64 / D_SCALE) as f32;
+                    }
+                    FeatureBlock::RemainingEpochs => {
+                        s[base + off] = (job.remaining_epochs() / E_SCALE) as f32;
+                    }
+                    FeatureBlock::DominantShare => {
+                        let share = cluster.dominant_share_for(
+                            job.type_idx,
+                            walloc[slot],
+                            palloc[slot],
+                        );
+                        // Scale the cluster-wide share up so it is O(1)
+                        // for typical allocations regardless of cluster
+                        // size.  The topology is the source of truth for
+                        // the machine count (`cfg.num_servers` may be
+                        // stale when an explicit topology is set).
+                        let r = (share * cluster.topology.num_servers() as f64 / R_SCALE)
+                            .min(4.0);
+                        s[base + off] = r as f32;
+                    }
+                    FeatureBlock::WorkerAlloc => {
+                        s[base + off] = (walloc[slot] as f64 / T_SCALE) as f32;
+                    }
+                    FeatureBlock::PsAlloc => {
+                        s[base + off] = (palloc[slot] as f64 / T_SCALE) as f32;
+                    }
+                    FeatureBlock::PerClassFreeCapacity => {
+                        let free = class_free.as_ref().expect("class_free precomputed");
+                        for (k, &f) in free.iter().take(MAX_CLASSES).enumerate() {
+                            s[base + off + k] = f as f32;
+                        }
+                    }
+                    FeatureBlock::JobRackSpread => {
+                        let spanned = placement.map_or(0, |p| p.racks_spanned(id));
+                        s[base + off] = (spanned as f64 / num_racks as f64) as f32;
+                    }
+                }
+                off += block.width(self.num_types);
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterConfig, Res, ServerClass, Topology};
+
+    fn cluster_with_jobs(n: usize) -> Cluster {
+        let mut c = Cluster::new(ClusterConfig {
+            interference: 0.0,
+            ..Default::default()
+        });
+        for i in 0..n {
+            c.submit(i % 8, 10.0, 0.0);
+        }
+        c
+    }
+
+    #[test]
+    fn widths_and_dims() {
+        let v1 = FeatureSchema::v1(8);
+        assert_eq!(v1.row_width(), 13);
+        assert_eq!(v1.state_dim(10), 130);
+        let v2 = FeatureSchema::v2(8);
+        assert_eq!(v2.row_width(), 13 + MAX_CLASSES + 1);
+        assert_eq!(v2.state_dim(10), 10 * 18);
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_distinct() {
+        let v1 = FeatureSchema::v1(8);
+        let v2 = FeatureSchema::v2(8);
+        assert_eq!(v1.fingerprint(), FeatureSchema::v1(8).fingerprint());
+        assert_ne!(v1.fingerprint(), v2.fingerprint());
+        // Type count is part of the schema identity.
+        assert_ne!(v1.fingerprint(), FeatureSchema::v1(4).fingerprint());
+        // Descriptor names the set.
+        assert!(v1.descriptor().starts_with("v1;"));
+        assert!(v2.descriptor().contains("class_free_cap"));
+    }
+
+    #[test]
+    fn feature_set_parse_round_trips() {
+        for set in [FeatureSet::V1, FeatureSet::V2] {
+            assert_eq!(FeatureSet::parse(set.name()), Some(set));
+            assert_eq!(set.schema(8).set(), set);
+        }
+        assert_eq!(FeatureSet::parse("v3"), None);
+        assert_eq!(FeatureSet::default(), FeatureSet::V1);
+    }
+
+    #[test]
+    fn v1_layout_matches_legacy_columns() {
+        let c = cluster_with_jobs(2);
+        let schema = FeatureSchema::v1(8);
+        let s = schema.encode(&c, None, &[0, 1], &[3, 0], &[1, 0], 5);
+        assert_eq!(s.len(), 5 * 13);
+        // job 0 type 0 one-hot; job 1 type 1 one-hot at second row.
+        assert_eq!(s[0], 1.0);
+        assert_eq!(s[14], 1.0);
+        // w/u features of job 0 at the legacy offsets.
+        assert!((s[8 + 3] - 3.0 / 12.0).abs() < 1e-6);
+        assert!((s[8 + 4] - 1.0 / 12.0).abs() < 1e-6);
+        // empty slots all zero.
+        assert!(s[2 * 13..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn v2_topology_blocks_read_the_placement() {
+        let cap = Res::new(2.0, 8.0, 48.0);
+        let topo = Topology::new(vec![
+            ServerClass::new("fast", 2, cap, 2.0),
+            ServerClass::new("slow", 2, cap, 1.0),
+        ])
+        .with_racks(1, 0.3);
+        let mut c = Cluster::new(ClusterConfig {
+            interference: 0.0,
+            ..ClusterConfig::with_topology(topo)
+        });
+        let id = c.submit(0, 10.0, 0.0);
+        let schema = FeatureSchema::v2(8);
+        let row = schema.row_width();
+        let free_off = 13; // after the v1 blocks
+        let spread_off = 13 + MAX_CLASSES;
+
+        // Slot-start view (no placement): classes fully free, pad zero,
+        // no spread.
+        let s0 = schema.encode(&c, None, &[id], &[0], &[0], 5);
+        assert_eq!(s0.len(), 5 * row);
+        assert_eq!(&s0[free_off..free_off + MAX_CLASSES], &[1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(s0[spread_off], 0.0);
+
+        // Place 3 single-GPU workers: racks of 1 server force a spread,
+        // and the touched classes lose free share.
+        let mut p = c.placement();
+        for _ in 0..3 {
+            assert!(p.try_place_for(id, &Res::new(1.0, 2.0, 4.0)).is_some());
+        }
+        let s1 = schema.encode(&c, Some(&p), &[id], &[3], &[0], 5);
+        let free = &s1[free_off..free_off + MAX_CLASSES];
+        assert!(free[0] < 1.0 || free[1] < 1.0, "no class lost capacity: {free:?}");
+        assert!(
+            (s1[spread_off] - p.racks_spanned(id) as f32 / 4.0).abs() < 1e-6,
+            "spread feature {} vs {} racks",
+            s1[spread_off],
+            p.racks_spanned(id)
+        );
+        // The v1 prefix is untouched by the new blocks.
+        assert_eq!(s1[0], 1.0);
+        assert!((s1[8 + 3] - 3.0 / 12.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn v2_truncates_beyond_max_classes() {
+        let cap = Res::new(2.0, 8.0, 48.0);
+        let classes: Vec<ServerClass> = (0..MAX_CLASSES + 2)
+            .map(|k| ServerClass::new("gen", 1, cap, 1.0 + k as f64 * 0.1))
+            .collect();
+        let mut c = Cluster::new(ClusterConfig {
+            interference: 0.0,
+            ..ClusterConfig::with_topology(Topology::new(classes))
+        });
+        let id = c.submit(0, 10.0, 0.0);
+        let schema = FeatureSchema::v2(8);
+        let s = schema.encode(&c, None, &[id], &[0], &[0], 2);
+        assert_eq!(s.len(), 2 * schema.row_width());
+        assert_eq!(&s[13..13 + MAX_CLASSES], &[1.0; MAX_CLASSES]);
+    }
+}

@@ -6,9 +6,26 @@
 //! capacity (checked via a shadow [`Placement`]).  The [`run_episode`]
 //! driver feeds a trace's arrivals in, applies allocations, advances the
 //! environment, and reports completion-time metrics.
+//!
+//! # Observation schema
+//!
+//! What the learned schedulers *see* is declared, not hardcoded: the
+//! [`features`] module defines [`FeatureSchema`] — an ordered list of
+//! [`FeatureBlock`]s owning the NN input layout, dimension math, scaling
+//! constants and a stable fingerprint.  [`FeatureSet::V1`] is the
+//! paper's `J×(L+5)` observation (a bitwise drop-in for the pre-schema
+//! encoder); [`FeatureSet::V2`] adds the topology-aware blocks
+//! (per-class free capacity, job rack spread).  The schema threads
+//! through every consumer — [`state::encode_state`], the DL²
+//! multi-inference loop, the SL decomposer
+//! ([`crate::rl::decompose_batch`]), the artifact manifest
+//! ([`crate::runtime::Meta`]) and the scenario matrix
+//! ([`crate::sim::ScenarioMatrix::with_feature_sets`]) — so changing the
+//! observation is a schema edit, not a cross-layer hunt.
 
 pub mod dl2;
 pub mod drf;
+pub mod features;
 pub mod fifo;
 pub mod offline_rl;
 pub mod optimus;
@@ -18,6 +35,7 @@ pub mod tetris;
 
 pub use dl2::{Dl2Config, Dl2Scheduler, ExploreConfig};
 pub use drf::Drf;
+pub use features::{FeatureBlock, FeatureSchema, FeatureSet};
 pub use fifo::Fifo;
 pub use offline_rl::offline_rl_trainer;
 pub use optimus::Optimus;

@@ -47,6 +47,12 @@ pub fn offline_env(cfg: &ClusterConfig) -> ClusterConfig {
 /// Train `trainer`'s policy purely offline for `episodes` episodes of
 /// simulator-generated traces.  After this, freeze (`training = false`)
 /// and evaluate on the live env — the Fig-9 "OfflineRL" bar.
+///
+/// The observation rides in the trainer's scheduler: its
+/// [`FeatureSchema`](super::features::FeatureSchema) (selected by
+/// `Dl2Config::features`) encodes the offline episodes exactly as it
+/// will encode the live evaluation, so v1-vs-v2 comparisons hold the
+/// offline/online feature mismatch at zero.
 pub fn offline_rl_trainer(
     trainer: &mut OnlineTrainer,
     cfg: &ClusterConfig,

@@ -1,8 +1,10 @@
 //! NN state encoding + action decoding (paper §4.1).
 //!
-//! The input state is the flattened J×(L+5) matrix
-//! `s = (x, d, e, r, w, u)`: one-hot job type, slots run, remaining
-//! epochs, dominant-resource share already allocated this slot, and the
+//! The input state is a flattened `J×row_width` matrix whose layout is
+//! owned by a [`FeatureSchema`](super::features::FeatureSchema) (see
+//! [`super::features`]): schema v1 is the paper's `s = (x, d, e, r, w,
+//! u)` — one-hot job type, slots run, remaining epochs,
+//! dominant-resource share already allocated this slot, and the
 //! worker/PS counts allocated so far in this slot's inference sequence.
 //! Jobs are ordered by arrival time; when more than J jobs are active they
 //! are scheduled in batches of J (Fig 17).
@@ -18,13 +20,8 @@
 //! (i,1)=+1 PS, (i,2)=+1 worker and +1 PS; the last index is the void
 //! action that ends the slot's allocation sequence.
 
+use super::features::FeatureSchema;
 use crate::cluster::Cluster;
-
-/// Feature scaling constants (keep inputs roughly O(1) for the NN).
-const D_SCALE: f64 = 20.0; // slots run
-const E_SCALE: f64 = 50.0; // remaining epochs
-const R_SCALE: f64 = 1.0; // dominant share is already 0..1
-const T_SCALE: f64 = 12.0; // task counts (max_tasks_per_job default)
 
 /// Decoded action.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,8 +54,16 @@ pub fn void_action(j: usize) -> usize {
     3 * j
 }
 
-/// Build the flattened state vector for a batch of ≤ J active jobs with
-/// this slot's partial allocation (`walloc`/`palloc`, batch-local).
+/// Build the flattened schema-v1 state vector for a batch of ≤ J active
+/// jobs with this slot's partial allocation (`walloc`/`palloc`,
+/// batch-local).
+///
+/// Compatibility surface over the schema subsystem: exactly
+/// `FeatureSchema::v1(num_types).encode(..)` with no placement context
+/// — bit-for-bit the pre-schema encoder (pinned against a frozen copy
+/// by `tests/feature_schema.rs`).  Schema-aware callers (the DL²
+/// multi-inference loop, the SL decomposer) hold a
+/// [`FeatureSchema`] and call [`FeatureSchema::encode`] directly.
 pub fn encode_state(
     cluster: &Cluster,
     batch: &[usize],
@@ -67,28 +72,7 @@ pub fn encode_state(
     j: usize,
     num_types: usize,
 ) -> Vec<f32> {
-    debug_assert!(batch.len() <= j);
-    let feat = num_types + 5;
-    let mut s = vec![0.0f32; j * feat];
-    for (slot, &id) in batch.iter().enumerate() {
-        let job = &cluster.jobs[id];
-        let base = slot * feat;
-        let t = job.type_idx.min(num_types - 1);
-        s[base + t] = 1.0;
-        s[base + num_types] = (job.slots_run as f64 / D_SCALE) as f32;
-        s[base + num_types + 1] = (job.remaining_epochs() / E_SCALE) as f32;
-        let share =
-            cluster.dominant_share_for(job.type_idx, walloc[slot], palloc[slot]);
-        // Scale the cluster-wide share up so it is O(1) for typical
-        // allocations regardless of cluster size.  The topology is the
-        // source of truth for the machine count (cfg.num_servers may be
-        // stale when an explicit topology is set).
-        let r = (share * cluster.topology.num_servers() as f64 / R_SCALE).min(4.0);
-        s[base + num_types + 2] = r as f32;
-        s[base + num_types + 3] = (walloc[slot] as f64 / T_SCALE) as f32;
-        s[base + num_types + 4] = (palloc[slot] as f64 / T_SCALE) as f32;
-    }
-    s
+    FeatureSchema::v1(num_types).encode(cluster, None, batch, walloc, palloc, j)
 }
 
 /// Validity mask over the 3J+1 actions for the current partial allocation:

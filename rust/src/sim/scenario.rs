@@ -1,7 +1,7 @@
 //! Scenario descriptions and the axis cross-product builder.
 
 use crate::cluster::{Cluster, ClusterConfig, Res, ServerClass, Topology};
-use crate::scheduler::{run_episode, EpisodeResult, Scheduler};
+use crate::scheduler::{run_episode, EpisodeResult, FeatureSet, Scheduler};
 use crate::trace::{generate, ArrivalPattern, TraceConfig, TraceSource};
 
 /// Mix `base` with a stream tag into an independent 64-bit seed
@@ -153,6 +153,11 @@ pub struct ScenarioSpec {
     pub epoch_error: f64,
     /// Runaway guard per episode.
     pub max_slots: usize,
+    /// Observation schema for policy schedulers evaluated on this point
+    /// (heuristic baselines never read the NN state and ignore it).
+    /// Part of the spec's identity: it flows into the Debug-derived
+    /// cache fingerprint, so v1 and v2 evaluations never share entries.
+    pub features: FeatureSet,
 }
 
 impl ScenarioSpec {
@@ -164,6 +169,7 @@ impl ScenarioSpec {
             trace,
             epoch_error: 0.0,
             max_slots: 5_000,
+            features: FeatureSet::V1,
         }
     }
 
@@ -224,6 +230,8 @@ pub struct ScenarioMatrix {
     epoch_errors: Vec<f64>,
     type_limits: Vec<Option<usize>>,
     topologies: Vec<TopologySpec>,
+    /// Observation-schema axis (see [`ScenarioMatrix::with_feature_sets`]).
+    feature_sets: Vec<FeatureSet>,
     /// Replica indices: same axes, independent derived seeds.
     replicas: Vec<u64>,
     max_slots: usize,
@@ -237,6 +245,7 @@ impl ScenarioMatrix {
             epoch_errors: vec![0.0],
             type_limits: vec![base_trace.type_limit],
             topologies: vec![TopologySpec::Homogeneous],
+            feature_sets: vec![FeatureSet::V1],
             replicas: vec![0],
             max_slots: 5_000,
             base_cluster,
@@ -277,6 +286,21 @@ impl ScenarioMatrix {
         self
     }
 
+    /// Observation-schema axis: every point is expanded once per
+    /// [`FeatureSet`].  Unlike every other axis, the feature set does
+    /// **not** fold into the derived seeds: the observation layout
+    /// changes what a *policy* sees, never the environment, so v1/v2
+    /// points share identical cluster/trace streams — policy comparisons
+    /// across the axis are paired, and schedulers that ignore the NN
+    /// state produce bitwise-identical results on every pair (asserted
+    /// by `benches/fig_topology.rs`).  Non-V1 points get a `_feat*` name
+    /// suffix; `V1` keeps pre-axis names.
+    pub fn with_feature_sets(mut self, sets: &[FeatureSet]) -> Self {
+        assert!(!sets.is_empty());
+        self.feature_sets = sets.to_vec();
+        self
+    }
+
     /// `n` independent replicas (seed-only variation) of every axis point.
     pub fn with_replicas(mut self, n: usize) -> Self {
         assert!(n >= 1);
@@ -296,6 +320,7 @@ impl ScenarioMatrix {
             * self.epoch_errors.len()
             * self.type_limits.len()
             * self.topologies.len()
+            * self.feature_sets.len()
             * self.replicas.len()
     }
 
@@ -304,10 +329,12 @@ impl ScenarioMatrix {
     }
 
     /// Cross-product expansion in a fixed axis order (sizes ▸ patterns ▸
-    /// errors ▸ type limits ▸ topologies ▸ replicas).  Seeds are derived
-    /// from the axis values themselves — see the module doc; the topology
-    /// tag XOR-folds in, with `Homogeneous` as the 0/identity tag, so
-    /// matrices built before this axis existed expand to identical seeds.
+    /// errors ▸ type limits ▸ topologies ▸ feature sets ▸ replicas).
+    /// Seeds are derived from the axis values themselves — see the module
+    /// doc; the topology tag XOR-folds in, with `Homogeneous` as the
+    /// 0/identity tag, so matrices built before this axis existed expand
+    /// to identical seeds.  The feature-set axis deliberately leaves the
+    /// seeds alone (see [`ScenarioMatrix::with_feature_sets`]).
     pub fn expand(&self) -> Vec<ScenarioSpec> {
         // Replay sources feed the recorded sequence back verbatim, so the
         // generator-side trace axes would silently no-op while scenario
@@ -326,62 +353,72 @@ impl ScenarioMatrix {
                 for &err in &self.epoch_errors {
                     for &limit in &self.type_limits {
                         for topo in &self.topologies {
-                            for &replica in &self.replicas {
-                                // Fold every axis value into the seed stream.
-                                let tag = derive_seed(
-                                    derive_seed(
-                                        derive_seed(servers as u64, pattern as u64),
-                                        err.to_bits(),
-                                    ),
-                                    derive_seed(
-                                        limit.map(|l| l as u64 + 1).unwrap_or(0),
-                                        replica,
-                                    ),
-                                ) ^ topo.tag();
-                                // Homogeneous points inherit the base
-                                // config's explicit topology, but only at
-                                // the size it describes — other size-axis
-                                // points fall back to a flat pool so that
-                                // `num_servers`, the scenario name and the
-                                // actual machine set always agree.
-                                let topology = match topo.build(servers, self.base_cluster.server_cap)
-                                {
-                                    Some(t) => Some(t),
-                                    None => self
-                                        .base_cluster
-                                        .topology
-                                        .clone()
-                                        .filter(|t| t.num_servers() == servers),
-                                };
-                                let cluster = ClusterConfig {
-                                    num_servers: servers,
-                                    topology,
-                                    seed: derive_seed(self.base_cluster.seed, tag),
-                                    ..self.base_cluster.clone()
-                                };
-                                let trace = TraceConfig {
-                                    pattern,
-                                    type_limit: limit,
-                                    seed: derive_seed(self.base_trace.seed, tag ^ 0x7ace),
-                                    ..self.base_trace.clone()
-                                };
-                                let topo_part = match topo {
-                                    TopologySpec::Homogeneous => String::new(),
-                                    t => format!("_{}", t.name()),
-                                };
-                                let name = format!(
-                                    "srv{servers}_{}_err{:02}_types{}{topo_part}_r{replica}",
-                                    pattern.name(),
-                                    (err * 100.0).round() as i64,
-                                    limit.unwrap_or(crate::cluster::NUM_TYPES),
-                                );
-                                out.push(ScenarioSpec {
-                                    name,
-                                    cluster,
-                                    trace,
-                                    epoch_error: err,
-                                    max_slots: self.max_slots,
-                                });
+                            for &features in &self.feature_sets {
+                                for &replica in &self.replicas {
+                                    // Fold every axis value into the seed
+                                    // stream — except the feature set,
+                                    // which alters the policy's view but
+                                    // not the environment.
+                                    let tag = derive_seed(
+                                        derive_seed(
+                                            derive_seed(servers as u64, pattern as u64),
+                                            err.to_bits(),
+                                        ),
+                                        derive_seed(
+                                            limit.map(|l| l as u64 + 1).unwrap_or(0),
+                                            replica,
+                                        ),
+                                    ) ^ topo.tag();
+                                    // Homogeneous points inherit the base
+                                    // config's explicit topology, but only at
+                                    // the size it describes — other size-axis
+                                    // points fall back to a flat pool so that
+                                    // `num_servers`, the scenario name and the
+                                    // actual machine set always agree.
+                                    let topology =
+                                        match topo.build(servers, self.base_cluster.server_cap) {
+                                            Some(t) => Some(t),
+                                            None => self
+                                                .base_cluster
+                                                .topology
+                                                .clone()
+                                                .filter(|t| t.num_servers() == servers),
+                                        };
+                                    let cluster = ClusterConfig {
+                                        num_servers: servers,
+                                        topology,
+                                        seed: derive_seed(self.base_cluster.seed, tag),
+                                        ..self.base_cluster.clone()
+                                    };
+                                    let trace = TraceConfig {
+                                        pattern,
+                                        type_limit: limit,
+                                        seed: derive_seed(self.base_trace.seed, tag ^ 0x7ace),
+                                        ..self.base_trace.clone()
+                                    };
+                                    let topo_part = match topo {
+                                        TopologySpec::Homogeneous => String::new(),
+                                        t => format!("_{}", t.name()),
+                                    };
+                                    let feat_part = match features {
+                                        FeatureSet::V1 => String::new(),
+                                        f => format!("_feat{}", f.name()),
+                                    };
+                                    let name = format!(
+                                        "srv{servers}_{}_err{:02}_types{}{topo_part}{feat_part}_r{replica}",
+                                        pattern.name(),
+                                        (err * 100.0).round() as i64,
+                                        limit.unwrap_or(crate::cluster::NUM_TYPES),
+                                    );
+                                    out.push(ScenarioSpec {
+                                        name,
+                                        cluster,
+                                        trace,
+                                        epoch_error: err,
+                                        max_slots: self.max_slots,
+                                        features,
+                                    });
+                                }
                             }
                         }
                     }
@@ -488,6 +525,46 @@ mod tests {
             assert_eq!(topo.num_servers(), s.cluster.num_servers);
             assert!(plain.iter().all(|o| o.cluster.seed != s.cluster.seed));
         }
+    }
+
+    #[test]
+    fn feature_axis_multiplies_without_touching_env_seeds() {
+        let base = ScenarioMatrix::new(ClusterConfig::default(), TraceConfig::default())
+            .with_cluster_sizes(&[8, 16])
+            .with_replicas(2);
+        let with_feats = base
+            .clone()
+            .with_feature_sets(&[FeatureSet::V1, FeatureSet::V2]);
+        assert_eq!(with_feats.len(), base.len() * 2);
+        let plain = base.expand();
+        let specs = with_feats.expand();
+        assert_eq!(specs.len(), plain.len() * 2);
+        // Feature sets iterate outside replicas: per (size) block of 2×2
+        // specs, the first 2 are the V1 ones and must match the pre-axis
+        // expansion exactly — names, env seeds, everything.
+        for (i, old) in plain.iter().enumerate() {
+            let block = i / 2;
+            let new = &specs[block * 4 + (i % 2)];
+            assert_eq!(new.name, old.name);
+            assert_eq!(new.cluster.seed, old.cluster.seed);
+            assert_eq!(new.trace.seed, old.trace.seed);
+            assert_eq!(new.features, FeatureSet::V1);
+            // The paired V2 point: same environment, different identity.
+            let v2 = &specs[block * 4 + 2 + (i % 2)];
+            assert_eq!(v2.features, FeatureSet::V2);
+            assert_eq!(v2.cluster.seed, old.cluster.seed);
+            assert_eq!(v2.trace.seed, old.trace.seed);
+            assert!(v2.name.contains("_featv2"), "{}", v2.name);
+            assert_ne!(v2.name, old.name);
+            // Distinct cache identity despite identical env streams.
+            assert_ne!(
+                crate::sim::spec_fingerprint(v2),
+                crate::sim::spec_fingerprint(old)
+            );
+        }
+        let names: std::collections::BTreeSet<&str> =
+            specs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names.len(), specs.len(), "names must stay unique");
     }
 
     #[test]

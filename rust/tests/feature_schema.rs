@@ -1,0 +1,213 @@
+//! Feature-schema integration tests — the drop-in and rejection
+//! guarantees of the declarative observation subsystem:
+//!
+//! * schema v1 reproduces the **frozen** pre-schema encoder bit-for-bit
+//!   (the copy below is the pre-refactor `encode_state`, verbatim — do
+//!   not "improve" it; its value is being exactly what the encoder used
+//!   to do);
+//! * the schema fingerprint round-trips through `meta.txt`;
+//! * artifacts carrying a different schema than the scheduler asks for
+//!   are rejected at construction with a clear error.
+//!
+//! Everything here runs without the native XLA backend: `Engine::load`
+//! is a pure host-side metadata parse.
+
+use std::path::PathBuf;
+
+use dl2::cluster::{Cluster, ClusterConfig, Res, ServerClass, Topology};
+use dl2::prop_check;
+use dl2::runtime::{Engine, Meta};
+use dl2::scheduler::state::encode_state;
+use dl2::scheduler::{Dl2Config, Dl2Scheduler, FeatureSchema, FeatureSet};
+
+/// The pre-schema `encode_state`, frozen verbatim: the canonical
+/// reference for the v1 bitwise drop-in guarantee.
+fn legacy_encode_state(
+    cluster: &Cluster,
+    batch: &[usize],
+    walloc: &[usize],
+    palloc: &[usize],
+    j: usize,
+    num_types: usize,
+) -> Vec<f32> {
+    const D_SCALE: f64 = 20.0;
+    const E_SCALE: f64 = 50.0;
+    const R_SCALE: f64 = 1.0;
+    const T_SCALE: f64 = 12.0;
+    debug_assert!(batch.len() <= j);
+    let feat = num_types + 5;
+    let mut s = vec![0.0f32; j * feat];
+    for (slot, &id) in batch.iter().enumerate() {
+        let job = &cluster.jobs[id];
+        let base = slot * feat;
+        let t = job.type_idx.min(num_types - 1);
+        s[base + t] = 1.0;
+        s[base + num_types] = (job.slots_run as f64 / D_SCALE) as f32;
+        s[base + num_types + 1] = (job.remaining_epochs() / E_SCALE) as f32;
+        let share = cluster.dominant_share_for(job.type_idx, walloc[slot], palloc[slot]);
+        let r = (share * cluster.topology.num_servers() as f64 / R_SCALE).min(4.0);
+        s[base + num_types + 2] = r as f32;
+        s[base + num_types + 3] = (walloc[slot] as f64 / T_SCALE) as f32;
+        s[base + num_types + 4] = (palloc[slot] as f64 / T_SCALE) as f32;
+    }
+    s
+}
+
+fn random_cluster(rng: &mut dl2::util::Rng) -> Cluster {
+    // Mix flat pools with heterogeneous/racked topologies: the drop-in
+    // guarantee must hold wherever the legacy encoder ran.
+    let cap = Res::new(2.0, 8.0, 48.0);
+    let cfg = match rng.below(3) {
+        0 => ClusterConfig {
+            num_servers: rng.range(2, 16),
+            interference: 0.0,
+            seed: rng.next_u64(),
+            ..Default::default()
+        },
+        1 => ClusterConfig {
+            interference: 0.0,
+            seed: rng.next_u64(),
+            ..ClusterConfig::with_topology(Topology::new(vec![
+                ServerClass::new("fast", rng.range(1, 5), Res::new(4.0, 16.0, 96.0), 2.0),
+                ServerClass::new("slow", rng.range(1, 5), cap, 1.0),
+            ]))
+        },
+        _ => ClusterConfig {
+            interference: 0.0,
+            seed: rng.next_u64(),
+            ..ClusterConfig::with_topology(
+                Topology::homogeneous(rng.range(2, 10), cap).with_racks(rng.range(1, 4), 0.25),
+            )
+        },
+    };
+    let mut c = Cluster::new(cfg);
+    // Advance some jobs through partial progress so slots_run /
+    // remaining_epochs exercise non-trivial values.
+    let n = rng.range(1, 8);
+    for i in 0..n {
+        let id = c.submit(rng.below(8), 5.0 + i as f64, 0.0);
+        if rng.bool(0.5) {
+            let p = c.apply_allocation(&[(id, rng.below(3), rng.below(3))]);
+            c.advance(&p);
+        }
+    }
+    c
+}
+
+/// Schema v1 ≡ frozen legacy encoder, over random clusters (flat,
+/// heterogeneous, racked), batches and partial allocations — and the
+/// `encode_state` compatibility wrapper agrees with both.
+#[test]
+fn v1_schema_is_a_bitwise_drop_in() {
+    prop_check!(25, |rng: &mut dl2::util::Rng| {
+        let c = random_cluster(rng);
+        let active: Vec<usize> = (0..c.jobs.len()).collect();
+        let j = rng.range(active.len().max(1), active.len() + 4);
+        let batch: Vec<usize> = active.iter().copied().take(j).collect();
+        let walloc: Vec<usize> = batch.iter().map(|_| rng.below(13)).collect();
+        let palloc: Vec<usize> = batch.iter().map(|_| rng.below(13)).collect();
+        let schema = FeatureSchema::v1(8);
+        let legacy = legacy_encode_state(&c, &batch, &walloc, &palloc, j, 8);
+        let v1 = schema.encode(&c, None, &batch, &walloc, &palloc, j);
+        let wrapper = encode_state(&c, &batch, &walloc, &palloc, j, 8);
+        assert_eq!(legacy.len(), v1.len());
+        for (i, (a, b)) in legacy.iter().zip(&v1).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "schema v1 diverged from the frozen encoder at index {i}: {a} vs {b}"
+            );
+        }
+        assert_eq!(v1, wrapper, "encode_state wrapper diverged");
+        // A placement context must be a no-op for v1 (no topology blocks).
+        let with_placement = schema.encode(&c, Some(&c.placement()), &batch, &walloc, &palloc, j);
+        assert_eq!(v1, with_placement);
+    });
+}
+
+fn meta_dir(tag: &str, features: FeatureSet) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dl2_feature_schema_{tag}"));
+    Meta::write_minimal_with(&dir, 8, 16, 4, &[5], features).unwrap();
+    dir
+}
+
+/// The schema fingerprint written by `write_minimal_with` survives the
+/// parse and sizes `state_dim` for every J.
+#[test]
+fn fingerprint_round_trips_through_meta_txt() {
+    for features in [FeatureSet::V1, FeatureSet::V2] {
+        let dir = meta_dir(&format!("roundtrip_{}", features.name()), features);
+        let meta = Meta::load(&dir).unwrap();
+        let schema = features.schema(8);
+        assert_eq!(meta.features, features);
+        assert_eq!(meta.feature_fp, schema.fingerprint());
+        assert_eq!(meta.schema(), schema);
+        assert_eq!(meta.spec(5).state_dim, schema.state_dim(5));
+    }
+}
+
+/// A scheduler configured for one schema must refuse artifacts compiled
+/// for another — in both directions, with an error that names both.
+#[test]
+fn scheduler_rejects_mismatched_artifact_schema() {
+    for (artifacts, want) in [(FeatureSet::V1, FeatureSet::V2), (FeatureSet::V2, FeatureSet::V1)] {
+        let dir = meta_dir(&format!("reject_{}", artifacts.name()), artifacts);
+        let engine = Engine::load(&dir).unwrap();
+        let err = Dl2Scheduler::try_new(
+            engine,
+            Dl2Config {
+                j: 5,
+                features: want,
+                ..Default::default()
+            },
+        )
+        .expect_err("mismatched schema must be rejected");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(artifacts.name()) && msg.contains(want.name()),
+            "error must name both schemas: {msg}"
+        );
+    }
+}
+
+/// The matching schema constructs fine and threads through the
+/// scheduler — `state_dim` agrees between schema, meta and spec.
+#[test]
+fn scheduler_accepts_matching_schema_and_sizes_agree() {
+    for features in [FeatureSet::V1, FeatureSet::V2] {
+        let dir = meta_dir(&format!("accept_{}", features.name()), features);
+        let engine = Engine::load(&dir).unwrap();
+        let sched = Dl2Scheduler::try_new(
+            engine,
+            Dl2Config {
+                j: 5,
+                features,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(sched.schema, features.schema(8));
+        assert_eq!(
+            sched.engine.meta.spec(5).state_dim,
+            sched.schema.state_dim(5)
+        );
+    }
+}
+
+/// V2 widens every row by MAX_CLASSES + 1 columns and changes the
+/// fingerprint — the invalidation key for both `meta.txt` and the
+/// result cache.
+#[test]
+fn v2_changes_dims_and_fingerprint_consistently() {
+    let v1 = FeatureSchema::v1(8);
+    let v2 = FeatureSchema::v2(8);
+    assert_eq!(
+        v2.row_width(),
+        v1.row_width() + dl2::scheduler::features::MAX_CLASSES + 1
+    );
+    assert_ne!(v1.fingerprint(), v2.fingerprint());
+    for j in [2usize, 5, 10, 20] {
+        assert_eq!(v2.state_dim(j), j * v2.row_width());
+        assert!(v2.state_dim(j) > v1.state_dim(j));
+    }
+}

@@ -53,7 +53,7 @@ fn sl_imitation_approaches_incumbent() {
     let traces: Vec<_> = (0..3)
         .map(|i| generate(&TraceConfig { seed: 50 + i, ..tcfg.clone() }))
         .collect();
-    let data = generate_dataset(&mut Drf, &ccfg, &traces, 5, 8, 2000);
+    let data = generate_dataset(&mut Drf, &ccfg, &traces, 5, &sched.schema, 2000);
     assert!(data.len() > 100, "dataset too small: {}", data.len());
     let losses = train_sl(&mut sched, &data, 120, &mut Rng::new(1));
     assert!(

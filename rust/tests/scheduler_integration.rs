@@ -157,10 +157,10 @@ fn prop_allocations_never_exceed_capacity() {
             seed: rng.next_u64(),
             ..Default::default()
         });
-        let total_cap = cluster
-            .cfg
-            .server_cap
-            .scale(cluster.cfg.num_servers as f64);
+        // Topology is the source of truth for total capacity —
+        // `cfg.num_servers`/`server_cap` may be stale when an explicit
+        // topology is set.
+        let total_cap = cluster.topology.total_cap();
         let mut sched = Drf;
         let mut next = 0usize;
         for _ in 0..60 {
@@ -268,10 +268,9 @@ fn prop_no_oversubscription_across_patterns() {
                     ..Default::default()
                 });
                 let cap = cluster.cfg.max_tasks_per_job;
-                let total_cap = cluster
-                    .cfg
-                    .server_cap
-                    .scale(cluster.cfg.num_servers as f64);
+                // Route through the topology, not the (possibly stale)
+                // `cfg` pair.
+                let total_cap = cluster.topology.total_cap();
                 let mut next = 0usize;
                 for _ in 0..80 {
                     while next < specs.len() && specs[next].arrival_slot <= cluster.slot {
