@@ -132,7 +132,7 @@ fn main() -> anyhow::Result<()> {
     let baselines = ["drf", "tetris", "optimus"];
     let val_cfg = validation_trace_cfg(&cfg.trace);
     let scenarios = replica_specs("val", &cfg.cluster, &val_cfg, 777, 3, cfg.rl_opts.max_slots);
-    let results = Harness::from_env().run_named(&baselines, &scenarios);
+    let results = Harness::from_env().run_named(&baselines, &scenarios)?;
     let mut jcts = std::collections::BTreeMap::new();
     for (i, name) in baselines.iter().enumerate() {
         let group = &results[i * scenarios.len()..(i + 1) * scenarios.len()];

@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         let prefix = format!("var{:02}", (v * 100.0) as i64);
         scenarios13.extend(replica_specs(&prefix, &env, &val_cfg, 777, runs, max_slots));
     }
-    let res13 = harness.run_named(&["optimus", "drf"], &scenarios13);
+    let res13 = harness.run_named(&["optimus", "drf"], &scenarios13)?;
     let (opt_res, drf_res) = res13.split_at(scenarios13.len());
 
     let mut t13 = Table::new(
@@ -94,7 +94,7 @@ fn main() -> anyhow::Result<()> {
         }
         scenarios14.extend(specs);
     }
-    let drf14 = harness.run_named(&["drf"], &scenarios14);
+    let drf14 = harness.run_named(&["drf"], &scenarios14)?;
 
     let mut t14 = Table::new(
         "Fig 14: avg JCT vs total-epoch estimation error",

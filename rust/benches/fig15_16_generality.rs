@@ -102,7 +102,7 @@ fn main() -> anyhow::Result<()> {
     let val_cfg = validation_trace_cfg(&cfg.trace);
     let scenarios = replica_specs("val", &cfg.cluster, &val_cfg, 777, 3, max_slots);
     let names: Vec<&str> = incumbents.iter().map(|i| i.name()).collect();
-    let inc_results = Harness::from_env().run_named(&names, &scenarios);
+    let inc_results = Harness::from_env().run_named(&names, &scenarios)?;
 
     let mut t16 = Table::new(
         "Fig 16: SL from different incumbents (validation avg JCT)",

@@ -61,7 +61,9 @@ fn main() {
         scenarios.len(),
         Harness::from_env().threads()
     );
-    let results = Harness::from_env().run_named(&schedulers, &scenarios);
+    let results = Harness::from_env()
+        .run_named(&schedulers, &scenarios)
+        .expect("topology sweep schedulers are valid");
 
     // Matrix order within each scheduler group: topologies ▸ replicas.
     let mut t = Table::new(
@@ -124,7 +126,9 @@ fn main() {
         feat_replicas,
     );
     let feat_schedulers = ["drf", "tetris"];
-    let feat_results = Harness::from_env().run_named(&feat_schedulers, &feat_scenarios);
+    let feat_results = Harness::from_env()
+        .run_named(&feat_schedulers, &feat_scenarios)
+        .expect("feature-axis schedulers are valid");
 
     // Expansion order per topology block: v1 replicas, then v2 replicas.
     let mut t = Table::new(

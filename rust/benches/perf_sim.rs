@@ -1,0 +1,258 @@
+//! Simulation-kernel perf bench: slot-stepped reference loop vs the
+//! discrete-event kernel, plus the cross-episode batched-inference
+//! driver.  Emits `results/BENCH_perf_sim.json` (slots/sec,
+//! inferences/sec, wall-clock) and `results/perf_sim.csv`.
+//!
+//! Three claims under measurement:
+//!
+//! 1. On sparse traces (long idle gaps between arrivals) the event
+//!    kernel is ≥5× the reference in slots/sec — asserted at full scale.
+//! 2. Both kernels are **bitwise identical** on every trace benched,
+//!    dense and sparse, coastable and per-slot schedulers — asserted
+//!    always.
+//! 3. Lockstep batching collapses `rows` single-state policy inferences
+//!    into `batches` pooled calls (width = rows/batches) without
+//!    changing episode results — measured with a deterministic fake
+//!    policy so the bench runs without the native backend.
+//!
+//! Flags: `--jobs N --gap SLOTS --iters K` (defaults 12 / 600 / 3,
+//! scaled by `DL2_BENCH_SCALE`).
+
+use std::time::Instant;
+
+use dl2::cluster::{Cluster, ClusterConfig};
+use dl2::scheduler::{
+    run_episode, run_episode_event, Drf, EpisodeResult, Fifo, Scheduler, Srtf,
+};
+use dl2::sim::{run_dl2_batched_with, ScenarioSpec};
+use dl2::trace::{JobSpec, TraceConfig};
+use dl2::util::{bench_scale, f, scaled, Args, Table};
+
+const USAGE: &str = "perf_sim — event-kernel vs reference-loop benchmark
+  --jobs N    jobs per trace (default 12, scaled)
+  --gap N     slots between sparse arrivals (default 600)
+  --iters N   timing repetitions (default 3, scaled)";
+
+/// `n` jobs, one every `gap` slots (gap 0 = all at slot 0).
+fn trace(n: usize, gap: usize) -> Vec<JobSpec> {
+    (0..n)
+        .map(|i| JobSpec {
+            arrival_slot: i * gap,
+            type_idx: i % dl2::cluster::NUM_TYPES,
+            total_epochs: 40.0 + (i % 5) as f64 * 10.0,
+        })
+        .collect()
+}
+
+fn cluster() -> Cluster {
+    Cluster::new(ClusterConfig {
+        num_servers: 12,
+        seed: 1,
+        ..Default::default()
+    })
+}
+
+fn assert_bitwise(label: &str, a: &EpisodeResult, b: &EpisodeResult) {
+    assert_eq!(a.rewards, b.rewards, "{label}: reward stream diverged");
+    assert_eq!(a.gpu_util, b.gpu_util, "{label}: gpu_util diverged");
+    assert_eq!(a.jct_per_job, b.jct_per_job, "{label}: per-job JCT diverged");
+    assert_eq!(a.makespan_slots, b.makespan_slots, "{label}: makespan diverged");
+    assert_eq!(
+        a.avg_jct_slots.to_bits(),
+        b.avg_jct_slots.to_bits(),
+        "{label}: avg JCT diverged"
+    );
+}
+
+struct KernelAb {
+    slots: usize,
+    ref_secs: f64,
+    event_secs: f64,
+}
+
+impl KernelAb {
+    fn speedup(&self) -> f64 {
+        self.ref_secs / self.event_secs.max(1e-12)
+    }
+    fn ref_rate(&self) -> f64 {
+        self.slots as f64 / self.ref_secs.max(1e-12)
+    }
+    fn event_rate(&self) -> f64 {
+        self.slots as f64 / self.event_secs.max(1e-12)
+    }
+}
+
+/// Time both kernels over `iters` repetitions of one episode and assert
+/// they agree bitwise.  `make` builds a fresh scheduler per run so no
+/// scheduler state leaks between kernels or repetitions.
+fn ab<F: Fn() -> Box<dyn Scheduler>>(
+    label: &str,
+    jobs: &[JobSpec],
+    max_slots: usize,
+    iters: usize,
+    make: F,
+) -> KernelAb {
+    let reference = run_episode(cluster(), jobs, &mut *make(), 0.0, max_slots);
+    let event = run_episode_event(cluster(), jobs, &mut *make(), 0.0, max_slots);
+    assert_bitwise(label, &reference, &event);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        run_episode(cluster(), jobs, &mut *make(), 0.0, max_slots);
+    }
+    let ref_secs = t0.elapsed().as_secs_f64() / iters as f64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        run_episode_event(cluster(), jobs, &mut *make(), 0.0, max_slots);
+    }
+    let event_secs = t0.elapsed().as_secs_f64() / iters as f64;
+    KernelAb {
+        slots: reference.makespan_slots,
+        ref_secs,
+        event_secs,
+    }
+}
+
+/// Deterministic stand-in policy (pure function of the state): lets the
+/// lockstep driver run — and be timed — without AOT artifacts or the
+/// native backend.
+fn fake_probs(state: &[f32], n_actions: usize) -> Vec<f32> {
+    let h = dl2::util::fnv1a_f32s(state);
+    (0..n_actions)
+        .map(|a| ((dl2::sim::derive_seed(h, a as u64) % 1000) as f32 + 1.0) / 1000.0)
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().with_usage(USAGE);
+    let jobs = args.usize_or("jobs", scaled(12, 4));
+    let gap = args.usize_or("gap", 600);
+    let iters = args.usize_or("iters", scaled(3, 1));
+    let max_slots = (jobs * gap + 4_000).max(5_000);
+
+    let mut t = Table::new(
+        &format!("episode kernels, {jobs} jobs (iters={iters}, scale={})", bench_scale()),
+        &["trace", "scheduler", "slots", "ref_slots/s", "event_slots/s", "speedup"],
+    );
+
+    let sparse = trace(jobs, gap);
+    let dense = trace(jobs, 0);
+    let mut measured: Vec<(String, KernelAb)> = Vec::new();
+    for (trace_name, jobs) in [("sparse", &sparse), ("dense", &dense)] {
+        let scheds: [(&str, fn() -> Box<dyn Scheduler>); 3] = [
+            ("fifo", || Box::new(Fifo::default())),
+            ("drf", || Box::new(Drf)),
+            ("srtf", || Box::new(Srtf::default())),
+        ];
+        for (sched_name, make) in scheds {
+            let label = format!("{trace_name}/{sched_name}");
+            let r = ab(&label, jobs, max_slots, iters, make);
+            t.row(vec![
+                trace_name.into(),
+                sched_name.into(),
+                r.slots.to_string(),
+                f(r.ref_rate(), 0),
+                f(r.event_rate(), 0),
+                f(r.speedup(), 2),
+            ]);
+            measured.push((label, r));
+        }
+    }
+
+    // The headline claim, asserted only at full scale (smoke runs with
+    // DL2_BENCH_SCALE < 1 shrink the trace until timing noise dominates).
+    let sparse_fifo = &measured[0].1;
+    if bench_scale() >= 1.0 {
+        assert!(
+            sparse_fifo.speedup() >= 5.0,
+            "event kernel is only {:.2}x on sparse/fifo (claim: >= 5x)",
+            sparse_fifo.speedup()
+        );
+    }
+
+    // --- Cross-episode batched inference (fake policy, runs anywhere).
+    let meta_dir = std::env::temp_dir().join("dl2_perf_sim_meta");
+    dl2::runtime::Meta::write_minimal(&meta_dir, dl2::cluster::NUM_TYPES, 16, 8, &[5])?;
+    let j = 5;
+    let n_actions = 3 * j + 1;
+    let episodes = scaled(8, 3);
+    let specs: Vec<ScenarioSpec> = (0..episodes as u64)
+        .map(|i| {
+            let mut spec = ScenarioSpec::new(
+                &format!("bench{i}"),
+                ClusterConfig { num_servers: 6, seed: 40 + i, ..Default::default() },
+                TraceConfig { num_jobs: 6, seed: 90 + i, ..Default::default() },
+            );
+            spec.max_slots = 500;
+            spec
+        })
+        .collect();
+    let make_sched = |seed: u64| {
+        let engine = dl2::runtime::Engine::load(&meta_dir).unwrap();
+        let cfg = dl2::scheduler::Dl2Config { j, seed, ..Default::default() };
+        let mut sched = dl2::scheduler::Dl2Scheduler::new(engine, cfg);
+        sched.training = false;
+        sched
+    };
+    let fake = |states: &[Vec<f32>]| -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(states.iter().map(|s| fake_probs(s, n_actions)).collect())
+    };
+    let t0 = Instant::now();
+    let (_, _, stats) = run_dl2_batched_with(
+        &specs,
+        (0..episodes as u64).map(|i| make_sched(100 + i)).collect(),
+        fake,
+    )?;
+    let batched_secs = t0.elapsed().as_secs_f64();
+    let width = stats.rows as f64 / stats.batches.max(1) as f64;
+    println!(
+        "batched inference: {} episodes, {} rows in {} pooled calls (width {:.1}), {:.0} inferences/s",
+        stats.episodes,
+        stats.rows,
+        stats.batches,
+        width,
+        stats.rows as f64 / batched_secs.max(1e-12),
+    );
+    assert!(
+        width > 1.0,
+        "lockstep rounds must carry more than one row on average"
+    );
+
+    // --- Emit BENCH_perf_sim.json.
+    std::fs::create_dir_all("results")?;
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str(&format!("  \"scale\": {},\n", bench_scale()));
+    json.push_str(&format!("  \"jobs\": {jobs},\n  \"gap\": {gap},\n  \"iters\": {iters},\n"));
+    json.push_str("  \"kernels\": [\n");
+    for (i, (label, r)) in measured.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"case\": \"{label}\", \"slots\": {}, \"ref_slots_per_sec\": {:.1}, \
+             \"event_slots_per_sec\": {:.1}, \"ref_wall_secs\": {:.6}, \
+             \"event_wall_secs\": {:.6}, \"speedup\": {:.3}}}{}\n",
+            r.slots,
+            r.ref_rate(),
+            r.event_rate(),
+            r.ref_secs,
+            r.event_secs,
+            r.speedup(),
+            if i + 1 < measured.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"batched_inference\": {{\"episodes\": {}, \"rows\": {}, \"batches\": {}, \
+         \"avg_batch_width\": {:.2}, \"inferences_per_sec\": {:.1}, \"wall_secs\": {:.6}}}\n",
+        stats.episodes,
+        stats.rows,
+        stats.batches,
+        width,
+        stats.rows as f64 / batched_secs.max(1e-12),
+        batched_secs,
+    ));
+    json.push_str("}\n");
+    std::fs::write("results/BENCH_perf_sim.json", &json)?;
+    println!("[saved results/BENCH_perf_sim.json]");
+
+    t.emit("perf_sim");
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! Next-event bookkeeping for the event-driven episode kernel.
+//!
+//! An [`EventQueue`] tracks the three event kinds the kernel cares
+//! about — the next trace arrival, each active job's predicted
+//! completion under the current allocation, and (derived from both) the
+//! next reallocation point.  A job's completion prediction is recomputed
+//! **only when its effective epochs/slot changes**, i.e. at reallocation
+//! points ([`EventQueue::reallocate`] reads
+//! [`Cluster::effective_rate`]), never in the per-slot hot path.
+//!
+//! Predictions are exact when interference is off (the rate is then
+//! deterministic) and mean-rate hints otherwise; the kernel uses them to
+//! bound its coast window and always keeps the per-slot finished check
+//! authoritative, so an off-by-one prediction can never change results.
+
+use super::{Cluster, Placement};
+
+/// The kinds of events the queue resolves, in the order the kernel
+/// handles ties: arrivals are folded into the slot's decision before
+/// completions are observed, matching the slot-stepped reference loop
+/// (submit → schedule → advance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// A trace job arrives at this slot.
+    Arrival(usize),
+    /// A job is predicted to complete during this slot.
+    Completion { slot: usize, job: usize },
+    /// The kernel must rerun schedule/placement at this slot (membership
+    /// change or an `EverySlot` scheduler).
+    Reallocation(usize),
+}
+
+impl Event {
+    /// Slot the event fires in.
+    pub fn slot(&self) -> usize {
+        match *self {
+            Event::Arrival(s) => s,
+            Event::Completion { slot, .. } => slot,
+            Event::Reallocation(s) => s,
+        }
+    }
+}
+
+/// Next-event state for one episode: one pending arrival pointer plus a
+/// per-active-job completion prediction.
+#[derive(Debug, Clone, Default)]
+pub struct EventQueue {
+    next_arrival: Option<usize>,
+    /// `(predicted completion slot, job id)` per active allocated job.
+    completions: Vec<(usize, usize)>,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Record the next pending trace arrival (`None` once drained).
+    pub fn set_next_arrival(&mut self, slot: Option<usize>) {
+        self.next_arrival = slot;
+    }
+
+    pub fn next_arrival(&self) -> Option<usize> {
+        self.next_arrival
+    }
+
+    /// Reallocation point: re-predict every active job's completion from
+    /// its current effective rate.  `ceil(remaining / rate)` whole slots
+    /// from `now`; jobs with no positive rate have no completion event.
+    pub fn reallocate(&mut self, cluster: &Cluster, placement: &Placement) {
+        self.completions.clear();
+        let now = cluster.slot;
+        for &id in &cluster.active_jobs() {
+            let rate = cluster.effective_rate(id, placement);
+            if rate <= 0.0 {
+                continue;
+            }
+            let remaining = cluster.jobs[id].true_remaining();
+            let slots = (remaining / rate).ceil().max(1.0);
+            if slots.is_finite() {
+                self.completions.push((now + slots as usize, id));
+            }
+        }
+    }
+
+    /// Earliest predicted completion `(slot, job)`, if any job is
+    /// running.
+    pub fn earliest_completion(&self) -> Option<(usize, usize)> {
+        self.completions.iter().copied().min()
+    }
+
+    /// The next event of any kind at or after the current predictions.
+    pub fn next_event(&self) -> Option<Event> {
+        let arrival = self.next_arrival.map(Event::Arrival);
+        let completion = self
+            .earliest_completion()
+            .map(|(slot, job)| Event::Completion { slot, job });
+        match (arrival, completion) {
+            (Some(a), Some(c)) => Some(if a.slot() <= c.slot() { a } else { c }),
+            (a, c) => a.or(c),
+        }
+    }
+
+    /// Exclusive upper bound for a coast window starting now: the kernel
+    /// may reuse the current placement for slots `< horizon` because no
+    /// arrival is due before it.  Completion predictions tighten the
+    /// bound only when `exact` (interference off) — under noise a job
+    /// can finish earlier or later than its mean-rate estimate, and the
+    /// kernel's per-slot finished check handles either.
+    pub fn coast_horizon(&self, max_slots: usize, exact: bool) -> usize {
+        let mut horizon = max_slots;
+        if let Some(a) = self.next_arrival {
+            horizon = horizon.min(a);
+        }
+        if exact {
+            if let Some((slot, _)) = self.earliest_completion() {
+                // +0: the completion fires *during* `slot`'s advance, so
+                // coasting may run that slot; the finished check then
+                // ends the window.
+                horizon = horizon.min(slot);
+            }
+        }
+        horizon
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig {
+            num_servers: 4,
+            interference: 0.0,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn predicts_completion_from_effective_rate() {
+        let mut c = cluster();
+        let id = c.submit(0, 10.0, 0.0);
+        let p = c.apply_allocation(&[(id, 2, 2)]);
+        let mut q = EventQueue::new();
+        q.reallocate(&c, &p);
+        let (slot, job) = q.earliest_completion().expect("job is running");
+        assert_eq!(job, id);
+        let rate = c.effective_rate(id, &p);
+        assert!(rate > 0.0);
+        assert_eq!(slot, (10.0 / rate).ceil() as usize);
+        // Run it to completion: with interference off the prediction is
+        // exact — the finishing advance happens in slot `slot - 1` ..
+        // `slot` boundary semantics: after `slot` advances total, done.
+        let mut steps = 0;
+        while !c.all_finished() {
+            let p = c.apply_allocation(&[(id, 2, 2)]);
+            c.advance(&p);
+            steps += 1;
+            assert!(steps <= slot, "prediction must not undershoot");
+        }
+        assert_eq!(steps, slot, "noise-free prediction is exact");
+    }
+
+    #[test]
+    fn unallocated_jobs_have_no_completion_event() {
+        let mut c = cluster();
+        let id = c.submit(0, 10.0, 0.0);
+        let p = c.apply_allocation(&[(id, 0, 0)]);
+        let mut q = EventQueue::new();
+        q.reallocate(&c, &p);
+        assert_eq!(q.earliest_completion(), None);
+        q.set_next_arrival(Some(17));
+        assert_eq!(q.next_event(), Some(Event::Arrival(17)));
+        assert_eq!(q.coast_horizon(5000, true), 17);
+    }
+
+    #[test]
+    fn arrival_wins_ties_and_horizon_caps_at_max_slots() {
+        let mut c = cluster();
+        let id = c.submit(0, 10.0, 0.0);
+        let p = c.apply_allocation(&[(id, 2, 2)]);
+        let mut q = EventQueue::new();
+        q.reallocate(&c, &p);
+        let (comp, _) = q.earliest_completion().unwrap();
+        q.set_next_arrival(Some(comp));
+        assert_eq!(q.next_event(), Some(Event::Arrival(comp)));
+        assert_eq!(q.coast_horizon(comp.saturating_sub(1), true), comp - 1);
+        // Under interference the completion estimate must not bound the
+        // window...
+        assert_eq!(q.coast_horizon(10_000, false), comp);
+        q.set_next_arrival(None);
+        assert_eq!(q.coast_horizon(10_000, false), 10_000);
+    }
+}

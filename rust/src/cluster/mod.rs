@@ -24,13 +24,51 @@
 //! the default: with `topology: None` everything resolves to
 //! [`Topology::homogeneous`], which is bit-for-bit the pre-topology
 //! flat-pool behaviour (single class, one rack, factor 1.0).
+//!
+//! # Event model and the bitwise-reference guarantee
+//!
+//! Episodes can run under two kernels (see [`crate::sim`]): the
+//! slot-stepped reference advances every slot through the full
+//! schedule → place → advance cycle, while the event-driven kernel
+//! ([`crate::scheduler::run_episode_event`]) keeps an [`EventQueue`] of
+//! the next arrival, the predicted next completion under the current
+//! allocation, and the next reallocation point, and skips the work that
+//! cannot change anything:
+//!
+//! * **Idle slots** (no arrived, unfinished job) draw no RNG — the
+//!   per-job interference draw is gated on `interference > 0.0 && eps >
+//!   0.0` *per job*, and an idle slot has no jobs to iterate — and the
+//!   reference records exactly `reward = 0.0, gpu_util = 0.0` for them.
+//!   [`Cluster::skip_idle`] therefore fast-forwards the clock over idle
+//!   gaps in O(1) per slot without touching any job or RNG state.
+//! * **Unchanged slots**: while the active set is unchanged and the
+//!   scheduler declares
+//!   [`Reallocation::OnMembershipChange`](crate::scheduler::Reallocation),
+//!   the realized placement is provably identical slot to slot, so the
+//!   kernel reuses it and skips schedule/placement.  Per-slot
+//!   [`Cluster::advance`] calls remain — `Job::advance` mutates
+//!   `slots_run`/`epochs_done` every slot and the interference stream
+//!   draws per slot, so skipping them would change observable state.
+//!
+//! A job's completion event is recomputed only when its effective
+//! epochs/slot changes — allocation, topology factor or speed factor —
+//! via [`Cluster::effective_rate`] at each reallocation point; under
+//! interference the prediction is a mean-rate hint (the kernel's
+//! per-slot finish check stays authoritative), exact otherwise.
+//!
+//! The slot-stepped loop is kept as the bitwise regression reference:
+//! `tests/event_kernel.rs` pins both kernels to identical rewards, JCTs,
+//! GPU-utilization series and per-job RNG states across the scenario
+//! matrix.
 
+pub mod events;
 pub mod job;
 pub mod server;
 pub mod speed;
 pub mod topology;
 pub mod types;
 
+pub use events::EventQueue;
 pub use job::Job;
 pub use server::Placement;
 pub use topology::{ServerClass, Topology};
@@ -111,10 +149,16 @@ pub struct Cluster {
     pub cfg: ClusterConfig,
     /// Resolved machine topology (shared with every per-slot `Placement`).
     pub topology: Arc<Topology>,
-    pub catalog: Vec<JobType>,
+    /// Job-type catalog, shared (`Arc`) so the per-slot hot loop borrows
+    /// it instead of cloning a `Vec<JobType>` every slot.
+    pub catalog: Arc<Vec<JobType>>,
     pub jobs: Vec<Job>,
     pub slot: usize,
     rng: Rng,
+    /// Arrived-and-unfinished job ids, maintained incrementally (pushed
+    /// on submit, retained on finish) so the hot loop never rescans the
+    /// full job table.  Always sorted by id == arrival order.
+    active: Vec<usize>,
     /// Utilization (gpu fraction) per elapsed slot — Fig 3.
     pub gpu_util_history: Vec<f64>,
 }
@@ -144,10 +188,11 @@ impl Cluster {
         Cluster {
             cfg,
             topology,
-            catalog,
+            catalog: Arc::new(catalog),
             jobs: Vec::new(),
             slot: 0,
             rng,
+            active: Vec::new(),
             gpu_util_history: Vec::new(),
         }
     }
@@ -168,20 +213,26 @@ impl Cluster {
             job.speed_factor = job.rng.range_f64(1.0 - v, 1.0 + v).max(0.05);
         }
         self.jobs.push(job);
+        self.active.push(id);
         id
     }
 
     /// Indices of jobs that have arrived and not finished, ordered by
-    /// arrival time (the NN state ordering, §4.1).
+    /// arrival time (the NN state ordering, §4.1).  Served from the
+    /// incrementally-maintained active list: ids are assigned in
+    /// submission order, so id order *is* (arrival_slot, id) order.
     pub fn active_jobs(&self) -> Vec<usize> {
-        let mut ids: Vec<usize> = self
-            .jobs
-            .iter()
-            .filter(|j| !j.is_finished() && j.arrival_slot <= self.slot)
-            .map(|j| j.id)
-            .collect();
-        ids.sort_by_key(|&i| (self.jobs[i].arrival_slot, i));
-        ids
+        debug_assert!(
+            self.active.windows(2).all(|w| w[0] < w[1]
+                && self.jobs[w[0]].arrival_slot <= self.jobs[w[1]].arrival_slot),
+            "active list must stay in (arrival, id) order"
+        );
+        self.active.clone()
+    }
+
+    /// Number of arrived-and-unfinished jobs (no allocation).
+    pub fn num_active(&self) -> usize {
+        self.active.len()
     }
 
     /// Fresh per-slot placement view over the cluster's topology.
@@ -196,15 +247,17 @@ impl Cluster {
     /// Returns the realized placement.
     pub fn apply_allocation(&mut self, alloc: &[(usize, usize, usize)]) -> Placement {
         let mut placement = self.placement();
-        // Reset all allocations first (numbers are produced anew each slot,
-        // §4.1; the elastic layer in `elastic/` shows the delta is applied
-        // as hot scaling rather than restart).
-        for j in self.jobs.iter_mut() {
-            j.workers = 0;
-            j.ps = 0;
+        // Reset active allocations first (numbers are produced anew each
+        // slot, §4.1; the elastic layer in `elastic/` shows the delta is
+        // applied as hot scaling rather than restart).  Finished jobs'
+        // counts are dead state — nothing downstream reads them.
+        for &id in &self.active {
+            self.jobs[id].workers = 0;
+            self.jobs[id].ps = 0;
         }
+        let catalog = Arc::clone(&self.catalog);
         for &(id, want_w, want_p) in alloc {
-            let jt = self.catalog[self.jobs[id].type_idx].clone();
+            let jt = &catalog[self.jobs[id].type_idx];
             let cap = self.cfg.max_tasks_per_job;
             let (want_w, want_p) = (want_w.min(cap), want_p.min(cap));
             let mut got_w = 0;
@@ -249,11 +302,10 @@ impl Cluster {
         let cross_rack_penalty = self.topology.cross_rack_penalty();
         let mut reward = 0.0;
         let mut finished = Vec::new();
-        let catalog = self.catalog.clone();
-        for job in self.jobs.iter_mut() {
-            if job.is_finished() || job.arrival_slot > slot {
-                continue;
-            }
+        // Arc borrow, not a Vec clone — this loop runs every slot.
+        let catalog = Arc::clone(&self.catalog);
+        for &id in &self.active {
+            let job = &mut self.jobs[id];
             let jt = &catalog[job.type_idx];
             let mut eps = speed::epochs_per_slot(&jt.speed, job.workers, job.ps);
             // Exactly 1.0 on homogeneous single-rack pools, where the
@@ -274,6 +326,10 @@ impl Cluster {
                 finished.push(job.id);
             }
         }
+        if !finished.is_empty() {
+            let jobs = &self.jobs;
+            self.active.retain(|&id| !jobs[id].is_finished());
+        }
         let gpu_util = placement.utilization().gpu;
         self.gpu_util_history.push(gpu_util);
         self.slot += 1;
@@ -284,9 +340,43 @@ impl Cluster {
         }
     }
 
-    /// All jobs submitted so far are finished?
+    /// Fast-forward the clock over `slots` idle slots.  Callable only
+    /// while no job is active: the slot-stepped reference records exactly
+    /// `reward = 0.0` and `gpu_util = 0.0` per idle slot and touches no
+    /// job or RNG state, so this bulk extension is bitwise equivalent to
+    /// stepping the slots one by one.
+    pub fn skip_idle(&mut self, slots: usize) {
+        debug_assert!(
+            self.active.is_empty(),
+            "skip_idle with {} active jobs",
+            self.active.len()
+        );
+        let n = self.gpu_util_history.len() + slots;
+        self.gpu_util_history.resize(n, 0.0);
+        self.slot += slots;
+    }
+
+    /// Effective epochs/slot of job `id` under `placement` — the analytic
+    /// speed model times topology and static speed factors, *excluding*
+    /// interference noise.  This is the rate the [`EventQueue`] uses to
+    /// predict completion events; it changes only at reallocation points,
+    /// which is when the queue recomputes it.
+    pub fn effective_rate(&self, id: usize, placement: &Placement) -> f64 {
+        let job = &self.jobs[id];
+        let jt = &self.catalog[job.type_idx];
+        let mut eps = speed::epochs_per_slot(&jt.speed, job.workers, job.ps);
+        eps *= speed::topology_factor(
+            placement.speed_multiplier(id),
+            placement.racks_spanned(id),
+            self.topology.cross_rack_penalty(),
+        );
+        eps * job.speed_factor
+    }
+
+    /// All jobs submitted so far are finished?  (Vacuously true before
+    /// the first submission, matching the full-scan behaviour.)
     pub fn all_finished(&self) -> bool {
-        self.jobs.iter().all(|j| j.is_finished())
+        self.active.is_empty()
     }
 
     /// Average job completion time in slots over finished jobs.

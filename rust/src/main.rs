@@ -13,6 +13,7 @@ use dl2::cluster::ClusterConfig;
 use dl2::elastic::{ElasticConfig, ElasticJob};
 use dl2::pipeline::{
     baseline_by_name, run_pipeline, validation_trace, Incumbent, PipelineConfig,
+    BASELINE_NAMES,
 };
 use dl2::rl::evaluate_policy;
 use dl2::runtime::{save_params, Engine};
@@ -20,8 +21,22 @@ use dl2::scheduler::{Dl2Config, Dl2Scheduler, FeatureSet};
 use dl2::trace::TraceConfig;
 use dl2::util::{Args, Table};
 
+/// Usage text printed by `dl2 help` and echoed on CLI parse errors.
+const USAGE: &str = "dl2 — DL²: a deep-learning-driven scheduler for DL clusters
+
+USAGE: dl2 <train|evaluate|compare|elastic|info> [flags]
+
+  train     --j 10 --sl-steps 250 --rl-rounds 8 --round-episodes 4 [--serial] [--workers N]
+            --incumbent drf --features v1|v2 --out results/dl2_policy.bin
+  evaluate  --policy results/dl2_policy.bin --j 10 --features v1|v2
+  compare   --servers 12 --jobs 40
+  elastic   --model-mb 98
+  info
+
+Common: --servers N --jobs N --seed S --interference F --artifacts DIR";
+
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env();
+    let args = Args::from_env().with_usage(USAGE);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -63,11 +78,12 @@ fn trace_cfg(args: &Args) -> TraceConfig {
 }
 
 /// `--features v1|v2` — the observation schema (must match the
-/// artifacts' meta.txt).
-fn feature_set(args: &Args) -> FeatureSet {
+/// artifacts' meta.txt).  Malformed values are a user error, not a
+/// panic: surface them through `main`'s `anyhow::Result`.
+fn feature_set(args: &Args) -> anyhow::Result<FeatureSet> {
     let name = args.str_or("features", "v1");
     FeatureSet::parse(name)
-        .unwrap_or_else(|| panic!("--features expects v1|v2, got {name:?}"))
+        .ok_or_else(|| anyhow::anyhow!("--features expects one of v1|v2, got {name:?}"))
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
@@ -82,7 +98,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         trace: trace_cfg(args),
         dl2: Dl2Config {
             j: args.usize_or("j", 10),
-            features: feature_set(args),
+            features: feature_set(args)?,
             seed: args.u64_or("seed", 7),
             ..Default::default()
         },
@@ -137,7 +153,7 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     let j = args.usize_or("j", 10);
     let cfg = Dl2Config {
         j,
-        features: feature_set(args),
+        features: feature_set(args)?,
         ..Default::default()
     };
     let mut sched = Dl2Scheduler::try_new(engine, cfg)?;
@@ -159,8 +175,8 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
         "scheduler comparison (validation avg JCT, slots)",
         &["scheduler", "avg_jct"],
     );
-    for name in ["drf", "fifo", "srtf", "tetris", "optimus"] {
-        let mut mk = || baseline_by_name(name).unwrap();
+    for name in BASELINE_NAMES {
+        let mut mk = || baseline_by_name(name).expect("BASELINE_NAMES entries resolve");
         let jct = dl2::pipeline::baseline_jct(&mut mk, &ccfg, &specs, 3, 3000);
         t.row(vec![name.into(), format!("{jct:.3}")]);
     }
@@ -224,18 +240,5 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 }
 
 fn print_help() {
-    println!(
-        "dl2 — DL²: a deep-learning-driven scheduler for DL clusters
-
-USAGE: dl2 <train|evaluate|compare|elastic|info> [flags]
-
-  train     --j 10 --sl-steps 250 --rl-rounds 8 --round-episodes 4 [--serial] [--workers N]
-            --incumbent drf --features v1|v2 --out results/dl2_policy.bin
-  evaluate  --policy results/dl2_policy.bin --j 10 --features v1|v2
-  compare   --servers 12 --jobs 40
-  elastic   --model-mb 98
-  info
-
-Common: --servers N --jobs N --seed S --interference F --artifacts DIR"
-    );
+    println!("{USAGE}");
 }

@@ -431,7 +431,12 @@ pub fn baseline_jct(
     total / runs as f64
 }
 
+/// The valid heuristic baseline names, in canonical order.  Error
+/// messages for unknown names (harness, CLI) enumerate this list.
+pub const BASELINE_NAMES: [&str; 5] = ["drf", "fifo", "srtf", "tetris", "optimus"];
+
 /// All heuristic baselines by name (for the CLI / Fig 9 bench).
+/// Valid names are [`BASELINE_NAMES`].
 pub fn baseline_by_name(name: &str) -> Option<Box<dyn Scheduler>> {
     match name {
         "drf" => Some(Box::new(Drf)),

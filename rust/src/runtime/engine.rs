@@ -37,6 +37,23 @@ pub fn compile_count() -> usize {
     ENGINE_COMPILES.load(Ordering::Relaxed)
 }
 
+/// Process-wide [`Engine::policy_infer_batch`] call count, and the total
+/// rows those calls carried.  `rows / calls` is the realized batch width
+/// — the figure `benches/perf_sim.rs` reports for the cross-episode
+/// batching path (`sim::batched`).
+static BATCH_CALLS: AtomicUsize = AtomicUsize::new(0);
+static BATCH_ROWS: AtomicUsize = AtomicUsize::new(0);
+
+/// Total batched policy-inference calls so far in this process.
+pub fn batch_infer_calls() -> usize {
+    BATCH_CALLS.load(Ordering::Relaxed)
+}
+
+/// Total states carried by batched policy-inference calls so far.
+pub fn batch_infer_rows() -> usize {
+    BATCH_ROWS.load(Ordering::Relaxed)
+}
+
 /// Losses reported by one `rl_step` execution.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RlLosses {
@@ -192,6 +209,29 @@ impl Engine {
         let probs = out[0].to_vec::<f32>().map_err(err)?;
         debug_assert_eq!(probs.len(), spec.num_actions);
         Ok(probs)
+    }
+
+    /// π(a|s) over a batch of states sharing one θ: the pooled-engine
+    /// entry point for cross-episode lockstep inference
+    /// (`sim::batched`).  θ is uploaded at most once for the whole call
+    /// (the generation cache in [`Engine::policy_infer_state`] makes
+    /// rows 2..n device-resident hits), so a call with `n` rows costs
+    /// one parameter upload plus `n` executions instead of `n` of each.
+    /// Row execution stays per-state until a true `[batch × S]`
+    /// policy-infer artifact is AOT'd; callers only depend on the
+    /// call-shape, so that swap stays local to this method.
+    pub fn policy_infer_batch(
+        &mut self,
+        j: usize,
+        pol: &TrainState,
+        states: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        BATCH_CALLS.fetch_add(1, Ordering::Relaxed);
+        BATCH_ROWS.fetch_add(states.len(), Ordering::Relaxed);
+        states
+            .iter()
+            .map(|state| self.policy_infer_state(j, pol, state))
+            .collect()
     }
 
     /// V(s): single-state critic evaluation.

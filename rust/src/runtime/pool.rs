@@ -89,6 +89,51 @@ impl<T> Pool<T> {
         })
     }
 
+    /// Check `n` resources out at once under a single idle-lock
+    /// acquisition: every idle resource is drained first, then the
+    /// remainder is built fresh.  Counter semantics match `n` plain
+    /// [`Pool::checkout`] calls ([`Pool::checkouts`] grows by `n`,
+    /// [`Pool::built`] by the shortfall).  The batched-inference
+    /// evaluator (`sim::batched`) uses this to pin one engine per
+    /// concurrent episode without `n` lock round-trips; a factory error
+    /// midway checks the already-drained resources back in and returns
+    /// the error.
+    pub fn checkout_many(&self, n: usize) -> Result<Vec<Pooled<'_, T>>> {
+        self.checkouts.fetch_add(n, Ordering::Relaxed);
+        let mut items = Vec::with_capacity(n);
+        {
+            let mut idle = self.idle.lock().unwrap();
+            while items.len() < n {
+                match idle.pop() {
+                    Some(item) => items.push(item),
+                    None => break,
+                }
+            }
+        }
+        while items.len() < n {
+            match (self.make)() {
+                Ok(item) => {
+                    self.built.fetch_add(1, Ordering::Relaxed);
+                    items.push(item);
+                }
+                Err(e) => {
+                    self.idle.lock().unwrap().extend(items);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(items
+            .into_iter()
+            .map(|mut item| {
+                (self.recycle)(&mut item);
+                Pooled {
+                    pool: self,
+                    item: Some(item),
+                }
+            })
+            .collect())
+    }
+
     /// Resources built so far (the pool's high-water concurrency).
     pub fn built(&self) -> usize {
         self.built.load(Ordering::Relaxed)
@@ -310,6 +355,44 @@ mod tests {
         // The released resource is reused, not rebuilt.
         drop(pool.checkout().unwrap());
         assert_eq!(made.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn checkout_many_drains_idle_then_builds() {
+        let (made, pool) = counting_pool();
+        // Seed two idle resources.
+        {
+            let _a = pool.checkout().unwrap();
+            let _b = pool.checkout().unwrap();
+        }
+        assert_eq!(pool.idle_len(), 2);
+        let guards = pool.checkout_many(5).unwrap();
+        assert_eq!(guards.len(), 5);
+        assert_eq!(made.load(Ordering::SeqCst), 5, "2 reused + 3 built");
+        assert_eq!(pool.built(), 5);
+        assert_eq!(pool.checkouts(), 2 + 5);
+        drop(guards);
+        assert_eq!(pool.idle_len(), 5);
+        // A second batch reuses everything.
+        let again = pool.checkout_many(5).unwrap();
+        assert_eq!(made.load(Ordering::SeqCst), 5, "no rebuilds on reuse");
+        drop(again);
+    }
+
+    #[test]
+    fn checkout_many_error_returns_drained_resources() {
+        let fail = Arc::new(AtomicUsize::new(0));
+        let f = fail.clone();
+        let pool: Pool<usize> = Pool::with_factory(move || {
+            if f.load(Ordering::SeqCst) == 1 {
+                anyhow::bail!("backend gone");
+            }
+            Ok(0)
+        });
+        drop(pool.checkout().unwrap()); // one idle resource
+        fail.store(1, Ordering::SeqCst);
+        assert!(pool.checkout_many(3).is_err());
+        assert_eq!(pool.idle_len(), 1, "drained resource must be returned");
     }
 
     #[test]

@@ -10,6 +10,16 @@
 //!
 //! Inference runs through the AOT `policy_infer` artifact on the PJRT
 //! runtime — no Python anywhere on this path.
+//!
+//! The multi-inference sequence is factored into a resumable state
+//! machine ([`SlotSeq`] + [`Dl2Scheduler::seq_begin`] /
+//! [`Dl2Scheduler::seq_observe`] / [`Dl2Scheduler::seq_step`]): the
+//! in-process [`Scheduler::schedule`] path drives it with one engine
+//! call per step, while the cross-episode batched evaluator
+//! ([`crate::sim::run_dl2_batched_with`]) collects many episodes'
+//! pending observations and serves them from a single pooled-engine
+//! inference call.  Both drivers execute the identical decision code,
+//! so batching cannot change results.
 
 use super::features::{FeatureSchema, FeatureSet};
 use super::state::{
@@ -95,6 +105,32 @@ pub struct Transition {
     pub action: usize,
     /// Environment slot index the decision was taken in.
     pub slot: usize,
+}
+
+/// The in-progress multi-inference sequence for one batch of ≤ J jobs:
+/// the partial (workers, ps) allocation plus the remaining inference
+/// budget.  Drive it with [`Dl2Scheduler::seq_observe`] /
+/// [`Dl2Scheduler::seq_step`]; external drivers supply the policy
+/// probabilities between the two, which is what lets many episodes'
+/// inferences share one batched engine call.
+#[derive(Debug, Clone)]
+pub struct SlotSeq {
+    walloc: Vec<usize>,
+    palloc: Vec<usize>,
+    steps_left: usize,
+    done: bool,
+}
+
+impl SlotSeq {
+    /// Sequence over (void taken, budget exhausted, or nothing fits)?
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Final per-batch-job (workers, ps) counts.
+    pub fn into_alloc(self) -> (Vec<usize>, Vec<usize>) {
+        (self.walloc, self.palloc)
+    }
 }
 
 pub struct Dl2Scheduler {
@@ -200,6 +236,125 @@ impl Dl2Scheduler {
         None
     }
 
+    /// Open a multi-inference sequence for a batch of `batch_len` jobs.
+    pub fn seq_begin(&self, batch_len: usize) -> SlotSeq {
+        SlotSeq {
+            walloc: vec![0usize; batch_len],
+            palloc: vec![0usize; batch_len],
+            steps_left: self.cfg.max_inferences,
+            done: false,
+        }
+    }
+
+    /// Observation for the sequence's next inference — `(state, mask)` —
+    /// or `None` when the sequence is over (void taken, inference budget
+    /// exhausted, or only the void action remains valid).
+    ///
+    /// Schema-driven: the in-progress placement feeds the topology
+    /// blocks (v2), so successive inferences of the slot see capacity
+    /// shrink and rack spreads grow as the sequence allocates.  V1
+    /// schemas ignore the placement — the legacy bitwise-identical path.
+    pub fn seq_observe(
+        &self,
+        cluster: &Cluster,
+        placement: &crate::cluster::Placement,
+        batch: &[usize],
+        seq: &SlotSeq,
+    ) -> Option<(Vec<f32>, Vec<bool>)> {
+        if seq.done || seq.steps_left == 0 {
+            return None;
+        }
+        let j = self.cfg.j;
+        let mask = action_mask(cluster, placement, batch, &seq.walloc, &seq.palloc, j);
+        if mask.iter().filter(|&&m| m).count() <= 1 {
+            return None; // only void remains
+        }
+        let state = self
+            .schema
+            .encode(cluster, Some(placement), batch, &seq.walloc, &seq.palloc, j);
+        Some((state, mask))
+    }
+
+    /// Consume one inference result: pick the action (exploration
+    /// override / greedy argmax / sampled), record the transition in
+    /// training mode, and grow the placement.  `state`/`mask` must be
+    /// the pair [`Dl2Scheduler::seq_observe`] returned for this step and
+    /// `probs` the policy output for `state`.
+    pub fn seq_step(
+        &mut self,
+        cluster: &Cluster,
+        placement: &mut crate::cluster::Placement,
+        batch: &[usize],
+        seq: &mut SlotSeq,
+        state: Vec<f32>,
+        mask: &[bool],
+        probs: &[f32],
+    ) {
+        let j = self.cfg.j;
+        seq.steps_left -= 1;
+        let masked = mask_probs(probs, mask);
+
+        // Job-aware ε-greedy exploration (§4.3), training mode only.
+        let mut action = None;
+        if self.training && self.cfg.explore.enabled {
+            if let Some(fix) =
+                self.poor_state_action(mask, &seq.walloc, &seq.palloc, batch.len())
+            {
+                if self.rng.bool(self.cfg.explore.epsilon) {
+                    action = Some(fix);
+                    self.explored += 1;
+                }
+            }
+        }
+        let action = action.unwrap_or_else(|| {
+            if !self.training && self.cfg.argmax_eval {
+                // Greedy evaluation: the mode of the masked policy.
+                masked
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or_else(|| void_action(j))
+            } else {
+                self.rng.sample_probs(&masked)
+            }
+        });
+
+        if self.training {
+            self.transitions.push(Transition {
+                state,
+                action,
+                slot: cluster.slot,
+            });
+        }
+        if action >= void_action(j) {
+            seq.done = true;
+            return;
+        }
+        match decode_action(action, j) {
+            Action::Void => seq.done = true,
+            Action::Grow { job_slot, dw, dp } => {
+                if job_slot >= batch.len() {
+                    seq.done = true; // masked anyway; safety
+                    return;
+                }
+                let id = batch[job_slot];
+                let jt = &cluster.catalog[cluster.jobs[id].type_idx];
+                let mut ok = true;
+                if dw > 0 {
+                    ok &= placement.try_place_for(id, &jt.worker_res).is_some();
+                }
+                if ok && dp > 0 {
+                    ok &= placement.try_place_for(id, &jt.ps_res).is_some();
+                }
+                if ok {
+                    seq.walloc[job_slot] += dw;
+                    seq.palloc[job_slot] += dp;
+                }
+            }
+        }
+    }
+
     /// Run the multi-inference allocation sequence for one batch of jobs,
     /// mutating the shared placement. Returns (workers, ps) per batch job.
     fn allocate_batch(
@@ -208,87 +363,16 @@ impl Dl2Scheduler {
         placement: &mut crate::cluster::Placement,
         batch: &[usize],
     ) -> (Vec<usize>, Vec<usize>) {
-        let j = self.cfg.j;
-        let mut walloc = vec![0usize; batch.len()];
-        let mut palloc = vec![0usize; batch.len()];
-        for _ in 0..self.cfg.max_inferences {
-            // Schema-driven observation: the in-progress placement feeds
-            // the topology blocks (v2), so successive inferences of the
-            // slot see capacity shrink and rack spreads grow as the
-            // sequence allocates.  V1 schemas ignore the placement — the
-            // legacy bitwise-identical path.
-            let state =
-                self.schema
-                    .encode(cluster, Some(&*placement), batch, &walloc, &palloc, j);
-            let mask = action_mask(cluster, placement, batch, &walloc, &palloc, j);
-            if mask.iter().filter(|&&m| m).count() <= 1 {
-                break; // only void remains
-            }
+        let mut seq = self.seq_begin(batch.len());
+        while let Some((state, mask)) = self.seq_observe(cluster, placement, batch, &seq) {
+            // Disjoint-field borrow: the engine runs while θ is read.
             let probs = self
                 .engine
-                .policy_infer_state(j, &self.pol, &state)
+                .policy_infer_state(self.cfg.j, &self.pol, &state)
                 .expect("policy_infer failed");
-            let masked = mask_probs(&probs, &mask);
-
-            // Job-aware ε-greedy exploration (§4.3), training mode only.
-            let mut action = None;
-            if self.training && self.cfg.explore.enabled {
-                if let Some(fix) =
-                    self.poor_state_action(&mask, &walloc, &palloc, batch.len())
-                {
-                    if self.rng.bool(self.cfg.explore.epsilon) {
-                        action = Some(fix);
-                        self.explored += 1;
-                    }
-                }
-            }
-            let action = action.unwrap_or_else(|| {
-                if !self.training && self.cfg.argmax_eval {
-                    // Greedy evaluation: the mode of the masked policy.
-                    masked
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, _)| i)
-                        .unwrap_or_else(|| void_action(j))
-                } else {
-                    self.rng.sample_probs(&masked)
-                }
-            });
-
-            if self.training {
-                self.transitions.push(Transition {
-                    state,
-                    action,
-                    slot: cluster.slot,
-                });
-            }
-            if action >= void_action(j) {
-                break;
-            }
-            match decode_action(action, j) {
-                Action::Void => break,
-                Action::Grow { job_slot, dw, dp } => {
-                    if job_slot >= batch.len() {
-                        break; // masked anyway; safety
-                    }
-                    let id = batch[job_slot];
-                    let jt = &cluster.catalog[cluster.jobs[id].type_idx];
-                    let mut ok = true;
-                    if dw > 0 {
-                        ok &= placement.try_place_for(id, &jt.worker_res).is_some();
-                    }
-                    if ok && dp > 0 {
-                        ok &= placement.try_place_for(id, &jt.ps_res).is_some();
-                    }
-                    if ok {
-                        walloc[job_slot] += dw;
-                        palloc[job_slot] += dp;
-                    }
-                }
-            }
+            self.seq_step(cluster, placement, batch, &mut seq, state, &mask, &probs);
         }
-        (walloc, palloc)
+        seq.into_alloc()
     }
 }
 

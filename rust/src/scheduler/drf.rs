@@ -9,7 +9,7 @@
 
 use std::collections::BTreeMap;
 
-use super::{try_grow, Alloc, Scheduler};
+use super::{try_grow, Alloc, Reallocation, Scheduler};
 use crate::cluster::Cluster;
 
 #[derive(Debug, Default)]
@@ -73,6 +73,14 @@ impl Scheduler for Drf {
 
     fn schedule(&mut self, cluster: &Cluster, active: &[usize]) -> Vec<Alloc> {
         Self::allocate(cluster, active)
+    }
+
+    /// Progressive filling ranks by the dominant share of the *current
+    /// slot's* tentative allocation against static capacity — job
+    /// progress never enters — so the event kernel may coast between
+    /// membership changes.
+    fn reallocation(&self) -> Reallocation {
+        Reallocation::OnMembershipChange
     }
 }
 

@@ -6,7 +6,7 @@
 
 use std::collections::BTreeMap;
 
-use super::{try_grow, Alloc, Scheduler};
+use super::{try_grow, Alloc, Reallocation, Scheduler};
 use crate::cluster::Cluster;
 
 pub struct Fifo {
@@ -53,6 +53,13 @@ impl Scheduler for Fifo {
                 (id, w, p)
             })
             .collect()
+    }
+
+    /// The greedy fill depends only on arrival order and static
+    /// per-type requests — never on progress — so the event kernel may
+    /// coast between membership changes.
+    fn reallocation(&self) -> Reallocation {
+        Reallocation::OnMembershipChange
     }
 }
 

@@ -7,6 +7,14 @@
 //! driver feeds a trace's arrivals in, applies allocations, advances the
 //! environment, and reports completion-time metrics.
 //!
+//! Two episode kernels share that contract: [`run_episode`] is the
+//! slot-stepped reference, [`run_episode_event`] the discrete-event core
+//! that skips idle slots and — for schedulers declaring
+//! [`Reallocation::OnMembershipChange`] — coasts on an unchanged
+//! placement between membership changes.  The two are pinned bitwise
+//! against each other by `tests/event_kernel.rs`; see
+//! [`crate::cluster`] for the invariants that make the skipping exact.
+//!
 //! # Observation schema
 //!
 //! What the learned schedulers *see* is declared, not hardcoded: the
@@ -33,7 +41,7 @@ pub mod srtf;
 pub mod state;
 pub mod tetris;
 
-pub use dl2::{Dl2Config, Dl2Scheduler, ExploreConfig};
+pub use dl2::{Dl2Config, Dl2Scheduler, ExploreConfig, SlotSeq};
 pub use drf::Drf;
 pub use features::{FeatureBlock, FeatureSchema, FeatureSet};
 pub use fifo::Fifo;
@@ -42,11 +50,27 @@ pub use optimus::Optimus;
 pub use srtf::Srtf;
 pub use tetris::Tetris;
 
-use crate::cluster::{Cluster, Placement, SlotOutcome};
+use crate::cluster::{Cluster, EventQueue, Placement, SlotOutcome};
 use crate::trace::JobSpec;
 
 /// One job's allocation decision for a slot.
 pub type Alloc = (usize, usize, usize); // (job_id, workers, ps)
+
+/// When a scheduler's decision can change, declared by the scheduler
+/// itself and consumed by the event-driven kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reallocation {
+    /// Decisions may depend on job progress or evolving internal state
+    /// (SRTF remaining time, Optimus's fitted model, a policy's state
+    /// vector) — the kernel reruns the full schedule → place cycle every
+    /// slot, exactly like the reference loop.
+    EverySlot,
+    /// `schedule` is a pure function of the active membership and the
+    /// cluster's static capacity (and `observe` is a no-op): identical
+    /// membership ⇒ identical allocation, so the event kernel may reuse
+    /// a slot's realized placement until a job arrives or finishes.
+    OnMembershipChange,
+}
 
 /// Cacheability of a scheduler's episode results (consumed by
 /// [`sim::ResultCache`](crate::sim::ResultCache)).  The contract is about
@@ -81,6 +105,13 @@ pub trait Scheduler {
     /// instances reused across episodes must override.
     fn cache_tag(&self) -> CacheTag {
         CacheTag::Pure
+    }
+
+    /// See [`Reallocation`].  The conservative default is `EverySlot`;
+    /// only schedulers whose decisions are provably
+    /// membership-determined (FIFO, DRF) override.
+    fn reallocation(&self) -> Reallocation {
+        Reallocation::EverySlot
     }
 }
 
@@ -134,6 +165,29 @@ pub struct EpisodeResult {
     pub jct_per_job: Vec<f64>,
 }
 
+/// Fold a finished episode's cluster + reward stream into an
+/// [`EpisodeResult`] — shared by both kernels so the summary math can
+/// never diverge between them.
+fn finalize_episode(cluster: &Cluster, rewards: Vec<f64>) -> EpisodeResult {
+    let jct_per_job: Vec<f64> = cluster
+        .jobs
+        .iter()
+        .map(|j| {
+            j.completion_time()
+                .map(|t| t as f64)
+                // Unfinished at the guard: count elapsed time (pessimistic).
+                .unwrap_or((cluster.slot - j.arrival_slot) as f64)
+        })
+        .collect();
+    EpisodeResult {
+        avg_jct_slots: crate::util::stats::mean(&jct_per_job),
+        makespan_slots: cluster.slot,
+        rewards,
+        gpu_util: cluster.gpu_util_history.clone(),
+        jct_per_job,
+    }
+}
+
 /// Drive `specs` through a fresh `cluster` under `sched` until all jobs
 /// finish (or `max_slots` elapses as a runaway guard).
 pub fn run_episode(
@@ -146,19 +200,47 @@ pub fn run_episode(
     run_episode_with_hook(cluster, specs, sched, epoch_error, max_slots, |_, _, _| {})
 }
 
+/// [`run_episode`] also returning the final [`Cluster`], so regression
+/// tests can compare full end states (per-job epochs and RNG streams)
+/// across kernels, not just the summary metrics.
+pub fn run_episode_full(
+    cluster: Cluster,
+    specs: &[JobSpec],
+    sched: &mut dyn Scheduler,
+    epoch_error: f64,
+    max_slots: usize,
+) -> (EpisodeResult, Cluster) {
+    run_episode_with_hook_full(cluster, specs, sched, epoch_error, max_slots, |_, _, _| {})
+}
+
 /// [`run_episode`] with a per-slot observation hook, called after the
 /// scheduler decides but before the allocation is applied.  This is the
 /// single episode loop every driver shares: plain evaluation passes a
 /// no-op, the SL dataset generator (`rl::sl::generate_dataset`) decomposes
 /// each slot's decision into imitation labels.
 pub fn run_episode_with_hook<F>(
+    cluster: Cluster,
+    specs: &[JobSpec],
+    sched: &mut dyn Scheduler,
+    epoch_error: f64,
+    max_slots: usize,
+    hook: F,
+) -> EpisodeResult
+where
+    F: FnMut(&Cluster, &[usize], &[Alloc]),
+{
+    run_episode_with_hook_full(cluster, specs, sched, epoch_error, max_slots, hook).0
+}
+
+/// [`run_episode_with_hook`] also returning the final [`Cluster`].
+pub fn run_episode_with_hook_full<F>(
     mut cluster: Cluster,
     specs: &[JobSpec],
     sched: &mut dyn Scheduler,
     epoch_error: f64,
     max_slots: usize,
     mut hook: F,
-) -> EpisodeResult
+) -> (EpisodeResult, Cluster)
 where
     F: FnMut(&Cluster, &[usize], &[Alloc]),
 {
@@ -184,22 +266,212 @@ where
             break;
         }
     }
-    let jct_per_job: Vec<f64> = cluster
-        .jobs
-        .iter()
-        .map(|j| {
-            j.completion_time()
-                .map(|t| t as f64)
-                // Unfinished at the guard: count elapsed time (pessimistic).
-                .unwrap_or((cluster.slot - j.arrival_slot) as f64)
-        })
-        .collect();
-    EpisodeResult {
-        avg_jct_slots: crate::util::stats::mean(&jct_per_job),
-        makespan_slots: cluster.slot,
-        rewards,
-        gpu_util: cluster.gpu_util_history.clone(),
-        jct_per_job,
+    let result = finalize_episode(&cluster, rewards);
+    (result, cluster)
+}
+
+/// The discrete-event episode kernel: same contract and — pinned by
+/// `tests/event_kernel.rs` — bitwise-identical results to
+/// [`run_episode`], reached with less work per simulated slot:
+///
+/// * **Idle gaps** (no arrived, unfinished job) are skipped in bulk via
+///   [`Cluster::skip_idle`]; the reference records `reward = 0.0,
+///   gpu_util = 0.0` per idle slot and draws no RNG there, so the bulk
+///   extension is exact.
+/// * **Coasting**: after a decision slot, if the scheduler declares
+///   [`Reallocation::OnMembershipChange`] and nothing finished, the
+///   realized placement is provably what the reference would recompute,
+///   so schedule/placement are skipped until the [`EventQueue`]'s next
+///   event (arrival, predicted completion, `max_slots`).  Per-slot
+///   [`Cluster::advance`] calls remain — job state and the interference
+///   RNG stream must evolve slot by slot to stay bitwise.
+///
+/// Completion predictions are recomputed only at reallocation points
+/// (allocation / topology-factor changes); under interference they are
+/// mean-rate hints and the per-slot finished check stays authoritative.
+pub fn run_episode_event(
+    cluster: Cluster,
+    specs: &[JobSpec],
+    sched: &mut dyn Scheduler,
+    epoch_error: f64,
+    max_slots: usize,
+) -> EpisodeResult {
+    run_episode_event_full(cluster, specs, sched, epoch_error, max_slots).0
+}
+
+/// [`run_episode_event`] also returning the final [`Cluster`].
+pub fn run_episode_event_full(
+    mut cluster: Cluster,
+    specs: &[JobSpec],
+    sched: &mut dyn Scheduler,
+    epoch_error: f64,
+    max_slots: usize,
+) -> (EpisodeResult, Cluster) {
+    let mut next_spec = 0usize;
+    let mut rewards = Vec::new();
+    let mut queue = EventQueue::new();
+    let coastable = sched.reallocation() == Reallocation::OnMembershipChange;
+    // Rate predictions are exact iff progress is noise-free.
+    let exact = cluster.cfg.interference == 0.0;
+    'episode: loop {
+        // Arrivals due at the current slot.
+        while next_spec < specs.len() && specs[next_spec].arrival_slot <= cluster.slot {
+            let s = &specs[next_spec];
+            cluster.submit(s.type_idx, s.total_epochs, epoch_error);
+            next_spec += 1;
+        }
+        queue.set_next_arrival(
+            (next_spec < specs.len()).then(|| specs[next_spec].arrival_slot),
+        );
+        if cluster.num_active() == 0 && next_spec < specs.len() {
+            // Idle gap: nothing to schedule until the next arrival.
+            let next = specs[next_spec].arrival_slot.min(max_slots);
+            let gap = next - cluster.slot;
+            cluster.skip_idle(gap);
+            rewards.resize(rewards.len() + gap, 0.0);
+            if cluster.slot >= max_slots {
+                break 'episode;
+            }
+            continue 'episode;
+        }
+        // Decision slot — the reference cycle, verbatim.  (Also reached
+        // with an empty active set on a degenerate empty trace, where
+        // the reference's do-while still runs one slot.)
+        let active = cluster.active_jobs();
+        let alloc = sched.schedule(&cluster, &active);
+        let placement = cluster.apply_allocation(&alloc);
+        queue.reallocate(&cluster, &placement);
+        let outcome = cluster.advance(&placement);
+        sched.observe(&cluster, &outcome);
+        rewards.push(outcome.reward);
+        if (next_spec >= specs.len() && cluster.all_finished()) || cluster.slot >= max_slots {
+            break 'episode;
+        }
+        if !coastable || !outcome.finished.is_empty() {
+            continue 'episode;
+        }
+        // Coast: membership unchanged ⇒ the reference would recompute
+        // the identical allocation and placement, so reuse this slot's.
+        let horizon = queue.coast_horizon(max_slots, exact);
+        while cluster.slot < horizon {
+            let out = cluster.advance(&placement);
+            sched.observe(&cluster, &out);
+            rewards.push(out.reward);
+            if (next_spec >= specs.len() && cluster.all_finished())
+                || cluster.slot >= max_slots
+            {
+                break 'episode;
+            }
+            if !out.finished.is_empty() {
+                // Membership changed — reallocate at the next slot.
+                break;
+            }
+        }
+    }
+    let result = finalize_episode(&cluster, rewards);
+    (result, cluster)
+}
+
+/// The episode loop of [`run_episode`] broken open at the `schedule()`
+/// boundary, so an external driver can interleave many episodes'
+/// decision slots — the substrate of the cross-episode batched
+/// inference evaluator ([`crate::sim`]).  Protocol per slot:
+/// [`EpisodeRun::begin_slot`] (submits due arrivals, returns the active
+/// set) → the caller computes an allocation → [`EpisodeRun::finish_slot`]
+/// — until `begin_slot` returns `None`.
+///
+/// Idle gaps are skipped exactly as in [`run_episode_event`]: an empty
+/// slot reaches no scheduler state (no batch ⇒ no inference ⇒ no RNG
+/// draw), so the skip is invisible to the caller's scheduler.
+pub struct EpisodeRun {
+    pub cluster: Cluster,
+    specs: Vec<JobSpec>,
+    next_spec: usize,
+    rewards: Vec<f64>,
+    epoch_error: f64,
+    max_slots: usize,
+    done: bool,
+}
+
+impl EpisodeRun {
+    pub fn new(
+        cluster: Cluster,
+        specs: &[JobSpec],
+        epoch_error: f64,
+        max_slots: usize,
+    ) -> EpisodeRun {
+        EpisodeRun {
+            cluster,
+            specs: specs.to_vec(),
+            next_spec: 0,
+            rewards: Vec::new(),
+            epoch_error,
+            max_slots,
+            done: false,
+        }
+    }
+
+    /// Open the next decision slot: submit due arrivals, skip idle gaps,
+    /// and return the slot's active set — `None` once the episode is
+    /// over.  (The returned set is empty only for a degenerate empty
+    /// trace, whose single no-op slot mirrors the reference do-while.)
+    pub fn begin_slot(&mut self) -> Option<Vec<usize>> {
+        if self.done {
+            return None;
+        }
+        loop {
+            while self.next_spec < self.specs.len()
+                && self.specs[self.next_spec].arrival_slot <= self.cluster.slot
+            {
+                let s = &self.specs[self.next_spec];
+                self.cluster.submit(s.type_idx, s.total_epochs, self.epoch_error);
+                self.next_spec += 1;
+            }
+            if self.cluster.num_active() > 0 || self.next_spec >= self.specs.len() {
+                return Some(self.cluster.active_jobs());
+            }
+            // Idle gap up to the next arrival (or the runaway guard).
+            let next = self.specs[self.next_spec].arrival_slot.min(self.max_slots);
+            let gap = next - self.cluster.slot;
+            self.cluster.skip_idle(gap);
+            self.rewards.resize(self.rewards.len() + gap, 0.0);
+            if self.cluster.slot >= self.max_slots {
+                self.done = true;
+                return None;
+            }
+        }
+    }
+
+    /// Close the slot opened by [`EpisodeRun::begin_slot`]: apply the
+    /// allocation, advance the environment, record the reward and check
+    /// termination.  The caller owns any `observe` bookkeeping.
+    pub fn finish_slot(&mut self, alloc: &[Alloc]) -> SlotOutcome {
+        let placement = self.cluster.apply_allocation(alloc);
+        let outcome = self.cluster.advance(&placement);
+        self.rewards.push(outcome.reward);
+        if (self.next_spec >= self.specs.len() && self.cluster.all_finished())
+            || self.cluster.slot >= self.max_slots
+        {
+            self.done = true;
+        }
+        outcome
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// The finished episode's result (valid once `begin_slot` has
+    /// returned `None`).
+    pub fn result(&self) -> EpisodeResult {
+        debug_assert!(self.done, "result on an unfinished episode");
+        finalize_episode(&self.cluster, self.rewards.clone())
+    }
+
+    /// Finish the episode (valid once `begin_slot` has returned `None`).
+    pub fn into_result(self) -> EpisodeResult {
+        debug_assert!(self.done, "into_result on an unfinished episode");
+        finalize_episode(&self.cluster, self.rewards)
     }
 }
 
@@ -234,6 +506,67 @@ mod tests {
         assert!(res.avg_jct_slots > 0.0);
         assert!(res.makespan_slots < 10_000, "hit the runaway guard");
         assert_eq!(res.jct_per_job.len(), 10);
+    }
+
+    fn assert_results_identical(a: &EpisodeResult, b: &EpisodeResult) {
+        assert_eq!(a.rewards, b.rewards);
+        assert_eq!(a.gpu_util, b.gpu_util);
+        assert_eq!(a.jct_per_job, b.jct_per_job);
+        assert_eq!(a.makespan_slots, b.makespan_slots);
+        assert_eq!(a.avg_jct_slots.to_bits(), b.avg_jct_slots.to_bits());
+    }
+
+    fn sparse_specs() -> Vec<crate::trace::JobSpec> {
+        // Big idle gaps between arrivals to exercise skip_idle.
+        crate::trace::generate(&TraceConfig {
+            num_jobs: 6,
+            ..Default::default()
+        })
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut s)| {
+            s.arrival_slot = i * 300;
+            s
+        })
+        .collect()
+    }
+
+    fn noisy_cluster() -> Cluster {
+        Cluster::new(ClusterConfig {
+            num_servers: 8,
+            interference: 0.2,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn event_kernel_matches_reference_for_every_slot_scheduler() {
+        let specs = sparse_specs();
+        let a = run_episode(noisy_cluster(), &specs, &mut Fixed, 0.1, 5000);
+        let b = run_episode_event(noisy_cluster(), &specs, &mut Fixed, 0.1, 5000);
+        assert_results_identical(&a, &b);
+    }
+
+    #[test]
+    fn event_kernel_matches_reference_on_empty_trace() {
+        // The reference do-while still runs one no-op slot.
+        let a = run_episode(noisy_cluster(), &[], &mut Fixed, 0.0, 100);
+        let b = run_episode_event(noisy_cluster(), &[], &mut Fixed, 0.0, 100);
+        assert_eq!(a.rewards, vec![0.0]);
+        assert_results_identical(&a, &b);
+    }
+
+    #[test]
+    fn episode_run_matches_reference() {
+        let specs = sparse_specs();
+        let reference = run_episode(noisy_cluster(), &specs, &mut Fixed, 0.0, 5000);
+        let mut run = EpisodeRun::new(noisy_cluster(), &specs, 0.0, 5000);
+        let mut sched = Fixed;
+        while let Some(active) = run.begin_slot() {
+            let alloc = sched.schedule(&run.cluster, &active);
+            run.finish_slot(&alloc);
+        }
+        assert_results_identical(&reference, &run.into_result());
     }
 
     #[test]

@@ -31,7 +31,27 @@ pub enum Action {
     Void,
 }
 
-/// Decode an action index in [0, 3J] (3J = void).
+/// Decode an action index, rejecting anything outside the `3J+1`-entry
+/// action space instead of silently folding it into void.  Use this at
+/// trust boundaries (replayed transitions, external action streams)
+/// where an out-of-range index means corrupted input.
+pub fn try_decode_action(idx: usize, j: usize) -> anyhow::Result<Action> {
+    if idx > 3 * j {
+        anyhow::bail!(
+            "action index {idx} out of range for J={j}: valid indices are \
+             0..={} (0..{} grow actions, {} = void)",
+            3 * j,
+            3 * j,
+            3 * j
+        );
+    }
+    Ok(decode_action(idx, j))
+}
+
+/// Decode an action index in [0, 3J] (3J = void).  Out-of-range indices
+/// decode as void — sampling paths mask them to zero probability, so
+/// this is the forgiving in-loop variant; see [`try_decode_action`] for
+/// the validating one.
 pub fn decode_action(idx: usize, j: usize) -> Action {
     if idx >= 3 * j {
         return Action::Void;
@@ -151,21 +171,29 @@ mod tests {
     fn action_codec_roundtrip() {
         let j = 5;
         for idx in 0..3 * j {
-            match decode_action(idx, j) {
-                Action::Grow { job_slot, dw, dp } => {
-                    let kind = match (dw, dp) {
-                        (1, 0) => 0,
-                        (0, 1) => 1,
-                        (1, 1) => 2,
-                        _ => panic!("bad grow"),
-                    };
-                    assert_eq!(encode_action(job_slot, kind), idx);
-                }
-                Action::Void => panic!("non-void decoded as void"),
-            }
+            // Every in-range grow index round-trips through exactly one
+            // (job_slot, kind) pair.
+            let expected = [
+                Action::Grow { job_slot: idx / 3, dw: 1, dp: 0 },
+                Action::Grow { job_slot: idx / 3, dw: 0, dp: 1 },
+                Action::Grow { job_slot: idx / 3, dw: 1, dp: 1 },
+            ][idx % 3];
+            assert_eq!(decode_action(idx, j), expected, "idx={idx}");
+            assert_eq!(encode_action(idx / 3, idx % 3), idx);
         }
         assert_eq!(decode_action(3 * j, j), Action::Void);
         assert_eq!(decode_action(3 * j + 7, j), Action::Void);
+    }
+
+    #[test]
+    fn try_decode_validates_range() {
+        let j = 5;
+        for idx in 0..=3 * j {
+            assert_eq!(try_decode_action(idx, j).unwrap(), decode_action(idx, j));
+        }
+        let err = try_decode_action(3 * j + 1, j).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(err.contains("0..=15"), "error should name valid range: {err}");
     }
 
     #[test]

@@ -1,0 +1,404 @@
+//! Cross-episode batched policy inference.
+//!
+//! A DL² evaluation sweep runs many independent episodes, each issuing a
+//! long sequence of single-state `policy_infer` calls.  Per-call
+//! overhead (host→device state upload, executable dispatch) dominates on
+//! small states, so this module drives the episodes in *lockstep*: every
+//! round it collects the next pending observation from each live episode
+//! and resolves all of them with **one** pooled-engine call
+//! ([`Engine::policy_infer_batch`](crate::runtime::Engine::policy_infer_batch)).
+//!
+//! The driver is built on two seams the schedulers expose:
+//!
+//! * [`EpisodeRun`] — the episode loop broken open at the `schedule()`
+//!   boundary (arrivals, idle-skip, advance, termination).
+//! * [`Dl2Scheduler::seq_begin`] / [`seq_observe`](Dl2Scheduler::seq_observe)
+//!   / [`seq_step`](Dl2Scheduler::seq_step) — the per-slot
+//!   multi-inference sequence as a resumable state machine, so the
+//!   policy call between `observe` and `step` can come from anywhere.
+//!
+//! Batch composition cannot change results: each row is resolved by a
+//! pure function of its own state, and every episode consumes only its
+//! own row — `tests::lockstep_batched_matches_serial` pins a 3-episode
+//! lockstep run bitwise against the same episodes driven one at a time.
+//!
+//! Tensor-layout safety: all episodes in one call must share a single
+//! [`FeatureSchema`](crate::scheduler::features::FeatureSchema)
+//! fingerprint (and J), otherwise rows of different widths/meanings
+//! would be fed through one artifact — checked up front, a hard error.
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, Placement};
+use crate::runtime::{EnginePool, TrainState};
+use crate::scheduler::{
+    Alloc, Dl2Config, Dl2Scheduler, EpisodeResult, EpisodeRun, Scheduler, SlotSeq,
+};
+use crate::sim::{derive_seed, ScenarioSpec};
+use crate::trace::generate;
+
+/// Counters from one lockstep run: how many pooled inference calls were
+/// issued and how many single-state inferences they replaced.
+/// `rows / batches` is the realized batch width.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    pub episodes: usize,
+    /// Pooled inference calls issued.
+    pub batches: usize,
+    /// Total states carried by those calls (= single-state calls saved).
+    pub rows: usize,
+}
+
+/// One slot in progress: the scheduler-side scratch placement plus the
+/// multi-inference cursor, mirroring `Dl2Scheduler::schedule` exactly
+/// (chunks of J over the active set, one shared placement).
+struct SlotState {
+    active: Vec<usize>,
+    placement: Placement,
+    alloc: Vec<Alloc>,
+    chunk_start: usize,
+    seq: SlotSeq,
+}
+
+struct EpState {
+    run: EpisodeRun,
+    sched: Dl2Scheduler,
+    slot: Option<SlotState>,
+    /// The `(state, mask)` pair awaiting this round's inference row.
+    pending: Option<(Vec<f32>, Vec<bool>)>,
+    result: Option<EpisodeResult>,
+}
+
+/// Drive `specs.len()` episodes in lockstep, resolving each round's
+/// pending observations with one `infer` call (row *k* of the output
+/// must be the policy distribution for state *k* of the input).
+///
+/// Generic over the inference function so the lockstep protocol can be
+/// tested offline with a deterministic fake; production use goes through
+/// [`run_dl2_batched`], which binds `infer` to a pooled engine's
+/// [`Engine::policy_infer_batch`](crate::runtime::Engine::policy_infer_batch).
+/// Returns the per-episode results (in
+/// `specs` order), the schedulers back (transitions and engines intact),
+/// and the batch counters.
+pub fn run_dl2_batched_with<F>(
+    specs: &[ScenarioSpec],
+    scheds: Vec<Dl2Scheduler>,
+    mut infer: F,
+) -> Result<(Vec<EpisodeResult>, Vec<Dl2Scheduler>, BatchStats)>
+where
+    F: FnMut(&[Vec<f32>]) -> Result<Vec<Vec<f32>>>,
+{
+    anyhow::ensure!(
+        specs.len() == scheds.len(),
+        "one scheduler per scenario: {} specs, {} schedulers",
+        specs.len(),
+        scheds.len()
+    );
+    if let Some(first) = scheds.first() {
+        let fp = first.schema.fingerprint();
+        let j = first.cfg.j;
+        for (sched, spec) in scheds.iter().zip(specs) {
+            anyhow::ensure!(
+                sched.schema.fingerprint() == fp && sched.cfg.j == j,
+                "batched episodes must share one tensor layout: scenario {} has \
+                 schema {:#018x} J={}, expected {:#018x} J={}",
+                spec.name,
+                sched.schema.fingerprint(),
+                sched.cfg.j,
+                fp,
+                j
+            );
+        }
+    }
+    let mut eps: Vec<EpState> = specs
+        .iter()
+        .zip(scheds)
+        .map(|(spec, sched)| {
+            let trace = generate(&spec.trace);
+            let run = EpisodeRun::new(
+                Cluster::new(spec.cluster.clone()),
+                &trace,
+                spec.epoch_error,
+                spec.max_slots,
+            );
+            EpState {
+                run,
+                sched,
+                slot: None,
+                pending: None,
+                result: None,
+            }
+        })
+        .collect();
+    let mut stats = BatchStats {
+        episodes: eps.len(),
+        ..Default::default()
+    };
+    loop {
+        // Phase 1: advance every live episode inference-free until it
+        // either parks on a pending observation or finishes.
+        let mut states: Vec<Vec<f32>> = Vec::new();
+        let mut who: Vec<usize> = Vec::new();
+        for (i, ep) in eps.iter_mut().enumerate() {
+            if ep.result.is_some() {
+                continue;
+            }
+            debug_assert!(ep.pending.is_none(), "row from last round unconsumed");
+            'episode: loop {
+                if ep.slot.is_none() {
+                    match ep.run.begin_slot() {
+                        Some(active) => {
+                            let placement = ep.run.cluster.placement();
+                            let chunk = active.len().min(ep.sched.cfg.j);
+                            let seq = ep.sched.seq_begin(chunk);
+                            ep.slot = Some(SlotState {
+                                active,
+                                placement,
+                                alloc: Vec::new(),
+                                chunk_start: 0,
+                                seq,
+                            });
+                        }
+                        None => {
+                            ep.result = Some(ep.run.result());
+                            break 'episode;
+                        }
+                    }
+                }
+                let j = ep.sched.cfg.j;
+                let slot = ep.slot.as_mut().expect("slot just ensured");
+                let end = (slot.chunk_start + j).min(slot.active.len());
+                let batch = &slot.active[slot.chunk_start..end];
+                match ep
+                    .sched
+                    .seq_observe(&ep.run.cluster, &slot.placement, batch, &slot.seq)
+                {
+                    Some((state, mask)) => {
+                        states.push(state.clone());
+                        who.push(i);
+                        ep.pending = Some((state, mask));
+                        break 'episode; // park until the pooled call
+                    }
+                    None => {
+                        // Chunk sequence over: bank its allocation.
+                        let seq = std::mem::replace(&mut slot.seq, ep.sched.seq_begin(0));
+                        let (w, p) = seq.into_alloc();
+                        for (k, &id) in batch.iter().enumerate() {
+                            slot.alloc.push((id, w[k], p[k]));
+                        }
+                        slot.chunk_start = end;
+                        if slot.chunk_start < slot.active.len() {
+                            let next = (slot.active.len() - slot.chunk_start).min(j);
+                            slot.seq = ep.sched.seq_begin(next);
+                        } else {
+                            let done = ep.slot.take().expect("slot in progress");
+                            let outcome = ep.run.finish_slot(&done.alloc);
+                            ep.sched.observe(&ep.run.cluster, &outcome);
+                        }
+                    }
+                }
+            }
+        }
+        if states.is_empty() {
+            break; // every episode finished
+        }
+        // Phase 2: one pooled call resolves every parked row.
+        let probs = infer(&states)?;
+        anyhow::ensure!(
+            probs.len() == states.len(),
+            "inference returned {} rows for {} states",
+            probs.len(),
+            states.len()
+        );
+        stats.batches += 1;
+        stats.rows += states.len();
+        for (row, &i) in who.iter().enumerate() {
+            let ep = &mut eps[i];
+            let (state, mask) = ep.pending.take().expect("pending observation");
+            let j = ep.sched.cfg.j;
+            let slot = ep.slot.as_mut().expect("slot in progress");
+            let end = (slot.chunk_start + j).min(slot.active.len());
+            ep.sched.seq_step(
+                &ep.run.cluster,
+                &mut slot.placement,
+                &slot.active[slot.chunk_start..end],
+                &mut slot.seq,
+                state,
+                &mask,
+                &probs[row],
+            );
+        }
+    }
+    let mut results = Vec::with_capacity(eps.len());
+    let mut scheds = Vec::with_capacity(eps.len());
+    for ep in eps {
+        results.push(ep.result.expect("all episodes finished"));
+        scheds.push(ep.sched);
+    }
+    Ok((results, scheds, stats))
+}
+
+/// Evaluate `pol` (greedy, non-training) on every scenario with one
+/// pooled engine serving all episodes' inferences.  Engines come from
+/// `pool` via a single [`EnginePool::checkout_many`] — one per episode
+/// for schema validation plus one for the batched calls — and are all
+/// released back afterwards.  Every spec must ask for `cfg.features`
+/// (one tensor layout per pooled call).
+pub fn run_dl2_batched(
+    specs: &[ScenarioSpec],
+    pool: &EnginePool,
+    cfg: &Dl2Config,
+    pol: &TrainState,
+) -> Result<(Vec<EpisodeResult>, BatchStats)> {
+    let mut guards = pool.checkout_many(specs.len() + 1)?;
+    let mut infer_engine = guards.pop().expect("checkout_many returned n+1").take();
+    let mut scheds = Vec::with_capacity(specs.len());
+    for (i, (spec, mut guard)) in specs.iter().zip(guards).enumerate() {
+        anyhow::ensure!(
+            spec.features == cfg.features,
+            "scenario {} asks for features {:?} but the batch runs {:?}",
+            spec.name,
+            spec.features,
+            cfg.features
+        );
+        let mut sched = Dl2Scheduler::try_new(
+            guard.take(),
+            Dl2Config {
+                seed: derive_seed(cfg.seed, i as u64),
+                ..cfg.clone()
+            },
+        )?;
+        sched.training = false;
+        sched.pol = pol.clone();
+        scheds.push(sched);
+    }
+    let j = cfg.j;
+    let out = run_dl2_batched_with(specs, scheds, |states| {
+        infer_engine.policy_infer_batch(j, pol, states)
+    });
+    pool.release(infer_engine);
+    let (results, scheds, stats) = out?;
+    for sched in scheds {
+        pool.release(sched.engine);
+    }
+    Ok((results, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::runtime::Engine;
+    use crate::trace::TraceConfig;
+    use crate::util::fnv1a_f32s;
+
+    /// Deterministic stand-in policy: a pure function of the state, so
+    /// lockstep and serial drivers see identical rows.
+    fn fake_probs(state: &[f32], n_actions: usize) -> Vec<f32> {
+        let h = fnv1a_f32s(state);
+        (0..n_actions)
+            .map(|a| ((derive_seed(h, a as u64) % 1000) as f32 + 1.0) / 1000.0)
+            .collect()
+    }
+
+    /// Synthesize a host-side artifacts dir (`meta.txt` only): the fake
+    /// inference path never executes a computation, so these tests run
+    /// without the native backend — same pattern as the pool tests.
+    fn artifacts_dir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dl2_batched_test_artifacts");
+        crate::runtime::Meta::write_minimal(&dir, crate::cluster::NUM_TYPES, 16, 8, &[5, 10])
+            .unwrap();
+        dir
+    }
+
+    fn make_sched(dir: &std::path::Path, j: usize, seed: u64) -> Dl2Scheduler {
+        let engine = Engine::load(dir).unwrap();
+        let cfg = Dl2Config {
+            j,
+            features: engine.meta.features,
+            seed,
+            ..Default::default()
+        };
+        let mut sched = Dl2Scheduler::new(engine, cfg);
+        sched.training = false;
+        sched
+    }
+
+    fn specs(features: crate::scheduler::FeatureSet) -> Vec<ScenarioSpec> {
+        (0..3u64)
+            .map(|i| {
+                let mut spec = ScenarioSpec::new(
+                    &format!("batched{i}"),
+                    ClusterConfig {
+                        num_servers: 5 + i as usize,
+                        seed: 40 + i,
+                        ..Default::default()
+                    },
+                    TraceConfig {
+                        num_jobs: 4,
+                        seed: 90 + i,
+                        ..Default::default()
+                    },
+                );
+                spec.max_slots = 400;
+                spec.features = features;
+                spec
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lockstep_batched_matches_serial() {
+        let dir = artifacts_dir();
+        let j = 5;
+        let n_actions = 3 * j + 1;
+        let fake = |states: &[Vec<f32>]| -> Result<Vec<Vec<f32>>> {
+            Ok(states.iter().map(|s| fake_probs(s, n_actions)).collect())
+        };
+        let features = Engine::load(&dir).unwrap().meta.features;
+        let specs = specs(features);
+        let scheds = (0..3).map(|i| make_sched(&dir, j, 100 + i)).collect();
+        let (batched, _, stats) = run_dl2_batched_with(&specs, scheds, fake).unwrap();
+        assert_eq!(batched.len(), 3);
+        assert!(stats.batches >= 1, "episodes must have issued inferences");
+        assert!(
+            stats.rows > stats.batches,
+            "lockstep rounds must carry multiple rows ({} rows / {} batches)",
+            stats.rows,
+            stats.batches
+        );
+        // The same episodes one at a time (batch width 1 throughout):
+        // batch composition must be invisible.
+        for (i, spec) in specs.iter().enumerate() {
+            let scheds = vec![make_sched(&dir, j, 100 + i as u64)];
+            let (serial, _, _) =
+                run_dl2_batched_with(std::slice::from_ref(spec), scheds, fake).unwrap();
+            assert_eq!(serial[0].jct_per_job, batched[i].jct_per_job, "spec {i}");
+            assert_eq!(serial[0].rewards, batched[i].rewards, "spec {i}");
+            assert_eq!(serial[0].gpu_util, batched[i].gpu_util, "spec {i}");
+            assert_eq!(serial[0].makespan_slots, batched[i].makespan_slots);
+            assert_eq!(
+                serial[0].avg_jct_slots.to_bits(),
+                batched[i].avg_jct_slots.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_tensor_layouts_are_rejected() {
+        let dir = artifacts_dir();
+        let features = Engine::load(&dir).unwrap().meta.features;
+        let specs = specs(features);
+        // Same schema, different J → different action/state widths.
+        let scheds = vec![
+            make_sched(&dir, 5, 1),
+            make_sched(&dir, 5, 2),
+            make_sched(&dir, 10, 3),
+        ];
+        let err = match run_dl2_batched_with(&specs, scheds, |_| unreachable!("must fail first")) {
+            Ok(_) => panic!("mixed layouts must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("tensor layout"), "{err}");
+    }
+}

@@ -200,21 +200,36 @@ impl Harness {
     /// pure functions of the spec, so repeated sweeps over overlapping
     /// (scheduler × scenario) sets within one process skip the episodes
     /// they have already run.
-    pub fn run_named(&self, names: &[&str], scenarios: &[ScenarioSpec]) -> Vec<ScenarioResult> {
+    ///
+    /// Unknown names are an error naming the valid options — validated
+    /// up front, before any episode runs.
+    pub fn run_named(
+        &self,
+        names: &[&str],
+        scenarios: &[ScenarioSpec],
+    ) -> anyhow::Result<Vec<ScenarioResult>> {
+        for name in names {
+            if crate::pipeline::baseline_by_name(name).is_none() {
+                anyhow::bail!(
+                    "unknown scheduler {name:?}: valid options are {}",
+                    crate::pipeline::BASELINE_NAMES.join(", ")
+                );
+            }
+        }
         let work: Vec<(String, &ScenarioSpec)> = names
             .iter()
             .flat_map(|n| scenarios.iter().map(move |s| (n.to_string(), s)))
             .collect();
         let cache = ResultCache::global();
-        self.map(&work, |_, (name, spec)| {
+        Ok(self.map(&work, |_, (name, spec)| {
             let mut sched = crate::pipeline::baseline_by_name(name)
-                .unwrap_or_else(|| panic!("unknown scheduler {name:?}"));
+                .expect("names validated above");
             let key = EpisodeKey::for_scheduler(spec, sched.as_ref());
             cache.get_or_run(key, || {
                 let ep = spec.episode(sched.as_mut());
                 ScenarioResult::from_episode(spec, sched.name(), &ep)
             })
-        })
+        }))
     }
 }
 
@@ -304,10 +319,21 @@ mod tests {
     #[test]
     fn run_named_covers_the_product() {
         let scenarios = tiny_matrix().expand();
-        let results = Harness::new(4).run_named(&["drf", "fifo"], &scenarios);
+        let results = Harness::new(4).run_named(&["drf", "fifo"], &scenarios).unwrap();
         assert_eq!(results.len(), 2 * scenarios.len());
         assert!(results[..scenarios.len()].iter().all(|r| r.scheduler == "drf"));
         assert!(results[scenarios.len()..].iter().all(|r| r.scheduler == "fifo"));
         assert!(mean_avg_jct(&results) > 0.0);
+    }
+
+    #[test]
+    fn run_named_rejects_unknown_scheduler() {
+        let scenarios = tiny_matrix().expand();
+        let err = Harness::new(2)
+            .run_named(&["drf", "lottery"], &scenarios)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("lottery"), "{err}");
+        assert!(err.contains("drf") && err.contains("optimus"), "{err}");
     }
 }

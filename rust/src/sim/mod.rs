@@ -44,10 +44,26 @@
 //! order and **bitwise identical for any thread count** — asserted by
 //! `tests/scheduler_integration.rs::harness_parallel_matches_serial`.
 
+//! # Episode kernels and batched inference
+//!
+//! Scenarios evaluate under either episode kernel ([`SimKernel`]): the
+//! slot-stepped reference loop or the discrete-event kernel that skips
+//! idle gaps and coasts stable allocations
+//! ([`ScenarioSpec::episode_with`]; both are pinned bitwise-identical by
+//! `tests/event_kernel.rs`).  For DL² policy evaluation, [`run_dl2_batched`]
+//! drives many episodes in lockstep and resolves each round's pending
+//! state encodings with a single pooled-engine inference call — see
+//! `batched` for the protocol and its batch-composition-independence
+//! guarantee.
+
+mod batched;
 mod cache;
 mod harness;
 mod scenario;
 
+pub use batched::{run_dl2_batched, run_dl2_batched_with, BatchStats};
 pub use cache::{spec_fingerprint, EpisodeKey, ResultCache};
 pub use harness::{mean_avg_jct, Harness, ScenarioResult};
-pub use scenario::{derive_seed, replica_specs, ScenarioMatrix, ScenarioSpec, TopologySpec};
+pub use scenario::{
+    derive_seed, replica_specs, ScenarioMatrix, ScenarioSpec, SimKernel, TopologySpec,
+};

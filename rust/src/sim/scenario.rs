@@ -1,8 +1,24 @@
 //! Scenario descriptions and the axis cross-product builder.
 
 use crate::cluster::{Cluster, ClusterConfig, Res, ServerClass, Topology};
-use crate::scheduler::{run_episode, EpisodeResult, FeatureSet, Scheduler};
+use crate::scheduler::{
+    run_episode, run_episode_event, EpisodeResult, FeatureSet, Scheduler,
+};
 use crate::trace::{generate, ArrivalPattern, TraceConfig, TraceSource};
+
+/// Which episode kernel evaluates a scenario.  Both produce bitwise
+/// identical results (pinned by `tests/event_kernel.rs`); the choice is
+/// purely a speed/reference trade-off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimKernel {
+    /// The slot-stepped reference loop: one schedule/advance per slot.
+    #[default]
+    SlotStepped,
+    /// The discrete-event kernel: idle gaps are skipped wholesale and
+    /// coast-stable schedulers reuse placements between membership
+    /// changes ([`run_episode_event`]).
+    EventDriven,
+}
 
 /// Mix `base` with a stream tag into an independent 64-bit seed
 /// (SplitMix64 finalizer).  Used everywhere a scenario, episode or worker
@@ -177,14 +193,23 @@ impl ScenarioSpec {
     /// trace, cluster RNG, job streams — is derived from the spec alone,
     /// so repeated calls are bitwise identical.
     pub fn episode(&self, sched: &mut dyn Scheduler) -> EpisodeResult {
+        self.episode_with(sched, SimKernel::SlotStepped)
+    }
+
+    /// [`ScenarioSpec::episode`] with an explicit kernel choice.  The
+    /// kernels are pinned bitwise-identical, so this never changes
+    /// results — only how fast sparse traces run.
+    pub fn episode_with(&self, sched: &mut dyn Scheduler, kernel: SimKernel) -> EpisodeResult {
         let specs = generate(&self.trace);
-        run_episode(
-            Cluster::new(self.cluster.clone()),
-            &specs,
-            sched,
-            self.epoch_error,
-            self.max_slots,
-        )
+        let cluster = Cluster::new(self.cluster.clone());
+        match kernel {
+            SimKernel::SlotStepped => {
+                run_episode(cluster, &specs, sched, self.epoch_error, self.max_slots)
+            }
+            SimKernel::EventDriven => {
+                run_episode_event(cluster, &specs, sched, self.epoch_error, self.max_slots)
+            }
+        }
     }
 }
 

@@ -2,13 +2,44 @@
 //!
 //! Supports `--key value`, `--key=value`, bare `--flag` booleans and
 //! positional arguments, with typed getters and a generated usage string.
+//!
+//! Malformed values are **not** panics: the fallible `try_*` getters
+//! return a [`CliError`] naming the flag, the expected type and the
+//! offending value, and the infallible `*_or` convenience getters print
+//! that error (plus the usage text registered via [`Args::with_usage`])
+//! to stderr and exit with status 2 — no backtrace ever reaches a user
+//! who typo'd `--steps abc`.
 
 use std::collections::BTreeMap;
+use std::fmt;
+use std::str::FromStr;
+
+/// A malformed `--key value` pair: which key, what was expected, what
+/// the user actually typed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CliError {
+    pub key: String,
+    pub expected: &'static str,
+    pub got: String,
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "--{} expects {}, got {:?}",
+            self.key, self.expected, self.got
+        )
+    }
+}
+
+impl std::error::Error for CliError {}
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
+    usage: Option<String>,
 }
 
 impl Args {
@@ -40,6 +71,12 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Register a usage string echoed alongside parse errors.
+    pub fn with_usage(mut self, usage: &str) -> Self {
+        self.usage = Some(usage.to_string());
+        self
+    }
+
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
@@ -48,31 +85,80 @@ impl Args {
         self.get(key).unwrap_or(default)
     }
 
+    /// Fallible typed lookup: `Ok(None)` when the flag is absent.
+    fn try_typed<T: FromStr>(
+        &self,
+        key: &str,
+        expected: &'static str,
+    ) -> Result<Option<T>, CliError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| CliError {
+                key: key.to_string(),
+                expected,
+                got: v.to_string(),
+            }),
+        }
+    }
+
+    pub fn try_usize(&self, key: &str) -> Result<Option<usize>, CliError> {
+        self.try_typed(key, "an integer")
+    }
+
+    pub fn try_u64(&self, key: &str) -> Result<Option<u64>, CliError> {
+        self.try_typed(key, "an integer")
+    }
+
+    pub fn try_f64(&self, key: &str) -> Result<Option<f64>, CliError> {
+        self.try_typed(key, "a float")
+    }
+
+    pub fn try_bool(&self, key: &str) -> Result<Option<bool>, CliError> {
+        match self.get(key) {
+            None => Ok(None),
+            Some("true") | Some("1") | Some("yes") => Ok(Some(true)),
+            Some("false") | Some("0") | Some("no") => Ok(Some(false)),
+            Some(v) => Err(CliError {
+                key: key.to_string(),
+                expected: "a boolean (true/false/1/0/yes/no)",
+                got: v.to_string(),
+            }),
+        }
+    }
+
+    /// Print `err` (and the registered usage text, if any) to stderr and
+    /// exit with status 2.  Kept out of unit tests — test the `try_*`
+    /// getters instead.
+    fn exit_with(&self, err: CliError) -> ! {
+        eprintln!("error: {err}");
+        if let Some(usage) = &self.usage {
+            eprintln!("\n{usage}");
+        }
+        std::process::exit(2);
+    }
+
+    fn unwrap_or_exit<T>(&self, r: Result<Option<T>, CliError>, default: T) -> T {
+        match r {
+            Ok(Some(v)) => v,
+            Ok(None) => default,
+            Err(e) => self.exit_with(e),
+        }
+    }
+
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+        self.unwrap_or_exit(self.try_usize(key), default)
     }
 
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+        self.unwrap_or_exit(self.try_u64(key), default)
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got {v:?}")))
-            .unwrap_or(default)
+        self.unwrap_or_exit(self.try_f64(key), default)
     }
 
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
-        match self.get(key) {
-            None => default,
-            Some("true") | Some("1") | Some("yes") => true,
-            Some("false") | Some("0") | Some("no") => false,
-            Some(v) => panic!("--{key} expects a boolean, got {v:?}"),
-        }
+        self.unwrap_or_exit(self.try_bool(key), default)
     }
 
     pub fn has(&self, key: &str) -> bool {
@@ -114,9 +200,23 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn bad_int_panics() {
+    fn bad_int_is_an_error_not_a_panic() {
         let a = parse("--steps abc");
-        a.usize_or("steps", 0);
+        let err = a.try_usize("steps").unwrap_err();
+        assert_eq!(err.key, "steps");
+        assert_eq!(err.got, "abc");
+        assert!(err.to_string().contains("--steps expects an integer"));
+    }
+
+    #[test]
+    fn bad_float_and_bool_errors() {
+        let a = parse("--lr fast --cache maybe");
+        assert!(a.try_f64("lr").is_err());
+        let err = a.try_bool("cache").unwrap_err();
+        assert!(err.to_string().contains("boolean"));
+        // Absent keys are Ok(None), well-formed keys Ok(Some).
+        assert_eq!(a.try_u64("missing").unwrap(), None);
+        let b = parse("--steps 42");
+        assert_eq!(b.try_usize("steps").unwrap(), Some(42));
     }
 }

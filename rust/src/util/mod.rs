@@ -12,7 +12,7 @@ pub mod table;
 
 pub use cli::Args;
 pub use rng::Rng;
-pub use table::Table;
+pub use table::{f, Table};
 
 /// Property-based testing without proptest: runs `body` against `n` seeded
 /// RNG streams; failures report the offending seed for reproduction.

@@ -15,7 +15,12 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 /// xoshiro256++ generator.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares the full internal state: two generators are equal
+/// iff their future draw sequences are identical, which is how the
+/// event-kernel regression tests pin per-job RNG streams bitwise against
+/// the slot-stepped reference.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Rng {
     s: [u64; 4],
 }

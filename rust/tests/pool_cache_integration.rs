@@ -125,9 +125,9 @@ fn run_named_repeat_serves_identical_results_from_global_cache() {
     // Distinct seeds so this test owns its keys in the global cache.
     let specs = scenarios(31_337);
     let harness = Harness::new(2);
-    let a = harness.run_named(&["drf", "fifo"], &specs);
+    let a = harness.run_named(&["drf", "fifo"], &specs).unwrap();
     let hits_before = ResultCache::global().hits();
-    let b = harness.run_named(&["drf", "fifo"], &specs);
+    let b = harness.run_named(&["drf", "fifo"], &specs).unwrap();
     assert_eq!(a.len(), b.len());
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.scenario, y.scenario);
