@@ -1,0 +1,177 @@
+//! Dynamics sweep — (scheduler × dynamics regime) average JCT through
+//! the scenario-matrix harness: the static baseline vs per-server
+//! stragglers, failure/recovery churn, a correlated rack outage, and
+//! capacity arriving mid-trace.
+//!
+//! This is the evaluation regime the paper's fixed-capacity setup never
+//! exercises: live dynamics reward schedulers that re-pack quickly after
+//! displacement and keep queued work off doomed servers.  The DL²
+//! column runs the lockstep batched driver under a deterministic fake
+//! policy (pure function of the state), so the bench runs without the
+//! native backend.
+//!
+//! Also pins the static-identity guarantee at the bench level: the
+//! `static` slice of the dynamics matrix carries exactly the seeds and
+//! cache fingerprints of a matrix with no dynamics axis at all, so
+//! every pre-dynamics figure is reproduced untouched.
+//!
+//! Scale with DL2_BENCH_SCALE; episodes fan out across DL2_THREADS.
+
+use dl2::cluster::{ClusterConfig, DynamicsSpec, NUM_TYPES};
+use dl2::scheduler::{Dl2Config, Dl2Scheduler};
+use dl2::sim::{
+    mean_avg_jct, run_dl2_batched_with, spec_fingerprint, Harness, ScenarioMatrix, TopologySpec,
+};
+use dl2::trace::TraceConfig;
+use dl2::util::{bench_scale, f, scaled, Table};
+
+/// Deterministic stand-in policy (pure function of the state) — same
+/// construction as `perf_sim`.
+fn fake_probs(state: &[f32], n_actions: usize) -> Vec<f32> {
+    let h = dl2::util::fnv1a_f32s(state);
+    (0..n_actions)
+        .map(|a| ((dl2::sim::derive_seed(h, a as u64) % 1000) as f32 + 1.0) / 1000.0)
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let regimes = ["static", "stragglers", "failures", "rackout", "ramp"];
+    let dynamics: Vec<DynamicsSpec> = regimes
+        .iter()
+        .map(|r| DynamicsSpec::parse(r).expect("known regime"))
+        .collect();
+    let topology = TopologySpec::Racked { servers_per_rack: 4, penalty: 0.2 };
+    let replicas = scaled(3, 2);
+    let base_cluster = ClusterConfig { num_servers: 12, ..Default::default() };
+    let base_trace = TraceConfig { num_jobs: scaled(40, 15), ..Default::default() };
+    let matrix = ScenarioMatrix::new(base_cluster.clone(), base_trace.clone())
+        .with_topologies(&[topology])
+        .with_dynamics(&dynamics)
+        .with_replicas(replicas);
+    let scenarios = matrix.expand();
+
+    // Static-identity pin: the regime-0 slice must be indistinguishable
+    // — names, seeds, cache fingerprints — from a matrix that never
+    // heard of the dynamics axis.
+    let plain = ScenarioMatrix::new(base_cluster, base_trace)
+        .with_topologies(&[topology])
+        .with_replicas(replicas)
+        .expand();
+    assert_eq!(scenarios.len(), regimes.len() * plain.len());
+    for (a, b) in scenarios[..replicas].iter().zip(&plain) {
+        assert_eq!(a.name, b.name, "static slice renamed a scenario");
+        assert_eq!(a.cluster.seed, b.cluster.seed, "{}: cluster seed moved", a.name);
+        assert_eq!(a.trace.seed, b.trace.seed, "{}: trace seed moved", a.name);
+        assert_eq!(
+            spec_fingerprint(a),
+            spec_fingerprint(b),
+            "{}: static dynamics changed the cache fingerprint",
+            a.name
+        );
+    }
+    println!("static slice preserves every pre-dynamics seed and fingerprint ✓");
+
+    let schedulers = ["drf", "srtf", "tetris", "optimus"];
+    eprintln!(
+        "[fig_dynamics] {} schedulers x {} scenarios on {} threads...",
+        schedulers.len(),
+        scenarios.len(),
+        Harness::from_env().threads()
+    );
+    let results = Harness::from_env()
+        .run_named(&schedulers, &scenarios)
+        .expect("dynamics sweep schedulers are valid");
+
+    // --- DL² under the lockstep batched driver with the fake policy.
+    let meta_dir = std::env::temp_dir().join("dl2_fig_dynamics_meta");
+    dl2::runtime::Meta::write_minimal(&meta_dir, NUM_TYPES, 16, 8, &[5])?;
+    let j = 5;
+    let n_actions = 3 * j + 1;
+    let scheds: Vec<Dl2Scheduler> = (0..scenarios.len() as u64)
+        .map(|i| {
+            let engine = dl2::runtime::Engine::load(&meta_dir).expect("minimal meta loads");
+            let cfg = Dl2Config { j, seed: 7 + i, ..Default::default() };
+            let mut s = Dl2Scheduler::new(engine, cfg);
+            s.training = false;
+            s
+        })
+        .collect();
+    let fake = |states: &[Vec<f32>]| -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(states.iter().map(|s| fake_probs(s, n_actions)).collect())
+    };
+    let (dl2_eps, _, stats) = run_dl2_batched_with(&scenarios, scheds, fake)?;
+    eprintln!(
+        "[fig_dynamics] dl2(fake): {} episodes, {} rows in {} pooled calls",
+        stats.episodes, stats.rows, stats.batches
+    );
+    let dl2_means: Vec<f64> = (0..regimes.len())
+        .map(|di| {
+            let slice = &dl2_eps[di * replicas..(di + 1) * replicas];
+            slice.iter().map(|e| e.avg_jct_slots).sum::<f64>() / slice.len() as f64
+        })
+        .collect();
+
+    // Matrix order within each scheduler group: dynamics ▸ replicas.
+    let mut t = Table::new(
+        &format!(
+            "Dynamics sweep: avg JCT (slots) by scheduler x regime (scale={})",
+            bench_scale()
+        ),
+        &["regime", "drf", "srtf", "tetris", "optimus", "dl2(fake)"],
+    );
+    for (di, regime) in regimes.iter().enumerate() {
+        let mut row = vec![(*regime).to_string()];
+        for (si, _) in schedulers.iter().enumerate() {
+            let group = &results[si * scenarios.len()..(si + 1) * scenarios.len()];
+            row.push(f(mean_avg_jct(&group[di * replicas..(di + 1) * replicas]), 2));
+        }
+        row.push(f(dl2_means[di], 2));
+        t.row(row);
+    }
+    t.emit("fig_dynamics");
+
+    // Sanity: the axis must actually move the numbers for every
+    // scheduler — a regime sweep that reproduces the static column is a
+    // dynamics layer that never fired.
+    for (si, name) in schedulers.iter().enumerate() {
+        let group = &results[si * scenarios.len()..(si + 1) * scenarios.len()];
+        let calm = mean_avg_jct(&group[..replicas]);
+        let moved = (1..regimes.len())
+            .map(|di| mean_avg_jct(&group[di * replicas..(di + 1) * replicas]))
+            .filter(|jct| (jct - calm).abs() > 1e-9)
+            .count();
+        assert!(moved > 0, "{name}: no dynamics regime moved JCT off the static baseline");
+    }
+    println!("dynamics axis produces distinct JCTs for every scheduler ✓");
+
+    // --- Emit BENCH_fig_dynamics.json.
+    std::fs::create_dir_all("results")?;
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str(&format!(
+        "  \"scale\": {},\n  \"replicas\": {replicas},\n  \"num_jobs\": {},\n",
+        bench_scale(),
+        scaled(40, 15)
+    ));
+    json.push_str("  \"regimes\": [\n");
+    for (di, regime) in regimes.iter().enumerate() {
+        let mut fields = vec![format!("\"regime\": \"{regime}\"")];
+        for (si, name) in schedulers.iter().enumerate() {
+            let group = &results[si * scenarios.len()..(si + 1) * scenarios.len()];
+            fields.push(format!(
+                "\"{name}\": {:.3}",
+                mean_avg_jct(&group[di * replicas..(di + 1) * replicas])
+            ));
+        }
+        fields.push(format!("\"dl2_fake\": {:.3}", dl2_means[di]));
+        json.push_str(&format!(
+            "    {{{}}}{}\n",
+            fields.join(", "),
+            if di + 1 < regimes.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("results/BENCH_fig_dynamics.json", &json)?;
+    println!("[saved results/BENCH_fig_dynamics.json]");
+    Ok(())
+}

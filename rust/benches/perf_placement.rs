@@ -12,7 +12,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use dl2::cluster::{catalog, Placement, Res, ServerClass, Topology};
+use dl2::cluster::{catalog, Placement, Res, ServerClass, TaskKind, Topology};
 use dl2::util::{scaled, Rng, Table};
 
 /// The pre-refactor scan as the baseline under test, backed by the
@@ -142,4 +142,24 @@ fn main() {
     assert_eq!(sum_inc, sum_naive, "incremental and naive chose different servers");
     let speedup = ns_naive as f64 / ns_inc.max(1) as f64;
     println!("incremental vs naive speedup at {servers} servers: {speedup:.2}x");
+
+    // PS/worker pairing micro-assert: with tight GPU caps four workers
+    // fill rack 0 and the fifth spills to rack 1 — the job's PS must
+    // still join the worker majority in rack 0, not the emptier rack its
+    // spilled worker lives in.
+    let pair_topo =
+        Arc::new(Topology::homogeneous(6, Res::new(2.0, 8.0, 48.0)).with_racks(2, 0.3));
+    let mut p = Placement::with_topology(pair_topo);
+    let w = Res::new(1.0, 2.0, 4.0);
+    for i in 0..5 {
+        let idx = p
+            .try_place_kind_for(1, &w, TaskKind::Worker)
+            .expect("worker fits");
+        assert_eq!(p.topology().rack(idx), usize::from(i >= 4), "worker {i}");
+    }
+    let ps_idx = p
+        .try_place_kind_for(1, &Res::new(0.0, 2.0, 4.0), TaskKind::Ps)
+        .expect("ps fits");
+    assert_eq!(p.topology().rack(ps_idx), 0, "PS off the worker-majority rack");
+    println!("PS pairing follows the worker-majority rack ✓");
 }

@@ -1,0 +1,534 @@
+//! Live cluster dynamics: stragglers, failures/recoveries, rack outages
+//! and capacity arriving mid-trace, as a deterministic event program
+//! layered over a static [`Topology`].
+//!
+//! The machine set itself never changes — a [`DynamicsSpec`] is compiled
+//! once per episode ([`DynamicsState::compile`]) into a sorted sequence of
+//! *segments*, each an immutable per-server availability/speed view
+//! ([`DynView`]).  [`Placement`] consults the current slot's view when
+//! picking servers (down servers are not candidates, per-server speed
+//! scales fold into the job's speed multiplier), so `Cluster::advance`,
+//! `effective_rate` and the schedulers' action masks all see time-varying
+//! capacity without any of them growing dynamics-specific code paths.
+//!
+//! Determinism: compilation draws from a dedicated RNG stream derived
+//! from the cluster seed — never from the cluster or per-job streams —
+//! so [`DynamicsSpec::Static`] leaves every existing random sequence,
+//! seed derivation and cache fingerprint bit-for-bit unchanged (the
+//! static-identity guarantee, pinned by `tests/dynamics.rs`).
+
+use std::sync::Arc;
+
+use super::topology::Topology;
+use crate::elastic::ReallocPolicy;
+use crate::util::{fnv1a, Rng};
+
+/// Slots of lookahead the compiler materializes event windows for.
+/// Periodic programs (stragglers, failures) repeat up to this horizon;
+/// beyond it the last segment's view persists.  Far above every scenario
+/// matrix's `max_slots`.
+pub const COMPILE_HORIZON: usize = 20_000;
+
+/// XOR'd into the cluster seed to derive the dynamics compiler's private
+/// RNG stream.
+const DYNAMICS_STREAM: u64 = 0xD11A_57A7;
+
+/// A deterministic, seed-derived program of capacity/speed events over an
+/// episode.  `Static` is the identity: no views are compiled, every code
+/// path stays on the pre-dynamics branch, and its axis/cache tag is 0.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DynamicsSpec {
+    /// No dynamics — the frozen-pool behaviour, bit-for-bit.
+    Static,
+    /// Each server independently (with probability `frac`) becomes a
+    /// periodic straggler: every `period` slots it runs at `slowdown`×
+    /// speed for `duty`·`period` slots (phase drawn per server).
+    Stragglers {
+        frac: f64,
+        slowdown: f64,
+        period: usize,
+        duty: f64,
+    },
+    /// Each server independently (with probability `frac`) cycles through
+    /// fail/recover: up for `mtbf` slots, down for `mttr` slots (phase
+    /// drawn per server).
+    Failures { frac: f64, mtbf: usize, mttr: usize },
+    /// One whole rack (drawn from the seed) goes down at slot `at` for
+    /// `duration` slots — the correlated-failure case.
+    RackOutage { at: usize, duration: usize },
+    /// A fraction `frac` of servers (drawn per server) is absent until
+    /// slot `at`, then comes online — capacity arriving mid-trace.
+    CapacityRamp { frac: f64, at: usize },
+}
+
+impl DynamicsSpec {
+    /// Short scenario-name fragment (empty for `Static`).
+    pub fn name(&self) -> String {
+        match self {
+            DynamicsSpec::Static => String::new(),
+            DynamicsSpec::Stragglers {
+                frac,
+                slowdown,
+                period,
+                duty,
+            } => format!(
+                "strag{:02}s{:02}p{}d{:02}",
+                (frac * 100.0).round() as u32,
+                (slowdown * 100.0).round() as u32,
+                period,
+                (duty * 100.0).round() as u32
+            ),
+            DynamicsSpec::Failures { frac, mtbf, mttr } => format!(
+                "fail{:02}m{mtbf}r{mttr}",
+                (frac * 100.0).round() as u32
+            ),
+            DynamicsSpec::RackOutage { at, duration } => {
+                format!("rackout{at}d{duration}")
+            }
+            DynamicsSpec::CapacityRamp { frac, at } => {
+                format!("ramp{:02}at{at}", (frac * 100.0).round() as u32)
+            }
+        }
+    }
+
+    /// Axis tag folded into scenario seed derivation.  `Static` tags 0 —
+    /// the identity under the matrix's XOR fold, so a matrix whose
+    /// dynamics axis is `[Static]` derives exactly the pre-dynamics
+    /// seeds.  Non-static specs hash their `Debug` form (the same
+    /// convention `sim::spec_fingerprint` uses for whole specs).
+    pub fn tag(&self) -> u64 {
+        match self {
+            DynamicsSpec::Static => 0,
+            other => fnv1a(format!("{other:?}").as_bytes()),
+        }
+    }
+
+    /// Parse a CLI regime name: `static`, `stragglers`, `failures`,
+    /// `rackout`, `ramp` (preset parameters, documented in `--help`).
+    pub fn parse(s: &str) -> Option<DynamicsSpec> {
+        match s {
+            "static" => Some(DynamicsSpec::Static),
+            "stragglers" => Some(DynamicsSpec::Stragglers {
+                frac: 0.4,
+                slowdown: 0.35,
+                period: 120,
+                duty: 0.5,
+            }),
+            "failures" => Some(DynamicsSpec::Failures {
+                frac: 0.3,
+                mtbf: 300,
+                mttr: 80,
+            }),
+            "rackout" => Some(DynamicsSpec::RackOutage {
+                at: 120,
+                duration: 150,
+            }),
+            "ramp" => Some(DynamicsSpec::CapacityRamp { frac: 0.5, at: 200 }),
+            _ => None,
+        }
+    }
+}
+
+/// Cluster-side dynamics configuration: the event program plus how
+/// displaced jobs are re-deployed (the price of reacting to change).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DynamicsConfig {
+    pub spec: DynamicsSpec,
+    /// Reallocation mechanism charged to displaced jobs — the elastic
+    /// hot-scaling protocol vs checkpoint-restart (see
+    /// [`crate::elastic::cost`]).
+    pub realloc: ReallocPolicy,
+    /// Wall-clock milliseconds per scheduling slot, converting the
+    /// elastic layer's suspension-ms into slots.  Default matches the
+    /// paper's 1-minute-order scheduling interval.
+    pub slot_ms: f64,
+}
+
+impl Default for DynamicsConfig {
+    fn default() -> Self {
+        DynamicsConfig {
+            spec: DynamicsSpec::Static,
+            realloc: ReallocPolicy::HotScale,
+            slot_ms: 60_000.0,
+        }
+    }
+}
+
+impl DynamicsConfig {
+    pub fn new(spec: DynamicsSpec) -> DynamicsConfig {
+        DynamicsConfig {
+            spec,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_realloc(mut self, realloc: ReallocPolicy) -> DynamicsConfig {
+        self.realloc = realloc;
+        self
+    }
+
+    pub fn is_static(&self) -> bool {
+        matches!(self.spec, DynamicsSpec::Static)
+    }
+}
+
+/// One segment's immutable per-server view: availability and a dynamic
+/// speed scale (1.0 = nominal) multiplied into `Topology::speed`.
+#[derive(Debug, PartialEq)]
+pub struct DynView {
+    pub up: Vec<bool>,
+    pub speed: Vec<f64>,
+}
+
+impl DynView {
+    /// Number of available servers.
+    pub fn num_up(&self) -> usize {
+        self.up.iter().filter(|&&u| u).count()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Effect {
+    Offline,
+    Slowed(f64),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Window {
+    start: usize,
+    end: usize,
+    effect: Effect,
+}
+
+/// The compiled program: segment start slots (sorted, `starts[0] == 0`)
+/// and one shared view per segment.  Empty under `Static`.
+#[derive(Debug, Clone, Default)]
+pub struct DynamicsState {
+    starts: Vec<usize>,
+    views: Vec<Arc<DynView>>,
+}
+
+impl DynamicsState {
+    /// Compile `spec` against `topo` using a private RNG stream derived
+    /// from `seed`.  Same (spec, topo, seed) → identical segments,
+    /// always.
+    pub fn compile(spec: &DynamicsSpec, topo: &Topology, seed: u64) -> DynamicsState {
+        if matches!(spec, DynamicsSpec::Static) {
+            return DynamicsState::default();
+        }
+        let n = topo.num_servers();
+        let mut rng = Rng::new(seed ^ DYNAMICS_STREAM);
+        let mut windows: Vec<Vec<Window>> = vec![Vec::new(); n];
+        match *spec {
+            DynamicsSpec::Static => unreachable!(),
+            DynamicsSpec::Stragglers {
+                frac,
+                slowdown,
+                period,
+                duty,
+            } => {
+                let period = period.max(1);
+                let len = ((period as f64 * duty).round() as usize).clamp(1, period);
+                for wins in windows.iter_mut() {
+                    // One draw per server in server order, keeping the
+                    // stream layout independent of which servers hit.
+                    let hit = rng.f64() < frac;
+                    let phase = rng.below(period);
+                    if !hit {
+                        continue;
+                    }
+                    let mut start = phase;
+                    while start < COMPILE_HORIZON {
+                        wins.push(Window {
+                            start,
+                            end: start + len,
+                            effect: Effect::Slowed(slowdown),
+                        });
+                        start += period;
+                    }
+                }
+            }
+            DynamicsSpec::Failures { frac, mtbf, mttr } => {
+                let cycle = (mtbf + mttr).max(1);
+                for wins in windows.iter_mut() {
+                    let hit = rng.f64() < frac;
+                    let phase = rng.below(cycle);
+                    if !hit || mttr == 0 {
+                        continue;
+                    }
+                    let mut start = phase + mtbf;
+                    while start < COMPILE_HORIZON {
+                        wins.push(Window {
+                            start,
+                            end: start + mttr,
+                            effect: Effect::Offline,
+                        });
+                        start += cycle;
+                    }
+                }
+            }
+            DynamicsSpec::RackOutage { at, duration } => {
+                let rack = rng.below(topo.num_racks().max(1));
+                for (s, wins) in windows.iter_mut().enumerate() {
+                    if topo.rack(s) == rack && duration > 0 {
+                        wins.push(Window {
+                            start: at,
+                            end: at + duration,
+                            effect: Effect::Offline,
+                        });
+                    }
+                }
+            }
+            DynamicsSpec::CapacityRamp { frac, at } => {
+                for wins in windows.iter_mut() {
+                    if rng.f64() < frac && at > 0 {
+                        wins.push(Window {
+                            start: 0,
+                            end: at,
+                            effect: Effect::Offline,
+                        });
+                    }
+                }
+            }
+        }
+
+        // Segment boundaries: slot 0 plus every window edge in range.
+        let mut bounds: Vec<usize> = vec![0];
+        for wins in &windows {
+            for w in wins {
+                if w.start < COMPILE_HORIZON {
+                    bounds.push(w.start);
+                }
+                if w.end < COMPILE_HORIZON {
+                    bounds.push(w.end);
+                }
+            }
+        }
+        bounds.sort_unstable();
+        bounds.dedup();
+
+        let mut starts = Vec::new();
+        let mut views: Vec<Arc<DynView>> = Vec::new();
+        for &b in &bounds {
+            let mut up = vec![true; n];
+            let mut speed = vec![1.0; n];
+            for (s, wins) in windows.iter().enumerate() {
+                for w in wins {
+                    if w.start <= b && b < w.end {
+                        match w.effect {
+                            Effect::Offline => up[s] = false,
+                            // min-fold: overlapping slowdowns take the
+                            // worst (single-spec programs never overlap).
+                            Effect::Slowed(f) => speed[s] = speed[s].min(f),
+                        }
+                    }
+                }
+            }
+            let view = DynView { up, speed };
+            // Coalesce: drop boundaries that change nothing, so adjacent
+            // segments always differ and Arc identity ⇔ segment identity.
+            if let Some(last) = views.last() {
+                if **last == view {
+                    continue;
+                }
+            }
+            starts.push(b);
+            views.push(Arc::new(view));
+        }
+        DynamicsState { starts, views }
+    }
+
+    /// True when no program is compiled — every consumer takes its
+    /// pre-dynamics code path.
+    pub fn is_static(&self) -> bool {
+        self.views.is_empty()
+    }
+
+    /// The view in effect at `slot` (`None` when static).  Beyond the
+    /// compile horizon the last segment persists.
+    pub fn view_at(&self, slot: usize) -> Option<&Arc<DynView>> {
+        if self.views.is_empty() {
+            return None;
+        }
+        let idx = self.starts.partition_point(|&s| s <= slot) - 1;
+        Some(&self.views[idx])
+    }
+
+    /// First segment boundary strictly after `slot`, if any.
+    pub fn next_change_after(&self, slot: usize) -> Option<usize> {
+        let idx = self.starts.partition_point(|&s| s <= slot);
+        self.starts.get(idx).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Res;
+
+    fn topo(n: usize) -> Topology {
+        Topology::homogeneous(n, Res::new(2.0, 8.0, 48.0))
+    }
+
+    #[test]
+    fn static_compiles_to_nothing() {
+        let st = DynamicsState::compile(&DynamicsSpec::Static, &topo(4), 7);
+        assert!(st.is_static());
+        assert!(st.view_at(0).is_none());
+        assert!(st.next_change_after(0).is_none());
+    }
+
+    #[test]
+    fn static_tag_is_identity() {
+        assert_eq!(DynamicsSpec::Static.tag(), 0);
+        let specs = [
+            DynamicsSpec::parse("stragglers").unwrap(),
+            DynamicsSpec::parse("failures").unwrap(),
+            DynamicsSpec::parse("rackout").unwrap(),
+            DynamicsSpec::parse("ramp").unwrap(),
+        ];
+        for s in &specs {
+            assert_ne!(s.tag(), 0, "{s:?}");
+            assert!(!s.name().is_empty());
+        }
+        // Pairwise distinct tags and names.
+        for i in 0..specs.len() {
+            for j in i + 1..specs.len() {
+                assert_ne!(specs[i].tag(), specs[j].tag());
+                assert_ne!(specs[i].name(), specs[j].name());
+            }
+        }
+    }
+
+    #[test]
+    fn rack_outage_segments_are_exact() {
+        // Single rack → the outage hits every server, deterministically.
+        let st = DynamicsState::compile(
+            &DynamicsSpec::RackOutage {
+                at: 50,
+                duration: 30,
+            },
+            &topo(3),
+            1,
+        );
+        assert!(!st.is_static());
+        let before = st.view_at(0).unwrap();
+        let during = st.view_at(50).unwrap();
+        let edge = st.view_at(79).unwrap();
+        let after = st.view_at(80).unwrap();
+        assert_eq!(before.num_up(), 3);
+        assert_eq!(during.num_up(), 0);
+        assert!(Arc::ptr_eq(during, edge), "same segment, same Arc");
+        assert_eq!(after.num_up(), 3);
+        assert_eq!(st.next_change_after(0), Some(50));
+        assert_eq!(st.next_change_after(50), Some(80));
+        assert_eq!(st.next_change_after(80), None);
+        assert!(!Arc::ptr_eq(before, during));
+    }
+
+    #[test]
+    fn capacity_ramp_brings_servers_online() {
+        let st = DynamicsState::compile(
+            &DynamicsSpec::CapacityRamp { frac: 1.0, at: 100 },
+            &topo(4),
+            3,
+        );
+        assert_eq!(st.view_at(0).unwrap().num_up(), 0);
+        assert_eq!(st.view_at(99).unwrap().num_up(), 0);
+        assert_eq!(st.view_at(100).unwrap().num_up(), 4);
+        assert_eq!(st.next_change_after(0), Some(100));
+    }
+
+    #[test]
+    fn stragglers_slow_but_never_kill() {
+        let st = DynamicsState::compile(
+            &DynamicsSpec::Stragglers {
+                frac: 1.0,
+                slowdown: 0.25,
+                period: 40,
+                duty: 0.5,
+            },
+            &topo(4),
+            11,
+        );
+        assert!(!st.is_static());
+        let mut saw_slow = false;
+        for slot in 0..200 {
+            let v = st.view_at(slot).unwrap();
+            assert_eq!(v.num_up(), 4, "stragglers never go down");
+            if v.speed.iter().any(|&s| s == 0.25) {
+                saw_slow = true;
+            }
+            assert!(v.speed.iter().all(|&s| s == 1.0 || s == 0.25));
+        }
+        assert!(saw_slow);
+    }
+
+    #[test]
+    fn failures_cycle_and_recover() {
+        let st = DynamicsState::compile(
+            &DynamicsSpec::Failures {
+                frac: 1.0,
+                mtbf: 30,
+                mttr: 10,
+            },
+            &topo(6),
+            5,
+        );
+        let mut saw_down = false;
+        let mut saw_recovered = false;
+        let mut prev_down: Vec<bool> = vec![false; 6];
+        for slot in 0..500 {
+            let v = st.view_at(slot).unwrap();
+            for (s, &u) in v.up.iter().enumerate() {
+                if !u {
+                    saw_down = true;
+                }
+                if prev_down[s] && u {
+                    saw_recovered = true;
+                }
+                prev_down[s] = !u;
+            }
+        }
+        assert!(saw_down && saw_recovered);
+    }
+
+    #[test]
+    fn compile_is_deterministic() {
+        let spec = DynamicsSpec::Failures {
+            frac: 0.5,
+            mtbf: 50,
+            mttr: 20,
+        };
+        let a = DynamicsState::compile(&spec, &topo(8), 42);
+        let b = DynamicsState::compile(&spec, &topo(8), 42);
+        assert_eq!(a.starts, b.starts);
+        assert_eq!(a.views.len(), b.views.len());
+        for (va, vb) in a.views.iter().zip(&b.views) {
+            assert_eq!(**va, **vb);
+        }
+        // A different seed moves the phases.
+        let c = DynamicsState::compile(&spec, &topo(8), 43);
+        assert!(
+            a.starts != c.starts
+                || a.views.iter().zip(&c.views).any(|(x, y)| **x != **y),
+            "different seeds should give different programs"
+        );
+    }
+
+    #[test]
+    fn adjacent_segments_always_differ() {
+        let spec = DynamicsSpec::Stragglers {
+            frac: 0.7,
+            slowdown: 0.5,
+            period: 25,
+            duty: 0.4,
+        };
+        let st = DynamicsState::compile(&spec, &topo(10), 9);
+        for w in st.views.windows(2) {
+            assert_ne!(*w[0], *w[1], "coalescing must drop no-op boundaries");
+        }
+        assert_eq!(st.starts[0], 0);
+        assert!(st.starts.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -41,13 +41,17 @@ impl Event {
     }
 }
 
-/// Next-event state for one episode: one pending arrival pointer plus a
-/// per-active-job completion prediction.
+/// Next-event state for one episode: one pending arrival pointer, a
+/// per-active-job completion prediction, and the next cluster-dynamics
+/// boundary (if a dynamics program is live).
 #[derive(Debug, Clone, Default)]
 pub struct EventQueue {
     next_arrival: Option<usize>,
     /// `(predicted completion slot, job id)` per active allocated job.
     completions: Vec<(usize, usize)>,
+    /// Next dynamics segment boundary — capacity or speed changes there,
+    /// so any coast window must end at it.
+    next_dynamics: Option<usize>,
 }
 
 impl EventQueue {
@@ -64,9 +68,26 @@ impl EventQueue {
         self.next_arrival
     }
 
+    /// Record the next cluster-dynamics boundary
+    /// ([`Cluster::next_dynamics_change`]; `None` when static or past
+    /// the last boundary).  A dynamics event invalidates placements and
+    /// rates exactly like an arrival does, so it bounds coast windows
+    /// unconditionally.
+    pub fn set_next_dynamics(&mut self, slot: Option<usize>) {
+        self.next_dynamics = slot;
+    }
+
+    pub fn next_dynamics(&self) -> Option<usize> {
+        self.next_dynamics
+    }
+
     /// Reallocation point: re-predict every active job's completion from
-    /// its current effective rate.  `ceil(remaining / rate)` whole slots
-    /// from `now`; jobs with no positive rate have no completion event.
+    /// its current effective rate.  `ceil(remaining / rate +
+    /// suspension)` whole slots from `now` — a displaced job burns its
+    /// redeployment suspension (full slots of zero progress plus a
+    /// fractional tail) before training resumes, which shifts its
+    /// completion by exactly that much while the allocation holds; jobs
+    /// with no positive rate have no completion event.
     pub fn reallocate(&mut self, cluster: &Cluster, placement: &Placement) {
         self.completions.clear();
         let now = cluster.slot;
@@ -75,8 +96,11 @@ impl EventQueue {
             if rate <= 0.0 {
                 continue;
             }
-            let remaining = cluster.jobs[id].true_remaining();
-            let slots = (remaining / rate).ceil().max(1.0);
+            let job = &cluster.jobs[id];
+            let remaining = job.true_remaining();
+            // `+ 0.0` is bitwise-neutral, so the static path (suspension
+            // always 0.0) predicts exactly what it always did.
+            let slots = (remaining / rate + job.suspension).ceil().max(1.0);
             if slots.is_finite() {
                 self.completions.push((now + slots as usize, id));
             }
@@ -90,14 +114,23 @@ impl EventQueue {
     }
 
     /// The next event of any kind at or after the current predictions.
+    /// Dynamics boundaries surface as [`Event::Reallocation`] and lose
+    /// ties to arrivals and completions (the boundary only matters for
+    /// the *next* placement, which those events force anyway).
     pub fn next_event(&self) -> Option<Event> {
         let arrival = self.next_arrival.map(Event::Arrival);
         let completion = self
             .earliest_completion()
             .map(|(slot, job)| Event::Completion { slot, job });
-        match (arrival, completion) {
+        let first = match (arrival, completion) {
             (Some(a), Some(c)) => Some(if a.slot() <= c.slot() { a } else { c }),
             (a, c) => a.or(c),
+        };
+        let dynamics = self.next_dynamics.map(Event::Reallocation);
+        match (first, dynamics) {
+            (Some(e), Some(d)) if d.slot() < e.slot() => Some(d),
+            (None, d) => d,
+            (e, _) => e,
         }
     }
 
@@ -107,10 +140,17 @@ impl EventQueue {
     /// bound only when `exact` (interference off) — under noise a job
     /// can finish earlier or later than its mean-rate estimate, and the
     /// kernel's per-slot finished check handles either.
+    /// A pending dynamics boundary caps the window unconditionally —
+    /// capacity/speed changes there can change any scheduler's decision
+    /// and the displacement charges must be applied against a freshly
+    /// realized placement.
     pub fn coast_horizon(&self, max_slots: usize, exact: bool) -> usize {
         let mut horizon = max_slots;
         if let Some(a) = self.next_arrival {
             horizon = horizon.min(a);
+        }
+        if let Some(d) = self.next_dynamics {
+            horizon = horizon.min(d);
         }
         if exact {
             if let Some((slot, _)) = self.earliest_completion() {
@@ -191,5 +231,35 @@ mod tests {
         assert_eq!(q.coast_horizon(10_000, false), comp);
         q.set_next_arrival(None);
         assert_eq!(q.coast_horizon(10_000, false), 10_000);
+    }
+
+    #[test]
+    fn dynamics_boundary_caps_horizon_and_loses_ties() {
+        let mut q = EventQueue::new();
+        q.set_next_dynamics(Some(40));
+        // Caps the coast window even under interference (inexact mode).
+        assert_eq!(q.coast_horizon(10_000, false), 40);
+        assert_eq!(q.next_event(), Some(Event::Reallocation(40)));
+        // An arrival at the same slot wins the tie; an earlier dynamics
+        // boundary wins outright.
+        q.set_next_arrival(Some(40));
+        assert_eq!(q.next_event(), Some(Event::Arrival(40)));
+        q.set_next_dynamics(Some(39));
+        assert_eq!(q.next_event(), Some(Event::Reallocation(39)));
+        assert_eq!(q.coast_horizon(10_000, true), 39);
+    }
+
+    #[test]
+    fn suspension_shifts_completion_prediction() {
+        let mut c = cluster();
+        let id = c.submit(0, 10.0, 0.0);
+        let p = c.apply_allocation(&[(id, 2, 2)]);
+        let mut q = EventQueue::new();
+        q.reallocate(&c, &p);
+        let (base, _) = q.earliest_completion().unwrap();
+        c.jobs[id].suspension = 3.0;
+        q.reallocate(&c, &p);
+        let (shifted, _) = q.earliest_completion().unwrap();
+        assert_eq!(shifted, base + 3);
     }
 }

@@ -31,6 +31,12 @@ pub struct Job {
     /// Per-job static speed factor, resampled per run (slow/fast replicas
     /// land on different machines / suffer different neighbours).
     pub speed_factor: f64,
+    /// Remaining redeployment-suspension charge, in slots (fractional).
+    /// Set when a dynamics event displaces the job's tasks
+    /// ([`crate::cluster::dynamics`]); burned down — suppressing progress
+    /// — on slots where the job holds an allocation.  Always 0.0 under
+    /// `DynamicsSpec::Static`.
+    pub suspension: f64,
 }
 
 impl Job {
@@ -54,6 +60,7 @@ impl Job {
             finished_slot: None,
             rng,
             speed_factor: 1.0,
+            suspension: 0.0,
         }
     }
 

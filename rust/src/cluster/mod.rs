@@ -60,7 +60,45 @@
 //! `tests/event_kernel.rs` pins both kernels to identical rewards, JCTs,
 //! GPU-utilization series and per-job RNG states across the scenario
 //! matrix.
+//!
+//! # Cluster dynamics and the static-identity guarantee
+//!
+//! The machine pool need not be frozen at episode start: a
+//! [`DynamicsSpec`] ([`dynamics`]) is a deterministic, seed-derived
+//! event program — per-server straggler windows, failure/recovery
+//! cycles, correlated rack outages, capacity arriving mid-trace —
+//! compiled once per episode into a [`DynamicsState`]: a sorted list of
+//! segments, each an immutable per-server availability/speed view
+//! ([`DynView`]) layered over the static [`Topology`].  The view rides
+//! on each slot's [`Placement`]: down servers are not placement
+//! candidates (so `can_place` — and with it every scheduler's action
+//! mask — sees the live pool), dynamic speed scales fold into
+//! [`Placement::speed_multiplier`] (so `advance` and `effective_rate`
+//! see them for free), and V2's per-class free-capacity features count
+//! only servers that are up.
+//!
+//! Reacting to change has a price: at each dynamics boundary, every
+//! active job holding a task on a server that just went down is charged
+//! a redeployment suspension (`Job::suspension`, in slots) calibrated
+//! from the elastic substrate's measured costs
+//! ([`crate::elastic::ReallocCost`]) under the configured
+//! [`ReallocPolicy`](crate::elastic::ReallocPolicy) — the paper's
+//! hot-scaling protocol or the checkpoint-restart baseline.  The charge
+//! burns only on slots where the job holds an allocation (a restart
+//! cannot proceed without resources) and suppresses progress while it
+//! burns.
+//!
+//! **Static identity**: `DynamicsSpec::Static` compiles to nothing.  No
+//! views exist, `Placement` takes its pre-dynamics code paths verbatim,
+//! suspensions stay 0.0, the dynamics RNG stream is never created, and
+//! the config's `Debug` form — the scenario cache fingerprint — renders
+//! without the field.  Every pre-dynamics seed, fingerprint, episode and
+//! bench figure is bit-for-bit unchanged; `tests/dynamics.rs` pins this,
+//! and `tests/event_kernel.rs` pins that the event kernel (which treats
+//! dynamics boundaries as reallocation points) stays bitwise-equal to
+//! the slot-stepped reference under live churn.
 
+pub mod dynamics;
 pub mod events;
 pub mod job;
 pub mod server;
@@ -68,18 +106,22 @@ pub mod speed;
 pub mod topology;
 pub mod types;
 
+pub use dynamics::{DynView, DynamicsConfig, DynamicsSpec, DynamicsState};
 pub use events::EventQueue;
 pub use job::Job;
-pub use server::Placement;
+pub use server::{Placement, TaskKind};
 pub use topology::{ServerClass, Topology};
 pub use types::{catalog, JobType, Res, SpeedParams, NUM_TYPES};
 
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
 use std::sync::Arc;
 
+use crate::elastic::{ElasticConfig, ReallocCost};
 use crate::util::Rng;
 
 /// Environment configuration.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct ClusterConfig {
     pub num_servers: usize,
     pub server_cap: Res,
@@ -99,6 +141,10 @@ pub struct ClusterConfig {
     /// each job's speed is scaled by U(1-v, 1+v) for its whole run.
     pub speed_variation: f64,
     pub seed: u64,
+    /// Live cluster dynamics (stragglers/failures/outages/ramps) plus the
+    /// reallocation policy charged to displaced jobs.  The default
+    /// (`DynamicsSpec::Static`) is a bitwise no-op.
+    pub dynamics: DynamicsConfig,
 }
 
 impl Default for ClusterConfig {
@@ -111,7 +157,31 @@ impl Default for ClusterConfig {
             interference: 0.18,
             speed_variation: 0.0,
             seed: 0,
+            dynamics: DynamicsConfig::default(),
         }
+    }
+}
+
+impl fmt::Debug for ClusterConfig {
+    /// The `Debug` rendering doubles as the scenario cache fingerprint
+    /// (`sim::spec_fingerprint` hashes a spec's `Debug` form), so the
+    /// `dynamics` field is emitted only when live: a `Static` config
+    /// renders exactly like the pre-dynamics derived `Debug`, keeping
+    /// every existing fingerprint and cached result key unchanged
+    /// (pinned by `tests/dynamics.rs`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut d = f.debug_struct("ClusterConfig");
+        d.field("num_servers", &self.num_servers)
+            .field("server_cap", &self.server_cap)
+            .field("topology", &self.topology)
+            .field("max_tasks_per_job", &self.max_tasks_per_job)
+            .field("interference", &self.interference)
+            .field("speed_variation", &self.speed_variation)
+            .field("seed", &self.seed);
+        if !self.dynamics.is_static() {
+            d.field("dynamics", &self.dynamics);
+        }
+        d.finish()
     }
 }
 
@@ -161,6 +231,14 @@ pub struct Cluster {
     active: Vec<usize>,
     /// Utilization (gpu fraction) per elapsed slot — Fig 3.
     pub gpu_util_history: Vec<f64>,
+    /// Compiled dynamics program (empty under `DynamicsSpec::Static`).
+    dynamics: DynamicsState,
+    /// job → hosting servers of the previous slot's realized placement.
+    /// Maintained only under live dynamics; feeds displacement charges.
+    prev_job_servers: BTreeMap<usize, BTreeSet<usize>>,
+    /// Per-catalog-type reallocation suspension charge in slots
+    /// (elastic-calibrated; empty under `Static`).
+    realloc_penalty: Vec<f64>,
 }
 
 /// What the cluster reports after advancing one slot.
@@ -185,6 +263,22 @@ impl Cluster {
     pub fn with_catalog(cfg: ClusterConfig, catalog: Vec<JobType>) -> Cluster {
         let rng = Rng::new(cfg.seed ^ 0xC1_05_7E_12);
         let topology = Arc::new(cfg.effective_topology());
+        // The dynamics compiler draws from its own seed-derived stream;
+        // under `Static` it compiles to nothing and charges nothing.
+        let dynamics = DynamicsState::compile(&cfg.dynamics.spec, &topology, cfg.seed);
+        let realloc_penalty = if dynamics.is_static() {
+            Vec::new()
+        } else {
+            let ecfg = ElasticConfig::default();
+            catalog
+                .iter()
+                .map(|jt| {
+                    ReallocCost::modeled(&ecfg, jt.model_mb)
+                        .suspension_ms(cfg.dynamics.realloc)
+                        / cfg.dynamics.slot_ms
+                })
+                .collect()
+        };
         Cluster {
             cfg,
             topology,
@@ -194,6 +288,9 @@ impl Cluster {
             rng,
             active: Vec::new(),
             gpu_util_history: Vec::new(),
+            dynamics,
+            prev_job_servers: BTreeMap::new(),
+            realloc_penalty,
         }
     }
 
@@ -235,9 +332,26 @@ impl Cluster {
         self.active.len()
     }
 
-    /// Fresh per-slot placement view over the cluster's topology.
+    /// Fresh per-slot placement view over the cluster's topology, with
+    /// the current slot's dynamics view attached when one is live (down
+    /// servers excluded, dynamic speed scales folded in).
     pub fn placement(&self) -> Placement {
-        Placement::with_topology(self.topology.clone())
+        let mut p = Placement::with_topology(self.topology.clone());
+        if let Some(view) = self.dynamics.view_at(self.slot) {
+            p.set_dynamics(Arc::clone(view));
+        }
+        p
+    }
+
+    /// First upcoming dynamics change strictly after the current slot —
+    /// the event kernel's invalidation point.
+    pub fn next_dynamics_change(&self) -> Option<usize> {
+        self.dynamics.next_change_after(self.slot)
+    }
+
+    /// Is a non-trivial dynamics program live?
+    pub fn dynamics_active(&self) -> bool {
+        !self.dynamics.is_static()
     }
 
     /// Apply an allocation decided by a scheduler for this slot: job ->
@@ -267,7 +381,10 @@ impl Cluster {
             while got_w < want_w || got_p < want_p {
                 let mut progress = false;
                 if got_w < want_w {
-                    if placement.try_place_for(id, &jt.worker_res).is_some() {
+                    if placement
+                        .try_place_kind_for(id, &jt.worker_res, TaskKind::Worker)
+                        .is_some()
+                    {
                         got_w += 1;
                         progress = true;
                     } else {
@@ -275,7 +392,10 @@ impl Cluster {
                     }
                 }
                 if got_p < want_p {
-                    if placement.try_place_for(id, &jt.ps_res).is_some() {
+                    if placement
+                        .try_place_kind_for(id, &jt.ps_res, TaskKind::Ps)
+                        .is_some()
+                    {
                         got_p += 1;
                         progress = true;
                     }
@@ -300,6 +420,10 @@ impl Cluster {
         let slot = self.slot;
         let interference = self.cfg.interference;
         let cross_rack_penalty = self.topology.cross_rack_penalty();
+        let dynamics_live = !self.dynamics.is_static();
+        if dynamics_live {
+            self.charge_displacements(slot);
+        }
         let mut reward = 0.0;
         let mut finished = Vec::new();
         // Arc borrow, not a Vec clone — this loop runs every slot.
@@ -316,6 +440,21 @@ impl Cluster {
                 cross_rack_penalty,
             );
             eps *= job.speed_factor;
+            // Redeployment suspension (dynamics displacement charge): the
+            // job's tasks are being re-established and make no progress
+            // until the charge is burned.  Only slots with an allocation
+            // burn it — a restart cannot proceed without resources — and
+            // a fractional tail slot runs partially.  Always 0.0 under
+            // `Static`, so this branch never fires there.
+            if job.suspension > 0.0 && (job.workers > 0 || job.ps > 0) {
+                let blocked = job.suspension.min(1.0);
+                job.suspension -= blocked;
+                if blocked >= 1.0 {
+                    eps = 0.0;
+                } else {
+                    eps *= 1.0 - blocked;
+                }
+            }
             if interference > 0.0 && eps > 0.0 {
                 // Log-normal, mean-one multiplicative noise.
                 let z = job.rng.normal();
@@ -330,6 +469,9 @@ impl Cluster {
             let jobs = &self.jobs;
             self.active.retain(|&id| !jobs[id].is_finished());
         }
+        if dynamics_live {
+            self.prev_job_servers = placement.job_servers_map();
+        }
         let gpu_util = placement.utilization().gpu;
         self.gpu_util_history.push(gpu_util);
         self.slot += 1;
@@ -337,6 +479,38 @@ impl Cluster {
             reward,
             finished,
             gpu_util,
+        }
+    }
+
+    /// At a dynamics boundary, charge the reallocation suspension to every
+    /// active job that had a task on a server that just went down: the
+    /// elastic layer must re-deploy it, at the configured policy's price
+    /// ([`ReallocCost`], converted to slots).  `max`, not `+=` — a second
+    /// displacement mid-restart restarts the same clock, it does not
+    /// stack.
+    fn charge_displacements(&mut self, slot: usize) {
+        if slot == 0 {
+            return;
+        }
+        let (Some(cur), Some(prev)) = (
+            self.dynamics.view_at(slot),
+            self.dynamics.view_at(slot - 1),
+        ) else {
+            return;
+        };
+        // Same Arc ⇔ same segment (compile coalesces no-op boundaries).
+        if Arc::ptr_eq(cur, prev) {
+            return;
+        }
+        for &id in &self.active {
+            let Some(servers) = self.prev_job_servers.get(&id) else {
+                continue;
+            };
+            if servers.iter().any(|&s| prev.up[s] && !cur.up[s]) {
+                let job = &mut self.jobs[id];
+                let pen = self.realloc_penalty[job.type_idx];
+                job.suspension = job.suspension.max(pen);
+            }
         }
     }
 

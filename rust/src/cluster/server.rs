@@ -23,12 +23,39 @@
 //! the episode hot loop (see `benches/perf_placement.rs`).  The cache is
 //! exact — `dominant_share` is a pure function of the server's usage —
 //! so results are identical to the recompute-per-candidate scan.
+//!
+//! Two further refinements, both inert on the legacy path:
+//!
+//! * **PS/worker pairing**: when a cross-rack penalty is charged, a
+//!   job's parameter servers prefer the rack(s) hosting the most of its
+//!   workers before the general occupied-rack preference — PS↔worker
+//!   traffic dominates the synchronous training loop, so co-locating
+//!   the PSs with the worker majority is what actually avoids the
+//!   penalty.  Tasks carry a [`TaskKind`]; kind-less entry points place
+//!   workers.
+//! * **Dynamics overlay**: with a [`DynView`] attached
+//!   ([`Placement::set_dynamics`]), down servers are not candidates
+//!   (`can_place` — and every action mask built on it — sees the live
+//!   pool), per-server dynamic speed scales fold into
+//!   [`Placement::speed_multiplier`], and job→server assignments are
+//!   recorded for the displacement-charge bookkeeping.  Without a view
+//!   every check short-circuits and behaviour is bit-for-bit the
+//!   static-pool scan.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
+use super::dynamics::DynView;
 use super::topology::Topology;
 use super::types::Res;
+
+/// What a placed task is — parameter servers prefer the rack hosting
+/// the majority of their job's workers (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Worker,
+    Ps,
+}
 
 /// Per-slot placement state over a [`Topology`].
 #[derive(Debug, Clone)]
@@ -44,6 +71,14 @@ pub struct Placement {
     /// Slowest class speed multiplier among each job's hosting servers
     /// (synchronous training is gated by its slowest task).
     job_mult: BTreeMap<usize, f64>,
+    /// Per-rack worker counts per job (PS-pairing input; maintained only
+    /// when the topology charges a cross-rack penalty).
+    job_worker_racks: BTreeMap<usize, BTreeMap<usize, usize>>,
+    /// Live dynamics view, when the cluster has one for this slot.
+    view: Option<Arc<DynView>>,
+    /// job → hosting servers (maintained only with a view attached; the
+    /// displacement-charge input).
+    job_servers: BTreeMap<usize, BTreeSet<usize>>,
 }
 
 impl Placement {
@@ -60,7 +95,28 @@ impl Placement {
             loads: vec![0.0; n],
             job_racks: BTreeMap::new(),
             job_mult: BTreeMap::new(),
+            job_worker_racks: BTreeMap::new(),
+            view: None,
+            job_servers: BTreeMap::new(),
         }
+    }
+
+    /// Attach a dynamics view for this slot: down servers stop being
+    /// placement candidates, per-server dynamic speed scales fold into
+    /// job speed multipliers, and job→server assignments are recorded.
+    pub fn set_dynamics(&mut self, view: Arc<DynView>) {
+        debug_assert_eq!(view.up.len(), self.used.len());
+        self.view = Some(view);
+    }
+
+    /// The attached dynamics view, if any.
+    pub fn dynamics_view(&self) -> Option<&Arc<DynView>> {
+        self.view.as_ref()
+    }
+
+    /// Snapshot of job → hosting servers (empty without a view attached).
+    pub fn job_servers_map(&self) -> BTreeMap<usize, BTreeSet<usize>> {
+        self.job_servers.clone()
     }
 
     pub fn topology(&self) -> &Topology {
@@ -89,20 +145,33 @@ impl Placement {
     }
 
     /// Commit `r` to server `idx`, updating the load cache and (when the
-    /// task belongs to a job) the job's rack/class records.
-    fn place_on(&mut self, idx: usize, r: &Res, job: Option<usize>) {
+    /// task belongs to a job) the job's rack/class/server records.
+    fn place_on(&mut self, idx: usize, r: &Res, job: Option<usize>, kind: TaskKind) {
         self.used[idx] = self.used[idx].add(r);
         let cap = self.topo.cap(idx);
         self.loads[idx] = self.used[idx].dominant_share(&cap);
         if let Some(id) = job {
-            self.job_racks
-                .entry(id)
-                .or_default()
-                .insert(self.topo.rack(idx));
-            let speed = self.topo.speed(idx);
+            let rack = self.topo.rack(idx);
+            self.job_racks.entry(id).or_default().insert(rack);
+            let mut speed = self.topo.speed(idx);
+            if let Some(v) = &self.view {
+                // Dynamic per-server scale (1.0 when nominal — and the
+                // whole multiply is skipped without a view, keeping the
+                // static path bitwise).
+                speed *= v.speed[idx];
+                self.job_servers.entry(id).or_default().insert(idx);
+            }
             let m = self.job_mult.entry(id).or_insert(speed);
             if speed < *m {
                 *m = speed;
+            }
+            if kind == TaskKind::Worker && self.topo.cross_rack_penalty() > 0.0 {
+                *self
+                    .job_worker_racks
+                    .entry(id)
+                    .or_default()
+                    .entry(rack)
+                    .or_insert(0) += 1;
             }
         }
     }
@@ -110,60 +179,104 @@ impl Placement {
     /// Least-loaded fitting server, preferring racks `job` already
     /// occupies — but only when the topology actually charges a
     /// cross-rack penalty (zero-penalty racks are pure bookkeeping and
-    /// must not distort load balancing).  Ordering: (new-rack-for-job,
-    /// cached load, index), strictly-less wins, so the first index takes
-    /// ties — identical to the legacy scan whenever there is a single
-    /// rack, no penalty, or no job context.
-    fn best_server(&self, r: &Res, job: Option<usize>) -> Option<usize> {
+    /// must not distort load balancing).  PS tasks additionally prefer
+    /// the rack(s) hosting the most of the job's workers.  Ordering:
+    /// (off-worker-majority-rack, new-rack-for-job, cached load, index),
+    /// strictly-less wins, so the first index takes ties — identical to
+    /// the legacy scan whenever there is a single rack, no penalty, or
+    /// no job context, and to the pre-pairing scan for worker tasks.
+    /// Servers a live dynamics view marks down are never candidates.
+    fn best_server(&self, r: &Res, job: Option<usize>, kind: TaskKind) -> Option<usize> {
+        let penalized = self.topo.cross_rack_penalty() > 0.0;
         let racks = match job {
-            Some(id) if self.topo.cross_rack_penalty() > 0.0 => self.job_racks.get(&id),
+            Some(id) if penalized => self.job_racks.get(&id),
             _ => None,
         };
-        let mut best: Option<(bool, f64, usize)> = None;
+        // PS pairing: the worker-majority rack count to match (None when
+        // not a PS, no penalty, or no workers placed yet).
+        let majority = match job {
+            Some(id) if penalized && kind == TaskKind::Ps => self
+                .job_worker_racks
+                .get(&id)
+                .and_then(|m| m.values().copied().max().map(|mx| (m, mx))),
+            _ => None,
+        };
+        let mut best: Option<(bool, bool, f64, usize)> = None;
         for (i, used) in self.used.iter().enumerate() {
+            if let Some(v) = &self.view {
+                if !v.up[i] {
+                    continue;
+                }
+            }
             let cap = self.topo.cap(i);
             if !used.fits(r, &cap) {
                 continue;
             }
+            let rack = self.topo.rack(i);
             let crosses = match racks {
-                Some(rs) => !rs.is_empty() && !rs.contains(&self.topo.rack(i)),
+                Some(rs) => !rs.is_empty() && !rs.contains(&rack),
+                None => false,
+            };
+            let off_majority = match majority {
+                Some((counts, mx)) => counts.get(&rack).copied().unwrap_or(0) != mx,
                 None => false,
             };
             let load = self.loads[i];
             let better = match best {
                 None => true,
-                Some((bc, bl, _)) => (crosses, load) < (bc, bl),
+                Some((bm, bc, bl, _)) => (off_majority, crosses, load) < (bm, bc, bl),
             };
             if better {
-                best = Some((crosses, load, i));
+                best = Some((off_majority, crosses, load, i));
             }
         }
-        best.map(|(_, _, i)| i)
+        best.map(|(_, _, _, i)| i)
     }
 
     /// Job-agnostic placement (no rack record, no locality preference):
     /// place `r` on the least-loaded server that fits.  Returns the
     /// server index or None.
     pub fn try_place(&mut self, r: &Res) -> Option<usize> {
-        let idx = self.best_server(r, None)?;
-        self.place_on(idx, r, None);
+        let idx = self.best_server(r, None, TaskKind::Worker)?;
+        self.place_on(idx, r, None, TaskKind::Worker);
         Some(idx)
     }
 
-    /// Place one of `job`'s tasks: locality-aware least-loaded, recording
+    /// Place one of `job`'s worker tasks (see [`try_place_kind_for`]
+    /// for PS-aware placement): locality-aware least-loaded, recording
     /// the job's rack spread and slowest hosting class.
+    ///
+    /// [`try_place_kind_for`]: Placement::try_place_kind_for
     pub fn try_place_for(&mut self, job: usize, r: &Res) -> Option<usize> {
-        let idx = self.best_server(r, Some(job))?;
-        self.place_on(idx, r, Some(job));
+        self.try_place_kind_for(job, r, TaskKind::Worker)
+    }
+
+    /// Place one of `job`'s tasks of the given kind.  Worker tasks use
+    /// the locality-aware least-loaded scan; PS tasks additionally
+    /// co-locate with the rack hosting the majority of the job's
+    /// workers before spilling cross-rack.
+    pub fn try_place_kind_for(
+        &mut self,
+        job: usize,
+        r: &Res,
+        kind: TaskKind,
+    ) -> Option<usize> {
+        let idx = self.best_server(r, Some(job), kind)?;
+        self.place_on(idx, r, Some(job), kind);
         Some(idx)
     }
 
-    /// Whether `r` could be placed without committing it.
+    /// Whether `r` could be placed without committing it.  With a
+    /// dynamics view attached, down servers don't count — so schedulers'
+    /// action masks see the live pool.
     pub fn can_place(&self, r: &Res) -> bool {
-        self.used
-            .iter()
-            .enumerate()
-            .any(|(i, u)| u.fits(r, &self.topo.cap(i)))
+        self.used.iter().enumerate().any(|(i, u)| {
+            let up = match &self.view {
+                Some(v) => v.up[i],
+                None => true,
+            };
+            up && u.fits(r, &self.topo.cap(i))
+        })
     }
 
     /// Number of racks `job`'s tasks span (0 if it has none placed).
@@ -189,12 +302,38 @@ impl Placement {
     /// observation: on a homogeneous pool it is one number — how much of
     /// the cluster is left — and on a heterogeneous one it tells the
     /// policy *which hardware generation* still has room.
+    ///
+    /// With a dynamics view attached, each class's capacity counts only
+    /// its **up** servers — so the V2 features report what the pool can
+    /// actually provide right now (a class entirely down reads 0.0 free).
     pub fn class_free_shares(&self) -> Vec<f64> {
         let classes = self.topo.classes();
         let mut used = vec![Res::ZERO; classes.len()];
         for (i, u) in self.used.iter().enumerate() {
             let k = self.topo.class(i);
             used[k] = used[k].add(u);
+        }
+        if let Some(v) = &self.view {
+            let mut caps = vec![Res::ZERO; classes.len()];
+            let mut counts = vec![0usize; classes.len()];
+            for (i, &up) in v.up.iter().enumerate() {
+                if up {
+                    let k = self.topo.class(i);
+                    caps[k] = caps[k].add(&self.topo.cap(i));
+                    counts[k] += 1;
+                }
+            }
+            return used
+                .iter()
+                .enumerate()
+                .map(|(k, u)| {
+                    if counts[k] == 0 {
+                        0.0
+                    } else {
+                        1.0 - u.dominant_share(&caps[k])
+                    }
+                })
+                .collect();
         }
         classes
             .iter()
@@ -446,6 +585,102 @@ mod tests {
         assert!((shares[0] - 0.75).abs() < 1e-12, "fast share {}", shares[0]);
         assert_eq!(shares[1], 1.0);
         assert_eq!(shares[2], 0.0);
+    }
+
+    /// PS pairing: a job's PS lands in the rack hosting the majority of
+    /// its workers — not the emptier occupied rack its spilled worker
+    /// lives in, which is where the plain occupied-rack preference
+    /// (least-loaded among non-crossing) would put it.
+    #[test]
+    fn ps_pairs_with_worker_majority_rack() {
+        // Racks of 2, tight GPU caps: four workers fill rack 0's GPUs,
+        // the fifth spills into rack 1.
+        let topo =
+            Topology::homogeneous(6, Res::new(2.0, 8.0, 48.0)).with_racks(2, 0.3);
+        let mut p = Placement::with_topology(Arc::new(topo));
+        let w = Res::new(1.0, 2.0, 4.0);
+        for i in 0..5 {
+            let idx = p.try_place_kind_for(1, &w, TaskKind::Worker).unwrap();
+            let rack = p.topology().rack(idx);
+            assert_eq!(rack, usize::from(i >= 4), "worker {i}");
+        }
+        // Rack 1's servers are far emptier (rack 2 entirely so), but the
+        // CPU-only PS must join the worker majority in rack 0.
+        let ps = Res::new(0.0, 2.0, 4.0);
+        let ps_idx = p.try_place_kind_for(1, &ps, TaskKind::Ps).unwrap();
+        assert_eq!(p.topology().rack(ps_idx), 0, "PS off the majority rack");
+    }
+
+    /// Without a penalty (or via the worker-kind wrapper) the pairing
+    /// machinery is inert: no worker-rack records accumulate.
+    #[test]
+    fn ps_pairing_inert_without_penalty() {
+        let topo = Topology::homogeneous(4, Res::new(2.0, 8.0, 48.0)).with_racks(2, 0.0);
+        let mut p = Placement::with_topology(Arc::new(topo));
+        let t = Res::new(1.0, 2.0, 4.0);
+        p.try_place_kind_for(0, &t, TaskKind::Worker).unwrap();
+        p.try_place_kind_for(0, &t, TaskKind::Ps).unwrap();
+        assert!(p.job_worker_racks.is_empty());
+    }
+
+    /// A dynamics view excludes down servers from placement and
+    /// `can_place`, and folds dynamic speed into the job multiplier.
+    #[test]
+    fn dynamics_view_masks_down_servers_and_scales_speed() {
+        use crate::cluster::dynamics::DynView;
+        let cap = Res::new(2.0, 8.0, 48.0);
+        let topo = Topology::homogeneous(3, cap);
+        let mut p = Placement::with_topology(Arc::new(topo));
+        p.set_dynamics(Arc::new(DynView {
+            up: vec![false, true, true],
+            speed: vec![1.0, 0.5, 1.0],
+        }));
+        let t = Res::new(1.0, 2.0, 4.0);
+        // Server 0 is down: the least-loaded scan starts at server 1.
+        assert_eq!(p.try_place_for(9, &t), Some(1));
+        assert_eq!(p.speed_multiplier(9), 0.5, "dynamic slowdown folds in");
+        assert_eq!(p.try_place_for(9, &t), Some(2));
+        assert_eq!(p.speed_multiplier(9), 0.5, "min over hosts");
+        assert_eq!(
+            p.job_servers_map()[&9],
+            [1usize, 2].into_iter().collect::<std::collections::BTreeSet<_>>()
+        );
+        // Fill the two up servers' GPUs: can_place must report full even
+        // though the down server 0 has room.
+        p.try_place(&t).unwrap();
+        p.try_place(&t).unwrap();
+        assert!(!p.can_place(&t));
+        // All-down view: nothing places.
+        let mut q = Placement::with_topology(Arc::new(Topology::homogeneous(2, cap)));
+        q.set_dynamics(Arc::new(DynView {
+            up: vec![false, false],
+            speed: vec![1.0, 1.0],
+        }));
+        assert!(!q.can_place(&t));
+        assert_eq!(q.try_place_for(0, &t), None);
+    }
+
+    /// With a view attached, per-class free shares count only up
+    /// servers' capacity.
+    #[test]
+    fn class_free_shares_respect_dynamics_view() {
+        use crate::cluster::dynamics::DynView;
+        let cap = Res::new(2.0, 8.0, 48.0);
+        let topo = Topology::new(vec![
+            ServerClass::new("a", 2, cap, 1.0),
+            ServerClass::new("b", 2, cap, 1.0),
+        ]);
+        let mut p = Placement::with_topology(Arc::new(topo));
+        // One of class a's two servers is down, class b fully down.
+        p.set_dynamics(Arc::new(DynView {
+            up: vec![true, false, false, false],
+            speed: vec![1.0; 4],
+        }));
+        assert_eq!(p.try_place_for(0, &Res::new(1.0, 2.0, 4.0)), Some(0));
+        let shares = p.class_free_shares();
+        // Class a: 1 GPU used of the 2 the single up server provides.
+        assert!((shares[0] - 0.5).abs() < 1e-12, "a share {}", shares[0]);
+        assert_eq!(shares[1], 0.0, "fully-down class reads no free capacity");
     }
 
     /// The job's speed multiplier is the slowest class hosting it.

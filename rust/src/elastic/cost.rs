@@ -1,0 +1,158 @@
+//! Reallocation-cost summaries usable without spawning live threads.
+//!
+//! The elastic substrate measures its scaling protocol with real PS/worker
+//! threads ([`ScaleReport`](super::ScaleReport) from `add_ps`/`remove_ps`,
+//! [`CheckpointReport`](super::CheckpointReport) from
+//! [`checkpoint_scale`](super::checkpoint_scale)).  The simulator cannot
+//! afford — or reproduce deterministically — a thread fleet per scheduling
+//! event, so [`ReallocCost`] projects both mechanisms down to the single
+//! number the cluster model charges a displaced job: **training-suspension
+//! milliseconds**.  Two constructors:
+//!
+//! * [`ReallocCost::from_reports`] — fold live measurements.
+//! * [`ReallocCost::modeled`] — a closed-form calibration of the same
+//!   quantities from an [`ElasticConfig`] and a model size, documented
+//!   constants only, no threads, no I/O, bit-for-bit deterministic.
+//!
+//! The modeled asymmetry mirrors Fig 11: hot scaling suspends workers for
+//! roughly one scaling clock plus the block handoff, while
+//! checkpoint-restart pays full model serialization both ways plus the
+//! container relaunch constant — orders of magnitude apart for any
+//! realistic config (pinned by `hot_scale_beats_checkpoint_restart`).
+
+use super::checkpoint::CheckpointReport;
+use super::coordinator::ScaleReport;
+use super::{blocks_for_model, ElasticConfig};
+
+/// How the cluster reacts when a dynamics event displaces a job's tasks —
+/// the §5 comparison as a config knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReallocPolicy {
+    /// The paper's elastic protocol: scale the running job in place
+    /// (registration → assignment → clock-gated migration → worker
+    /// update); workers suspend only around the scaling clock.
+    #[default]
+    HotScale,
+    /// The Optimus-style baseline: stop, checkpoint parameters, relaunch
+    /// with the new deployment, restore.
+    CheckpointRestart,
+}
+
+impl ReallocPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReallocPolicy::HotScale => "hot_scale",
+            ReallocPolicy::CheckpointRestart => "checkpoint_restart",
+        }
+    }
+}
+
+/// Per-block handoff cost of clock-gated migration (ms/block): the
+/// measured order of shipping one 256 KiB parameter block over the
+/// in-process channel, source-PS serialization included.
+const HOT_MS_PER_BLOCK: f64 = 0.02;
+
+/// Checkpoint-restart I/O cost (ms/MB): serialize + write + read +
+/// restore at the ~500 MB/s-per-direction the `checkpoint_scale`
+/// measurements show on local disk.
+const CKPT_IO_MS_PER_MB: f64 = 4.0;
+
+/// Training-suspension cost of one reallocation, per policy (ms).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReallocCost {
+    /// Suspension under the elastic hot-scaling protocol.
+    pub hot_scale_ms: f64,
+    /// Suspension under checkpoint-restart.
+    pub checkpoint_restart_ms: f64,
+}
+
+impl ReallocCost {
+    /// Closed-form calibration from the substrate config and model size —
+    /// no threads, no I/O.  Hot scaling suspends for the scaling-clock
+    /// lead plus the block handoff; checkpoint-restart pays model I/O
+    /// both ways plus the modeled relaunch constant.
+    pub fn modeled(cfg: &ElasticConfig, model_mb: f64) -> ReallocCost {
+        let blocks = blocks_for_model(model_mb, cfg.block_elems) as f64;
+        ReallocCost {
+            hot_scale_ms: (cfg.clock_lead * cfg.iter_ms) as f64 + blocks * HOT_MS_PER_BLOCK,
+            checkpoint_restart_ms: model_mb * CKPT_IO_MS_PER_MB
+                + cfg.restart_overhead_ms as f64,
+        }
+    }
+
+    /// Fold live measurements from both mechanisms into the summary.
+    pub fn from_reports(hot: &ScaleReport, ckpt: &CheckpointReport) -> ReallocCost {
+        ReallocCost {
+            hot_scale_ms: hot.avg_suspension_ms,
+            checkpoint_restart_ms: ckpt.total_suspension_ms(),
+        }
+    }
+
+    /// The suspension the given policy charges (ms).
+    pub fn suspension_ms(&self, policy: ReallocPolicy) -> f64 {
+        match policy {
+            ReallocPolicy::HotScale => self.hot_scale_ms,
+            ReallocPolicy::CheckpointRestart => self.checkpoint_restart_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline asymmetry (Fig 11): hot scaling suspends training for
+    /// far less than checkpoint-restart — for the default config and
+    /// every Table-1 model size.
+    #[test]
+    fn hot_scale_beats_checkpoint_restart() {
+        let cfg = ElasticConfig::default();
+        for jt in crate::cluster::catalog() {
+            let cost = ReallocCost::modeled(&cfg, jt.model_mb);
+            assert!(
+                cost.hot_scale_ms < cost.checkpoint_restart_ms,
+                "{}: hot {} >= ckpt {}",
+                jt.name,
+                cost.hot_scale_ms,
+                cost.checkpoint_restart_ms
+            );
+            assert_eq!(
+                cost.suspension_ms(ReallocPolicy::HotScale),
+                cost.hot_scale_ms
+            );
+            assert_eq!(
+                cost.suspension_ms(ReallocPolicy::CheckpointRestart),
+                cost.checkpoint_restart_ms
+            );
+        }
+    }
+
+    #[test]
+    fn modeled_cost_grows_with_model_size() {
+        let cfg = ElasticConfig::default();
+        let small = ReallocCost::modeled(&cfg, 2.3); // ctc
+        let big = ReallocCost::modeled(&cfg, 528.0); // vgg16
+        assert!(big.hot_scale_ms > small.hot_scale_ms);
+        assert!(big.checkpoint_restart_ms > small.checkpoint_restart_ms);
+    }
+
+    #[test]
+    fn from_reports_maps_suspensions() {
+        let hot = ScaleReport {
+            registration_ms: 1.0,
+            assignment_ms: 2.0,
+            migration_ms: 30.0,
+            worker_update_ms: 4.0,
+            avg_suspension_ms: 25.0,
+        };
+        let ckpt = CheckpointReport {
+            checkpoint_ms: 800.0,
+            restore_ms: 700.0,
+            modeled_restart_ms: 25_000.0,
+        };
+        let cost = ReallocCost::from_reports(&hot, &ckpt);
+        assert_eq!(cost.hot_scale_ms, 25.0);
+        assert_eq!(cost.checkpoint_restart_ms, 26_500.0);
+        assert!(cost.hot_scale_ms < cost.checkpoint_restart_ms);
+    }
+}

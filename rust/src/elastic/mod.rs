@@ -23,12 +23,14 @@
 
 pub mod checkpoint;
 pub mod coordinator;
+pub mod cost;
 pub mod msg;
 pub mod ps;
 pub mod worker;
 
 pub use checkpoint::{checkpoint_scale, CheckpointReport};
 pub use coordinator::{ElasticJob, ScaleReport};
+pub use cost::{ReallocCost, ReallocPolicy};
 
 /// Substrate configuration.
 #[derive(Debug, Clone)]

@@ -9,7 +9,7 @@
 //!
 //! Common flags: --servers N --jobs N --j J --seed S --artifacts DIR
 
-use dl2::cluster::ClusterConfig;
+use dl2::cluster::{ClusterConfig, DynamicsConfig, DynamicsSpec};
 use dl2::elastic::{ElasticConfig, ElasticJob};
 use dl2::pipeline::{
     baseline_by_name, run_pipeline, validation_trace, Incumbent, PipelineConfig,
@@ -33,7 +33,8 @@ USAGE: dl2 <train|evaluate|compare|elastic|info> [flags]
   elastic   --model-mb 98
   info
 
-Common: --servers N --jobs N --seed S --interference F --artifacts DIR";
+Common: --servers N --jobs N --seed S --interference F --artifacts DIR
+        --dynamics static|stragglers|failures|rackout|ramp  (live cluster churn)";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().with_usage(USAGE);
@@ -58,14 +59,26 @@ fn artifacts_dir(args: &Args) -> std::path::PathBuf {
     }
 }
 
-fn cluster_cfg(args: &Args) -> ClusterConfig {
-    ClusterConfig {
+/// `--dynamics <regime>` — a preset live-dynamics event program (see
+/// [`DynamicsSpec::parse`]); omitted means a static cluster, which is
+/// bitwise identical to the pre-dynamics behaviour.
+fn cluster_cfg(args: &Args) -> anyhow::Result<ClusterConfig> {
+    let spec = match args.get("dynamics") {
+        None => DynamicsSpec::Static,
+        Some(name) => DynamicsSpec::parse(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "--dynamics expects one of static|stragglers|failures|rackout|ramp, got {name:?}"
+            )
+        })?,
+    };
+    Ok(ClusterConfig {
         num_servers: args.usize_or("servers", 12),
         interference: args.f64_or("interference", 0.18),
         speed_variation: args.f64_or("speed-variation", 0.0),
         seed: args.u64_or("seed", 0),
+        dynamics: DynamicsConfig::new(spec),
         ..Default::default()
-    }
+    })
 }
 
 fn trace_cfg(args: &Args) -> TraceConfig {
@@ -94,7 +107,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         _ => Incumbent::Drf,
     };
     let cfg = PipelineConfig {
-        cluster: cluster_cfg(args),
+        cluster: cluster_cfg(args)?,
         trace: trace_cfg(args),
         dl2: Dl2Config {
             j: args.usize_or("j", 10),
@@ -161,7 +174,7 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     let path = std::path::PathBuf::from(args.str_or("policy", "results/dl2_policy.bin"));
     let theta = dl2::runtime::load_params(&path)?;
     sched.pol.set_theta(&theta);
-    let ccfg = cluster_cfg(args);
+    let ccfg = cluster_cfg(args)?;
     let specs = validation_trace(&trace_cfg(args));
     let jct = evaluate_policy(&mut sched, &ccfg, &specs, 3000);
     println!("validation avg JCT: {jct:.3} slots over {} jobs", specs.len());
@@ -169,7 +182,7 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_compare(args: &Args) -> anyhow::Result<()> {
-    let ccfg = cluster_cfg(args);
+    let ccfg = cluster_cfg(args)?;
     let specs = validation_trace(&trace_cfg(args));
     let mut t = Table::new(
         "scheduler comparison (validation avg JCT, slots)",

@@ -26,7 +26,7 @@ use super::state::{
     action_mask, decode_action, encode_action, mask_probs, void_action, Action,
 };
 use super::{Alloc, CacheTag, Scheduler};
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, TaskKind};
 use crate::runtime::{Engine, TrainState};
 use crate::sim::derive_seed;
 use crate::util::{fnv1a_f32s, Rng};
@@ -342,10 +342,14 @@ impl Dl2Scheduler {
                 let jt = &cluster.catalog[cluster.jobs[id].type_idx];
                 let mut ok = true;
                 if dw > 0 {
-                    ok &= placement.try_place_for(id, &jt.worker_res).is_some();
+                    ok &= placement
+                        .try_place_kind_for(id, &jt.worker_res, TaskKind::Worker)
+                        .is_some();
                 }
                 if ok && dp > 0 {
-                    ok &= placement.try_place_for(id, &jt.ps_res).is_some();
+                    ok &= placement
+                        .try_place_kind_for(id, &jt.ps_res, TaskKind::Ps)
+                        .is_some();
                 }
                 if ok {
                     seq.walloc[job_slot] += dw;

@@ -50,7 +50,7 @@ pub use optimus::Optimus;
 pub use srtf::Srtf;
 pub use tetris::Tetris;
 
-use crate::cluster::{Cluster, EventQueue, Placement, SlotOutcome};
+use crate::cluster::{Cluster, EventQueue, Placement, SlotOutcome, TaskKind};
 use crate::trace::JobSpec;
 
 /// One job's allocation decision for a slot.
@@ -139,12 +139,18 @@ pub fn try_grow(
     // clone for multi-task grows.
     let mut shadow = placement.clone();
     for _ in 0..dw {
-        if shadow.try_place_for(id, &jt.worker_res).is_none() {
+        if shadow
+            .try_place_kind_for(id, &jt.worker_res, TaskKind::Worker)
+            .is_none()
+        {
             return false;
         }
     }
     for _ in 0..dp {
-        if shadow.try_place_for(id, &jt.ps_res).is_none() {
+        if shadow
+            .try_place_kind_for(id, &jt.ps_res, TaskKind::Ps)
+            .is_none()
+        {
             return false;
         }
     }
@@ -341,6 +347,11 @@ pub fn run_episode_event_full(
         let alloc = sched.schedule(&cluster, &active);
         let placement = cluster.apply_allocation(&alloc);
         queue.reallocate(&cluster, &placement);
+        // Dynamics boundaries invalidate placements/rates like arrivals
+        // do: the queue caps every coast window at the next one, so the
+        // boundary slot is always a fresh decision slot (None when
+        // static — no effect on the pre-dynamics paths).
+        queue.set_next_dynamics(cluster.next_dynamics_change());
         let outcome = cluster.advance(&placement);
         sched.observe(&cluster, &outcome);
         rewards.push(outcome.reward);

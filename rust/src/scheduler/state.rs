@@ -21,7 +21,7 @@
 //! action that ends the slot's allocation sequence.
 
 use super::features::FeatureSchema;
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, TaskKind};
 
 /// Decoded action.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -120,8 +120,12 @@ pub fn action_mask(
         // rack preference exactly as the real placement would).
         if can_w && can_p {
             let mut shadow = placement.clone();
-            let ok = shadow.try_place_for(id, &jt.worker_res).is_some()
-                && shadow.try_place_for(id, &jt.ps_res).is_some();
+            let ok = shadow
+                .try_place_kind_for(id, &jt.worker_res, TaskKind::Worker)
+                .is_some()
+                && shadow
+                    .try_place_kind_for(id, &jt.ps_res, TaskKind::Ps)
+                    .is_some();
             mask[encode_action(slot, 2)] = ok;
         }
     }

@@ -1,6 +1,8 @@
 //! Scenario descriptions and the axis cross-product builder.
 
-use crate::cluster::{Cluster, ClusterConfig, Res, ServerClass, Topology};
+use crate::cluster::{
+    Cluster, ClusterConfig, DynamicsConfig, DynamicsSpec, Res, ServerClass, Topology,
+};
 use crate::scheduler::{
     run_episode, run_episode_event, EpisodeResult, FeatureSet, Scheduler,
 };
@@ -255,6 +257,8 @@ pub struct ScenarioMatrix {
     epoch_errors: Vec<f64>,
     type_limits: Vec<Option<usize>>,
     topologies: Vec<TopologySpec>,
+    /// Cluster-dynamics axis (see [`ScenarioMatrix::with_dynamics`]).
+    dynamics: Vec<DynamicsSpec>,
     /// Observation-schema axis (see [`ScenarioMatrix::with_feature_sets`]).
     feature_sets: Vec<FeatureSet>,
     /// Replica indices: same axes, independent derived seeds.
@@ -270,6 +274,7 @@ impl ScenarioMatrix {
             epoch_errors: vec![0.0],
             type_limits: vec![base_trace.type_limit],
             topologies: vec![TopologySpec::Homogeneous],
+            dynamics: vec![DynamicsSpec::Static],
             feature_sets: vec![FeatureSet::V1],
             replicas: vec![0],
             max_slots: 5_000,
@@ -311,6 +316,20 @@ impl ScenarioMatrix {
         self
     }
 
+    /// Cluster-dynamics axis: every point is expanded once per
+    /// [`DynamicsSpec`] (stragglers, failures, rack outages, capacity
+    /// ramps — see [`crate::cluster::dynamics`]).  `DynamicsSpec::Static`
+    /// is the 0/identity tag, exactly like `TopologySpec::Homogeneous`:
+    /// matrices that never call `with_dynamics` — and the `Static` point
+    /// of those that do — keep every pre-axis scenario seed, name and
+    /// cache fingerprint unchanged.  Non-static points fold the spec's
+    /// tag into the derived seeds and get a name suffix.
+    pub fn with_dynamics(mut self, dynamics: &[DynamicsSpec]) -> Self {
+        assert!(!dynamics.is_empty());
+        self.dynamics = dynamics.to_vec();
+        self
+    }
+
     /// Observation-schema axis: every point is expanded once per
     /// [`FeatureSet`].  Unlike every other axis, the feature set does
     /// **not** fold into the derived seeds: the observation layout
@@ -345,6 +364,7 @@ impl ScenarioMatrix {
             * self.epoch_errors.len()
             * self.type_limits.len()
             * self.topologies.len()
+            * self.dynamics.len()
             * self.feature_sets.len()
             * self.replicas.len()
     }
@@ -354,12 +374,13 @@ impl ScenarioMatrix {
     }
 
     /// Cross-product expansion in a fixed axis order (sizes ▸ patterns ▸
-    /// errors ▸ type limits ▸ topologies ▸ feature sets ▸ replicas).
-    /// Seeds are derived from the axis values themselves — see the module
-    /// doc; the topology tag XOR-folds in, with `Homogeneous` as the
-    /// 0/identity tag, so matrices built before this axis existed expand
-    /// to identical seeds.  The feature-set axis deliberately leaves the
-    /// seeds alone (see [`ScenarioMatrix::with_feature_sets`]).
+    /// errors ▸ type limits ▸ topologies ▸ dynamics ▸ feature sets ▸
+    /// replicas).  Seeds are derived from the axis values themselves —
+    /// see the module doc; the topology and dynamics tags XOR-fold in,
+    /// with `Homogeneous`/`Static` as 0/identity tags, so matrices built
+    /// before these axes existed expand to identical seeds.  The
+    /// feature-set axis deliberately leaves the seeds alone (see
+    /// [`ScenarioMatrix::with_feature_sets`]).
     pub fn expand(&self) -> Vec<ScenarioSpec> {
         // Replay sources feed the recorded sequence back verbatim, so the
         // generator-side trace axes would silently no-op while scenario
@@ -378,71 +399,14 @@ impl ScenarioMatrix {
                 for &err in &self.epoch_errors {
                     for &limit in &self.type_limits {
                         for topo in &self.topologies {
-                            for &features in &self.feature_sets {
-                                for &replica in &self.replicas {
-                                    // Fold every axis value into the seed
-                                    // stream — except the feature set,
-                                    // which alters the policy's view but
-                                    // not the environment.
-                                    let tag = derive_seed(
-                                        derive_seed(
-                                            derive_seed(servers as u64, pattern as u64),
-                                            err.to_bits(),
-                                        ),
-                                        derive_seed(
-                                            limit.map(|l| l as u64 + 1).unwrap_or(0),
-                                            replica,
-                                        ),
-                                    ) ^ topo.tag();
-                                    // Homogeneous points inherit the base
-                                    // config's explicit topology, but only at
-                                    // the size it describes — other size-axis
-                                    // points fall back to a flat pool so that
-                                    // `num_servers`, the scenario name and the
-                                    // actual machine set always agree.
-                                    let topology =
-                                        match topo.build(servers, self.base_cluster.server_cap) {
-                                            Some(t) => Some(t),
-                                            None => self
-                                                .base_cluster
-                                                .topology
-                                                .clone()
-                                                .filter(|t| t.num_servers() == servers),
-                                        };
-                                    let cluster = ClusterConfig {
-                                        num_servers: servers,
-                                        topology,
-                                        seed: derive_seed(self.base_cluster.seed, tag),
-                                        ..self.base_cluster.clone()
-                                    };
-                                    let trace = TraceConfig {
-                                        pattern,
-                                        type_limit: limit,
-                                        seed: derive_seed(self.base_trace.seed, tag ^ 0x7ace),
-                                        ..self.base_trace.clone()
-                                    };
-                                    let topo_part = match topo {
-                                        TopologySpec::Homogeneous => String::new(),
-                                        t => format!("_{}", t.name()),
-                                    };
-                                    let feat_part = match features {
-                                        FeatureSet::V1 => String::new(),
-                                        f => format!("_feat{}", f.name()),
-                                    };
-                                    let name = format!(
-                                        "srv{servers}_{}_err{:02}_types{}{topo_part}{feat_part}_r{replica}",
-                                        pattern.name(),
-                                        (err * 100.0).round() as i64,
-                                        limit.unwrap_or(crate::cluster::NUM_TYPES),
-                                    );
-                                    out.push(ScenarioSpec {
-                                        name,
-                                        cluster,
-                                        trace,
-                                        epoch_error: err,
-                                        max_slots: self.max_slots,
-                                        features,
-                                    });
+                            for &dyn_spec in &self.dynamics {
+                                for &features in &self.feature_sets {
+                                    for &replica in &self.replicas {
+                                        out.push(self.expand_point(
+                                            servers, pattern, err, limit, topo, dyn_spec,
+                                            features, replica,
+                                        ));
+                                    }
                                 }
                             }
                         }
@@ -451,6 +415,79 @@ impl ScenarioMatrix {
             }
         }
         out
+    }
+
+    /// Materialize one axis point of the cross product.
+    #[allow(clippy::too_many_arguments)]
+    fn expand_point(
+        &self,
+        servers: usize,
+        pattern: ArrivalPattern,
+        err: f64,
+        limit: Option<usize>,
+        topo: &TopologySpec,
+        dyn_spec: DynamicsSpec,
+        features: FeatureSet,
+        replica: u64,
+    ) -> ScenarioSpec {
+        // Fold every axis value into the seed stream — except the feature
+        // set, which alters the policy's view but not the environment.
+        let tag = derive_seed(
+            derive_seed(derive_seed(servers as u64, pattern as u64), err.to_bits()),
+            derive_seed(limit.map(|l| l as u64 + 1).unwrap_or(0), replica),
+        ) ^ topo.tag()
+            ^ dyn_spec.tag();
+        // Homogeneous points inherit the base config's explicit topology,
+        // but only at the size it describes — other size-axis points fall
+        // back to a flat pool so that `num_servers`, the scenario name and
+        // the actual machine set always agree.
+        let topology = match topo.build(servers, self.base_cluster.server_cap) {
+            Some(t) => Some(t),
+            None => self
+                .base_cluster
+                .topology
+                .clone()
+                .filter(|t| t.num_servers() == servers),
+        };
+        let cluster = ClusterConfig {
+            num_servers: servers,
+            topology,
+            seed: derive_seed(self.base_cluster.seed, tag),
+            dynamics: DynamicsConfig { spec: dyn_spec, ..self.base_cluster.dynamics },
+            ..self.base_cluster.clone()
+        };
+        let trace = TraceConfig {
+            pattern,
+            type_limit: limit,
+            seed: derive_seed(self.base_trace.seed, tag ^ 0x7ace),
+            ..self.base_trace.clone()
+        };
+        let topo_part = match topo {
+            TopologySpec::Homogeneous => String::new(),
+            t => format!("_{}", t.name()),
+        };
+        let dyn_part = match dyn_spec {
+            DynamicsSpec::Static => String::new(),
+            d => format!("_{}", d.name()),
+        };
+        let feat_part = match features {
+            FeatureSet::V1 => String::new(),
+            f => format!("_feat{}", f.name()),
+        };
+        let name = format!(
+            "srv{servers}_{}_err{:02}_types{}{topo_part}{dyn_part}{feat_part}_r{replica}",
+            pattern.name(),
+            (err * 100.0).round() as i64,
+            limit.unwrap_or(crate::cluster::NUM_TYPES),
+        );
+        ScenarioSpec {
+            name,
+            cluster,
+            trace,
+            epoch_error: err,
+            max_slots: self.max_slots,
+            features,
+        }
     }
 }
 
@@ -550,6 +587,61 @@ mod tests {
             assert_eq!(topo.num_servers(), s.cluster.num_servers);
             assert!(plain.iter().all(|o| o.cluster.seed != s.cluster.seed));
         }
+    }
+
+    #[test]
+    fn dynamics_axis_preserves_static_seeds_and_multiplies() {
+        let base = ScenarioMatrix::new(ClusterConfig::default(), TraceConfig::default())
+            .with_cluster_sizes(&[8, 16])
+            .with_replicas(2);
+        let with_dyn = base.clone().with_dynamics(&[
+            DynamicsSpec::Static,
+            DynamicsSpec::Failures { frac: 0.3, mtbf: 300, mttr: 80 },
+            DynamicsSpec::Stragglers {
+                frac: 0.4,
+                slowdown: 0.35,
+                period: 120,
+                duty: 0.5,
+            },
+        ]);
+        assert_eq!(with_dyn.len(), base.len() * 3);
+        let plain = base.expand();
+        let specs = with_dyn.expand();
+        assert_eq!(specs.len(), plain.len() * 3);
+        // Dynamics iterate outside replicas: per (size) block of 3×2
+        // specs, the first 2 are the Static ones and must match the
+        // pre-axis expansion exactly — names, seeds, fingerprints.
+        for (i, old) in plain.iter().enumerate() {
+            let block = i / 2;
+            let new = &specs[block * 6 + (i % 2)];
+            assert_eq!(new.name, old.name);
+            assert_eq!(new.cluster.seed, old.cluster.seed);
+            assert_eq!(new.trace.seed, old.trace.seed);
+            assert!(new.cluster.dynamics.is_static());
+            assert_eq!(
+                crate::sim::spec_fingerprint(new),
+                crate::sim::spec_fingerprint(old),
+                "Static dynamics must not move the cache fingerprint"
+            );
+        }
+        // Non-static points carry the spec, distinct seeds, suffixed
+        // names and distinct fingerprints.
+        let live: Vec<_> = specs
+            .iter()
+            .filter(|s| !s.cluster.dynamics.is_static())
+            .collect();
+        assert_eq!(live.len(), plain.len() * 2);
+        for s in &live {
+            assert!(plain.iter().all(|o| o.cluster.seed != s.cluster.seed));
+            assert!(
+                s.name.contains("_fail") || s.name.contains("_strag"),
+                "{}",
+                s.name
+            );
+        }
+        let names: std::collections::BTreeSet<&str> =
+            specs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names.len(), specs.len(), "names must stay unique");
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Integration pins for the live-cluster-dynamics subsystem.
+//!
+//! Two contracts matter:
+//!
+//! 1. **Static identity** — `DynamicsSpec::Static` is a bitwise no-op.
+//!    The config `Debug` form (which doubles as the scenario cache
+//!    fingerprint), every scenario seed, and every episode observable
+//!    must be unchanged from the pre-dynamics repo, regardless of the
+//!    realloc-policy knobs riding along in `DynamicsConfig`.
+//!
+//! 2. **Determinism under churn** — dynamics are a pure function of
+//!    (spec, topology, seed): serial and parallel harness runs over a
+//!    dynamics-bearing matrix agree bitwise, and the modeled effects
+//!    point the right way (outages inflate JCT, checkpoint-restart
+//!    displacement costs more than hot-scale, capacity that hasn't
+//!    arrived yet can't be placed on).
+
+use dl2::cluster::{Cluster, ClusterConfig, DynamicsConfig, DynamicsSpec, Res};
+use dl2::elastic::ReallocPolicy;
+use dl2::scheduler::{run_episode, run_episode_full, Drf, Scheduler, Srtf};
+use dl2::sim::{spec_fingerprint, Harness, ScenarioMatrix, TopologySpec};
+use dl2::trace::{generate, ArrivalPattern, JobSpec, TraceConfig};
+
+/// A live dynamics config used across the identity tests: non-default
+/// spec, policy and slot length, so anything leaking into fingerprints
+/// or episode state shows up.
+fn live_dynamics() -> DynamicsConfig {
+    DynamicsConfig {
+        spec: DynamicsSpec::Failures { frac: 0.5, mtbf: 100, mttr: 30 },
+        realloc: ReallocPolicy::CheckpointRestart,
+        slot_ms: 1_000.0,
+    }
+}
+
+#[test]
+fn static_config_debug_matches_the_pre_dynamics_rendering() {
+    // `sim::spec_fingerprint` hashes the `Debug` form, so this string IS
+    // the cache identity.  A static config must render exactly as the
+    // pre-dynamics derived `Debug` did — seven fields, no `dynamics` —
+    // even when the realloc knobs are non-default.
+    let expected = format!(
+        "ClusterConfig {{ num_servers: 20, server_cap: {:?}, topology: None, \
+         max_tasks_per_job: 12, interference: 0.18, speed_variation: 0.0, \
+         seed: 0 }}",
+        Res::new(2.0, 8.0, 48.0)
+    );
+    assert_eq!(format!("{:?}", ClusterConfig::default()), expected);
+
+    let static_with_knobs = ClusterConfig {
+        dynamics: DynamicsConfig {
+            spec: DynamicsSpec::Static,
+            ..live_dynamics()
+        },
+        ..Default::default()
+    };
+    assert_eq!(format!("{static_with_knobs:?}"), expected);
+
+    // A live spec must show up, so distinct dynamics get distinct
+    // fingerprints.
+    let live = ClusterConfig { dynamics: live_dynamics(), ..Default::default() };
+    assert!(format!("{live:?}").contains("dynamics"));
+}
+
+#[test]
+fn static_fingerprints_ignore_dynamics_knobs() {
+    let matrix = ScenarioMatrix::new(
+        ClusterConfig { num_servers: 8, ..Default::default() },
+        TraceConfig { num_jobs: 6, ..Default::default() },
+    );
+    let plain = matrix.expand();
+    let knobs = ScenarioMatrix::new(
+        ClusterConfig {
+            num_servers: 8,
+            dynamics: DynamicsConfig {
+                spec: DynamicsSpec::Static,
+                ..live_dynamics()
+            },
+            ..Default::default()
+        },
+        TraceConfig { num_jobs: 6, ..Default::default() },
+    )
+    .expand();
+    assert_eq!(plain.len(), knobs.len());
+    for (a, b) in plain.iter().zip(&knobs) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.cluster.seed, b.cluster.seed);
+        assert_eq!(
+            spec_fingerprint(a),
+            spec_fingerprint(b),
+            "{}: static dynamics knobs leaked into the cache fingerprint",
+            a.name
+        );
+    }
+}
+
+#[test]
+fn static_dynamics_is_a_bitwise_noop_on_episodes() {
+    let trace = generate(&TraceConfig { num_jobs: 8, ..Default::default() });
+    let mk = |dynamics: DynamicsConfig| {
+        Cluster::new(ClusterConfig {
+            num_servers: 8,
+            seed: 11,
+            dynamics,
+            ..Default::default()
+        })
+    };
+    let (base, base_cluster) =
+        run_episode_full(mk(DynamicsConfig::default()), &trace, &mut Drf, 0.0, 2_000);
+    let (knobbed, knobbed_cluster) = run_episode_full(
+        mk(DynamicsConfig { spec: DynamicsSpec::Static, ..live_dynamics() }),
+        &trace,
+        &mut Drf,
+        0.0,
+        2_000,
+    );
+    assert_eq!(base.rewards, knobbed.rewards, "reward stream changed");
+    assert_eq!(base.gpu_util, knobbed.gpu_util, "gpu_util changed");
+    assert_eq!(base.jct_per_job, knobbed.jct_per_job, "JCTs changed");
+    assert_eq!(base.makespan_slots, knobbed.makespan_slots);
+    assert_eq!(base.avg_jct_slots.to_bits(), knobbed.avg_jct_slots.to_bits());
+    assert_eq!(base_cluster.slot, knobbed_cluster.slot);
+    for (ja, jb) in base_cluster.jobs.iter().zip(&knobbed_cluster.jobs) {
+        assert_eq!(ja.rng, jb.rng, "job {}: interference RNG diverged", ja.id);
+        assert_eq!(ja.epochs_done.to_bits(), jb.epochs_done.to_bits());
+    }
+}
+
+#[test]
+fn serial_and_parallel_harness_agree_bitwise_under_dynamics() {
+    let matrix = ScenarioMatrix::new(
+        ClusterConfig { num_servers: 8, ..Default::default() },
+        TraceConfig { num_jobs: 8, ..Default::default() },
+    )
+    .with_patterns(&[ArrivalPattern::Bursty, ArrivalPattern::Steady])
+    .with_topologies(&[TopologySpec::Racked { servers_per_rack: 4, penalty: 0.2 }])
+    .with_dynamics(&[
+        DynamicsSpec::Stragglers { frac: 0.4, slowdown: 0.35, period: 120, duty: 0.5 },
+        DynamicsSpec::Failures { frac: 0.3, mtbf: 300, mttr: 80 },
+    ])
+    .with_max_slots(2_000);
+    let specs = matrix.expand();
+    assert_eq!(specs.len(), 2 * 2);
+    let mk = |_: &dl2::sim::ScenarioSpec| -> Box<dyn Scheduler> {
+        Box::new(Srtf::default())
+    };
+    let serial = Harness::new(1).run(&specs, mk);
+    let parallel = Harness::new(4).run(&specs, mk);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.scenario, b.scenario);
+        assert_eq!(a.scheduler, b.scheduler);
+        assert_eq!(
+            a.avg_jct_slots.to_bits(),
+            b.avg_jct_slots.to_bits(),
+            "{}: avg JCT diverged across thread counts",
+            a.scenario
+        );
+        assert_eq!(a.makespan_slots, b.makespan_slots, "{}", a.scenario);
+        assert_eq!(a.mean_gpu_util.to_bits(), b.mean_gpu_util.to_bits(), "{}", a.scenario);
+        let ja: Vec<u64> = a.jct_per_job.iter().map(|x| x.to_bits()).collect();
+        let jb: Vec<u64> = b.jct_per_job.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ja, jb, "{}: per-job JCTs diverged", a.scenario);
+    }
+}
+
+/// Four equal jobs, deterministic cluster, a whole-cluster outage (the
+/// default topology is a single rack) starting right after the first
+/// slot: every job stalls for the outage, so average JCT must grow by
+/// roughly the outage length.
+#[test]
+fn rack_outage_inflates_jct() {
+    let jobs: Vec<JobSpec> = (0..4)
+        .map(|i| JobSpec { arrival_slot: 0, type_idx: i, total_epochs: 60.0 })
+        .collect();
+    let run = |spec: DynamicsSpec| {
+        let cluster = Cluster::new(ClusterConfig {
+            num_servers: 4,
+            interference: 0.0,
+            seed: 7,
+            dynamics: DynamicsConfig::new(spec),
+            ..Default::default()
+        });
+        run_episode(cluster, &jobs, &mut Drf, 0.0, 4_000)
+    };
+    let calm = run(DynamicsSpec::Static);
+    let stormy = run(DynamicsSpec::RackOutage { at: 1, duration: 40 });
+    assert_eq!(calm.jct_per_job.len(), 4, "static run must finish all jobs");
+    assert_eq!(stormy.jct_per_job.len(), 4, "outage run must finish all jobs");
+    assert!(
+        stormy.avg_jct_slots >= calm.avg_jct_slots + 20.0,
+        "outage barely moved JCT: {} vs {}",
+        stormy.avg_jct_slots,
+        calm.avg_jct_slots
+    );
+}
+
+/// Same outage, two displacement models: checkpoint-restart charges the
+/// full checkpoint + restart overhead to every displaced job, hot-scale
+/// only the elastic suspension — with 1-second slots the gap is tens of
+/// slots and must show up in average JCT.
+#[test]
+fn checkpoint_restart_displacement_costs_more_than_hot_scale() {
+    let jobs: Vec<JobSpec> = (0..4)
+        .map(|i| JobSpec { arrival_slot: 0, type_idx: i, total_epochs: 60.0 })
+        .collect();
+    let run = |realloc: ReallocPolicy| {
+        let cluster = Cluster::new(ClusterConfig {
+            num_servers: 4,
+            interference: 0.0,
+            seed: 7,
+            dynamics: DynamicsConfig {
+                spec: DynamicsSpec::RackOutage { at: 1, duration: 40 },
+                realloc,
+                slot_ms: 1_000.0,
+            },
+            ..Default::default()
+        });
+        run_episode(cluster, &jobs, &mut Drf, 0.0, 4_000)
+    };
+    let hot = run(ReallocPolicy::HotScale);
+    let ckpt = run(ReallocPolicy::CheckpointRestart);
+    assert_eq!(hot.jct_per_job.len(), 4);
+    assert_eq!(ckpt.jct_per_job.len(), 4);
+    assert!(
+        ckpt.avg_jct_slots > hot.avg_jct_slots,
+        "checkpoint-restart ({}) should cost more than hot-scale ({})",
+        ckpt.avg_jct_slots,
+        hot.avg_jct_slots
+    );
+}
+
+#[test]
+fn capacity_ramp_gates_placement_until_servers_arrive() {
+    let cluster = Cluster::new(ClusterConfig {
+        num_servers: 4,
+        interference: 0.0,
+        seed: 3,
+        dynamics: DynamicsConfig::new(DynamicsSpec::CapacityRamp { frac: 1.0, at: 50 }),
+        ..Default::default()
+    });
+    // Before the ramp lands nothing is placeable, however small.
+    assert!(
+        !cluster.placement().can_place(&Res::new(0.0, 0.1, 0.1)),
+        "placement admitted a task before any capacity arrived"
+    );
+    // A job submitted at slot 0 can only start once capacity arrives, so
+    // its JCT is at least the ramp point.
+    let job = [JobSpec { arrival_slot: 0, type_idx: 0, total_epochs: 5.0 }];
+    let ep = run_episode(cluster, &job, &mut Drf, 0.0, 2_000);
+    assert_eq!(ep.jct_per_job.len(), 1, "job must finish after the ramp");
+    assert!(
+        ep.avg_jct_slots >= 50.0,
+        "job finished at JCT {} before capacity arrived at slot 50",
+        ep.avg_jct_slots
+    );
+}

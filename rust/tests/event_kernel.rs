@@ -12,7 +12,8 @@
 //! (`OnMembershipChange`: drf, fifo) and per-slot (`EverySlot`: srtf,
 //! tetris) schedulers.
 
-use dl2::cluster::{Cluster, ClusterConfig};
+use dl2::cluster::{Cluster, ClusterConfig, DynamicsConfig, DynamicsSpec};
+use dl2::elastic::ReallocPolicy;
 use dl2::scheduler::{
     run_episode_event_full, run_episode_full, Drf, EpisodeResult, Fifo, Scheduler, Srtf,
     Tetris,
@@ -96,6 +97,77 @@ fn event_kernel_is_bitwise_identical_across_the_scenario_matrix() {
     assert_eq!(specs.len(), 4 * 2 * 2);
     for spec in &specs {
         assert!(spec.cluster.interference > 0.0, "matrix must keep noise on");
+        let trace = generate(&spec.trace);
+        for sched in schedulers().iter_mut() {
+            let label = format!("{}/{}", spec.name, sched.name());
+            let run = |s: &mut dyn Scheduler, event: bool| {
+                let cluster = Cluster::new(spec.cluster.clone());
+                if event {
+                    run_episode_event_full(cluster, &trace, s, spec.epoch_error, spec.max_slots)
+                } else {
+                    run_episode_full(cluster, &trace, s, spec.epoch_error, spec.max_slots)
+                }
+            };
+            let (ref_result, ref_cluster) = run(sched.as_mut(), false);
+            let (ev_result, ev_cluster) = run(sched.as_mut(), true);
+            assert_identical(&label, &ref_result, &ev_result);
+            assert_clusters_identical(&label, &ref_cluster, &ev_cluster);
+        }
+    }
+}
+
+/// Under live cluster dynamics — stragglers, failure/recovery churn and
+/// a correlated rack outage, with the expensive checkpoint-restart
+/// displacement charge — the event kernel must still match the
+/// slot-stepped reference bitwise: every dynamics boundary caps the
+/// coast window, so placements, displacement charges, suspension burn
+/// and the interference stream all realize identically.
+#[test]
+fn event_kernel_is_bitwise_identical_under_dynamics() {
+    let matrix = ScenarioMatrix::new(
+        ClusterConfig {
+            num_servers: 8,
+            interference: 0.15,
+            dynamics: DynamicsConfig::default()
+                .with_realloc(ReallocPolicy::CheckpointRestart),
+            ..Default::default()
+        },
+        TraceConfig {
+            num_jobs: 10,
+            ..Default::default()
+        },
+    )
+    .with_patterns(&[ArrivalPattern::Bursty, ArrivalPattern::Steady])
+    .with_topologies(&[TopologySpec::Racked {
+        servers_per_rack: 4,
+        penalty: 0.2,
+    }])
+    .with_dynamics(&[
+        DynamicsSpec::Stragglers {
+            frac: 0.5,
+            slowdown: 0.3,
+            period: 60,
+            duty: 0.5,
+        },
+        DynamicsSpec::Failures {
+            frac: 0.4,
+            mtbf: 120,
+            mttr: 40,
+        },
+        DynamicsSpec::RackOutage {
+            at: 50,
+            duration: 60,
+        },
+    ])
+    .with_max_slots(2_000);
+    let specs = matrix.expand();
+    assert_eq!(specs.len(), 2 * 3);
+    for spec in &specs {
+        assert!(
+            !spec.cluster.dynamics.is_static(),
+            "{}: matrix must sweep live dynamics only",
+            spec.name
+        );
         let trace = generate(&spec.trace);
         for sched in schedulers().iter_mut() {
             let label = format!("{}/{}", spec.name, sched.name());
