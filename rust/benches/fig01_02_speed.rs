@@ -10,9 +10,10 @@
 //! VGG-16 at 6 : 6).
 
 use dl2::cluster::{catalog, speed};
-use dl2::util::Table;
+use dl2::util::{BenchReport, Table};
 
 fn main() {
+    let mut report = BenchReport::start("fig01_02_speed");
     let cat = catalog();
     let models = ["resnet50", "vgg16", "seq2seq"];
 
@@ -35,6 +36,7 @@ fn main() {
     for m in models {
         let jt = cat.iter().find(|j| j.name == m).unwrap();
         let s12 = speed::relative_speed(&jt.speed, 12, 12);
+        report.metric(&format!("fig01_{m}_speedup_k12"), s12);
         assert!(s12 < 12.0, "{m}: superlinear speedup?");
         assert!(s12 > 1.5, "{m}: no scaling at all?");
     }
@@ -48,7 +50,9 @@ fn main() {
         let mut row = vec![format!("{p}:{w}")];
         for m in ["vgg16", "seq2seq"] {
             let jt = cat.iter().find(|j| j.name == m).unwrap();
-            row.push(format!("{:.3}", speed::relative_speed(&jt.speed, w, p)));
+            let s = speed::relative_speed(&jt.speed, w, p);
+            report.metric(&format!("fig02_{m}_{p}ps_{w}w"), s);
+            row.push(format!("{s:.3}"));
         }
         t2.row(row);
     }
@@ -69,4 +73,5 @@ fn main() {
     assert_eq!(best("seq2seq"), (4, 8), "seq2seq should peak at 4 PS : 8 workers");
     assert_eq!(best("vgg16"), (6, 6), "vgg16 should peak at 6 : 6");
     println!("shape checks passed: decreasing returns (Fig 1), model-dependent best split (Fig 2)");
+    report.finish();
 }

@@ -14,9 +14,10 @@ use dl2::cluster::{Cluster, ClusterConfig};
 use dl2::scheduler::{run_episode, Fifo};
 use dl2::trace::{generate, TraceConfig};
 use dl2::util::stats::{coeff_of_variation, mean, percentile};
-use dl2::util::{scaled, Table};
+use dl2::util::{scaled, BenchReport, Table};
 
 fn main() {
+    let mut report = BenchReport::start("fig03_04_cluster");
     // --- Fig 3: one simulated day (72 slots of 20 min) of arrivals under
     // FIFO static allocation.
     let specs = generate(&TraceConfig {
@@ -46,6 +47,10 @@ fn main() {
     );
     println!("utilization range over the day: {lo:.2} .. {hi:.2}");
     assert!(hi - lo > 0.2, "utilization should vary significantly over the day");
+    report
+        .metric("fig03_util_min", lo)
+        .metric("fig03_util_max", hi)
+        .jct("fig03_fifo_day", &res.jct_per_job);
 
     // --- Fig 4: per-job completion-time variation across repeated runs.
     let n_jobs = scaled(898, 60); // paper: 898 jobs from the trace
@@ -82,10 +87,13 @@ fn main() {
     }
     t4.emit("fig04_variation");
     let avg = mean(&variations);
-    println!(
-        "average variation {avg:.1}% (paper: 27.3%); share >100%: {:.1}% (paper: 3.5%)",
-        100.0 * variations.iter().filter(|&&v| v > 100.0).count() as f64
-            / variations.len() as f64
-    );
+    let share = 100.0 * variations.iter().filter(|&&v| v > 100.0).count() as f64
+        / variations.len() as f64;
+    println!("average variation {avg:.1}% (paper: 27.3%); share >100%: {share:.1}% (paper: 3.5%)");
     assert!(avg > 10.0 && avg < 60.0, "variation out of plausible range: {avg:.1}%");
+    report
+        .count("fig04_jobs", n_jobs as u64)
+        .metric("fig04_variation_avg_pct", avg)
+        .metric("fig04_variation_over_100_share_pct", share);
+    report.finish();
 }

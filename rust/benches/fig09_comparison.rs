@@ -15,9 +15,10 @@ use dl2::runtime::Engine;
 use dl2::scheduler::offline_rl::{offline_opts, offline_rl_trainer};
 use dl2::scheduler::{Dl2Config, Dl2Scheduler};
 use dl2::sim::{mean_avg_jct, replica_specs, Harness};
-use dl2::util::{scaled, Table};
+use dl2::util::{scaled, BenchReport, Table};
 
 fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::start("fig09_comparison");
     let cfg = PipelineConfig {
         sl_steps: scaled(250, 30),
         rl_rounds: scaled(10, 2),
@@ -133,10 +134,13 @@ fn main() -> anyhow::Result<()> {
     let val_cfg = validation_trace_cfg(&cfg.trace);
     let scenarios = replica_specs("val", &cfg.cluster, &val_cfg, 777, 3, cfg.rl_opts.max_slots);
     let results = Harness::from_env().run_named(&baselines, &scenarios)?;
+    report.episodes("baselines", &results);
     let mut jcts = std::collections::BTreeMap::new();
     for (i, name) in baselines.iter().enumerate() {
         let group = &results[i * scenarios.len()..(i + 1) * scenarios.len()];
-        jcts.insert(name.to_string(), mean_avg_jct(group));
+        let jct = mean_avg_jct(group);
+        report.metric(&format!("{name}_jct"), jct);
+        jcts.insert(name.to_string(), jct);
     }
     for (name, paper_gain) in paper {
         let jct = jcts[name];
@@ -166,5 +170,10 @@ fn main() -> anyhow::Result<()> {
         "DL2 {dl2_jct:.2} | DRF {:.2} | Tetris {:.2} | Optimus {:.2} | OfflineRL {offline_jct:.2}",
         jcts["drf"], jcts["tetris"], jcts["optimus"]
     );
+    report
+        .metric("dl2_jct", dl2_jct)
+        .metric("offline_rl_jct", offline_jct)
+        .metric("dl2_gain_over_drf_pct", 100.0 * (jcts["drf"] - dl2_jct) / jcts["drf"]);
+    report.finish();
     Ok(())
 }

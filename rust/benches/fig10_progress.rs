@@ -19,9 +19,10 @@ use dl2::rl::{generate_dataset, train_sl};
 use dl2::runtime::Engine;
 use dl2::scheduler::{Dl2Config, Dl2Scheduler, Drf};
 use dl2::trace::{generate, TraceConfig};
-use dl2::util::{scaled, Args, Rng, Table};
+use dl2::util::{scaled, Args, BenchReport, Rng, Table};
 
 fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::start("fig10_progress");
     let args = Args::from_env();
     let serial = args.bool_or("serial", false);
     let base = PipelineConfig {
@@ -115,5 +116,12 @@ fn main() -> anyhow::Result<()> {
     let slrl_final = curves[1].1.iter().map(|&(_, j)| j).fold(f64::INFINITY, f64::min);
     println!("DRF {drf:.2} | SL-only final {sl_final:.2} | RL-only initial {rl_only_first:.2} | SL+RL best {slrl_final:.2}");
     println!("paper shape: RL-only starts far worse than DRF; SL converges near DRF; SL+RL surpasses it");
+    report
+        .label("mode", mode)
+        .metric("drf_jct", drf)
+        .metric("sl_only_final_jct", sl_final)
+        .metric("rl_only_initial_jct", rl_only_first)
+        .metric("sl_plus_rl_best_jct", slrl_final);
+    report.finish();
     Ok(())
 }

@@ -12,9 +12,10 @@
 
 use dl2::cluster::catalog;
 use dl2::elastic::{checkpoint::measure_checkpoint_scaling, ElasticConfig, ElasticJob};
-use dl2::util::Table;
+use dl2::util::{BenchReport, Table};
 
 fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::start("fig11_12_scaling");
     // Fast iterations so the scaling-clock wait (clock_lead × iter_ms)
     // does not mask the migration payload time in step 3.
     let cfg = ElasticConfig {
@@ -42,6 +43,9 @@ fn main() -> anyhow::Result<()> {
 
         // Checkpoint: one restart regardless of k.
         let ck = measure_checkpoint_scaling(&cfg, resnet.model_mb, 2, 2, k)?;
+        report
+            .metric(&format!("fig11_k{k}_hot_ms"), hot_ms)
+            .metric(&format!("fig11_k{k}_checkpoint_total_ms"), ck.total_suspension_ms());
         t11.row(vec![
             k.to_string(),
             format!("{hot_ms:.1}"),
@@ -88,5 +92,9 @@ fn main() -> anyhow::Result<()> {
         big > small,
         "migration time should grow with model size ({small} vs {big})"
     );
+    report
+        .metric("fig12_migrate_smallest_ms", small)
+        .metric("fig12_migrate_largest_ms", big);
+    report.finish();
     Ok(())
 }

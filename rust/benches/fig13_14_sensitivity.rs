@@ -13,9 +13,10 @@ use dl2::pipeline::{run_pipeline, validation_trace, validation_trace_cfg, Pipeli
 use dl2::rl::evaluate_policy_with_error;
 use dl2::runtime::Engine;
 use dl2::sim::{mean_avg_jct, replica_specs, Harness, ScenarioSpec};
-use dl2::util::{scaled, Table};
+use dl2::util::{scaled, BenchReport, Table};
 
 fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::start("fig13_14_sensitivity");
     let cfg = PipelineConfig {
         sl_steps: scaled(250, 30),
         rl_rounds: scaled(10, 2),
@@ -50,6 +51,7 @@ fn main() -> anyhow::Result<()> {
         scenarios13.extend(replica_specs(&prefix, &env, &val_cfg, 777, runs, max_slots));
     }
     let res13 = harness.run_named(&["optimus", "drf"], &scenarios13)?;
+    report.episodes("fig13_baselines", &res13);
     let (opt_res, drf_res) = res13.split_at(scenarios13.len());
 
     let mut t13 = Table::new(
@@ -80,6 +82,9 @@ fn main() -> anyhow::Result<()> {
     let dl2_deg = degradation[1].0 / degradation[0].0;
     let opt_deg = degradation[1].1 / degradation[0].1;
     println!("JCT growth 0%→40% variation: DL2 ×{dl2_deg:.2}, Optimus ×{opt_deg:.2} (paper: Optimus more sensitive)");
+    report
+        .metric("fig13_dl2_degradation_x", dl2_deg)
+        .metric("fig13_optimus_degradation_x", opt_deg);
 
     // --- Fig 14: epoch-estimation error sweep.  DRF (oblivious to the
     // estimate; its env still carries the error) runs as one harness
@@ -95,6 +100,7 @@ fn main() -> anyhow::Result<()> {
         scenarios14.extend(specs);
     }
     let drf14 = harness.run_named(&["drf"], &scenarios14)?;
+    report.episodes("fig14_drf", &drf14);
 
     let mut t14 = Table::new(
         "Fig 14: avg JCT vs total-epoch estimation error",
@@ -118,5 +124,9 @@ fn main() -> anyhow::Result<()> {
         last.1,
         100.0 * (last.1 - last.0) / last.1
     );
+    report
+        .metric("fig14_dl2_jct_at_20pct_error", last.0)
+        .metric("fig14_drf_jct_at_20pct_error", last.1);
+    report.finish();
     Ok(())
 }

@@ -17,9 +17,10 @@ use dl2::runtime::Engine;
 use dl2::scheduler::{Dl2Scheduler, Drf};
 use dl2::sim::{mean_avg_jct, replica_specs, Harness};
 use dl2::trace::{generate, TraceConfig};
-use dl2::util::{scaled, Rng, Table};
+use dl2::util::{scaled, BenchReport, Rng, Table};
 
 fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::start("fig15_16_generality");
     let cfg = PipelineConfig {
         sl_steps: scaled(250, 30),
         rl_rounds: scaled(8, 2),
@@ -94,6 +95,9 @@ fn main() -> anyhow::Result<()> {
         "after adaptation: {final_jct:.2} vs ideal {:.2} (paper: converges to ideal)",
         ideal.final_jct
     );
+    report
+        .metric("fig15_adapted_jct", final_jct)
+        .metric("fig15_ideal_jct", ideal.final_jct);
 
     // --- Fig 16.  All (incumbent × env-seed-replica) baseline episodes
     // run as one harness batch up front; the SL+RL pipelines stay serial
@@ -103,6 +107,7 @@ fn main() -> anyhow::Result<()> {
     let scenarios = replica_specs("val", &cfg.cluster, &val_cfg, 777, 3, max_slots);
     let names: Vec<&str> = incumbents.iter().map(|i| i.name()).collect();
     let inc_results = Harness::from_env().run_named(&names, &scenarios)?;
+    report.episodes("fig16_incumbents", &inc_results);
 
     let mut t16 = Table::new(
         "Fig 16: SL from different incumbents (validation avg JCT)",
@@ -119,6 +124,10 @@ fn main() -> anyhow::Result<()> {
         )?;
         let inc_jct = mean_avg_jct(&inc_results[k * scenarios.len()..(k + 1) * scenarios.len()]);
         let speedup = 100.0 * (inc_jct - res.final_jct) / inc_jct;
+        report
+            .metric(&format!("fig16_{}_incumbent_jct", inc.name()), inc_jct)
+            .metric(&format!("fig16_{}_sl_rl_jct", inc.name()), res.final_jct)
+            .metric(&format!("fig16_{}_speedup_pct", inc.name()), speedup);
         t16.row(vec![
             inc.name().into(),
             format!("{inc_jct:.3}"),
@@ -129,5 +138,6 @@ fn main() -> anyhow::Result<()> {
     }
     t16.emit("fig16_incumbents");
     println!("paper: SL+RL beats each incumbent (e.g. +41.3% over SRTF)");
+    report.finish();
     Ok(())
 }

@@ -14,9 +14,10 @@ use dl2::rl::{Federation, RlOptions};
 use dl2::runtime::{Engine, EnginePool};
 use dl2::scheduler::Dl2Config;
 use dl2::sim::Harness;
-use dl2::util::{scaled, Table};
+use dl2::util::{scaled, BenchReport, Table};
 
 fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::start("fig17_18_scale");
     let base = PipelineConfig {
         sl_steps: scaled(200, 25),
         rl_rounds: scaled(4, 1),
@@ -48,7 +49,9 @@ fn main() -> anyhow::Result<()> {
         &["J", "avg_jct"],
     );
     for (j, jct) in js.iter().zip(jcts) {
-        t17.row(vec![j.to_string(), format!("{:.3}", jct?)]);
+        let jct = jct?;
+        report.metric(&format!("fig17_j{j}_jct"), jct);
+        t17.row(vec![j.to_string(), format!("{jct:.3}")]);
     }
     t17.emit("fig17_jsweep");
     println!("paper shape: small J (batched scheduling) hurts; large-enough J plateaus");
@@ -76,6 +79,9 @@ fn main() -> anyhow::Result<()> {
             fed.round_parallel(&harness, &pool)?;
         }
         let jct = fed.evaluate(&val);
+        report
+            .metric(&format!("fig18_k{k}_jct"), jct)
+            .count(&format!("fig18_k{k}_total_updates"), fed.total_updates() as u64);
         t18.row(vec![
             k.to_string(),
             format!("{jct:.3}"),
@@ -85,5 +91,6 @@ fn main() -> anyhow::Result<()> {
     }
     t18.emit("fig18_federated");
     println!("paper shape: global JCT stable in k; updates/round scale ~k (k× faster convergence)");
+    report.finish();
     Ok(())
 }

@@ -23,7 +23,7 @@ use dl2::sim::{
     mean_avg_jct, run_dl2_batched_with, spec_fingerprint, Harness, ScenarioMatrix, TopologySpec,
 };
 use dl2::trace::TraceConfig;
-use dl2::util::{bench_scale, f, scaled, Table};
+use dl2::util::{bench_scale, f, scaled, BenchReport, Table};
 
 /// Deterministic stand-in policy (pure function of the state) — same
 /// construction as `perf_sim`.
@@ -35,6 +35,7 @@ fn fake_probs(state: &[f32], n_actions: usize) -> Vec<f32> {
 }
 
 fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::start("fig_dynamics");
     let regimes = ["static", "stragglers", "failures", "rackout", "ramp"];
     let dynamics: Vec<DynamicsSpec> = regimes
         .iter()
@@ -81,6 +82,7 @@ fn main() -> anyhow::Result<()> {
     let results = Harness::from_env()
         .run_named(&schedulers, &scenarios)
         .expect("dynamics sweep schedulers are valid");
+    report.episodes("baselines", &results);
 
     // --- DL² under the lockstep batched driver with the fake policy.
     let meta_dir = std::env::temp_dir().join("dl2_fig_dynamics_meta");
@@ -144,34 +146,22 @@ fn main() -> anyhow::Result<()> {
     }
     println!("dynamics axis produces distinct JCTs for every scheduler ✓");
 
-    // --- Emit BENCH_fig_dynamics.json.
-    std::fs::create_dir_all("results")?;
-    let mut json = String::new();
-    json.push_str("{\n");
-    json.push_str(&format!(
-        "  \"scale\": {},\n  \"replicas\": {replicas},\n  \"num_jobs\": {},\n",
-        bench_scale(),
-        scaled(40, 15)
-    ));
-    json.push_str("  \"regimes\": [\n");
+    // --- Emit BENCH_fig_dynamics.json through the shared reporter.
+    report
+        .label("replicas", replicas)
+        .label("num_jobs", scaled(40, 15))
+        .count("dl2_rows", stats.rows as u64)
+        .count("dl2_pooled_calls", stats.batches as u64);
     for (di, regime) in regimes.iter().enumerate() {
-        let mut fields = vec![format!("\"regime\": \"{regime}\"")];
         for (si, name) in schedulers.iter().enumerate() {
             let group = &results[si * scenarios.len()..(si + 1) * scenarios.len()];
-            fields.push(format!(
-                "\"{name}\": {:.3}",
-                mean_avg_jct(&group[di * replicas..(di + 1) * replicas])
-            ));
+            report.metric(
+                &format!("{regime}_{name}"),
+                mean_avg_jct(&group[di * replicas..(di + 1) * replicas]),
+            );
         }
-        fields.push(format!("\"dl2_fake\": {:.3}", dl2_means[di]));
-        json.push_str(&format!(
-            "    {{{}}}{}\n",
-            fields.join(", "),
-            if di + 1 < regimes.len() { "," } else { "" }
-        ));
+        report.metric(&format!("{regime}_dl2_fake"), dl2_means[di]);
     }
-    json.push_str("  ]\n}\n");
-    std::fs::write("results/BENCH_fig_dynamics.json", &json)?;
-    println!("[saved results/BENCH_fig_dynamics.json]");
+    report.finish();
     Ok(())
 }

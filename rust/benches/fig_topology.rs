@@ -26,9 +26,10 @@ use dl2::cluster::ClusterConfig;
 use dl2::scheduler::FeatureSet;
 use dl2::sim::{mean_avg_jct, Harness, ScenarioMatrix, TopologySpec};
 use dl2::trace::TraceConfig;
-use dl2::util::{scaled, Table};
+use dl2::util::{scaled, BenchReport, Table};
 
 fn main() {
+    let mut report = BenchReport::start("fig_topology");
     let topologies = [
         TopologySpec::Homogeneous,
         TopologySpec::TwoClass { frac_fast: 0.5, speedup: 2.0 },
@@ -64,6 +65,7 @@ fn main() {
     let results = Harness::from_env()
         .run_named(&schedulers, &scenarios)
         .expect("topology sweep schedulers are valid");
+    report.episodes("topology_sweep", &results);
 
     // Matrix order within each scheduler group: topologies ▸ replicas.
     let mut t = Table::new(
@@ -129,6 +131,7 @@ fn main() {
     let feat_results = Harness::from_env()
         .run_named(&feat_schedulers, &feat_scenarios)
         .expect("feature-axis schedulers are valid");
+    report.episodes("feature_axis", &feat_results);
 
     // Expansion order per topology block: v1 replicas, then v2 replicas.
     let mut t = Table::new(
@@ -174,4 +177,16 @@ fn main() {
             > FeatureSet::V1.schema(dl2::cluster::NUM_TYPES).row_width()
     );
     println!("feature axis: env invariant for baselines, v2 widens the NN state ✓");
+
+    // Warm-run gate (CI): under DL2_EXPECT_WARM a second cold process
+    // over the same matrix must be served entirely from the disk tier —
+    // zero episodes re-simulated.
+    report.label("replicas", replicas).label("feat_replicas", feat_replicas);
+    let stats = dl2::sim::ResultCache::global().stats();
+    if std::env::var_os("DL2_EXPECT_WARM").is_some() {
+        assert_eq!(stats.misses, 0, "warm run re-simulated episodes ({stats})");
+        assert!(stats.disk_hits > 0, "warm run served nothing from disk ({stats})");
+        println!("warm run: every episode served from the disk tier ✓");
+    }
+    report.finish();
 }

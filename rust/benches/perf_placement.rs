@@ -13,7 +13,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use dl2::cluster::{catalog, Placement, Res, ServerClass, TaskKind, Topology};
-use dl2::util::{scaled, Rng, Table};
+use dl2::util::{scaled, BenchReport, Rng, Table};
 
 /// The pre-refactor scan as the baseline under test, backed by the
 /// canonical frozen reference (`dl2::cluster::server::legacy_try_place`).
@@ -78,6 +78,7 @@ impl PlaceLike for NaivePlacement {
 }
 
 fn main() {
+    let mut report = BenchReport::start("perf_placement");
     let servers = 500usize;
     let cap = Res::new(2.0, 8.0, 48.0);
     let rounds = scaled(40, 4);
@@ -142,6 +143,13 @@ fn main() {
     assert_eq!(sum_inc, sum_naive, "incremental and naive chose different servers");
     let speedup = ns_naive as f64 / ns_inc.max(1) as f64;
     println!("incremental vs naive speedup at {servers} servers: {speedup:.2}x");
+    report
+        .label("servers", servers)
+        .count("placements", n_inc as u64)
+        .metric("incremental_ns_per_placement", ns_inc as f64 / n_inc.max(1) as f64)
+        .metric("naive_ns_per_placement", ns_naive as f64 / n_naive.max(1) as f64)
+        .metric("topo_ns_per_placement", ns_topo as f64 / n_topo.max(1) as f64)
+        .metric("incremental_speedup_x", speedup);
 
     // PS/worker pairing micro-assert: with tight GPU caps four workers
     // fill rack 0 and the fifth spills to rack 1 — the job's PS must
@@ -162,4 +170,5 @@ fn main() {
         .expect("ps fits");
     assert_eq!(p.topology().rack(ps_idx), 0, "PS off the worker-majority rack");
     println!("PS pairing follows the worker-majority rack ✓");
+    report.finish();
 }

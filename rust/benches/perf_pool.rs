@@ -18,9 +18,10 @@ use std::time::Instant;
 
 use dl2::runtime::{compile_count, engine_loads, Engine, EnginePool, Meta};
 use dl2::sim::Harness;
-use dl2::util::{Args, Table};
+use dl2::util::{Args, BenchReport, Table};
 
 fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::start("perf_pool");
     let args = Args::from_env();
     let rounds = args.usize_or("rounds", 6);
     let workers = args.usize_or("workers", 4);
@@ -145,5 +146,12 @@ fn main() -> anyhow::Result<()> {
     }
 
     t.emit("perf_pool");
+    report
+        .label("rounds", rounds)
+        .label("workers", workers)
+        .label("episodes_per_round", episodes)
+        .count("pooled_engine_loads", pooled_loads as u64)
+        .count("per_episode_engine_loads", per_episode_loads as u64);
+    report.finish();
     Ok(())
 }

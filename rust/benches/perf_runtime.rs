@@ -12,7 +12,7 @@ use dl2::cluster::{Cluster, ClusterConfig};
 use dl2::runtime::{Engine, TrainState};
 use dl2::scheduler::{Dl2Config, Dl2Scheduler, Scheduler};
 use dl2::util::stats::percentile;
-use dl2::util::Table;
+use dl2::util::{BenchReport, Table};
 
 fn time_n<F: FnMut()>(n: usize, mut f: F) -> Vec<f64> {
     let mut samples = Vec::with_capacity(n);
@@ -24,8 +24,16 @@ fn time_n<F: FnMut()>(n: usize, mut f: F) -> Vec<f64> {
     samples
 }
 
-fn row(t: &mut Table, name: &str, ms: &[f64]) {
+fn row(t: &mut Table, report: &mut BenchReport, name: &str, ms: &[f64]) {
     let mean: f64 = ms.iter().sum::<f64>() / ms.len() as f64;
+    // Metric keys are the row name with non-alphanumerics collapsed to _.
+    let key: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    report
+        .metric(&format!("{key}_mean_ms"), mean)
+        .metric(&format!("{key}_p99_ms"), percentile(ms, 99.0));
     t.row(vec![
         name.into(),
         format!("{mean:.3}"),
@@ -35,6 +43,7 @@ fn row(t: &mut Table, name: &str, ms: &[f64]) {
 }
 
 fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::start("perf_runtime");
     let dir = dl2::runtime::default_artifacts_dir();
     let mut engine = Engine::load(&dir)?;
     let j = 10usize;
@@ -55,14 +64,14 @@ fn main() -> anyhow::Result<()> {
     let ms = time_n(300, || {
         engine.policy_infer(j, &pol.theta, &state).unwrap();
     });
-    row(&mut t, "policy_infer (literal path)", &ms);
+    row(&mut t, &mut report, "policy_infer (literal path)", &ms);
 
     // Device-resident-θ hot path (what the scheduler actually calls).
     let ms = time_n(300, || {
         engine.policy_infer_state(j, &pol, &state).unwrap();
     });
     let infer_mean: f64 = ms.iter().sum::<f64>() / ms.len() as f64;
-    row(&mut t, "policy_infer_state (cached θ)", &ms);
+    row(&mut t, &mut report, "policy_infer_state (cached θ)", &ms);
 
     // Training steps.
     let states: Vec<f32> = (0..batch * spec.state_dim).map(|_| rng.f32()).collect();
@@ -71,19 +80,19 @@ fn main() -> anyhow::Result<()> {
     let ms = time_n(30, || {
         engine.sl_step(j, &mut pol, &states, &labels, 1e-4).unwrap();
     });
-    row(&mut t, "sl_step", &ms);
+    row(&mut t, &mut report, "sl_step", &ms);
     let ms = time_n(30, || {
         engine
             .rl_step(j, &mut pol, &mut val, &states, &labels, &returns, 1e-5, 1e-5, 0.1)
             .unwrap();
     });
-    row(&mut t, "rl_step", &ms);
+    row(&mut t, &mut report, "rl_step", &ms);
     let ms = time_n(30, || {
         engine
             .pg_step(j, &mut pol, &states, &labels, &returns, 1e-5, 0.1)
             .unwrap();
     });
-    row(&mut t, "pg_step", &ms);
+    row(&mut t, &mut report, "pg_step", &ms);
 
     // Whole-slot scheduling decision (multi-inference, 10 active jobs).
     let mut sched = Dl2Scheduler::new(Engine::load(&dir)?, Dl2Config { j, ..Default::default() });
@@ -96,12 +105,14 @@ fn main() -> anyhow::Result<()> {
     let ms = time_n(50, || {
         let _ = sched.schedule(&cluster, &active);
     });
-    row(&mut t, "full_slot_decision(10 jobs)", &ms);
+    row(&mut t, &mut report, "full_slot_decision(10 jobs)", &ms);
     t.emit("perf_runtime");
 
     println!(
         "policy inference mean {infer_mean:.2} ms — paper §6.1 claims < 3 ms: {}",
         if infer_mean < 3.0 { "MET" } else { "NOT met" }
     );
+    report.label("j", j).label("batch", batch);
+    report.finish();
     Ok(())
 }

@@ -26,7 +26,7 @@ use dl2::scheduler::{
 };
 use dl2::sim::{run_dl2_batched_with, ScenarioSpec};
 use dl2::trace::{JobSpec, TraceConfig};
-use dl2::util::{bench_scale, f, scaled, Args, Table};
+use dl2::util::{bench_scale, f, scaled, Args, BenchReport, Table};
 
 const USAGE: &str = "perf_sim — event-kernel vs reference-loop benchmark
   --jobs N    jobs per trace (default 12, scaled)
@@ -68,6 +68,7 @@ struct KernelAb {
     slots: usize,
     ref_secs: f64,
     event_secs: f64,
+    jct_per_job: Vec<f64>,
 }
 
 impl KernelAb {
@@ -109,6 +110,7 @@ fn ab<F: Fn() -> Box<dyn Scheduler>>(
         slots: reference.makespan_slots,
         ref_secs,
         event_secs,
+        jct_per_job: reference.jct_per_job,
     }
 }
 
@@ -123,6 +125,7 @@ fn fake_probs(state: &[f32], n_actions: usize) -> Vec<f32> {
 }
 
 fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::start("perf_sim");
     let args = Args::from_env().with_usage(USAGE);
     let jobs = args.usize_or("jobs", scaled(12, 4));
     let gap = args.usize_or("gap", 600);
@@ -217,42 +220,31 @@ fn main() -> anyhow::Result<()> {
         "lockstep rounds must carry more than one row on average"
     );
 
-    // --- Emit BENCH_perf_sim.json.
-    std::fs::create_dir_all("results")?;
-    let mut json = String::new();
-    json.push_str("{\n");
-    json.push_str(&format!("  \"scale\": {},\n", bench_scale()));
-    json.push_str(&format!("  \"jobs\": {jobs},\n  \"gap\": {gap},\n  \"iters\": {iters},\n"));
-    json.push_str("  \"kernels\": [\n");
-    for (i, (label, r)) in measured.iter().enumerate() {
-        json.push_str(&format!(
-            "    {{\"case\": \"{label}\", \"slots\": {}, \"ref_slots_per_sec\": {:.1}, \
-             \"event_slots_per_sec\": {:.1}, \"ref_wall_secs\": {:.6}, \
-             \"event_wall_secs\": {:.6}, \"speedup\": {:.3}}}{}\n",
-            r.slots,
-            r.ref_rate(),
-            r.event_rate(),
-            r.ref_secs,
-            r.event_secs,
-            r.speedup(),
-            if i + 1 < measured.len() { "," } else { "" },
-        ));
+    // --- Emit BENCH_perf_sim.json through the shared reporter.
+    report.label("jobs", jobs).label("gap", gap).label("iters", iters);
+    for (label, r) in &measured {
+        let key = label.replace('/', "_");
+        report
+            .count(&format!("{key}_slots"), r.slots as u64)
+            .metric(&format!("{key}_ref_slots_per_sec"), r.ref_rate())
+            .metric(&format!("{key}_event_slots_per_sec"), r.event_rate())
+            .metric(&format!("{key}_ref_wall_secs"), r.ref_secs)
+            .metric(&format!("{key}_event_wall_secs"), r.event_secs)
+            .metric(&format!("{key}_speedup"), r.speedup())
+            .jct(&key, &r.jct_per_job);
     }
-    json.push_str("  ],\n");
-    json.push_str(&format!(
-        "  \"batched_inference\": {{\"episodes\": {}, \"rows\": {}, \"batches\": {}, \
-         \"avg_batch_width\": {:.2}, \"inferences_per_sec\": {:.1}, \"wall_secs\": {:.6}}}\n",
-        stats.episodes,
-        stats.rows,
-        stats.batches,
-        width,
-        stats.rows as f64 / batched_secs.max(1e-12),
-        batched_secs,
-    ));
-    json.push_str("}\n");
-    std::fs::write("results/BENCH_perf_sim.json", &json)?;
-    println!("[saved results/BENCH_perf_sim.json]");
+    report
+        .count("batched_episodes", stats.episodes as u64)
+        .count("batched_rows", stats.rows as u64)
+        .count("batched_pooled_calls", stats.batches as u64)
+        .metric("batched_avg_width", width)
+        .metric("batched_wall_secs", batched_secs)
+        .metric(
+            "batched_inferences_per_sec",
+            stats.rows as f64 / batched_secs.max(1e-12),
+        );
 
     t.emit("perf_sim");
+    report.finish();
     Ok(())
 }

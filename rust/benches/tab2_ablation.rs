@@ -9,7 +9,7 @@ use dl2::pipeline::{run_pipeline, PipelineConfig};
 use dl2::runtime::Engine;
 use dl2::scheduler::{Dl2Config, ExploreConfig};
 use dl2::util::stats::{mean, std_dev};
-use dl2::util::{scaled, Table};
+use dl2::util::{scaled, BenchReport, Table};
 
 struct Variant {
     name: &'static str,
@@ -20,6 +20,7 @@ struct Variant {
 }
 
 fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::start("tab2_ablation");
     let seeds = scaled(3, 2) as u64;
     let base = PipelineConfig {
         sl_steps: scaled(250, 30),
@@ -68,6 +69,11 @@ fn main() -> anyhow::Result<()> {
             full_mean = Some(m);
         }
         let slowdown = full_mean.map(|f| 100.0 * (m - f) / f).unwrap_or(0.0);
+        let key = v.name.trim_start_matches('-');
+        report
+            .metric(&format!("{key}_jct_mean"), m)
+            .metric(&format!("{key}_jct_std"), sd)
+            .metric(&format!("{key}_slowdown_pct"), slowdown);
         t.row(vec![
             v.name.into(),
             format!("{m:.3}"),
@@ -78,5 +84,7 @@ fn main() -> anyhow::Result<()> {
     }
     t.emit("tab2_ablation");
     println!("paper shape: every removed technique slows completion (replay worst)");
+    report.label("seeds", seeds);
+    report.finish();
     Ok(())
 }

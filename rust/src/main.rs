@@ -12,12 +12,12 @@
 use dl2::cluster::{ClusterConfig, DynamicsConfig, DynamicsSpec};
 use dl2::elastic::{ElasticConfig, ElasticJob};
 use dl2::pipeline::{
-    baseline_by_name, run_pipeline, validation_trace, Incumbent, PipelineConfig,
+    run_pipeline, validation_trace, validation_trace_cfg, Incumbent, PipelineConfig,
     BASELINE_NAMES,
 };
-use dl2::rl::evaluate_policy;
 use dl2::runtime::{save_params, Engine};
 use dl2::scheduler::{Dl2Config, Dl2Scheduler, FeatureSet};
+use dl2::sim::{mean_avg_jct, replica_specs, EpisodeKey, Harness, ResultCache, ScenarioSpec};
 use dl2::trace::TraceConfig;
 use dl2::util::{Args, Table};
 
@@ -34,7 +34,10 @@ USAGE: dl2 <train|evaluate|compare|elastic|info> [flags]
   info
 
 Common: --servers N --jobs N --seed S --interference F --artifacts DIR
-        --dynamics static|stragglers|failures|rackout|ramp  (live cluster churn)";
+        --dynamics static|stragglers|failures|rackout|ramp  (live cluster churn)
+        --no-cache  (evaluate/compare: skip the episode result cache;
+                     cache dir defaults to results/cache, override with
+                     DL2_CACHE_DIR)";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().with_usage(USAGE);
@@ -161,7 +164,20 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Cache policy for `evaluate`/`compare`: `--no-cache` disables the
+/// episode result cache wholesale; otherwise the disk tier is attached
+/// from the environment (`DL2_CACHE_DIR`, default `results/cache`).
+fn configure_cache(args: &Args) {
+    let cache = ResultCache::global();
+    if args.bool_or("no-cache", false) {
+        cache.set_enabled(false);
+    } else {
+        cache.attach_disk_from_env();
+    }
+}
+
 fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
+    configure_cache(args);
     let engine = Engine::load(artifacts_dir(args))?;
     let j = args.usize_or("j", 10);
     let cfg = Dl2Config {
@@ -175,26 +191,58 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     let theta = dl2::runtime::load_params(&path)?;
     sched.pol.set_theta(&theta);
     let ccfg = cluster_cfg(args)?;
-    let specs = validation_trace(&trace_cfg(args));
-    let jct = evaluate_policy(&mut sched, &ccfg, &specs, 3000);
-    println!("validation avg JCT: {jct:.3} slots over {} jobs", specs.len());
+    let jobs = validation_trace(&trace_cfg(args));
+    let num_jobs = jobs.len();
+    // `evaluate_policy`'s frozen greedy setup, expressed as a scenario
+    // spec so the episode flows through the result cache: re-evaluating
+    // an unchanged policy on an unchanged trace is a (disk) hit, and the
+    // key's θ-fingerprint keys past every previous policy.
+    sched.training = false;
+    sched.rng = dl2::util::Rng::new(0xE7A1_5EED ^ sched.cfg.seed);
+    let mut spec = ScenarioSpec::new("evaluate_val", ccfg, TraceConfig::replay(jobs));
+    spec.max_slots = 3000;
+    spec.features = sched.cfg.features;
+    let key = EpisodeKey::for_scheduler(&spec, &sched);
+    let cache = ResultCache::global();
+    let result = cache.get_or_run(key, || {
+        let ep = spec.episode(&mut sched);
+        dl2::sim::ScenarioResult::from_episode(&spec, "dl2", &ep)
+    });
+    println!(
+        "validation avg JCT: {:.3} slots over {num_jobs} jobs",
+        result.avg_jct_slots
+    );
+    println!("{}", cache.stats());
     Ok(())
 }
 
 fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    configure_cache(args);
     let ccfg = cluster_cfg(args)?;
-    let specs = validation_trace(&trace_cfg(args));
+    // The same 3-env-seed replica averaging `baseline_jct` has always
+    // used (cluster seeds +777+r on the held-out validation trace),
+    // expressed as scenario specs so every episode flows through the
+    // two-tier result cache on the harness.
+    let scenarios = replica_specs(
+        "compare_val",
+        &ccfg,
+        &validation_trace_cfg(&trace_cfg(args)),
+        777,
+        3,
+        3000,
+    );
+    let results = Harness::from_env().run_named(&BASELINE_NAMES, &scenarios)?;
     let mut t = Table::new(
         "scheduler comparison (validation avg JCT, slots)",
         &["scheduler", "avg_jct"],
     );
-    for name in BASELINE_NAMES {
-        let mut mk = || baseline_by_name(name).expect("BASELINE_NAMES entries resolve");
-        let jct = dl2::pipeline::baseline_jct(&mut mk, &ccfg, &specs, 3, 3000);
-        t.row(vec![name.into(), format!("{jct:.3}")]);
+    for (k, name) in BASELINE_NAMES.iter().enumerate() {
+        let jct = mean_avg_jct(&results[k * scenarios.len()..(k + 1) * scenarios.len()]);
+        t.row(vec![(*name).into(), format!("{jct:.3}")]);
     }
     t.emit("compare");
     println!("(train DL2 with `dl2 train` and evaluate with `dl2 evaluate` to add it)");
+    println!("{}", ResultCache::global().stats());
     Ok(())
 }
 

@@ -260,7 +260,12 @@ pub fn run_pipeline(cfg: &PipelineConfig, engine: Engine) -> Result<PipelineResu
         // the policy-fingerprint path (`CacheTag::Policy`) in the
         // default pipeline.  Rounds that applied no update leave θ (and
         // so the fingerprint) unchanged and are served from the cache.
+        // Private map (training-local θ generations would only pollute
+        // the global one), but it adopts the global cache's disk tier
+        // when one is attached, so frozen-policy evals persist across
+        // invocations.
         let eval_cache = ResultCache::new();
+        eval_cache.share_disk(ResultCache::global());
         let eval_specs: Vec<ScenarioSpec> = {
             let mut specs = replica_specs(
                 "pipeline_val",

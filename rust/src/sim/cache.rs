@@ -1,17 +1,29 @@
-//! Scenario-level result cache: skip episodes that have already run.
+//! Two-tier scenario-level result cache: skip episodes that have
+//! already run — in this process (memory tier) or in any previous one
+//! (disk tier, [`DiskStore`]).
 //!
 //! Pollux-style evaluation sweeps and the figure benches repeatedly
 //! evaluate the *same* (scenario, scheduler) pair — baseline reference
-//! lines, shared validation replicas, overlapping matrix slices.  Every
-//! such episode is a pure function of its [`ScenarioSpec`] and the
-//! scheduler's [`CacheTag`], so the second run is pure waste.  This cache
-//! memoizes aggregated [`ScenarioResult`]s keyed by
-//! (spec fingerprint, scheduler name, policy fingerprint).
+//! lines, shared validation replicas, overlapping matrix slices, and
+//! whole re-invocations of a bench.  Every such episode is a pure
+//! function of its [`ScenarioSpec`] and the scheduler's [`CacheTag`],
+//! so the second run is pure waste.  This cache memoizes aggregated
+//! [`ScenarioResult`]s keyed by (spec fingerprint, scheduler name,
+//! policy fingerprint, feature-schema fingerprint).
 //!
-//! # Invalidation story for policy-bearing schedulers
+//! # Lookup order
 //!
-//! A learned scheduler's results are only reusable while its parameters
-//! are frozen.  The contract lives in [`CacheTag`]:
+//! memory → disk → run.  A disk hit populates the memory tier; a miss
+//! runs the episode, stores it in memory and writes through to disk.
+//! The disk tier is **opt-in** ([`ResultCache::attach_disk`], typically
+//! via [`ResultCache::attach_disk_from_env`] from a bench's
+//! [`BenchReport`](crate::util::BenchReport) or the CLI): a fresh
+//! `ResultCache::new()` is memory-only, so unit tests and library users
+//! never see cross-run state they didn't ask for.
+//!
+//! # Invalidation story
+//!
+//! Within a process, the contract lives in [`CacheTag`]:
 //!
 //! * `Pure` heuristics cache under policy fingerprint 0 forever — their
 //!   results can never go stale.
@@ -22,16 +34,23 @@
 //!   or [`ResultCache::clear`].
 //! * `Bypass` instances (training mode, stochastic evaluation, carried
 //!   fitted state) produce no key and always run.
+//!
+//! Across processes, the disk tier additionally keys by feature-schema
+//! fingerprint, crate version and on-disk format version — see
+//! [`store`](super::store) for why each is load-bearing.  Corruption or
+//! a version mismatch is a miss (recompute + rewrite), never a panic.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::cluster::NUM_TYPES;
 use crate::scheduler::{CacheTag, Scheduler};
 use crate::util::fnv1a;
 
 use super::harness::ScenarioResult;
 use super::scenario::ScenarioSpec;
+use super::store::DiskStore;
 
 /// Stable fingerprint of everything that determines an episode's outcome
 /// on the scenario side: name, cluster config (topology included), trace
@@ -39,16 +58,25 @@ use super::scenario::ScenarioSpec;
 pub fn spec_fingerprint(spec: &ScenarioSpec) -> u64 {
     // The Debug form covers every field (and every nested config field)
     // without hand-maintaining a hash impl per config struct; FNV keeps
-    // it deterministic across runs.
+    // it deterministic across runs.  `ClusterConfig`'s Debug is *manual*
+    // (it elides a static `dynamics`), so `tests/disk_cache.rs` carries
+    // an exhaustiveness pin: adding a field to `ScenarioSpec` or
+    // `ClusterConfig` without revisiting this fingerprint fails to
+    // compile there.
     fnv1a(format!("{spec:?}").as_bytes())
 }
 
 /// Cache key for one (scenario, scheduler-state) episode.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct EpisodeKey {
-    spec_fp: u64,
-    scheduler: String,
-    policy_fp: u64,
+    pub(crate) spec_fp: u64,
+    pub(crate) scheduler: String,
+    pub(crate) policy_fp: u64,
+    /// Fingerprint of the spec's materialized observation schema.
+    /// Redundant with `spec_fp` in memory (the `FeatureSet` name is in
+    /// the Debug form) but load-bearing on disk: it keys past persisted
+    /// entries when a schema's *layout* changes under an unchanged name.
+    pub(crate) schema_fp: u64,
 }
 
 impl EpisodeKey {
@@ -64,6 +92,7 @@ impl EpisodeKey {
             spec_fp: spec_fingerprint(spec),
             scheduler: scheduler.to_string(),
             policy_fp,
+            schema_fp: spec.features.schema(NUM_TYPES).fingerprint(),
         })
     }
 
@@ -73,14 +102,59 @@ impl EpisodeKey {
     }
 }
 
-/// Thread-safe memo of episode results.  Shareable across harness
-/// workers; [`ResultCache::global`] is the process-wide instance the
-/// harness uses by default.
-#[derive(Default)]
+/// Per-tier hit/miss counters, snapshot via [`ResultCache::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Served from the in-memory map.
+    pub mem_hits: usize,
+    /// Served from the disk tier (and promoted to memory).
+    pub disk_hits: usize,
+    /// Episodes actually run on behalf of a cacheable key.
+    pub misses: usize,
+    /// Entries persisted to the disk tier.
+    pub disk_writes: usize,
+}
+
+impl std::fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cache: {} mem hits, {} disk hits, {} misses, {} disk writes",
+            self.mem_hits, self.disk_hits, self.misses, self.disk_writes
+        )
+    }
+}
+
+/// Thread-safe two-tier memo of episode results.  Shareable across
+/// harness workers; [`ResultCache::global`] is the process-wide instance
+/// the harness uses by default.  Memory-only until a [`DiskStore`] is
+/// attached.
 pub struct ResultCache {
     map: Mutex<HashMap<EpisodeKey, ScenarioResult>>,
-    hits: AtomicUsize,
+    /// Disk tier; set at most once, shareable across caches
+    /// ([`ResultCache::share_disk`]).
+    disk: OnceLock<Arc<DiskStore>>,
+    /// `false` (via [`ResultCache::set_enabled`]) makes `get_or_run`
+    /// transparent: every call runs, nothing is stored — `--no-cache`.
+    enabled: AtomicBool,
+    mem_hits: AtomicUsize,
+    disk_hits: AtomicUsize,
     misses: AtomicUsize,
+    disk_writes: AtomicUsize,
+}
+
+impl Default for ResultCache {
+    fn default() -> Self {
+        ResultCache {
+            map: Mutex::new(HashMap::new()),
+            disk: OnceLock::new(),
+            enabled: AtomicBool::new(true),
+            mem_hits: AtomicUsize::new(0),
+            disk_hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            disk_writes: AtomicUsize::new(0),
+        }
+    }
 }
 
 impl ResultCache {
@@ -89,14 +163,54 @@ impl ResultCache {
     }
 
     /// The process-wide cache (what `Harness::run_named` consults).
+    /// Memory-only until an entry point opts into the disk tier —
+    /// benches do so through `BenchReport::start`, the CLI through its
+    /// cache flags.
     pub fn global() -> &'static ResultCache {
         static GLOBAL: OnceLock<ResultCache> = OnceLock::new();
         GLOBAL.get_or_init(ResultCache::new)
     }
 
+    /// Attach a disk tier.  First caller wins; later calls (and their
+    /// stores) are dropped — the tier is process-lifetime state.
+    pub fn attach_disk(&self, store: DiskStore) {
+        let _ = self.disk.set(Arc::new(store));
+    }
+
+    /// Attach the environment-configured disk tier
+    /// (`DL2_CACHE_DIR`, default `results/cache`).
+    pub fn attach_disk_from_env(&self) {
+        self.attach_disk(DiskStore::from_env());
+    }
+
+    /// Adopt `other`'s disk tier (if it has one), so e.g. a pipeline's
+    /// private eval cache writes through to the same store as the
+    /// global cache.
+    pub fn share_disk(&self, other: &ResultCache) {
+        if let Some(store) = other.disk.get() {
+            let _ = self.disk.set(Arc::clone(store));
+        }
+    }
+
+    /// The attached disk tier, if any.
+    pub fn disk(&self) -> Option<&DiskStore> {
+        self.disk.get().map(|a| &**a)
+    }
+
+    /// Toggle the cache wholesale (`--no-cache`): when disabled, every
+    /// `get_or_run` runs its episode and stores nothing.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
     /// Cached result for `key`, or run `episode`, cache and return it.
     /// `key = None` (a [`CacheTag::Bypass`] instance) always runs and
-    /// never caches.
+    /// never caches.  Lookup order: memory → disk → run; disk hits
+    /// populate memory, misses write through to disk.
     ///
     /// No single-flight guarantee: the lock is *not* held while the
     /// episode runs (that would serialize the whole harness), so two
@@ -109,22 +223,35 @@ impl ResultCache {
         F: FnOnce() -> ScenarioResult,
     {
         let Some(key) = key else { return episode() };
+        if !self.enabled() {
+            return episode();
+        }
         if let Some(hit) = self.map.lock().unwrap().get(&key).cloned() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.mem_hits.fetch_add(1, Ordering::Relaxed);
             return hit;
+        }
+        if let Some(store) = self.disk.get() {
+            if let Some(hit) = store.load(&key) {
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                self.map.lock().unwrap().insert(key, hit.clone());
+                return hit;
+            }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let result = episode();
-        self.map
-            .lock()
-            .unwrap()
-            .insert(key, result.clone());
+        self.map.lock().unwrap().insert(key.clone(), result.clone());
+        if let Some(store) = self.disk.get() {
+            if store.store(&key, &result) {
+                self.disk_writes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         result
     }
 
-    /// Drop every cached entry for `scheduler` (explicit invalidation,
+    /// Drop every in-memory entry for `scheduler` (explicit invalidation,
     /// e.g. after deploying new DL² parameters when the stale entries'
-    /// memory should be reclaimed too).
+    /// memory should be reclaimed too).  Disk entries are keyed past by
+    /// the new fingerprint, not deleted (see [`DiskStore::clear`]).
     pub fn invalidate_scheduler(&self, scheduler: &str) {
         self.map
             .lock()
@@ -132,6 +259,7 @@ impl ResultCache {
             .retain(|k, _| k.scheduler != scheduler);
     }
 
+    /// Drop the memory tier (the disk tier is untouched).
     pub fn clear(&self) {
         self.map.lock().unwrap().clear();
     }
@@ -144,14 +272,24 @@ impl ResultCache {
         self.len() == 0
     }
 
-    /// Cache hits served so far.
+    /// Cache hits served so far, both tiers.
     pub fn hits(&self) -> usize {
-        self.hits.load(Ordering::Relaxed)
+        self.mem_hits.load(Ordering::Relaxed) + self.disk_hits.load(Ordering::Relaxed)
     }
 
     /// Misses (episodes actually run on behalf of a cacheable key).
     pub fn misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the per-tier counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            mem_hits: self.mem_hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            disk_writes: self.disk_writes.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -159,8 +297,8 @@ impl std::fmt::Debug for ResultCache {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("ResultCache")
             .field("len", &self.len())
-            .field("hits", &self.hits())
-            .field("misses", &self.misses())
+            .field("stats", &self.stats())
+            .field("disk", &self.disk())
             .finish()
     }
 }
@@ -209,6 +347,8 @@ mod tests {
         assert_eq!(a.scenario, b.scenario);
         assert_eq!((cache.hits(), cache.misses()), (1, 1));
         assert_eq!(cache.len(), 1);
+        let stats = cache.stats();
+        assert_eq!((stats.mem_hits, stats.disk_hits, stats.disk_writes), (1, 0, 0));
     }
 
     #[test]
@@ -245,6 +385,28 @@ mod tests {
         assert_eq!(runs, 2);
         assert!(cache.is_empty());
         assert_eq!((cache.hits(), cache.misses()), (0, 0));
+    }
+
+    #[test]
+    fn disabled_cache_is_transparent() {
+        let cache = ResultCache::new();
+        cache.set_enabled(false);
+        let key = || EpisodeKey::new(&spec(1), "drf", CacheTag::Pure);
+        let mut runs = 0;
+        for _ in 0..2 {
+            cache.get_or_run(key(), || {
+                runs += 1;
+                fake_result("x")
+            });
+        }
+        assert_eq!(runs, 2, "disabled cache must always run");
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats(), CacheStats::default());
+        // Re-enabling restores normal behaviour.
+        cache.set_enabled(true);
+        cache.get_or_run(key(), || fake_result("y"));
+        cache.get_or_run(key(), || panic!("cache re-enabled"));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
     }
 
     #[test]

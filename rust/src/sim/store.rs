@@ -1,0 +1,329 @@
+//! Disk tier of the scenario result cache: versioned flat files under
+//! `results/cache/`, written atomically (unique temp file + `rename`),
+//! read with total paranoia — a truncated, corrupted or
+//! version-mismatched entry is a cache miss ("recompute and rewrite"),
+//! never a panic.
+//!
+//! # On-disk key
+//!
+//! An entry's identity is the tuple
+//! `(spec fingerprint, scheduler name, policy fingerprint,
+//!   feature-schema fingerprint, crate version, format version)`.
+//! The first three are the in-memory [`EpisodeKey`]; the last three
+//! harden it for persistence:
+//!
+//! * the **schema fingerprint** keys past entries whenever the
+//!   observation layout changes without the spec's `FeatureSet` name
+//!   changing (a new v2 block, reordered features);
+//! * the **crate version** keys past everything on release bumps — the
+//!   simulator itself may have changed what an episode produces;
+//! * the **format version** (the file header) invalidates on layout
+//!   changes of the store itself.
+//!
+//! Key-past, not delete: stale files linger under `results/cache/` and
+//! are simply never matched again (`DiskStore::clear` reclaims them).
+//!
+//! # Fidelity
+//!
+//! Every float is stored as the 16-hex-digit `f64::to_bits` pattern, so
+//! a round-trip through disk is **bitwise** — a warm bench run asserts
+//! the very same equalities a cold one does.  A trailing FNV-1a
+//! checksum over the body detects torn or bit-rotted files.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::{fnv1a, stats::Aggregate};
+
+use super::cache::EpisodeKey;
+use super::harness::ScenarioResult;
+
+/// Bump when the file layout below changes; old files become misses.
+const FORMAT_VERSION: u32 = 1;
+const MAGIC: &str = "dl2-cache";
+
+/// Flat-file store for [`ScenarioResult`] entries.  Cheap to construct;
+/// shared behind an `Arc` by [`super::ResultCache`].  All operations are
+/// best-effort: I/O failure on read is a miss, on write a dropped entry.
+pub struct DiskStore {
+    root: PathBuf,
+    /// Crate version folded into every key; overridable so tests can
+    /// demonstrate the key-past behaviour of a version bump.
+    version: String,
+    /// Per-process temp-name disambiguator (plus the pid), so concurrent
+    /// writers never share a temp file and the final `rename` is the
+    /// only visible mutation.
+    tmp_counter: AtomicU64,
+}
+
+impl DiskStore {
+    /// Store rooted at `dir` (created lazily on first write).
+    pub fn at<P: Into<PathBuf>>(dir: P) -> DiskStore {
+        DiskStore {
+            root: dir.into(),
+            version: env!("CARGO_PKG_VERSION").to_string(),
+            tmp_counter: AtomicU64::new(0),
+        }
+    }
+
+    /// `DL2_CACHE_DIR` if set, else `results/cache` in the working dir.
+    pub fn from_env() -> DiskStore {
+        match std::env::var("DL2_CACHE_DIR") {
+            Ok(dir) if !dir.is_empty() => DiskStore::at(dir),
+            _ => DiskStore::at("results/cache"),
+        }
+    }
+
+    /// Same store, different crate version in the key (test hook for the
+    /// version-bump key-past behaviour).
+    pub fn with_version(mut self, version: &str) -> DiskStore {
+        self.version = version.to_string();
+        self
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Path of the entry for `key` under the current crate + format
+    /// version.  The full key tuple is hashed into the file name, so a
+    /// change to *any* component keys past old files.
+    pub fn entry_path(&self, key: &EpisodeKey) -> PathBuf {
+        let id = fnv1a(self.key_line(key).as_bytes());
+        // Scheduler name up front keeps the directory human-scannable.
+        self.root.join(format!("{}-{id:016x}.dl2c", sanitize(&key.scheduler)))
+    }
+
+    /// Canonical serialization of the full disk key (also embedded in the
+    /// file and verified on load, so a file-name hash collision can never
+    /// serve a wrong entry).
+    fn key_line(&self, key: &EpisodeKey) -> String {
+        format!(
+            "v{FORMAT_VERSION}|{:016x}|{}|{:016x}|{:016x}|{}",
+            key.spec_fp, key.scheduler, key.policy_fp, key.schema_fp, self.version
+        )
+    }
+
+    /// Cached result for `key`, or `None` — which covers "absent",
+    /// "stale version", "torn write" and "garbage" alike: the caller
+    /// recomputes and [`DiskStore::store`] rewrites.
+    pub fn load(&self, key: &EpisodeKey) -> Option<ScenarioResult> {
+        let text = std::fs::read_to_string(self.entry_path(key)).ok()?;
+        parse_entry(&text, &self.key_line(key))
+    }
+
+    /// Persist `result` under `key` atomically: serialize to a unique
+    /// temp file in the store directory, then `rename` over the final
+    /// path.  Concurrent writers of the same key both succeed; the last
+    /// rename wins with either writer's (identical) bytes.  Returns
+    /// whether the entry landed; failures are reported once to stderr
+    /// and otherwise ignored — a broken disk must not fail a bench.
+    pub fn store(&self, key: &EpisodeKey, result: &ScenarioResult) -> bool {
+        let body = serialize_entry(&self.key_line(key), result);
+        let path = self.entry_path(key);
+        if std::fs::create_dir_all(&self.root).is_err() {
+            return false;
+        }
+        let tmp = self.root.join(format!(
+            ".{:016x}.{}.{}.tmp",
+            fnv1a(path.to_string_lossy().as_bytes()),
+            std::process::id(),
+            self.tmp_counter.fetch_add(1, Ordering::Relaxed),
+        ));
+        let landed = std::fs::write(&tmp, &body).is_ok() && std::fs::rename(&tmp, &path).is_ok();
+        if !landed {
+            let _ = std::fs::remove_file(&tmp);
+            eprintln!("[dl2 cache] warning: failed to persist {}", path.display());
+        }
+        landed
+    }
+
+    /// Remove every entry file (stale generations included).
+    pub fn clear(&self) {
+        let Ok(entries) = std::fs::read_dir(&self.root) else { return };
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if name.ends_with(".dl2c") || name.ends_with(".tmp") {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for DiskStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DiskStore")
+            .field("root", &self.root)
+            .field("version", &self.version)
+            .finish()
+    }
+}
+
+/// Next `name=value` line of an entry body, `None` on any deviation.
+fn next_field<'a>(lines: &mut std::str::Lines<'a>, name: &str) -> Option<&'a str> {
+    lines.next()?.strip_prefix(name)?.strip_prefix('=')
+}
+
+/// Restrict a scheduler name to filesystem-safe characters.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect()
+}
+
+fn hex_bits(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+fn parse_bits(s: &str) -> Option<f64> {
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+/// Serialize one entry.  Line-oriented `field=value` body under a
+/// `MAGIC vVERSION` header, floats as bit patterns, and a final
+/// `checksum=` line over everything above it.
+fn serialize_entry(key_line: &str, r: &ScenarioResult) -> String {
+    let mut s = String::with_capacity(128 + 17 * r.jct_per_job.len());
+    s.push_str(&format!("{MAGIC} v{FORMAT_VERSION}\n"));
+    s.push_str(&format!("key={key_line}\n"));
+    // Names may contain anything but newlines (scenario names are
+    // matrix-generated identifiers; scheduler names are static strs).
+    s.push_str(&format!("scenario={}\n", r.scenario.replace('\n', " ")));
+    s.push_str(&format!("scheduler={}\n", r.scheduler.replace('\n', " ")));
+    s.push_str(&format!("avg_jct_slots={}\n", hex_bits(r.avg_jct_slots)));
+    s.push_str(&format!(
+        "jct_agg={},{},{},{}\n",
+        hex_bits(r.jct.mean),
+        hex_bits(r.jct.p50),
+        hex_bits(r.jct.p95),
+        hex_bits(r.jct.max)
+    ));
+    s.push_str(&format!("makespan_slots={}\n", r.makespan_slots));
+    s.push_str(&format!("mean_gpu_util={}\n", hex_bits(r.mean_gpu_util)));
+    let jobs: Vec<String> = r.jct_per_job.iter().map(|&x| hex_bits(x)).collect();
+    s.push_str(&format!("jct_per_job={}\n", jobs.join(",")));
+    s.push_str(&format!("checksum={:016x}\n", fnv1a(s.as_bytes())));
+    s
+}
+
+/// Parse and verify one entry against the expected key line.  Any
+/// deviation — wrong magic, version, key, checksum, field count, or an
+/// unparseable value — returns `None`.
+fn parse_entry(text: &str, expect_key: &str) -> Option<ScenarioResult> {
+    // Checksum first: everything up to and including the last body '\n'.
+    let rest = text.strip_suffix('\n')?;
+    let (body_end, checksum_line) = rest.rfind('\n').map(|i| (i + 1, &rest[i + 1..]))?;
+    let stored = checksum_line.strip_prefix("checksum=")?;
+    let computed = format!("{:016x}", fnv1a(text[..body_end].as_bytes()));
+    if stored != computed {
+        return None;
+    }
+
+    let mut lines = text[..body_end].lines();
+    if lines.next()? != format!("{MAGIC} v{FORMAT_VERSION}") {
+        return None;
+    }
+    if next_field(&mut lines, "key")? != expect_key {
+        return None;
+    }
+    let scenario = next_field(&mut lines, "scenario")?.to_string();
+    let scheduler = next_field(&mut lines, "scheduler")?.to_string();
+    let avg_jct_slots = parse_bits(next_field(&mut lines, "avg_jct_slots")?)?;
+    let agg: Vec<f64> = next_field(&mut lines, "jct_agg")?
+        .split(',')
+        .map(parse_bits)
+        .collect::<Option<Vec<_>>>()?;
+    let [mean, p50, p95, max] = agg.as_slice() else { return None };
+    let makespan_slots: usize = next_field(&mut lines, "makespan_slots")?.parse().ok()?;
+    let mean_gpu_util = parse_bits(next_field(&mut lines, "mean_gpu_util")?)?;
+    let per_job_raw = next_field(&mut lines, "jct_per_job")?;
+    let jct_per_job: Vec<f64> = if per_job_raw.is_empty() {
+        Vec::new()
+    } else {
+        per_job_raw.split(',').map(parse_bits).collect::<Option<Vec<_>>>()?
+    };
+    if lines.next().is_some() {
+        return None; // trailing junk
+    }
+    Some(ScenarioResult {
+        scenario,
+        scheduler,
+        avg_jct_slots,
+        jct: Aggregate {
+            mean: *mean,
+            p50: *p50,
+            p95: *p95,
+            max: *max,
+        },
+        makespan_slots,
+        mean_gpu_util,
+        jct_per_job,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result() -> ScenarioResult {
+        ScenarioResult {
+            scenario: "srv12_steady_r0".into(),
+            scheduler: "drf".into(),
+            avg_jct_slots: 12.375,
+            jct: Aggregate::of(&[1.0, 2.5, 30.125]),
+            makespan_slots: 41,
+            mean_gpu_util: 0.62,
+            jct_per_job: vec![1.0, 2.5, 30.125],
+        }
+    }
+
+    #[test]
+    fn serialize_parse_is_bitwise() {
+        let text = serialize_entry("k", &result());
+        let back = parse_entry(&text, "k").expect("round-trips");
+        let r = result();
+        assert_eq!(back.scenario, r.scenario);
+        assert_eq!(back.avg_jct_slots.to_bits(), r.avg_jct_slots.to_bits());
+        assert_eq!(back.jct.p95.to_bits(), r.jct.p95.to_bits());
+        assert_eq!(back.makespan_slots, r.makespan_slots);
+        assert_eq!(
+            back.jct_per_job.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            r.jct_per_job.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn non_finite_floats_survive() {
+        let mut r = result();
+        r.avg_jct_slots = f64::NAN;
+        r.jct_per_job = vec![f64::INFINITY, -0.0];
+        let back = parse_entry(&serialize_entry("k", &r), "k").unwrap();
+        assert_eq!(back.avg_jct_slots.to_bits(), f64::NAN.to_bits());
+        assert_eq!(back.jct_per_job[0], f64::INFINITY);
+        assert_eq!(back.jct_per_job[1].to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn empty_job_list_round_trips() {
+        let mut r = result();
+        r.jct_per_job.clear();
+        let back = parse_entry(&serialize_entry("k", &r), "k").unwrap();
+        assert!(back.jct_per_job.is_empty());
+    }
+
+    #[test]
+    fn key_mismatch_checksum_and_truncation_all_miss() {
+        let text = serialize_entry("k", &result());
+        assert!(parse_entry(&text, "other-key").is_none(), "wrong key served");
+        let torn = &text[..text.len() / 2];
+        assert!(parse_entry(torn, "k").is_none(), "torn write served");
+        let flipped = text.replacen("scenario=", "scenario=X", 1);
+        assert!(parse_entry(&flipped, "k").is_none(), "checksum ignored");
+        assert!(parse_entry("", "k").is_none());
+        assert!(parse_entry("garbage\nnot a cache file\n", "k").is_none());
+    }
+}

@@ -1,0 +1,272 @@
+//! Shared bench reporting: every bench binary emits
+//! `results/BENCH_<name>.json` through [`BenchReport`] — wall-clock,
+//! simulated slots/sec, per-tier cache hit/miss counts, JCT aggregates,
+//! git revision and the `DL2_BENCH_SCALE` factor — so re-anchors and CI
+//! can read the perf trajectory across PRs from one uniform format.
+//!
+//! [`BenchReport::start`] is also the bench-side cache switchboard: it
+//! attaches the disk tier (`DL2_CACHE_DIR`, default `results/cache`) to
+//! the global [`ResultCache`], unless `--no-cache` was passed (or
+//! `DL2_NO_CACHE` is set), in which case caching is disabled wholesale.
+//!
+//! The JSON is hand-rolled (no serde in the offline dependency
+//! closure): flat string/number fields plus fixed sub-objects, with
+//! non-finite floats serialized as `null`.
+
+use std::time::Instant;
+
+use crate::sim::{ResultCache, ScenarioResult};
+use crate::util::stats::Aggregate;
+
+/// One bench run's report, accumulated while the bench executes and
+/// written by [`BenchReport::finish`].  Wall-clock starts at
+/// [`BenchReport::start`]; cache counters are read from
+/// [`ResultCache::global`] at finish.
+pub struct BenchReport {
+    name: String,
+    t0: Instant,
+    labels: Vec<(String, String)>,
+    counts: Vec<(String, u64)>,
+    metrics: Vec<(String, f64)>,
+    jct: Vec<(String, Aggregate, usize)>,
+    episodes: usize,
+    slots: u64,
+}
+
+impl BenchReport {
+    /// Begin timing bench `name` and configure the global cache:
+    /// `--no-cache` (anywhere in the argv) or `DL2_NO_CACHE` disables
+    /// caching; otherwise the disk tier is attached from the
+    /// environment.
+    pub fn start(name: &str) -> BenchReport {
+        let cache = ResultCache::global();
+        let no_cache = std::env::args().any(|a| a == "--no-cache")
+            || std::env::var_os("DL2_NO_CACHE").is_some();
+        if no_cache {
+            cache.set_enabled(false);
+        } else {
+            cache.attach_disk_from_env();
+        }
+        BenchReport {
+            name: name.to_string(),
+            t0: Instant::now(),
+            labels: Vec::new(),
+            counts: Vec::new(),
+            metrics: Vec::new(),
+            jct: Vec::new(),
+            episodes: 0,
+            slots: 0,
+        }
+    }
+
+    /// Attach a free-form string field (config knobs, modes).
+    pub fn label(&mut self, key: &str, value: impl std::fmt::Display) -> &mut Self {
+        self.labels.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Attach an integer counter (episodes, inferences, rows...).
+    pub fn count(&mut self, key: &str, value: u64) -> &mut Self {
+        self.counts.push((key.to_string(), value));
+        self
+    }
+
+    /// Attach a float metric (rates, means, latencies...).
+    pub fn metric(&mut self, key: &str, value: f64) -> &mut Self {
+        self.metrics.push((key.to_string(), value));
+        self
+    }
+
+    /// Record a JCT sample set under `label` (mean/p50/p95/max + count).
+    pub fn jct(&mut self, label: &str, samples: &[f64]) -> &mut Self {
+        self.jct
+            .push((label.to_string(), Aggregate::of(samples), samples.len()));
+        self
+    }
+
+    /// Fold a batch of episode results in: bumps the episode and
+    /// simulated-slot totals (the slots/sec denominator) and records the
+    /// pooled per-job JCT distribution under `label`.
+    pub fn episodes(&mut self, label: &str, results: &[ScenarioResult]) -> &mut Self {
+        self.episodes += results.len();
+        self.slots += results.iter().map(|r| r.makespan_slots as u64).sum::<u64>();
+        let pooled: Vec<f64> = results.iter().flat_map(|r| r.jct_per_job.iter().copied()).collect();
+        self.jct(label, &pooled)
+    }
+
+    /// Write `results/BENCH_<name>.json` and print the cache summary.
+    /// Best-effort: an unwritable `results/` warns on stderr and never
+    /// fails the bench.
+    pub fn finish(self) {
+        let wall = self.t0.elapsed().as_secs_f64();
+        let stats = ResultCache::global().stats();
+        let mut j = Json::new();
+        j.str("bench", &self.name);
+        j.str("git_rev", &git_rev());
+        j.num("scale", crate::util::bench_scale());
+        j.int("threads", crate::sim::Harness::from_env().threads() as u64);
+        j.num("wall_secs", wall);
+        j.int("episodes", self.episodes as u64);
+        j.int("slots", self.slots);
+        j.num(
+            "slots_per_sec",
+            if wall > 0.0 { self.slots as f64 / wall } else { 0.0 },
+        );
+        j.raw(
+            "cache",
+            &format!(
+                "{{\"enabled\": {}, \"mem_hits\": {}, \"disk_hits\": {}, \"misses\": {}, \"disk_writes\": {}}}",
+                ResultCache::global().enabled(),
+                stats.mem_hits,
+                stats.disk_hits,
+                stats.misses,
+                stats.disk_writes
+            ),
+        );
+        let mut labels = Json::new();
+        for (k, v) in &self.labels {
+            labels.str(k, v);
+        }
+        j.raw("labels", &labels.close());
+        let mut counts = Json::new();
+        for (k, v) in &self.counts {
+            counts.int(k, *v);
+        }
+        j.raw("counts", &counts.close());
+        let mut metrics = Json::new();
+        for (k, v) in &self.metrics {
+            metrics.num(k, *v);
+        }
+        j.raw("metrics", &metrics.close());
+        let mut jct = Json::new();
+        for (label, agg, n) in &self.jct {
+            let mut a = Json::new();
+            a.num("mean", agg.mean);
+            a.num("p50", agg.p50);
+            a.num("p95", agg.p95);
+            a.num("max", agg.max);
+            a.int("jobs", *n as u64);
+            jct.raw(label, &a.close());
+        }
+        j.raw("jct", &jct.close());
+
+        let path = format!("results/BENCH_{}.json", self.name);
+        let write = std::fs::create_dir_all("results")
+            .and_then(|()| std::fs::write(&path, j.close() + "\n"));
+        match write {
+            Ok(()) => println!("[saved {path}] {stats}"),
+            Err(e) => eprintln!("[bench] warning: could not write {path}: {e}"),
+        }
+    }
+}
+
+/// Revision stamp for the trajectory: `GITHUB_SHA` in CI, `git
+/// rev-parse` locally, `"unknown"` outside a checkout.
+fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha.chars().take(12).collect();
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Minimal JSON object builder: insertion-ordered fields, escaped
+/// strings, `null` for non-finite numbers.
+struct Json {
+    body: String,
+}
+
+impl Json {
+    fn new() -> Json {
+        Json { body: String::from("{") }
+    }
+
+    fn key(&mut self, k: &str) {
+        if self.body.len() > 1 {
+            self.body.push_str(", ");
+        }
+        self.body.push_str(&format!("{}: ", escape(k)));
+    }
+
+    fn str(&mut self, k: &str, v: &str) {
+        self.key(k);
+        self.body.push_str(&escape(v));
+    }
+
+    fn int(&mut self, k: &str, v: u64) {
+        self.key(k);
+        self.body.push_str(&v.to_string());
+    }
+
+    fn num(&mut self, k: &str, v: f64) {
+        self.key(k);
+        if v.is_finite() {
+            // `Display` prints the shortest representation that parses
+            // back to the same f64 — lossless without hex in the JSON.
+            self.body.push_str(&v.to_string());
+        } else {
+            self.body.push_str("null");
+        }
+    }
+
+    /// Pre-serialized value (nested objects).
+    fn raw(&mut self, k: &str, v: &str) {
+        self.key(k);
+        self.body.push_str(v);
+    }
+
+    fn close(mut self) -> String {
+        self.body.push('}');
+        self.body
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_builder_escapes_and_nests() {
+        let mut j = Json::new();
+        j.str("a", "x\"y\\z\n");
+        j.int("b", 7);
+        j.num("c", 1.5);
+        j.num("d", f64::NAN);
+        j.raw("e", "{}");
+        assert_eq!(
+            j.close(),
+            "{\"a\": \"x\\\"y\\\\z\\n\", \"b\": 7, \"c\": 1.5, \"d\": null, \"e\": {}}"
+        );
+    }
+
+    #[test]
+    fn git_rev_is_nonempty() {
+        assert!(!git_rev().is_empty());
+    }
+}

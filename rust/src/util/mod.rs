@@ -5,11 +5,13 @@
 //! closure, so everything here replaces crates (rand / clap / criterion /
 //! proptest / csv) that a networked build would pull in.
 
+pub mod bench;
 pub mod cli;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use bench::BenchReport;
 pub use cli::Args;
 pub use rng::Rng;
 pub use table::{f, Table};

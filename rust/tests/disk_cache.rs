@@ -1,0 +1,254 @@
+//! Disk tier of the episode result cache: bitwise round-trips, paranoia
+//! against torn/garbage files, version key-past behaviour, concurrent
+//! writers, and the fingerprint-exhaustiveness pin.
+
+use dl2::cluster::ClusterConfig;
+use dl2::scheduler::{CacheTag, Drf};
+use dl2::sim::{spec_fingerprint, DiskStore, EpisodeKey, ResultCache, ScenarioResult, ScenarioSpec};
+use dl2::trace::TraceConfig;
+
+/// Fresh per-test directory under the OS temp dir (no tempfile crate).
+fn test_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("dl2_disk_cache_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_spec(seed: u64) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::new(
+        "disk_cache_test",
+        ClusterConfig {
+            num_servers: 4,
+            seed,
+            ..Default::default()
+        },
+        TraceConfig {
+            num_jobs: 6,
+            seed: 9,
+            ..Default::default()
+        },
+    );
+    spec.max_slots = 800;
+    spec
+}
+
+/// A real (small) drf episode, not a hand-built result: the round-trip
+/// must preserve simulator-produced floats, not just pretty ones.
+fn drf_result(spec: &ScenarioSpec) -> ScenarioResult {
+    let ep = spec.episode(&mut Drf);
+    ScenarioResult::from_episode(spec, "drf", &ep)
+}
+
+fn key(spec: &ScenarioSpec) -> EpisodeKey {
+    EpisodeKey::new(spec, "drf", CacheTag::Pure).expect("pure schedulers are cacheable")
+}
+
+fn assert_bitwise(a: &ScenarioResult, b: &ScenarioResult) {
+    assert_eq!(a.scenario, b.scenario);
+    assert_eq!(a.scheduler, b.scheduler);
+    assert_eq!(a.avg_jct_slots.to_bits(), b.avg_jct_slots.to_bits());
+    assert_eq!(a.jct.mean.to_bits(), b.jct.mean.to_bits());
+    assert_eq!(a.jct.p50.to_bits(), b.jct.p50.to_bits());
+    assert_eq!(a.jct.p95.to_bits(), b.jct.p95.to_bits());
+    assert_eq!(a.jct.max.to_bits(), b.jct.max.to_bits());
+    assert_eq!(a.makespan_slots, b.makespan_slots);
+    assert_eq!(a.mean_gpu_util.to_bits(), b.mean_gpu_util.to_bits());
+    assert_eq!(
+        a.jct_per_job.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        b.jct_per_job.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn real_episode_round_trips_bitwise() {
+    let dir = test_dir("round_trip");
+    let store = DiskStore::at(&dir);
+    let spec = small_spec(1);
+    let result = drf_result(&spec);
+    assert!(!result.jct_per_job.is_empty(), "episode produced no jobs");
+
+    let k = key(&spec);
+    assert!(store.load(&k).is_none(), "cold store served an entry");
+    assert!(store.store(&k, &result), "store failed on a writable dir");
+    let back = store.load(&k).expect("stored entry loads");
+    assert_bitwise(&result, &back);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn garbage_and_truncation_recompute_and_rewrite() {
+    let dir = test_dir("garbage");
+    let spec = small_spec(2);
+    let result = drf_result(&spec);
+    let k = key(&spec);
+
+    for corrupt in [
+        "total garbage, not a cache file".to_string(),
+        String::new(),
+        {
+            // A genuine entry, torn mid-file.
+            let store = DiskStore::at(&dir);
+            store.store(&k, &result);
+            let text = std::fs::read_to_string(store.entry_path(&k)).unwrap();
+            text[..text.len() / 2].to_string()
+        },
+    ] {
+        let store = DiskStore::at(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(store.entry_path(&k), corrupt).unwrap();
+        assert!(store.load(&k).is_none(), "corrupt entry was served");
+
+        // The cache recomputes on the corrupt entry and rewrites it.
+        let cache = ResultCache::new();
+        cache.attach_disk(DiskStore::at(&dir));
+        let served = cache.get_or_run(Some(k.clone()), || result.clone());
+        assert_bitwise(&result, &served);
+        let stats = cache.stats();
+        assert_eq!((stats.disk_hits, stats.misses, stats.disk_writes), (0, 1, 1));
+        let healed = store.load(&k).expect("rewrite healed the entry");
+        assert_bitwise(&result, &healed);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disk_hit_across_cache_instances_and_promotion_to_memory() {
+    let dir = test_dir("two_tier");
+    let spec = small_spec(3);
+    let k = key(&spec);
+
+    // Process A: miss, run, write through.
+    let a = ResultCache::new();
+    a.attach_disk(DiskStore::at(&dir));
+    let result = a.get_or_run(Some(k.clone()), || drf_result(&spec));
+    assert_eq!((a.stats().misses, a.stats().disk_writes), (1, 1));
+
+    // "Process" B (fresh cache, same dir): disk hit, promoted to memory —
+    // the second lookup never touches the disk tier again.
+    let b = ResultCache::new();
+    b.attach_disk(DiskStore::at(&dir));
+    let warm = b.get_or_run(Some(k.clone()), || panic!("warm run must not simulate"));
+    assert_bitwise(&result, &warm);
+    let warm2 = b.get_or_run(Some(k), || panic!("memory tier must serve now"));
+    assert_bitwise(&result, &warm2);
+    let stats = b.stats();
+    assert_eq!(
+        (stats.mem_hits, stats.disk_hits, stats.misses, stats.disk_writes),
+        (1, 1, 0, 0)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn crate_version_bump_keys_past_old_entries() {
+    let dir = test_dir("version");
+    let spec = small_spec(4);
+    let result = drf_result(&spec);
+    let k = key(&spec);
+
+    let current = DiskStore::at(&dir);
+    current.store(&k, &result);
+    assert!(current.load(&k).is_some());
+
+    // A "newer crate" over the same directory: different key line ⇒
+    // different entry path ⇒ the old file is never matched (key-past,
+    // not delete), and storing creates a second generation beside it.
+    let bumped = DiskStore::at(&dir).with_version("99.0.0-test");
+    assert_ne!(current.entry_path(&k), bumped.entry_path(&k));
+    assert!(bumped.load(&k).is_none(), "version bump served a stale entry");
+    bumped.store(&k, &result);
+    assert!(current.load(&k).is_some(), "old generation clobbered");
+    assert!(bumped.load(&k).is_some());
+
+    // clear() reclaims every generation.
+    bumped.clear();
+    assert!(current.load(&k).is_none());
+    assert!(bumped.load(&k).is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_writers_leave_a_parseable_entry() {
+    let dir = test_dir("race");
+    let spec = small_spec(5);
+    let result = drf_result(&spec);
+    let k = key(&spec);
+
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            let dir = &dir;
+            let k = &k;
+            let result = &result;
+            scope.spawn(move || {
+                let store = DiskStore::at(dir);
+                for _ in 0..5 {
+                    assert!(store.store(k, result), "racing store failed");
+                }
+            });
+        }
+    });
+
+    // Whoever's rename landed last, the entry is complete and bitwise
+    // correct (atomic rename: readers never observe a partial file) and
+    // no temp droppings remain.
+    let back = DiskStore::at(&dir).load(&k).expect("entry survives the race");
+    assert_bitwise(&result, &back);
+    for e in std::fs::read_dir(&dir).unwrap().flatten() {
+        let name = e.file_name();
+        let name = name.to_string_lossy().into_owned();
+        assert!(!name.ends_with(".tmp"), "leftover temp file {name}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Exhaustiveness pin for `spec_fingerprint` (and the disk key built on
+/// it).  The fingerprint hashes the Debug form of `ScenarioSpec`;
+/// `ClusterConfig`'s Debug impl is *manual*.  Destructuring both structs
+/// without `..` means adding a field to either fails to compile **here**,
+/// forcing whoever adds it to confirm the new field reaches the Debug
+/// form (and thus the cache key) before this test builds again.
+#[test]
+fn fingerprint_covers_every_spec_and_cluster_field() {
+    let spec = small_spec(6);
+    let base_fp = spec_fingerprint(&spec);
+
+    // Spot-check that representative fields actually move the key.
+    let mut s = small_spec(6);
+    s.cluster.seed ^= 1;
+    assert_ne!(spec_fingerprint(&s), base_fp, "cluster.seed not keyed");
+    let mut s = small_spec(6);
+    s.epoch_error = 0.125;
+    assert_ne!(spec_fingerprint(&s), base_fp, "epoch_error not keyed");
+    let mut s = small_spec(6);
+    s.max_slots += 1;
+    assert_ne!(spec_fingerprint(&s), base_fp, "max_slots not keyed");
+    let mut s = small_spec(6);
+    s.features = dl2::scheduler::FeatureSet::V2;
+    assert_ne!(spec_fingerprint(&s), base_fp, "features not keyed");
+    let mut s = small_spec(6);
+    s.cluster.interference += 0.01;
+    assert_ne!(spec_fingerprint(&s), base_fp, "interference not keyed");
+
+    // The compile-time pin proper.  NO `..` PATTERNS HERE — that is the
+    // whole point.  If this stops compiling, you added a field: make
+    // sure it is visible in the struct's Debug output (ClusterConfig's
+    // is hand-written), then extend the destructuring below.
+    let ScenarioSpec {
+        name: _,
+        cluster,
+        trace: _,
+        epoch_error: _,
+        max_slots: _,
+        features: _,
+    } = spec;
+    let ClusterConfig {
+        num_servers: _,
+        server_cap: _,
+        topology: _,
+        max_tasks_per_job: _,
+        interference: _,
+        speed_variation: _,
+        seed: _,
+        dynamics: _,
+    } = cluster;
+}
