@@ -1,0 +1,232 @@
+//! Placement-engine scale sweep: the indexed server-selection engine +
+//! differential allocation against the retained linear-scan /
+//! full-re-place reference, at 100 / 1k / 10k servers with traces up to
+//! ~1M jobs on the event kernel.  Emits
+//! `results/BENCH_perf_scale.json` and `results/perf_scale.csv`.
+//!
+//! Claims under measurement:
+//!
+//! 1. At 10k servers the indexed engine is ≥10× the scan reference in
+//!    slots/sec — asserted at full scale only (smoke runs shrink the
+//!    traces until timing noise dominates).
+//! 2. Both placement paths realize **bitwise-identical** episodes —
+//!    asserted always on the A/B column (the broad matrix lives in
+//!    `tests/placement_index.rs`).
+//! 3. The DL2 policy path (fake-policy lockstep batching, no native
+//!    backend needed) rides the same indexed engine, exercising the
+//!    grow/shrink savepoint-rollback probes.
+//!
+//! Flags: `--ab-jobs N` (A/B column trace length, default 2000 scaled).
+
+use std::time::Instant;
+
+use dl2::cluster::{Cluster, ClusterConfig, Res, ServerClass, Topology, NUM_TYPES};
+use dl2::scheduler::{run_episode_event, Drf, EpisodeResult, Fifo, Scheduler, Srtf};
+use dl2::sim::{run_dl2_batched_with, ScenarioSpec};
+use dl2::trace::{JobSpec, TraceConfig};
+use dl2::util::{bench_scale, f, scaled, Args, BenchReport, Table};
+
+const USAGE: &str = "perf_scale — placement-engine scale sweep (100/1k/10k servers)
+  --ab-jobs N   trace length for the indexed-vs-scan A/B column
+                (default 2000, scaled by DL2_BENCH_SCALE)";
+
+/// `n` jobs arriving `rate` per slot (type-rotated, staggered epochs).
+fn trace(n: usize, rate: usize) -> Vec<JobSpec> {
+    (0..n)
+        .map(|i| JobSpec {
+            arrival_slot: i / rate,
+            type_idx: i % NUM_TYPES,
+            total_epochs: 40.0 + (i % 5) as f64 * 10.0,
+        })
+        .collect()
+}
+
+/// Two-class heterogeneous racked pool — the worst case for the tie-break
+/// (distinct caps, cross-rack penalty, PS majority-rack pairing all live).
+fn topology(servers: usize) -> Topology {
+    Topology::new(vec![
+        ServerClass::new("fast", servers / 2, Res::new(4.0, 16.0, 96.0), 2.0),
+        ServerClass::new("std", servers - servers / 2, Res::new(2.0, 8.0, 48.0), 1.0),
+    ])
+    .with_racks(25, 0.25)
+}
+
+fn cluster(servers: usize, reference: bool) -> Cluster {
+    let mut cfg = ClusterConfig::with_topology(topology(servers));
+    cfg.seed = 1;
+    cfg.reference_placement = reference;
+    Cluster::new(cfg)
+}
+
+fn assert_bitwise(label: &str, a: &EpisodeResult, b: &EpisodeResult) {
+    assert_eq!(a.rewards, b.rewards, "{label}: reward stream diverged");
+    assert_eq!(a.gpu_util, b.gpu_util, "{label}: gpu_util diverged");
+    assert_eq!(a.jct_per_job, b.jct_per_job, "{label}: per-job JCT diverged");
+    assert_eq!(a.makespan_slots, b.makespan_slots, "{label}: makespan diverged");
+    assert_eq!(
+        a.avg_jct_slots.to_bits(),
+        b.avg_jct_slots.to_bits(),
+        "{label}: avg JCT diverged"
+    );
+}
+
+/// One timed episode on the event kernel.
+fn run(
+    servers: usize,
+    reference: bool,
+    jobs: &[JobSpec],
+    sched: &mut dyn Scheduler,
+    max_slots: usize,
+) -> (EpisodeResult, f64) {
+    let t0 = Instant::now();
+    let ep = run_episode_event(cluster(servers, reference), jobs, sched, 0.0, max_slots);
+    (ep, t0.elapsed().as_secs_f64())
+}
+
+/// Deterministic stand-in policy (pure function of the state) so the
+/// DL2 column runs without AOT artifacts or the native backend.
+fn fake_probs(state: &[f32], n_actions: usize) -> Vec<f32> {
+    let h = dl2::util::fnv1a_f32s(state);
+    (0..n_actions)
+        .map(|a| ((dl2::sim::derive_seed(h, a as u64) % 1000) as f32 + 1.0) / 1000.0)
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::start("perf_scale");
+    let args = Args::from_env().with_usage(USAGE);
+    let ab_jobs = args.usize_or("ab-jobs", scaled(2_000, 200));
+
+    let mut t = Table::new(
+        &format!("placement engine scale sweep (scale={})", bench_scale()),
+        &["servers", "scheduler", "jobs", "slots", "slots/s", "wall_s"],
+    );
+
+    for &servers in &[100usize, 1_000, 10_000] {
+        // Arrival rate grows with the pool so steady-state active jobs
+        // (and differential churn) scale too, while the queue stays
+        // drainable — the sweep measures the engine, not a backlog.
+        let rate = (servers / 1_000).max(1);
+        let jobs_full = scaled(100 * servers, 400);
+
+        // Per-scheduler trace lengths: fifo carries the headline length
+        // (1M jobs at 10k servers, full scale); the per-slot reallocators
+        // get shorter traces so the sweep stays minutes, not hours.
+        let runs: [(&str, usize, fn() -> Box<dyn Scheduler>); 3] = [
+            ("fifo", jobs_full, || Box::new(Fifo::default())),
+            ("srtf", (jobs_full / 20).max(200), || Box::new(Srtf::default())),
+            ("drf", (jobs_full / 100).clamp(200, 5_000), || Box::new(Drf)),
+        ];
+        for (name, n, make) in runs {
+            let jobs = trace(n, rate);
+            let max_slots = n / rate + 5_000;
+            let (ep, secs) = run(servers, false, &jobs, &mut *make(), max_slots);
+            let sps = ep.makespan_slots as f64 / secs.max(1e-12);
+            t.row(vec![
+                servers.to_string(),
+                name.into(),
+                n.to_string(),
+                ep.makespan_slots.to_string(),
+                f(sps, 0),
+                f(secs, 2),
+            ]);
+            report.fold_raw(1, ep.makespan_slots as u64);
+            let key = format!("s{servers}_{name}");
+            report
+                .count(&format!("{key}_jobs"), n as u64)
+                .count(&format!("{key}_slots"), ep.makespan_slots as u64)
+                .metric(&format!("{key}_wall_secs"), secs)
+                .metric(&format!("{key}_slots_per_sec"), sps)
+                .jct(&key, &ep.jct_per_job);
+        }
+
+        // A/B column: same trace through the indexed engine and the
+        // scan/full-re-place reference.  Identical episodes, timed both
+        // ways; the ≥10× gate arms at the 10k-server point, full scale.
+        let ab_trace = trace(ab_jobs, rate);
+        let ab_slots = ab_jobs / rate + 5_000;
+        let (idx, idx_secs) = run(servers, false, &ab_trace, &mut Fifo::default(), ab_slots);
+        let (scan, scan_secs) = run(servers, true, &ab_trace, &mut Fifo::default(), ab_slots);
+        assert_bitwise(&format!("s{servers}/ab"), &scan, &idx);
+        let speedup = scan_secs / idx_secs.max(1e-12);
+        t.row(vec![
+            servers.to_string(),
+            "fifo(scan ref)".into(),
+            ab_jobs.to_string(),
+            scan.makespan_slots.to_string(),
+            f(scan.makespan_slots as f64 / scan_secs.max(1e-12), 0),
+            f(scan_secs, 2),
+        ]);
+        report.fold_raw(1, idx.makespan_slots as u64);
+        report
+            .metric(&format!("s{servers}_ab_indexed_wall_secs"), idx_secs)
+            .metric(&format!("s{servers}_ab_scan_wall_secs"), scan_secs)
+            .metric(&format!("s{servers}_speedup_vs_scan"), speedup);
+        println!("s{servers}: indexed {speedup:.1}x over the scan reference (A/B, {ab_jobs} jobs)");
+        if servers == 10_000 && bench_scale() >= 1.0 {
+            assert!(
+                speedup >= 10.0,
+                "indexed engine is only {speedup:.2}x over the scan at 10k servers (claim: >= 10x)"
+            );
+        }
+    }
+
+    // --- DL2 fake-policy lockstep column: the policy path (grow/shrink
+    // probes included) on the indexed engine, batched across episodes.
+    let meta_dir = std::env::temp_dir().join("dl2_perf_scale_meta");
+    dl2::runtime::Meta::write_minimal(&meta_dir, NUM_TYPES, 16, 8, &[5])?;
+    let j = 5;
+    let n_actions = 3 * j + 1;
+    let episodes = scaled(4, 2);
+    let specs: Vec<ScenarioSpec> = (0..episodes as u64)
+        .map(|i| {
+            let mut cfg = ClusterConfig::with_topology(topology(100));
+            cfg.seed = 40 + i;
+            let mut spec = ScenarioSpec::new(
+                &format!("scale{i}"),
+                cfg,
+                TraceConfig {
+                    num_jobs: 8,
+                    seed: 90 + i,
+                    ..Default::default()
+                },
+            );
+            spec.max_slots = 500;
+            spec
+        })
+        .collect();
+    let make_sched = |seed: u64| {
+        let engine = dl2::runtime::Engine::load(&meta_dir).unwrap();
+        let cfg = dl2::scheduler::Dl2Config {
+            j,
+            seed,
+            ..Default::default()
+        };
+        let mut sched = dl2::scheduler::Dl2Scheduler::new(engine, cfg);
+        sched.training = false;
+        sched
+    };
+    let fake = |states: &[Vec<f32>]| -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(states.iter().map(|s| fake_probs(s, n_actions)).collect())
+    };
+    let t0 = Instant::now();
+    let (_, _, stats) = run_dl2_batched_with(
+        &specs,
+        (0..episodes as u64).map(|i| make_sched(100 + i)).collect(),
+        fake,
+    )?;
+    let dl2_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "dl2 lockstep on the indexed engine: {} episodes, {} rows in {} pooled calls, {:.2}s",
+        stats.episodes, stats.rows, stats.batches, dl2_secs
+    );
+    report
+        .count("dl2_episodes", stats.episodes as u64)
+        .count("dl2_rows", stats.rows as u64)
+        .count("dl2_pooled_calls", stats.batches as u64)
+        .metric("dl2_wall_secs", dl2_secs);
+
+    t.emit("perf_scale");
+    report.finish();
+    Ok(())
+}

@@ -37,6 +37,13 @@ pub struct Job {
     /// — on slots where the job holds an allocation.  Always 0.0 under
     /// `DynamicsSpec::Static`.
     pub suspension: f64,
+    /// Flat cache of `Placement::speed_multiplier` for the job's current
+    /// placement (1.0 unplaced), refreshed by `Cluster::apply_allocation`
+    /// so the per-slot `advance` loop is tree-walk-free.
+    pub placed_mult: f64,
+    /// Flat cache of `Placement::racks_spanned` for the current placement
+    /// (0 unplaced).
+    pub placed_racks: usize,
 }
 
 impl Job {
@@ -61,6 +68,8 @@ impl Job {
             rng,
             speed_factor: 1.0,
             suspension: 0.0,
+            placed_mult: 1.0,
+            placed_racks: 0,
         }
     }
 

@@ -97,6 +97,43 @@
 //! and `tests/event_kernel.rs` pins that the event kernel (which treats
 //! dynamics boundaries as reallocation points) stays bitwise-equal to
 //! the slot-stepped reference under live churn.
+//!
+//! # Placement complexity and differential allocation
+//!
+//! Server selection runs on an ordered free-load index (O(racks +
+//! log S) per query; structure, tie-break contract and the undo-log
+//! exactness guarantee are documented in [`server`]), and
+//! [`Cluster::apply_allocation`] is **differential**: the requested
+//! `(workers, ps)` sequence is diffed against the previous slot's
+//! realized allocation, the longest unchanged prefix keeps its
+//! placements, and only the diverging suffix is rolled back (via the
+//! placement's exact undo log) and re-placed.  Placement is
+//! order-dependent by design — each task lands relative to the tasks
+//! placed before it — so an identical request prefix provably realizes
+//! identical placements, and a steady-state slot costs
+//! O(changed-tasks × log S) instead of O(tasks × servers).
+//!
+//! Invariants the diff relies on:
+//!
+//! * Only `apply_allocation` assigns `Job::workers` / `Job::ps` (and the
+//!   flat `placed_mult` / `placed_racks` caches `advance` reads): any
+//!   job outside the previous slot's allocation entries holds zeros.
+//! * Allocation entries are compared on `(job id, capped workers,
+//!   capped ps)` in sequence position — schedulers emit one entry per
+//!   active job in arrival order, so membership changes shift the tail
+//!   and release exactly the affected suffix.
+//! * Released jobs that already finished keep their last realized
+//!   counts (dead state nothing reads), matching the full re-place
+//!   path, which never revisits finished jobs.
+//!
+//! The **full re-place path is taken** (a fresh placement, every entry
+//! placed from scratch) whenever: `ClusterConfig::reference_placement`
+//! is set (the retained linear-scan reference — placements are
+//! bitwise-identical either way, pinned by `tests/placement_index.rs`);
+//! at the first allocation of an episode; or at a dynamics **view
+//! boundary** (the live placement's `DynView` no longer matches the
+//! current slot's — down servers must drop out of both the index and
+//! the realized placements).
 
 pub mod dynamics;
 pub mod events;
@@ -145,6 +182,12 @@ pub struct ClusterConfig {
     /// reallocation policy charged to displaced jobs.  The default
     /// (`DynamicsSpec::Static`) is a bitwise no-op.
     pub dynamics: DynamicsConfig,
+    /// Take the retained O(servers) linear-scan placement path and full
+    /// per-slot re-placement instead of the indexed engine + differential
+    /// allocation.  Realized placements are bitwise-identical either way
+    /// (`tests/placement_index.rs`); this is the reference/oracle mode —
+    /// and the scan column `benches/perf_scale.rs` measures against.
+    pub reference_placement: bool,
 }
 
 impl Default for ClusterConfig {
@@ -158,6 +201,7 @@ impl Default for ClusterConfig {
             speed_variation: 0.0,
             seed: 0,
             dynamics: DynamicsConfig::default(),
+            reference_placement: false,
         }
     }
 }
@@ -180,6 +224,12 @@ impl fmt::Debug for ClusterConfig {
             .field("seed", &self.seed);
         if !self.dynamics.is_static() {
             d.field("dynamics", &self.dynamics);
+        }
+        // Same fingerprint discipline: the indexed/differential default is
+        // bitwise-identical to the reference, so only the (placement-
+        // identical but differently-timed) reference mode is fingerprinted.
+        if self.reference_placement {
+            d.field("reference_placement", &self.reference_placement);
         }
         d.finish()
     }
@@ -239,6 +289,69 @@ pub struct Cluster {
     /// Per-catalog-type reallocation suspension charge in slots
     /// (elastic-calibrated; empty under `Static`).
     realloc_penalty: Vec<f64>,
+    /// The live placement differential allocation mutates in place
+    /// (`None` before the first allocation and in reference mode).
+    /// Episode loops drop their handle before the next allocation, so
+    /// `Arc::make_mut` reuses the buffer; a held handle just deep-clones.
+    live: Option<Arc<Placement>>,
+    /// The previous slot's realized allocation entries, in request
+    /// order, each with the placement-log savepoint taken before its
+    /// tasks were placed — the rollback handle for the diff.
+    prev_alloc: Vec<PlacedJob>,
+}
+
+/// One realized `apply_allocation` entry (differential-allocation
+/// bookkeeping): the capped request plus the undo-log savepoint that
+/// releases this job's tasks (and everything placed after them).
+struct PlacedJob {
+    id: usize,
+    want_w: usize,
+    want_p: usize,
+    mark: usize,
+}
+
+/// Place job `id`'s (already capped) request onto `placement`,
+/// alternating worker/PS placement so partial fits stay balanced, and
+/// stopping as soon as neither kind makes progress (a worker failure
+/// stops immediately — a PS without workers is useless).  Job-tagged
+/// placement records the rack spread `advance` uses.  Returns the
+/// realized `(workers, ps)`.
+fn place_tasks(
+    placement: &mut Placement,
+    jt: &JobType,
+    id: usize,
+    want_w: usize,
+    want_p: usize,
+) -> (usize, usize) {
+    let mut got_w = 0;
+    let mut got_p = 0;
+    while got_w < want_w || got_p < want_p {
+        let mut progress = false;
+        if got_w < want_w {
+            if placement
+                .try_place_kind_for(id, &jt.worker_res, TaskKind::Worker)
+                .is_some()
+            {
+                got_w += 1;
+                progress = true;
+            } else {
+                break;
+            }
+        }
+        if got_p < want_p {
+            if placement
+                .try_place_kind_for(id, &jt.ps_res, TaskKind::Ps)
+                .is_some()
+            {
+                got_p += 1;
+                progress = true;
+            }
+        }
+        if !progress {
+            break;
+        }
+    }
+    (got_w, got_p)
 }
 
 /// What the cluster reports after advancing one slot.
@@ -291,6 +404,8 @@ impl Cluster {
             dynamics,
             prev_job_servers: BTreeMap::new(),
             realloc_penalty,
+            live: None,
+            prev_alloc: Vec::new(),
         }
     }
 
@@ -340,6 +455,9 @@ impl Cluster {
         if let Some(view) = self.dynamics.view_at(self.slot) {
             p.set_dynamics(Arc::clone(view));
         }
+        if self.cfg.reference_placement {
+            p.set_reference_scan();
+        }
         p
     }
 
@@ -359,54 +477,133 @@ impl Cluster {
     /// allocation does not fit, the job's allocation is truncated to what
     /// fits (workers and PSs are placed alternately to keep them usable).
     /// Returns the realized placement.
-    pub fn apply_allocation(&mut self, alloc: &[(usize, usize, usize)]) -> Placement {
+    ///
+    /// **Differential**: the request is diffed against the previous
+    /// slot's realized allocation; the longest unchanged `(id, capped
+    /// workers, capped ps)` prefix keeps its placements and only the
+    /// diverging suffix is rolled back and re-placed (see the
+    /// module-level "Placement complexity" section for the invariants
+    /// and when the full re-place path is taken instead).
+    pub fn apply_allocation(&mut self, alloc: &[(usize, usize, usize)]) -> Arc<Placement> {
+        if self.cfg.reference_placement {
+            return Arc::new(self.apply_allocation_full(alloc));
+        }
+        let cap = self.cfg.max_tasks_per_job;
+        // The live placement is reusable only while its dynamics view is
+        // the current slot's: at a view boundary every placement must be
+        // re-realized against the new up-server set.
+        let view = self.dynamics.view_at(self.slot).cloned();
+        let reusable = self.live.as_ref().is_some_and(|live| {
+            match (live.dynamics_view(), &view) {
+                (None, None) => true,
+                (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+                _ => false,
+            }
+        });
+        if !reusable {
+            self.release_all();
+            let mut p = Placement::with_topology(self.topology.clone());
+            if let Some(v) = &view {
+                p.set_dynamics(Arc::clone(v));
+            }
+            self.live = Some(Arc::new(p));
+        }
+        // Longest prefix of entries identical to last slot: their
+        // placements are provably identical (placement is a pure fold
+        // over the entry sequence) and stay untouched.
+        let mut k = 0;
+        while k < alloc.len() && k < self.prev_alloc.len() {
+            let (id, w, p) = alloc[k];
+            let pj = &self.prev_alloc[k];
+            if pj.id == id && pj.want_w == w.min(cap) && pj.want_p == p.min(cap) {
+                k += 1;
+            } else {
+                break;
+            }
+        }
+        let live_arc = self.live.as_mut().expect("live placement set above");
+        let live = Arc::make_mut(live_arc);
+        if k < self.prev_alloc.len() {
+            live.rollback_to(self.prev_alloc[k].mark);
+            for pj in &self.prev_alloc[k..] {
+                let job = &mut self.jobs[pj.id];
+                // Finished jobs keep their last counts — dead state the
+                // full re-place path never revisits either.
+                if !job.is_finished() {
+                    job.workers = 0;
+                    job.ps = 0;
+                    job.placed_mult = 1.0;
+                    job.placed_racks = 0;
+                }
+            }
+            self.prev_alloc.truncate(k);
+        }
+        let catalog = Arc::clone(&self.catalog);
+        for &(id, want_w, want_p) in &alloc[k..] {
+            let jt = &catalog[self.jobs[id].type_idx];
+            let (want_w, want_p) = (want_w.min(cap), want_p.min(cap));
+            let mark = live.savepoint();
+            let (got_w, got_p) = place_tasks(live, jt, id, want_w, want_p);
+            let placed_mult = live.speed_multiplier(id);
+            let placed_racks = live.racks_spanned(id);
+            let job = &mut self.jobs[id];
+            job.workers = got_w;
+            job.ps = got_p;
+            job.placed_mult = placed_mult;
+            job.placed_racks = placed_racks;
+            self.prev_alloc.push(PlacedJob {
+                id,
+                want_w,
+                want_p,
+                mark,
+            });
+        }
+        Arc::clone(self.live.as_ref().expect("live placement set above"))
+    }
+
+    /// Zero every job the live placement still carries (differential
+    /// bookkeeping reset before a full re-place).
+    fn release_all(&mut self) {
+        for pj in &self.prev_alloc {
+            let job = &mut self.jobs[pj.id];
+            if !job.is_finished() {
+                job.workers = 0;
+                job.ps = 0;
+                job.placed_mult = 1.0;
+                job.placed_racks = 0;
+            }
+        }
+        self.prev_alloc.clear();
+    }
+
+    /// The full re-place reference path: a fresh placement, every entry
+    /// placed from scratch (`ClusterConfig::reference_placement`).
+    fn apply_allocation_full(&mut self, alloc: &[(usize, usize, usize)]) -> Placement {
         let mut placement = self.placement();
         // Reset active allocations first (numbers are produced anew each
         // slot, §4.1; the elastic layer in `elastic/` shows the delta is
         // applied as hot scaling rather than restart).  Finished jobs'
         // counts are dead state — nothing downstream reads them.
         for &id in &self.active {
-            self.jobs[id].workers = 0;
-            self.jobs[id].ps = 0;
+            let job = &mut self.jobs[id];
+            job.workers = 0;
+            job.ps = 0;
+            job.placed_mult = 1.0;
+            job.placed_racks = 0;
         }
         let catalog = Arc::clone(&self.catalog);
         for &(id, want_w, want_p) in alloc {
             let jt = &catalog[self.jobs[id].type_idx];
             let cap = self.cfg.max_tasks_per_job;
             let (want_w, want_p) = (want_w.min(cap), want_p.min(cap));
-            let mut got_w = 0;
-            let mut got_p = 0;
-            // Alternate worker/PS placement so partial fits stay balanced.
-            // Job-tagged placement records the rack spread `advance` uses.
-            while got_w < want_w || got_p < want_p {
-                let mut progress = false;
-                if got_w < want_w {
-                    if placement
-                        .try_place_kind_for(id, &jt.worker_res, TaskKind::Worker)
-                        .is_some()
-                    {
-                        got_w += 1;
-                        progress = true;
-                    } else {
-                        break;
-                    }
-                }
-                if got_p < want_p {
-                    if placement
-                        .try_place_kind_for(id, &jt.ps_res, TaskKind::Ps)
-                        .is_some()
-                    {
-                        got_p += 1;
-                        progress = true;
-                    }
-                }
-                if !progress {
-                    break;
-                }
-            }
+            let (got_w, got_p) = place_tasks(&mut placement, jt, id, want_w, want_p);
+            let placed_mult = placement.speed_multiplier(id);
+            let placed_racks = placement.racks_spanned(id);
             let job = &mut self.jobs[id];
             job.workers = got_w;
             job.ps = got_p;
+            job.placed_mult = placed_mult;
+            job.placed_racks = placed_racks;
         }
         placement
     }
@@ -416,6 +613,14 @@ impl Cluster {
     /// interference-noise`, where the topology factor is the slowest
     /// hosting class's speed multiplier discounted per extra rack the
     /// job's placement spans (1.0 on a homogeneous single-rack pool).
+    ///
+    /// `placement` must be (or reflect) the most recent
+    /// [`apply_allocation`] result: the per-job topology factors come
+    /// from the flat caches that call filled, and `placement` itself
+    /// supplies only the utilization aggregate and (at dynamics
+    /// boundaries) the job→server snapshot.
+    ///
+    /// [`apply_allocation`]: Cluster::apply_allocation
     pub fn advance(&mut self, placement: &Placement) -> SlotOutcome {
         let slot = self.slot;
         let interference = self.cfg.interference;
@@ -433,12 +638,11 @@ impl Cluster {
             let jt = &catalog[job.type_idx];
             let mut eps = speed::epochs_per_slot(&jt.speed, job.workers, job.ps);
             // Exactly 1.0 on homogeneous single-rack pools, where the
-            // multiply is a bitwise no-op (the drop-in guarantee).
-            eps *= speed::topology_factor(
-                placement.speed_multiplier(job.id),
-                placement.racks_spanned(job.id),
-                cross_rack_penalty,
-            );
+            // multiply is a bitwise no-op (the drop-in guarantee).  The
+            // flat per-job caches (filled by `apply_allocation`, which
+            // every caller pairs with this `placement`) keep the
+            // per-slot loop free of the placement's BTreeMap walks.
+            eps *= speed::topology_factor(job.placed_mult, job.placed_racks, cross_rack_penalty);
             eps *= job.speed_factor;
             // Redeployment suspension (dynamics displacement charge): the
             // job's tasks are being re-established and make no progress
@@ -470,7 +674,20 @@ impl Cluster {
             self.active.retain(|&id| !jobs[id].is_finished());
         }
         if dynamics_live {
-            self.prev_job_servers = placement.job_servers_map();
+            // Snapshot job→servers only when the *next* slot enters a
+            // different dynamics segment: `charge_displacements(slot+1)`
+            // is the sole reader and reads only at such boundaries, so
+            // the per-slot BTreeMap rebuild is skipped everywhere else.
+            let boundary = match (
+                self.dynamics.view_at(slot),
+                self.dynamics.view_at(slot + 1),
+            ) {
+                (Some(a), Some(b)) => !Arc::ptr_eq(a, b),
+                _ => false,
+            };
+            if boundary {
+                self.prev_job_servers = placement.job_servers_map();
+            }
         }
         let gpu_util = placement.utilization().gpu;
         self.gpu_util_history.push(gpu_util);

@@ -41,7 +41,56 @@
 //!   recorded for the displacement-charge bookkeeping.  Without a view
 //!   every check short-circuits and behaviour is bit-for-bit the
 //!   static-pool scan.
+//!
+//! # Placement complexity
+//!
+//! Server selection is **sublinear in cluster size**.  Each placement
+//! keeps an ordered free-load index — a global `BTreeSet<(load_bits,
+//! index)>` plus, on multi-rack topologies, one such set per rack —
+//! built lazily on the first query and maintained incrementally by
+//! `place_on`/`rollback_to`.  Loads are keyed by `f64::to_bits`: they
+//! are non-negative finite dominant shares (never `-0.0`), so the `u64`
+//! bit order equals the numeric order.
+//!
+//! A query walks each set in ascending `(load, index)` order and takes
+//! the first server that fits, which *is* that set's lexicographic
+//! minimum among fitting servers.  The tie-break contract is the scan's
+//! exact 4-tuple — minimize `(off_majority, crosses, load, index)`:
+//!
+//! * **No job/locality context** (anonymous tasks, no cross-rack
+//!   penalty, single-rack topologies): every candidate shares one
+//!   `(off_majority, crosses)` category, so the global set answers in
+//!   one walk.
+//! * **Phase A** — only racks the job already occupies can yield
+//!   `crosses = false`, so each occupied rack's set is probed for its
+//!   first fit and candidates compete on `(off_majority, load, index)`.
+//!   Any phase-A fit beats every out-of-rack server: spill candidates
+//!   all share `crosses = true` and (when a worker majority exists)
+//!   `off_majority = true`, which the 4-tuple ranks strictly after any
+//!   `(_, false, ..)`.
+//! * **Phase B** — no occupied rack fits: spill servers share one
+//!   category, so the global set is walked skipping the job's racks.
+//!
+//! Queries are O(racks + log S) plus the fit-probe walk (short in
+//! practice: the least-loaded prefix is where tasks fit); maintenance
+//! is O(log S) per placement.  The pre-index linear scan is **retained
+//! verbatim** as the reference path
+//! ([`Placement::set_reference_scan`], wired to
+//! `ClusterConfig::reference_placement`) and the indexed path is pinned
+//! bitwise against it by property tests here and in
+//! `tests/placement_index.rs` across topology × dynamics × task-kind
+//! matrices.
+//!
+//! Every mutation is also recorded in an **undo log** storing the exact
+//! previous values (never re-derived by subtraction), so
+//! [`Placement::savepoint`] / [`Placement::rollback_to`] restore any
+//! earlier state bitwise — including the job rack/mult/worker-rack/
+//! server bookkeeping and the index itself.  This is what lets
+//! schedulers speculate (`try_grow`) without cloning the placement and
+//! lets `Cluster::apply_allocation` release only the diffed suffix of
+//! the previous slot's allocation instead of re-placing every job.
 
+use std::collections::btree_map::Entry;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
@@ -55,6 +104,46 @@ use super::types::Res;
 pub enum TaskKind {
     Worker,
     Ps,
+}
+
+/// Ordered free-load structures answering `best_server` queries in
+/// O(racks + log S) (see the module-level "Placement complexity"
+/// section).  Keys are `(load.to_bits(), server index)` — valid because
+/// dominant-share loads are non-negative finite, so bit order equals
+/// numeric order.  Down servers (per the attached [`DynView`]) are
+/// excluded entirely.
+#[derive(Debug, Clone)]
+struct PlacementIndex {
+    /// All up servers by `(load, index)`.
+    by_load: BTreeSet<(u64, u32)>,
+    /// Per-rack subsets; left empty on single-rack topologies (the
+    /// global set answers every query there).
+    racks: Vec<BTreeSet<(u64, u32)>>,
+}
+
+/// How a placement changed `job_mult` (exact restore on rollback).
+#[derive(Debug, Clone, Copy)]
+enum MultUndo {
+    Untouched,
+    Created,
+    Lowered(f64),
+}
+
+/// One `place_on` call's reversal record: the exact previous values
+/// (never re-derived by subtraction) plus which job bookkeeping entries
+/// this placement created, so `rollback_to` is a bitwise restore.
+#[derive(Debug, Clone)]
+struct UndoRec {
+    server: u32,
+    rack: u32,
+    job: Option<usize>,
+    prev_used: Res,
+    prev_load: f64,
+    prev_total: Res,
+    new_rack: bool,
+    new_server: bool,
+    worker_rack_bumped: bool,
+    mult: MultUndo,
 }
 
 /// Per-slot placement state over a [`Topology`].
@@ -79,6 +168,19 @@ pub struct Placement {
     /// job → hosting servers (maintained only with a view attached; the
     /// displacement-charge input).
     job_servers: BTreeMap<usize, BTreeSet<usize>>,
+    /// Aggregate used resources, kept incrementally.  Exactly equals the
+    /// per-server fold: all task resource vectors are small integers, so
+    /// f64 sums are exact regardless of order.
+    total: Res,
+    /// False after [`Placement::set_reference_scan`]: queries take the
+    /// retained O(servers) linear scan instead of the index.
+    indexed: bool,
+    /// Lazily built on the first indexed query; invalidated by
+    /// `set_dynamics` (the up-server set changes).
+    index: Option<PlacementIndex>,
+    /// Undo log for `savepoint`/`rollback_to`; one record per placed
+    /// task, so its length is bounded by what fits in the cluster.
+    log: Vec<UndoRec>,
 }
 
 impl Placement {
@@ -98,6 +200,10 @@ impl Placement {
             job_worker_racks: BTreeMap::new(),
             view: None,
             job_servers: BTreeMap::new(),
+            total: Res::ZERO,
+            indexed: true,
+            index: None,
+            log: Vec::new(),
         }
     }
 
@@ -107,6 +213,18 @@ impl Placement {
     pub fn set_dynamics(&mut self, view: Arc<DynView>) {
         debug_assert_eq!(view.up.len(), self.used.len());
         self.view = Some(view);
+        // The up-server set changed: rebuild the index lazily so down
+        // servers drop out of (and revived ones rejoin) the candidates.
+        self.index = None;
+    }
+
+    /// Switch to the retained O(servers) linear-scan reference path
+    /// (`ClusterConfig::reference_placement`).  Realized placements are
+    /// bitwise-identical either way — the scan is the oracle the indexed
+    /// path is property-tested against.
+    pub fn set_reference_scan(&mut self) {
+        self.indexed = false;
+        self.index = None;
     }
 
     /// The attached dynamics view, if any.
@@ -139,31 +257,78 @@ impl Placement {
         self.topo.total_cap()
     }
 
-    /// Aggregate used resources.
+    /// Aggregate used resources (kept incrementally; see the field note
+    /// on exactness).
     pub fn total_used(&self) -> Res {
-        self.used.iter().fold(Res::ZERO, |acc, u| acc.add(u))
+        debug_assert!(
+            {
+                let fold = self.used.iter().fold(Res::ZERO, |acc, u| acc.add(u));
+                fold.gpu.to_bits() == self.total.gpu.to_bits()
+                    && fold.cpu.to_bits() == self.total.cpu.to_bits()
+                    && fold.mem.to_bits() == self.total.mem.to_bits()
+            },
+            "incremental total drifted from the per-server fold"
+        );
+        self.total
     }
 
-    /// Commit `r` to server `idx`, updating the load cache and (when the
-    /// task belongs to a job) the job's rack/class/server records.
+    /// Commit `r` to server `idx`, updating the load cache, the index,
+    /// the undo log and (when the task belongs to a job) the job's
+    /// rack/class/server records.
     fn place_on(&mut self, idx: usize, r: &Res, job: Option<usize>, kind: TaskKind) {
+        let rack = self.topo.rack(idx);
+        let prev_used = self.used[idx];
+        let prev_load = self.loads[idx];
+        let prev_total = self.total;
         self.used[idx] = self.used[idx].add(r);
         let cap = self.topo.cap(idx);
         self.loads[idx] = self.used[idx].dominant_share(&cap);
+        self.total = self.total.add(r);
+        if let Some(ix) = self.index.as_mut() {
+            let old_key = (prev_load.to_bits(), idx as u32);
+            let new_key = (self.loads[idx].to_bits(), idx as u32);
+            let removed = ix.by_load.remove(&old_key);
+            debug_assert!(removed, "server {idx} missing from the load index");
+            ix.by_load.insert(new_key);
+            if !ix.racks.is_empty() {
+                let removed = ix.racks[rack].remove(&old_key);
+                debug_assert!(removed, "server {idx} missing from rack {rack}'s index");
+                ix.racks[rack].insert(new_key);
+            }
+        }
+        let mut rec = UndoRec {
+            server: idx as u32,
+            rack: rack as u32,
+            job,
+            prev_used,
+            prev_load,
+            prev_total,
+            new_rack: false,
+            new_server: false,
+            worker_rack_bumped: false,
+            mult: MultUndo::Untouched,
+        };
         if let Some(id) = job {
-            let rack = self.topo.rack(idx);
-            self.job_racks.entry(id).or_default().insert(rack);
+            rec.new_rack = self.job_racks.entry(id).or_default().insert(rack);
             let mut speed = self.topo.speed(idx);
             if let Some(v) = &self.view {
                 // Dynamic per-server scale (1.0 when nominal — and the
                 // whole multiply is skipped without a view, keeping the
                 // static path bitwise).
                 speed *= v.speed[idx];
-                self.job_servers.entry(id).or_default().insert(idx);
+                rec.new_server = self.job_servers.entry(id).or_default().insert(idx);
             }
-            let m = self.job_mult.entry(id).or_insert(speed);
-            if speed < *m {
-                *m = speed;
+            match self.job_mult.entry(id) {
+                Entry::Vacant(e) => {
+                    e.insert(speed);
+                    rec.mult = MultUndo::Created;
+                }
+                Entry::Occupied(mut e) => {
+                    if speed < *e.get() {
+                        rec.mult = MultUndo::Lowered(*e.get());
+                        *e.get_mut() = speed;
+                    }
+                }
             }
             if kind == TaskKind::Worker && self.topo.cross_rack_penalty() > 0.0 {
                 *self
@@ -172,6 +337,83 @@ impl Placement {
                     .or_default()
                     .entry(rack)
                     .or_insert(0) += 1;
+                rec.worker_rack_bumped = true;
+            }
+        }
+        self.log.push(rec);
+    }
+
+    /// Mark the current placement state for [`rollback_to`].
+    ///
+    /// [`rollback_to`]: Placement::rollback_to
+    pub fn savepoint(&self) -> usize {
+        self.log.len()
+    }
+
+    /// Undo every placement made since `mark` (a [`savepoint`] return
+    /// value), restoring used/loads/totals, the job bookkeeping and the
+    /// load index to their exact prior bits.
+    ///
+    /// [`savepoint`]: Placement::savepoint
+    pub fn rollback_to(&mut self, mark: usize) {
+        while self.log.len() > mark {
+            let rec = self.log.pop().expect("log longer than mark");
+            let idx = rec.server as usize;
+            if let Some(ix) = self.index.as_mut() {
+                let old_key = (self.loads[idx].to_bits(), rec.server);
+                let new_key = (rec.prev_load.to_bits(), rec.server);
+                let removed = ix.by_load.remove(&old_key);
+                debug_assert!(removed, "server {idx} missing from the load index");
+                ix.by_load.insert(new_key);
+                if !ix.racks.is_empty() {
+                    let rk = rec.rack as usize;
+                    let removed = ix.racks[rk].remove(&old_key);
+                    debug_assert!(removed, "server {idx} missing from rack {rk}'s index");
+                    ix.racks[rk].insert(new_key);
+                }
+            }
+            self.used[idx] = rec.prev_used;
+            self.loads[idx] = rec.prev_load;
+            self.total = rec.prev_total;
+            let Some(id) = rec.job else { continue };
+            let rack = rec.rack as usize;
+            if rec.new_rack {
+                if let Some(rs) = self.job_racks.get_mut(&id) {
+                    rs.remove(&rack);
+                    if rs.is_empty() {
+                        self.job_racks.remove(&id);
+                    }
+                }
+            }
+            match rec.mult {
+                MultUndo::Untouched => {}
+                MultUndo::Created => {
+                    self.job_mult.remove(&id);
+                }
+                MultUndo::Lowered(prev) => {
+                    self.job_mult.insert(id, prev);
+                }
+            }
+            if rec.worker_rack_bumped {
+                if let Some(m) = self.job_worker_racks.get_mut(&id) {
+                    if let Some(c) = m.get_mut(&rack) {
+                        *c -= 1;
+                        if *c == 0 {
+                            m.remove(&rack);
+                        }
+                    }
+                    if m.is_empty() {
+                        self.job_worker_racks.remove(&id);
+                    }
+                }
+            }
+            if rec.new_server {
+                if let Some(ss) = self.job_servers.get_mut(&id) {
+                    ss.remove(&idx);
+                    if ss.is_empty() {
+                        self.job_servers.remove(&id);
+                    }
+                }
             }
         }
     }
@@ -186,7 +428,134 @@ impl Placement {
     /// the legacy scan whenever there is a single rack, no penalty, or
     /// no job context, and to the pre-pairing scan for worker tasks.
     /// Servers a live dynamics view marks down are never candidates.
-    fn best_server(&self, r: &Res, job: Option<usize>, kind: TaskKind) -> Option<usize> {
+    ///
+    /// Answered from the ordered free-load index (O(racks + log S); see
+    /// the module docs) unless [`set_reference_scan`] switched this
+    /// placement to the retained linear scan.
+    ///
+    /// [`set_reference_scan`]: Placement::set_reference_scan
+    fn best_server(&mut self, r: &Res, job: Option<usize>, kind: TaskKind) -> Option<usize> {
+        if !self.indexed {
+            return self.best_server_scan(r, job, kind);
+        }
+        if self.index.is_none() {
+            self.index = Some(self.build_index());
+        }
+        self.best_server_indexed(r, job, kind)
+    }
+
+    /// Build the free-load index from scratch: all up servers keyed by
+    /// `(load_bits, index)`, plus per-rack subsets on multi-rack
+    /// topologies.
+    fn build_index(&self) -> PlacementIndex {
+        let multi_rack = self.topo.num_racks() > 1;
+        let mut by_load = BTreeSet::new();
+        let mut racks = if multi_rack {
+            vec![BTreeSet::new(); self.topo.num_racks()]
+        } else {
+            Vec::new()
+        };
+        for (i, load) in self.loads.iter().enumerate() {
+            if let Some(v) = &self.view {
+                if !v.up[i] {
+                    continue;
+                }
+            }
+            let key = (load.to_bits(), i as u32);
+            by_load.insert(key);
+            if multi_rack {
+                racks[self.topo.rack(i)].insert(key);
+            }
+        }
+        PlacementIndex { by_load, racks }
+    }
+
+    /// The indexed query: same answer as [`best_server_scan`], in
+    /// O(racks + log S).  The module docs carry the phase-A/phase-B case
+    /// analysis showing the walks reproduce the scan's
+    /// `(off_majority, crosses, load, index)` minimum.
+    ///
+    /// [`best_server_scan`]: Placement::best_server_scan
+    fn best_server_indexed(&self, r: &Res, job: Option<usize>, kind: TaskKind) -> Option<usize> {
+        let ix = self.index.as_ref().expect("index built by best_server");
+        let fits = |i: u32| {
+            let i = i as usize;
+            self.used[i].fits(r, &self.topo.cap(i))
+        };
+        let penalized = self.topo.cross_rack_penalty() > 0.0;
+        let racks = match job {
+            Some(id) if penalized => self.job_racks.get(&id),
+            _ => None,
+        };
+        let global_only = match racks {
+            Some(rs) => rs.is_empty() || ix.racks.is_empty(),
+            None => true,
+        };
+        if global_only {
+            // No locality context — or a single-rack topology, where
+            // crossing and worker-majority can never differ: every
+            // candidate shares one (off_majority, crosses) category, so
+            // the global (load, index) order alone decides.
+            return ix
+                .by_load
+                .iter()
+                .find(|&&(_, i)| fits(i))
+                .map(|&(_, i)| i as usize);
+        }
+        let racks = racks.expect("global_only covers None");
+        // PS pairing: the worker-majority rack count to match (None when
+        // not a PS or no workers placed yet).
+        let majority = match job {
+            Some(id) if kind == TaskKind::Ps => self
+                .job_worker_racks
+                .get(&id)
+                .and_then(|m| m.values().copied().max().map(|mx| (m, mx))),
+            _ => None,
+        };
+        // Phase A: racks the job already occupies (crosses = false).
+        // Each rack's first fit is its (load, index) minimum; candidates
+        // compete on (off_majority, load, index).
+        let mut best: Option<(bool, u64, u32)> = None;
+        for &rk in racks {
+            let Some(&(lb, i)) = ix.racks[rk].iter().find(|&&(_, i)| fits(i)) else {
+                continue;
+            };
+            let off_majority = match &majority {
+                Some((counts, mx)) => counts.get(&rk).copied().unwrap_or(0) != *mx,
+                None => false,
+            };
+            let cand = (off_majority, lb, i);
+            let better = match best {
+                None => true,
+                Some(b) => cand < b,
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        if let Some((_, _, i)) = best {
+            // Any in-rack fit beats every out-of-rack one: spill
+            // candidates share crosses = true (and off_majority = true
+            // whenever a majority exists), strictly after (_, false, ..)
+            // in the scan's 4-tuple order.
+            return Some(i as usize);
+        }
+        // Phase B: no occupied rack fits — spill.  All remaining servers
+        // share one (off_majority, crosses) category, so the global
+        // (load, index) order decides among servers outside the job's
+        // racks.
+        ix.by_load
+            .iter()
+            .find(|&&(_, i)| !racks.contains(&self.topo.rack(i as usize)) && fits(i))
+            .map(|&(_, i)| i as usize)
+    }
+
+    /// The pre-index O(servers) linear scan, retained verbatim as the
+    /// reference path and property-test oracle for
+    /// [`best_server_indexed`].
+    ///
+    /// [`best_server_indexed`]: Placement::best_server_indexed
+    fn best_server_scan(&self, r: &Res, job: Option<usize>, kind: TaskKind) -> Option<usize> {
         let penalized = self.topo.cross_rack_penalty() > 0.0;
         let racks = match job {
             Some(id) if penalized => self.job_racks.get(&id),
@@ -681,6 +1050,128 @@ mod tests {
         // Class a: 1 GPU used of the 2 the single up server provides.
         assert!((shares[0] - 0.5).abs() < 1e-12, "a share {}", shares[0]);
         assert_eq!(shares[1], 0.0, "fully-down class reads no free capacity");
+    }
+
+    /// Random topology (possibly racked/penalized/heterogeneous) plus an
+    /// optional dynamics view, shared by the index-vs-scan and rollback
+    /// property tests.
+    fn random_placement(rng: &mut crate::util::Rng) -> Placement {
+        let cap = Res::new(2.0, 8.0, 48.0);
+        let big = Res::new(4.0, 16.0, 96.0);
+        let mut topo = match rng.below(3) {
+            0 => Topology::homogeneous(rng.range(1, 10), cap),
+            1 => Topology::new(vec![
+                ServerClass::new("big", rng.range(1, 5), big, 1.5),
+                ServerClass::new("small", rng.range(1, 5), cap, 1.0),
+            ]),
+            _ => Topology::new(vec![
+                ServerClass::new("fast", rng.range(1, 4), big, 2.0),
+                ServerClass::new("mid", rng.range(1, 4), cap, 1.3),
+                ServerClass::new("slow", rng.range(1, 4), cap, 1.0),
+            ]),
+        };
+        if rng.bool(0.7) {
+            let penalty = if rng.bool(0.7) { 0.25 } else { 0.0 };
+            topo = topo.with_racks(rng.range(1, 4), penalty);
+        }
+        let n = topo.num_servers();
+        let mut p = Placement::with_topology(Arc::new(topo));
+        if rng.bool(0.4) {
+            let up: Vec<bool> = (0..n).map(|_| rng.bool(0.8)).collect();
+            let speed: Vec<f64> = (0..n)
+                .map(|_| if rng.bool(0.3) { 0.5 } else { 1.0 })
+                .collect();
+            p.set_dynamics(Arc::new(DynView { up, speed }));
+        }
+        p
+    }
+
+    fn random_task(rng: &mut crate::util::Rng) -> (Res, Option<usize>, TaskKind) {
+        let r = Res::new(
+            rng.below(3) as f64,
+            rng.range(1, 5) as f64,
+            rng.range(1, 13) as f64,
+        );
+        let job = if rng.bool(0.8) { Some(rng.below(5)) } else { None };
+        let kind = if rng.bool(0.35) { TaskKind::Ps } else { TaskKind::Worker };
+        (r, job, kind)
+    }
+
+    fn place(p: &mut Placement, t: &(Res, Option<usize>, TaskKind)) -> Option<usize> {
+        match t.1 {
+            Some(id) => p.try_place_kind_for(id, &t.0, t.2),
+            None => p.try_place(&t.0),
+        }
+    }
+
+    /// The indexed `best_server` is pinned bitwise against the retained
+    /// linear scan: identical server choices, loads, totals and job
+    /// bookkeeping across random topologies × dynamics views × task
+    /// kinds (PS-pairing included).
+    #[test]
+    fn prop_indexed_matches_scan() {
+        prop_check!(40, |rng: &mut crate::util::Rng| {
+            let mut indexed = random_placement(rng);
+            let mut scan = indexed.clone();
+            scan.set_reference_scan();
+            for step in 0..rng.range(10, 160) {
+                let t = random_task(rng);
+                let a = place(&mut indexed, &t);
+                let b = place(&mut scan, &t);
+                assert_eq!(a, b, "step {step}: indexed chose {a:?}, scan {b:?}");
+            }
+            assert_eq!(indexed.used, scan.used);
+            assert_eq!(indexed.job_racks, scan.job_racks);
+            assert_eq!(indexed.job_mult, scan.job_mult);
+            assert_eq!(indexed.job_worker_racks, scan.job_worker_racks);
+            assert_eq!(indexed.job_servers, scan.job_servers);
+            let (li, ls) = (indexed.loads(), scan.loads());
+            for (i, (a, b)) in li.iter().zip(&ls).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "server {i} load");
+            }
+        });
+    }
+
+    /// `rollback_to` restores every field — and the index — to the exact
+    /// savepoint state: the rolled-back placement then makes bitwise the
+    /// same choices as an untouched clone.
+    #[test]
+    fn prop_rollback_is_bitwise_exact() {
+        prop_check!(30, |rng: &mut crate::util::Rng| {
+            let mut p = random_placement(rng);
+            for _ in 0..rng.range(0, 40) {
+                let t = random_task(rng);
+                let _ = place(&mut p, &t);
+            }
+            let control = p.clone();
+            let mark = p.savepoint();
+            for _ in 0..rng.range(1, 40) {
+                let t = random_task(rng);
+                let _ = place(&mut p, &t);
+            }
+            p.rollback_to(mark);
+            assert_eq!(p.used, control.used);
+            assert_eq!(p.total_used(), control.total_used());
+            assert_eq!(p.job_racks, control.job_racks);
+            assert_eq!(p.job_mult, control.job_mult);
+            assert_eq!(p.job_worker_racks, control.job_worker_racks);
+            assert_eq!(p.job_servers, control.job_servers);
+            for (i, (a, b)) in p.loads.iter().zip(&control.loads).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "server {i} load");
+            }
+            // The maintained index equals a from-scratch rebuild.
+            if let Some(ix) = &p.index {
+                let fresh = p.build_index();
+                assert_eq!(ix.by_load, fresh.by_load);
+                assert_eq!(ix.racks, fresh.racks);
+            }
+            // And the restored state behaves identically going forward.
+            let mut q = control;
+            for step in 0..rng.range(5, 40) {
+                let t = random_task(rng);
+                assert_eq!(place(&mut p, &t), place(&mut q, &t), "post-rollback step {step}");
+            }
+        });
     }
 
     /// The job's speed multiplier is the slowest class hosting it.

@@ -5,6 +5,7 @@
 //!   evaluate  Load saved parameters and evaluate on a validation trace.
 //!   compare   All schedulers head-to-head on one validation trace (Fig 9 style).
 //!   elastic   Hot-scaling demo: add/remove PSs & workers with timings (§5).
+//!   trajectory  Diff BENCH_*.json reports between two results directories.
 //!   info      Artifact / environment inventory.
 //!
 //! Common flags: --servers N --jobs N --j J --seed S --artifacts DIR
@@ -19,18 +20,19 @@ use dl2::runtime::{save_params, Engine};
 use dl2::scheduler::{Dl2Config, Dl2Scheduler, FeatureSet};
 use dl2::sim::{mean_avg_jct, replica_specs, EpisodeKey, Harness, ResultCache, ScenarioSpec};
 use dl2::trace::TraceConfig;
-use dl2::util::{Args, Table};
+use dl2::util::{trajectory, Args, Table};
 
 /// Usage text printed by `dl2 help` and echoed on CLI parse errors.
 const USAGE: &str = "dl2 — DL²: a deep-learning-driven scheduler for DL clusters
 
-USAGE: dl2 <train|evaluate|compare|elastic|info> [flags]
+USAGE: dl2 <train|evaluate|compare|elastic|trajectory|info> [flags]
 
   train     --j 10 --sl-steps 250 --rl-rounds 8 --round-episodes 4 [--serial] [--workers N]
             --incumbent drf --features v1|v2 --out results/dl2_policy.bin
   evaluate  --policy results/dl2_policy.bin --j 10 --features v1|v2
   compare   --servers 12 --jobs 40
   elastic   --model-mb 98
+  trajectory <dir_a> <dir_b>   (diff BENCH_*.json reports: A = baseline, B = candidate)
   info
 
 Common: --servers N --jobs N --seed S --interference F --artifacts DIR
@@ -47,6 +49,7 @@ fn main() -> anyhow::Result<()> {
         "evaluate" => cmd_evaluate(&args),
         "compare" => cmd_compare(&args),
         "elastic" => cmd_elastic(&args),
+        "trajectory" => cmd_trajectory(&args),
         "info" => cmd_info(&args),
         _ => {
             print_help();
@@ -274,6 +277,31 @@ fn cmd_elastic(args: &Args) -> anyhow::Result<()> {
     }
     t.emit("elastic_demo");
     job.shutdown();
+    Ok(())
+}
+
+/// `dl2 trajectory A B` — read every `BENCH_*.json` report under the
+/// two directories and print the per-metric delta table (wall-clock,
+/// slots/sec, cache hit counters, bench metrics).  A is the baseline,
+/// B the candidate; CI runs this cold-vs-warm on the cache job.
+fn cmd_trajectory(args: &Args) -> anyhow::Result<()> {
+    let (dir_a, dir_b) = match (args.positional.get(1), args.positional.get(2)) {
+        (Some(a), Some(b)) => (a.as_str(), b.as_str()),
+        _ => anyhow::bail!("usage: dl2 trajectory <dir_a> <dir_b>"),
+    };
+    let a = trajectory::collect(std::path::Path::new(dir_a))
+        .map_err(|e| anyhow::anyhow!("reading {dir_a}: {e}"))?;
+    let b = trajectory::collect(std::path::Path::new(dir_b))
+        .map_err(|e| anyhow::anyhow!("reading {dir_b}: {e}"))?;
+    anyhow::ensure!(
+        !a.is_empty() || !b.is_empty(),
+        "no BENCH_*.json reports under {dir_a} or {dir_b}"
+    );
+    let (t, notes) = trajectory::delta_table(&a, &b);
+    println!("{}", t.render());
+    for n in &notes {
+        println!("{n}");
+    }
     Ok(())
 }
 

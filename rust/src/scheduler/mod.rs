@@ -135,26 +135,27 @@ pub fn try_grow(
     if cur.0 + dw > cap || cur.1 + dp > cap {
         return false;
     }
-    // Tentatively place; Placement has no undo, so check feasibility on a
-    // clone for multi-task grows.
-    let mut shadow = placement.clone();
+    // Tentatively place; the placement's undo log makes a failed
+    // multi-task grow an exact rollback instead of a full clone.
+    let mark = placement.savepoint();
     for _ in 0..dw {
-        if shadow
+        if placement
             .try_place_kind_for(id, &jt.worker_res, TaskKind::Worker)
             .is_none()
         {
+            placement.rollback_to(mark);
             return false;
         }
     }
     for _ in 0..dp {
-        if shadow
+        if placement
             .try_place_kind_for(id, &jt.ps_res, TaskKind::Ps)
             .is_none()
         {
+            placement.rollback_to(mark);
             return false;
         }
     }
-    *placement = shadow;
     cur.0 += dw;
     cur.1 += dp;
     true

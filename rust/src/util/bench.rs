@@ -84,6 +84,16 @@ impl BenchReport {
         self
     }
 
+    /// Fold raw kernel work in directly — for benches that drive the
+    /// episode kernel without materializing `ScenarioResult`s (the scale
+    /// sweeps): bumps the episode count and the simulated-slot total
+    /// behind the top-level `slots_per_sec`.
+    pub fn fold_raw(&mut self, episodes: usize, slots: u64) -> &mut Self {
+        self.episodes += episodes;
+        self.slots += slots;
+        self
+    }
+
     /// Fold a batch of episode results in: bumps the episode and
     /// simulated-slot totals (the slots/sec denominator) and records the
     /// pooled per-job JCT distribution under `label`.

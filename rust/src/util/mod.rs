@@ -10,6 +10,7 @@ pub mod cli;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod trajectory;
 
 pub use bench::BenchReport;
 pub use cli::Args;

@@ -1,0 +1,490 @@
+//! Bench-trajectory collector: read every `BENCH_*.json` report (the
+//! format [`crate::util::BenchReport`] writes) from two results
+//! directories and diff them metric-by-metric — wall-clock, slots/sec,
+//! cache hit counters, bench-specific metrics — so CI and re-anchors can
+//! see the perf trajectory between two revisions (or between a cold and
+//! a warm cache run) as one table.
+//!
+//! The JSON reader is hand-rolled to mirror the hand-rolled writer: the
+//! offline dependency closure has no serde, so this is a small
+//! recursive-descent parser over the standard grammar (objects, arrays,
+//! strings with escapes and surrogate pairs, numbers, keywords).  It
+//! parses any standards-compliant document; recursion depth is bounded
+//! only by input nesting, which is fine for trusted local report files.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use crate::util::table::Table;
+
+/// A parsed JSON value.  Objects keep insertion order (the writer's
+/// field order) — [`JsonVal::get`] does a linear key lookup.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonVal {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonVal>),
+    Obj(Vec<(String, JsonVal)>),
+}
+
+impl JsonVal {
+    /// Field lookup on an object; `None` on missing keys and non-objects.
+    pub fn get(&self, key: &str) -> Option<&JsonVal> {
+        match self {
+            JsonVal::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric view: numbers as-is, booleans as 0/1 (so cache `enabled`
+    /// flags diff like counters), everything else `None`.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonVal::Num(x) => Some(*x),
+            JsonVal::Bool(b) => Some(if *b { 1.0 } else { 0.0 }),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonVal::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one JSON document; trailing non-whitespace is an error.
+pub fn parse(text: &str) -> Result<JsonVal, String> {
+    let mut p = Parser {
+        s: text.as_bytes(),
+        pos: 0,
+    };
+    let v = p.value()?;
+    p.ws();
+    if p.pos != p.s.len() {
+        return Err(p.err("trailing characters after the document"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: &str) -> String {
+        format!("{msg} at byte {}", self.pos)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.pos).copied()
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonVal, String> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string().map(JsonVal::Str),
+            Some(b't') => self.keyword("true", JsonVal::Bool(true)),
+            Some(b'f') => self.keyword("false", JsonVal::Bool(false)),
+            Some(b'n') => self.keyword("null", JsonVal::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn keyword(&mut self, word: &str, v: JsonVal) -> Result<JsonVal, String> {
+        if self.s[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err("expected a JSON keyword"))
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonVal, String> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.pos += 1;
+        }
+        // The slice is pure ASCII by construction.
+        let text = std::str::from_utf8(&self.s[start..self.pos]).unwrap();
+        text.parse::<f64>()
+            .map(JsonVal::Num)
+            .map_err(|_| format!("bad number {text:?} at byte {start}"))
+    }
+
+    fn object(&mut self) -> Result<JsonVal, String> {
+        self.pos += 1; // consume '{'
+        let mut fields = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonVal::Obj(fields));
+        }
+        loop {
+            self.ws();
+            if self.peek() != Some(b'"') {
+                return Err(self.err("expected an object key"));
+            }
+            let key = self.string()?;
+            self.ws();
+            if self.peek() != Some(b':') {
+                return Err(self.err("expected ':'"));
+            }
+            self.pos += 1;
+            let value = self.value()?;
+            fields.push((key, value));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonVal::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonVal, String> {
+        self.pos += 1; // consume '['
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonVal::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonVal::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    /// A string literal; `self.pos` is on the opening quote.
+    fn string(&mut self) -> Result<String, String> {
+        self.pos += 1; // consume '"'
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let Some(c) = self.peek() else {
+                return Err(self.err("unterminated string"));
+            };
+            self.pos += 1;
+            match c {
+                b'"' => break,
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err(self.err("unterminated escape"));
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0c),
+                        b'n' => out.push(b'\n'),
+                        b'r' => out.push(b'\r'),
+                        b't' => out.push(b'\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let code = if (0xD800..0xDC00).contains(&hi) {
+                                // High surrogate: a \uXXXX low half must follow.
+                                if self.s.get(self.pos) == Some(&b'\\')
+                                    && self.s.get(self.pos + 1) == Some(&b'u')
+                                {
+                                    self.pos += 2;
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..0xE000).contains(&lo) {
+                                        return Err(self.err("bad low surrogate"));
+                                    }
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    return Err(self.err("lone high surrogate"));
+                                }
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                return Err(self.err("lone low surrogate"));
+                            } else {
+                                hi
+                            };
+                            let ch = char::from_u32(code)
+                                .ok_or_else(|| self.err("invalid \\u code point"))?;
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                        }
+                        _ => return Err(self.err("unknown escape")),
+                    }
+                }
+                c if c < 0x20 => return Err(self.err("raw control character in string")),
+                // Multi-byte UTF-8 sequences pass through byte-by-byte;
+                // the input is a &str, so they reassemble validly.
+                c => out.push(c),
+            }
+        }
+        String::from_utf8(out).map_err(|_| "invalid UTF-8 in string".to_string())
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let end = self.pos + 4;
+        let Some(hex) = self.s.get(self.pos..end) else {
+            return Err(self.err("truncated \\u escape"));
+        };
+        if !hex.iter().all(u8::is_ascii_hexdigit) {
+            return Err(self.err("bad \\u escape"));
+        }
+        let v = u32::from_str_radix(std::str::from_utf8(hex).unwrap(), 16).unwrap();
+        self.pos = end;
+        Ok(v)
+    }
+}
+
+/// Flatten a report's numeric leaves into dotted paths
+/// (`wall_secs`, `cache.mem_hits`, `metrics.s10000_fifo_slots_per_sec`,
+/// `jct.fifo.mean`, ...).  Strings, nulls and arrays are skipped — the
+/// delta table is numeric.
+pub fn flatten(v: &JsonVal) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    flatten_into("", v, &mut out);
+    out
+}
+
+fn flatten_into(prefix: &str, v: &JsonVal, out: &mut BTreeMap<String, f64>) {
+    match v {
+        JsonVal::Num(_) | JsonVal::Bool(_) => {
+            if let Some(x) = v.as_f64() {
+                out.insert(prefix.to_string(), x);
+            }
+        }
+        JsonVal::Obj(fields) => {
+            for (k, val) in fields {
+                let path = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                flatten_into(&path, val, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// All `BENCH_<name>.json` reports directly under `dir`, keyed by bench
+/// name, each flattened to dotted numeric paths.  Unparseable report
+/// files warn on stderr and are skipped (a torn file must not sink the
+/// whole diff); other files are ignored.
+pub fn collect(dir: &Path) -> std::io::Result<BTreeMap<String, BTreeMap<String, f64>>> {
+    let mut out = BTreeMap::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let file = entry.file_name().to_string_lossy().into_owned();
+        let Some(name) = file
+            .strip_prefix("BENCH_")
+            .and_then(|s| s.strip_suffix(".json"))
+        else {
+            continue;
+        };
+        let text = std::fs::read_to_string(entry.path())?;
+        match parse(&text) {
+            Ok(v) => {
+                out.insert(name.to_string(), flatten(&v));
+            }
+            Err(e) => eprintln!("warn: skipping {file}: {e}"),
+        }
+    }
+    Ok(out)
+}
+
+/// Per-metric delta table between two collected report sets (A is the
+/// baseline, B the candidate).  Rows cover the union of metrics of every
+/// bench present in both sets, with `delta = B - A` and `ratio = B / A`
+/// (`-` where a side or the ratio denominator is missing).  Benches
+/// present in only one set come back as note lines, not rows.
+pub fn delta_table(
+    a: &BTreeMap<String, BTreeMap<String, f64>>,
+    b: &BTreeMap<String, BTreeMap<String, f64>>,
+) -> (Table, Vec<String>) {
+    let mut t = Table::new(
+        "bench trajectory (A -> B)",
+        &["bench", "metric", "A", "B", "delta", "ratio"],
+    );
+    let mut notes = Vec::new();
+    let cell_of = |v: Option<&f64>| v.map_or_else(|| "-".to_string(), |x| cell(*x));
+    for (name, fa) in a {
+        let Some(fb) = b.get(name) else {
+            notes.push(format!("note: bench {name:?} present only in A"));
+            continue;
+        };
+        let keys: BTreeSet<&String> = fa.keys().chain(fb.keys()).collect();
+        for k in keys {
+            let (va, vb) = (fa.get(k), fb.get(k));
+            let (delta, ratio) = match (va, vb) {
+                (Some(&x), Some(&y)) => (
+                    cell(y - x),
+                    if x != 0.0 {
+                        format!("{:.3}", y / x)
+                    } else {
+                        "-".to_string()
+                    },
+                ),
+                _ => ("-".to_string(), "-".to_string()),
+            };
+            t.row(vec![
+                name.clone(),
+                k.clone(),
+                cell_of(va),
+                cell_of(vb),
+                delta,
+                ratio,
+            ]);
+        }
+    }
+    for name in b.keys() {
+        if !a.contains_key(name) {
+            notes.push(format!("note: bench {name:?} present only in B"));
+        }
+    }
+    (t, notes)
+}
+
+/// Integral values render without a fraction (counters); the rest get
+/// three decimals.
+fn cell(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e12 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_bench_report_shape() {
+        let doc = r#"{"bench": "x", "wall_secs": 1.25, "slots": 400,
+            "cache": {"enabled": true, "mem_hits": 3},
+            "metrics": {"speedup": 11.5}, "none": null,
+            "arr": [1, 2, 3]}"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("bench").and_then(JsonVal::as_str), Some("x"));
+        assert_eq!(
+            v.get("cache")
+                .and_then(|c| c.get("mem_hits"))
+                .and_then(JsonVal::as_f64),
+            Some(3.0)
+        );
+        let flat = flatten(&v);
+        assert_eq!(flat.get("wall_secs"), Some(&1.25));
+        assert_eq!(flat.get("slots"), Some(&400.0));
+        assert_eq!(flat.get("cache.enabled"), Some(&1.0));
+        assert_eq!(flat.get("metrics.speedup"), Some(&11.5));
+        assert!(!flat.contains_key("bench"), "strings are not numeric");
+        assert!(!flat.contains_key("none"));
+        assert!(!flat.contains_key("arr"));
+    }
+
+    #[test]
+    fn string_escapes_and_numbers() {
+        let v = parse(r#"{"s": "a\"b\\c\ndA", "n": -1.5e3}"#).unwrap();
+        assert_eq!(v.get("s").and_then(JsonVal::as_str), Some("a\"b\\c\ndA"));
+        assert_eq!(v.get("n").and_then(JsonVal::as_f64), Some(-1500.0));
+    }
+
+    #[test]
+    fn surrogate_pairs_and_raw_utf8_decode() {
+        let v = parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+        let v = parse("\"héllo 😀\"").unwrap();
+        assert_eq!(v.as_str(), Some("héllo 😀"));
+        assert!(parse(r#""\ud83d""#).is_err(), "lone high surrogate");
+        assert!(parse(r#""\ude00""#).is_err(), "lone low surrogate");
+    }
+
+    #[test]
+    fn round_trips_what_the_report_writer_emits() {
+        // A trimmed real BenchReport document.
+        let doc = r#"{"bench": "perf_scale", "git_rev": "abc123", "scale": 1, "wall_secs": 2.5, "slots": 1000, "slots_per_sec": 400, "cache": {"enabled": true, "mem_hits": 0, "disk_hits": 0, "misses": 2, "disk_writes": 2}, "metrics": {"s100_fifo_slots_per_sec": 123.456}, "jct": {"fifo": {"mean": 10.5, "p50": 9, "p95": 20, "max": 31, "jobs": 40}}}"#;
+        let flat = flatten(&parse(doc).unwrap());
+        assert_eq!(flat.get("slots_per_sec"), Some(&400.0));
+        assert_eq!(flat.get("cache.misses"), Some(&2.0));
+        assert_eq!(flat.get("metrics.s100_fifo_slots_per_sec"), Some(&123.456));
+        assert_eq!(flat.get("jct.fifo.p95"), Some(&20.0));
+    }
+
+    #[test]
+    fn malformed_documents_error() {
+        for bad in [
+            "",
+            "{",
+            "{\"a\" 1}",
+            "tru",
+            "{\"a\": 1} trailing",
+            "\"unterminated",
+            "[1, ]",
+            "{\"a\": 1e}",
+        ] {
+            assert!(parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn delta_table_pairs_metrics_and_notes_singletons() {
+        let mut a = BTreeMap::new();
+        let mut b = BTreeMap::new();
+        a.insert(
+            "shared".to_string(),
+            BTreeMap::from([("wall_secs".to_string(), 2.0), ("only_a".to_string(), 1.0)]),
+        );
+        a.insert("gone".to_string(), BTreeMap::new());
+        b.insert(
+            "shared".to_string(),
+            BTreeMap::from([("wall_secs".to_string(), 1.0)]),
+        );
+        b.insert("new".to_string(), BTreeMap::new());
+        let (t, notes) = delta_table(&a, &b);
+        let s = t.render();
+        assert!(s.contains("wall_secs"));
+        assert!(s.contains("0.500"), "ratio 1/2 missing from:\n{s}");
+        assert!(s.contains("only_a"));
+        assert!(notes.iter().any(|n| n.contains("gone")));
+        assert!(notes.iter().any(|n| n.contains("new")));
+    }
+
+    #[test]
+    fn collect_reads_bench_files_only() {
+        let dir = std::env::temp_dir().join(format!("dl2_traj_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("BENCH_demo.json"), "{\"wall_secs\": 3}").unwrap();
+        std::fs::write(dir.join("notes.txt"), "ignore me").unwrap();
+        std::fs::write(dir.join("BENCH_broken.json"), "{oops").unwrap();
+        let got = collect(&dir).unwrap();
+        assert_eq!(got.len(), 1, "broken/non-report files must be skipped");
+        assert_eq!(got["demo"].get("wall_secs"), Some(&3.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

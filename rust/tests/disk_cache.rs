@@ -250,5 +250,9 @@ fn fingerprint_covers_every_spec_and_cluster_field() {
         speed_variation: _,
         seed: _,
         dynamics: _,
+        // Fingerprinted only when set: the indexed/differential default
+        // realizes bitwise-identical placements, so default-mode keys
+        // must not move (mirrors the `dynamics` static-identity rule).
+        reference_placement: _,
     } = cluster;
 }

@@ -1,0 +1,180 @@
+//! Pins the indexed + differential placement engine **bitwise** against
+//! the retained reference path over full episodes.
+//!
+//! `ClusterConfig::reference_placement = true` takes the O(servers)
+//! linear-scan `best_server` and re-places every job from scratch each
+//! slot; the default takes the ordered-index engine and only touches the
+//! differential suffix of the allocation.  The contract (see the
+//! `cluster` module docs) is that no observable ever diverges: realized
+//! placements, the reward stream, GPU-utilization history, per-job JCTs,
+//! the bit pattern of the average JCT — and the final environment down
+//! to every job's interference RNG state and allocation counts.  Swept
+//! for all four baseline schedulers on both episode kernels, across
+//! homogeneous and racked-heterogeneous topologies (cross-rack penalty
+//! on, so the PS majority-rack pairing tie-break is live) and under live
+//! cluster dynamics, where the differential engine must rebuild from
+//! scratch at every dynamics view boundary.
+//!
+//! The per-call `best_server` tie-break pin (indexed vs scan on random
+//! topologies) lives with the index, in `cluster::server`'s tests.
+
+use dl2::cluster::{Cluster, ClusterConfig, DynamicsConfig, DynamicsSpec};
+use dl2::elastic::ReallocPolicy;
+use dl2::scheduler::{
+    run_episode_event_full, run_episode_full, Drf, EpisodeResult, Fifo, Scheduler, Srtf,
+    Tetris,
+};
+use dl2::sim::{ScenarioMatrix, TopologySpec};
+use dl2::trace::{generate, ArrivalPattern, TraceConfig};
+
+fn schedulers() -> Vec<Box<dyn Scheduler>> {
+    vec![
+        Box::new(Drf),
+        Box::new(Fifo::default()),
+        Box::new(Srtf::default()),
+        Box::new(Tetris::default()),
+    ]
+}
+
+fn assert_identical(label: &str, a: &EpisodeResult, b: &EpisodeResult) {
+    assert_eq!(a.rewards, b.rewards, "{label}: reward stream diverged");
+    assert_eq!(a.gpu_util, b.gpu_util, "{label}: gpu_util history diverged");
+    assert_eq!(a.jct_per_job, b.jct_per_job, "{label}: per-job JCT diverged");
+    assert_eq!(a.makespan_slots, b.makespan_slots, "{label}: makespan diverged");
+    assert_eq!(
+        a.avg_jct_slots.to_bits(),
+        b.avg_jct_slots.to_bits(),
+        "{label}: avg JCT diverged bitwise"
+    );
+}
+
+/// The final environments must agree down to each job's private RNG
+/// stream and allocation counts — a placement that diverged anywhere
+/// mid-episode shifts training speeds and hence the interference draws,
+/// so the xoshiro states catch divergences the coarse results can miss.
+fn assert_clusters_identical(label: &str, a: &Cluster, b: &Cluster) {
+    assert_eq!(a.slot, b.slot, "{label}: slot counter diverged");
+    assert_eq!(a.jobs.len(), b.jobs.len(), "{label}: job count diverged");
+    for (ja, jb) in a.jobs.iter().zip(&b.jobs) {
+        let tag = format!("{label} job {}", ja.id);
+        assert_eq!(ja.rng, jb.rng, "{tag}: interference RNG state diverged");
+        assert_eq!(
+            ja.epochs_done.to_bits(),
+            jb.epochs_done.to_bits(),
+            "{tag}: progress diverged bitwise"
+        );
+        assert_eq!(ja.slots_run, jb.slots_run, "{tag}: slots_run diverged");
+        assert_eq!(ja.finished_slot, jb.finished_slot, "{tag}: finish slot diverged");
+        assert_eq!((ja.workers, ja.ps), (jb.workers, jb.ps), "{tag}: allocation diverged");
+    }
+}
+
+/// Run every (scheduler × kernel) cell of `specs` twice — reference
+/// placement vs the indexed/differential default — and demand bitwise
+/// equality.
+fn check_specs(specs: &[dl2::sim::ScenarioSpec]) {
+    for spec in specs {
+        let trace = generate(&spec.trace);
+        for sched in schedulers().iter_mut() {
+            for event in [false, true] {
+                let kernel = if event { "event" } else { "ref" };
+                let label = format!("{}/{}/{kernel}", spec.name, sched.name());
+                let run = |s: &mut dyn Scheduler, reference: bool| {
+                    let mut cfg = spec.cluster.clone();
+                    cfg.reference_placement = reference;
+                    let cluster = Cluster::new(cfg);
+                    if event {
+                        run_episode_event_full(cluster, &trace, s, spec.epoch_error, spec.max_slots)
+                    } else {
+                        run_episode_full(cluster, &trace, s, spec.epoch_error, spec.max_slots)
+                    }
+                };
+                let (ref_result, ref_cluster) = run(sched.as_mut(), true);
+                let (idx_result, idx_cluster) = run(sched.as_mut(), false);
+                assert_identical(&label, &ref_result, &idx_result);
+                assert_clusters_identical(&label, &ref_cluster, &idx_cluster);
+            }
+        }
+    }
+}
+
+#[test]
+fn differential_allocation_matches_full_replace_across_the_matrix() {
+    // All arrival patterns × homogeneous and racked-hetero topologies,
+    // with interference on: bursty gaps make allocations churn (deep
+    // rollbacks), steady streams keep long identical prefixes (the
+    // differential fast path), and the racked-hetero cell keeps the
+    // cross-rack penalty — and with it spill placements and PS
+    // majority-rack pairing — live.
+    let matrix = ScenarioMatrix::new(
+        ClusterConfig {
+            num_servers: 8,
+            interference: 0.15,
+            ..Default::default()
+        },
+        TraceConfig {
+            num_jobs: 10,
+            ..Default::default()
+        },
+    )
+    .with_patterns(&ArrivalPattern::ALL)
+    .with_topologies(&[
+        TopologySpec::Homogeneous,
+        TopologySpec::HeteroRacked {
+            frac_fast: 0.5,
+            speedup: 2.0,
+            servers_per_rack: 4,
+            penalty: 0.2,
+        },
+    ])
+    .with_max_slots(3_000);
+    let specs = matrix.expand();
+    assert_eq!(specs.len(), 4 * 2);
+    check_specs(&specs);
+}
+
+#[test]
+fn differential_allocation_matches_full_replace_under_dynamics() {
+    // Live dynamics flip the placement's capacity view between slots:
+    // the differential engine must tear down and rebuild exactly at
+    // every view boundary (never coasting a stale placement across one)
+    // to stay bitwise with the per-slot full re-place.
+    let matrix = ScenarioMatrix::new(
+        ClusterConfig {
+            num_servers: 8,
+            interference: 0.15,
+            dynamics: DynamicsConfig::default().with_realloc(ReallocPolicy::CheckpointRestart),
+            ..Default::default()
+        },
+        TraceConfig {
+            num_jobs: 10,
+            ..Default::default()
+        },
+    )
+    .with_patterns(&[ArrivalPattern::Bursty, ArrivalPattern::Steady])
+    .with_topologies(&[TopologySpec::Racked {
+        servers_per_rack: 4,
+        penalty: 0.2,
+    }])
+    .with_dynamics(&[
+        DynamicsSpec::Stragglers {
+            frac: 0.5,
+            slowdown: 0.3,
+            period: 60,
+            duty: 0.5,
+        },
+        DynamicsSpec::Failures {
+            frac: 0.4,
+            mtbf: 120,
+            mttr: 40,
+        },
+        DynamicsSpec::RackOutage {
+            at: 50,
+            duration: 60,
+        },
+    ])
+    .with_max_slots(2_000);
+    let specs = matrix.expand();
+    assert_eq!(specs.len(), 2 * 3);
+    check_specs(&specs);
+}
