@@ -7,12 +7,18 @@ Run once at ``make artifacts``::
 Emits, for every J in ``--js`` (default 5,10,20,40):
 
     artifacts/policy_infer_j{J}.hlo.txt
+    artifacts/policy_infer_b{B}_j{J}.hlo.txt   (one per bucket width B)
     artifacts/value_infer_j{J}.hlo.txt
     artifacts/sl_step_j{J}.hlo.txt
     artifacts/rl_step_j{J}.hlo.txt
 
 plus ``artifacts/meta.txt`` (flat key=value, parsed by rust) and
-``artifacts/meta.json`` (for humans).
+``artifacts/meta.json`` (for humans).  The bucketed ``[B, S] -> [B, A]``
+inference artifacts back the rust engine's batched fast path: a lockstep
+round of N states is chunked over the bucket widths (powers of two,
+ascending), each chunk zero-padded to its bucket and truncated after
+execution — the ``buckets=`` meta line tells the engine which widths
+exist.
 
 Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
 jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
@@ -29,10 +35,23 @@ import jax
 import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
-from .model import ADAM_B1, ADAM_B2, ADAM_EPS, HIDDEN, NUM_JOB_TYPES, NetSpec, build_fns
+from .model import (
+    ADAM_B1,
+    ADAM_B2,
+    ADAM_EPS,
+    HIDDEN,
+    NUM_JOB_TYPES,
+    NetSpec,
+    build_fns,
+    policy_infer_batch,
+)
 
 DEFAULT_JS = (5, 10, 20, 40)
 DEFAULT_BATCH = 256  # paper §6.2: mini-batch of 256 samples
+# Inference bucket widths: strictly ascending powers of two.  A lockstep
+# round is covered by full chunks of the largest bucket plus the
+# smallest bucket that fits the tail (rust `bucket_plan`).
+DEFAULT_BUCKETS = (2, 4, 8, 16, 32)
 
 
 def to_hlo_text(lowered) -> str:
@@ -78,12 +97,12 @@ def example_args(spec: NetSpec, batch: int):
     }
 
 
-def emit(spec: NetSpec, batch: int, out_dir: str, verbose: bool = True):
+def emit(spec: NetSpec, batch: int, out_dir: str, buckets=(), verbose: bool = True):
     fns = build_fns(spec)
     args = example_args(spec, batch)
     written = {}
-    for name, fn in fns.items():
-        lowered = fn.lower(*args[name])
+
+    def write(name, lowered):
         text = to_hlo_text(lowered)
         path = os.path.join(out_dir, f"{name}_j{spec.max_jobs}.hlo.txt")
         with open(path, "w") as f:
@@ -91,10 +110,18 @@ def emit(spec: NetSpec, batch: int, out_dir: str, verbose: bool = True):
         written[name] = (path, len(text))
         if verbose:
             print(f"  {path}: {len(text)} chars")
+
+    for name, fn in fns.items():
+        write(name, fn.lower(*args[name]))
+    # Bucketed [B, S] -> [B, A] inference: one artifact per width.
+    batched = jax.jit(lambda theta, states: policy_infer_batch(theta, states, spec))
+    for b in buckets:
+        lowered = batched.lower(f32(spec.policy_params), f32(b, spec.state_dim))
+        write(f"policy_infer_b{b}", lowered)
     return written
 
 
-def write_meta(js, batch, out_dir):
+def write_meta(js, batch, out_dir, buckets=()):
     lines = [
         f"num_types={NUM_JOB_TYPES}",
         f"hidden={HIDDEN}",
@@ -104,12 +131,15 @@ def write_meta(js, batch, out_dir):
         f"adam_eps={ADAM_EPS}",
         "js=" + ",".join(str(j) for j in js),
     ]
+    if buckets:
+        lines.append("buckets=" + ",".join(str(b) for b in buckets))
     meta_json = {
         "num_types": NUM_JOB_TYPES,
         "hidden": HIDDEN,
         "batch": batch,
         "adam": {"b1": ADAM_B1, "b2": ADAM_B2, "eps": ADAM_EPS},
         "js": list(js),
+        "buckets": list(buckets),
         "specs": {},
     }
     for j in js:
@@ -137,9 +167,21 @@ def main():
         help="comma-separated J values to emit artifacts for",
     )
     ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument(
+        "--buckets", default=",".join(str(b) for b in DEFAULT_BUCKETS),
+        help="comma-separated [B, S] inference bucket widths (ascending "
+        "powers of two; empty disables the bucketed artifacts)",
+    )
     args = ap.parse_args()
 
     js = tuple(int(x) for x in args.js.split(","))
+    buckets = tuple(int(x) for x in args.buckets.split(",") if x.strip())
+    assert all(b > 0 and b & (b - 1) == 0 for b in buckets), (
+        f"bucket widths must be powers of two: {buckets}"
+    )
+    assert all(a < b for a, b in zip(buckets, buckets[1:])), (
+        f"bucket widths must be strictly ascending: {buckets}"
+    )
     os.makedirs(args.out_dir, exist_ok=True)
     for j in js:
         spec = NetSpec(max_jobs=j)
@@ -147,8 +189,8 @@ def main():
             f"J={j}: S={spec.state_dim} A={spec.num_actions} "
             f"P={spec.policy_params} Pv={spec.value_params}"
         )
-        emit(spec, args.batch, args.out_dir)
-    write_meta(js, args.batch, args.out_dir)
+        emit(spec, args.batch, args.out_dir, buckets)
+    write_meta(js, args.batch, args.out_dir, buckets)
     print(f"meta written to {args.out_dir}/meta.txt")
 
 

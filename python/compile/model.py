@@ -120,6 +120,19 @@ def policy_infer(theta, state, spec: NetSpec):
     return jax.nn.softmax(logits)
 
 
+def policy_infer_batch(theta, states, spec: NetSpec):
+    """True batched inference: [B, S] -> action probabilities [B, A].
+
+    Row ``k`` is exactly ``policy_infer(theta, states[k])``: the forward
+    pass and the softmax are row-independent, which is what lets the
+    rust engine zero-pad a lockstep round up to the bucket width and
+    truncate the padding rows from the result without perturbing the
+    real ones.  Lowered once per bucket width B as
+    ``policy_infer_b{B}_j{J}.hlo.txt``.
+    """
+    return jax.nn.softmax(policy_logits(theta, states, spec), axis=-1)
+
+
 def value_infer(theta_v, state, spec: NetSpec):
     """Single-state critic evaluation: [S] -> [1]."""
     return value_forward(theta_v, state[None, :], spec)

@@ -28,6 +28,8 @@ const USAGE: &str = "dl2 — DL²: a deep-learning-driven scheduler for DL clust
 USAGE: dl2 <train|evaluate|compare|elastic|trajectory|info> [flags]
 
   train     --j 10 --sl-steps 250 --rl-rounds 8 --round-episodes 4 [--serial] [--workers N]
+            [--adaptive-rounds] [--round-cap 32]  (grow the round width as
+            policy entropy stabilizes; same episode budget + seed schedule)
             --incumbent drf --features v1|v2 --out results/dl2_policy.bin
   evaluate  --policy results/dl2_policy.bin --j 10 --features v1|v2
   compare   --servers 12 --jobs 40
@@ -125,6 +127,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         sl_steps: args.usize_or("sl-steps", 250),
         rl_rounds: args.usize_or("rl-rounds", 8),
         rl_round_episodes: args.usize_or("round-episodes", 4),
+        // --adaptive-rounds: grow the round width geometrically (up to
+        // --round-cap) as policy entropy stabilizes; same episode
+        // budget and seed schedule, wider late-training batches.
+        adaptive_rounds: args.bool_or("adaptive-rounds", false),
+        rl_round_episodes_cap: args.usize_or("round-cap", 32),
         // --serial: the one-episode-at-a-time reference path (identical
         // episode seed schedule; useful for wall-clock comparisons).
         parallel: !args.bool_or("serial", false),

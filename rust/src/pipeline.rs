@@ -85,6 +85,22 @@ pub struct PipelineConfig {
     /// batch width — and the staleness bound: rollouts within a round
     /// share round-start parameters.
     pub rl_round_episodes: usize,
+    /// Decima-style adaptive round sizing (parallel path only): when
+    /// true, the round width starts at `rl_round_episodes` and doubles —
+    /// capped by [`PipelineConfig::rl_round_episodes_cap`] — each time
+    /// the policy's mean entropy has stabilized between consecutive
+    /// rounds (relative change ≤ 5%, [`adaptive_round_width`]).  Early
+    /// rounds stay narrow while the policy is still moving (fresh
+    /// updates per episode batch); stable late rounds batch wider for
+    /// throughput.  The total episode budget
+    /// ([`PipelineConfig::rl_total_episodes`]) and the flat episode seed
+    /// schedule are unchanged — only the grouping into rounds moves.
+    /// Off by default: the fixed `rl_rounds × rl_round_episodes`
+    /// schedule is bitwise identical to the historical loop.
+    pub adaptive_rounds: bool,
+    /// Upper bound on the adaptive round width (ignored unless
+    /// `adaptive_rounds` is set).
+    pub rl_round_episodes_cap: usize,
     /// true (default): batched parallel rounds on the harness + engine
     /// pool.  false: the serial reference path (identical episode seeds,
     /// one update stream, no intra-round staleness).
@@ -129,6 +145,8 @@ impl Default for PipelineConfig {
             sl_steps: 250,
             rl_rounds: 5,
             rl_round_episodes: 4,
+            adaptive_rounds: false,
+            rl_round_episodes_cap: 32,
             parallel: true,
             workers: None,
             eval_every: 5,
@@ -280,17 +298,37 @@ pub fn run_pipeline(cfg: &PipelineConfig, engine: Engine) -> Result<PipelineResu
             }
             specs
         };
-        for round in 0..cfg.rl_rounds {
-            let episodes: Vec<(ClusterConfig, Vec<JobSpec>)> = (0..cfg.rl_round_episodes)
-                .map(|k| episode_inputs(round * cfg.rl_round_episodes + k))
+        // Round loop over the flat episode budget.  With a fixed width
+        // (`adaptive_rounds` off) this walks exactly the historical
+        // `rl_rounds × rl_round_episodes` grouping; adaptive mode only
+        // regroups the identical episode sequence into wider rounds.
+        let mut done = 0usize;
+        let mut width = cfg.rl_round_episodes;
+        let mut prev_entropy: Option<f32> = None;
+        while done < total {
+            let take = width.min(total - done);
+            let episodes: Vec<(ClusterConfig, Vec<JobSpec>)> = (0..take)
+                .map(|k| episode_inputs(done + k))
                 .collect();
-            trainer.train_episodes_parallel(&harness, &pool, &episodes)?;
-            let done = (round + 1) * cfg.rl_round_episodes;
-            let crossed = cfg.eval_every > 0
-                && (done - cfg.rl_round_episodes) / cfg.eval_every != done / cfg.eval_every;
-            if crossed || round + 1 == cfg.rl_rounds {
+            let stats = trainer.train_episodes_parallel(&harness, &pool, &episodes)?;
+            let before = done;
+            done += take;
+            let crossed =
+                cfg.eval_every > 0 && before / cfg.eval_every != done / cfg.eval_every;
+            if crossed || done == total {
                 let jct = eval_on_harness(&harness, &pool, &eval_cache, &eval_specs, &trainer);
                 record_eval(&trainer, jct, &mut history, &mut best);
+            }
+            if cfg.adaptive_rounds {
+                let entropy = (stats.iter().map(|s| s.mean_entropy as f64).sum::<f64>()
+                    / stats.len().max(1) as f64) as f32;
+                width = adaptive_round_width(
+                    width,
+                    cfg.rl_round_episodes_cap,
+                    prev_entropy,
+                    entropy,
+                );
+                prev_entropy = Some(entropy);
             }
         }
     } else {
@@ -436,6 +474,31 @@ pub fn baseline_jct(
     total / runs as f64
 }
 
+/// Decima-style adaptive round-width rule: double `width` (clamped to
+/// `cap`) when the policy's mean entropy has stabilized between
+/// consecutive rounds — relative change ≤ 5% of the previous round's
+/// entropy — and hold it otherwise.  `prev_entropy = None` (the first
+/// round) always holds: there is nothing to compare against yet.  Pure
+/// function of its arguments so the growth schedule is unit-testable
+/// without engines or episodes.
+pub fn adaptive_round_width(
+    width: usize,
+    cap: usize,
+    prev_entropy: Option<f32>,
+    entropy: f32,
+) -> usize {
+    let cap = cap.max(width); // a cap below the starting width never shrinks
+    let Some(prev) = prev_entropy else {
+        return width;
+    };
+    let stable = (entropy - prev).abs() <= 0.05 * prev.abs().max(1e-6);
+    if stable {
+        (width.saturating_mul(2)).min(cap)
+    } else {
+        width
+    }
+}
+
 /// The valid heuristic baseline names, in canonical order.  Error
 /// messages for unknown names (harness, CLI) enumerate this list.
 pub const BASELINE_NAMES: [&str; 5] = ["drf", "fifo", "srtf", "tetris", "optimus"];
@@ -450,5 +513,54 @@ pub fn baseline_by_name(name: &str) -> Option<Box<dyn Scheduler>> {
         "tetris" => Some(Box::new(Tetris::default())),
         "optimus" => Some(Box::new(Optimus::default())),
         _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_width_grows_only_when_entropy_stable() {
+        // First round: nothing to compare against, width holds.
+        assert_eq!(adaptive_round_width(4, 32, None, 1.0), 4);
+        // Entropy still moving (>5% relative change): hold.
+        assert_eq!(adaptive_round_width(4, 32, Some(1.0), 0.8), 4);
+        assert_eq!(adaptive_round_width(4, 32, Some(1.0), 1.2), 4);
+        // Stabilized: double.
+        assert_eq!(adaptive_round_width(4, 32, Some(1.0), 1.01), 8);
+        assert_eq!(adaptive_round_width(8, 32, Some(0.5), 0.5), 16);
+        // The cap clamps growth and never shrinks the current width.
+        assert_eq!(adaptive_round_width(16, 20, Some(0.5), 0.5), 20);
+        assert_eq!(adaptive_round_width(32, 32, Some(0.5), 0.5), 32);
+        assert_eq!(adaptive_round_width(8, 4, Some(0.5), 0.5), 8);
+        // Near-zero entropy floors the denominator instead of dividing
+        // by zero; exact repeats still count as stable.
+        assert_eq!(adaptive_round_width(4, 32, Some(0.0), 0.0), 8);
+    }
+
+    #[test]
+    fn adaptive_schedule_covers_exact_budget() {
+        // Simulated loop: whatever the growth pattern, the while-loop
+        // grouping must cover each flat episode index exactly once.
+        let (rounds, per_round, cap) = (6, 4, 16);
+        let total = rounds * per_round;
+        let entropies = [1.0f32, 0.99, 0.5, 0.5, 0.5, 0.5, 0.5, 0.5];
+        let mut seen = Vec::new();
+        let mut done = 0;
+        let mut width = per_round;
+        let mut prev = None;
+        let mut round = 0;
+        while done < total {
+            let take = width.min(total - done);
+            seen.extend(done..done + take);
+            done += take;
+            let e = entropies[round.min(entropies.len() - 1)];
+            width = adaptive_round_width(width, cap, prev, e);
+            prev = Some(e);
+            round += 1;
+        }
+        assert_eq!(seen, (0..total).collect::<Vec<_>>());
+        assert!(round < rounds, "stable entropy must widen rounds");
     }
 }

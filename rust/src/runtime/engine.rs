@@ -5,8 +5,30 @@
 //! this path — `make artifacts` ran once at build time; at runtime we load
 //! `artifacts/{name}_j{J}.hlo.txt`, compile on the CPU PJRT client, and
 //! execute with flat-vector literals.
+//!
+//! # Policy-inference tiers
+//!
+//! Three entry points trade generality for throughput:
+//!
+//! 1. [`Engine::policy_infer`] — single state, θ uploaded per call.
+//! 2. [`Engine::policy_infer_state`] — single state with
+//!    device-resident θ (uploaded once per [`TrainState`] generation).
+//! 3. [`Engine::policy_infer_rows`] / [`Engine::policy_infer_batch`] —
+//!    a whole round of states through the true `[B × S] → [B × A]`
+//!    bucketed artifacts (`policy_infer_b{B}_j{J}`): the round is
+//!    chunked by [`bucket_plan`], each chunk zero-padded up to its
+//!    power-of-two bucket width, executed once, and the padding rows
+//!    truncated from the result.
+//!
+//! Tier 3 falls back to tier-2 rows whenever the manifest lists no
+//! bucket widths, or when the row-at-a-time **bitwise reference path**
+//! is forced (`DL2_INFER_REFERENCE` env, or
+//! [`Engine::set_infer_reference`] per engine).  Padding rows are
+//! discarded before anyone reads them and every row is a pure function
+//! of (θ, state), so bucket composition can never change results — the
+//! reference path exists to pin exactly that.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -54,6 +76,84 @@ pub fn batch_infer_rows() -> usize {
     BATCH_ROWS.load(Ordering::Relaxed)
 }
 
+/// Process-wide bucketed `[B × S]` executable compiles and executions
+/// (one compile per `policy_infer_b{B}_j{J}` some engine first uses; one
+/// execution per padded chunk dispatched).
+static BUCKET_COMPILES: AtomicUsize = AtomicUsize::new(0);
+static BUCKET_EXECUTES: AtomicUsize = AtomicUsize::new(0);
+
+/// Cross-episode observation-dedup hits: parked rows the lockstep driver
+/// (`sim::batched`) resolved from another episode's identical
+/// `(state, mask)` row instead of a fresh inference.  Lives beside
+/// `BATCH_CALLS`/`BATCH_ROWS` so one accessor family covers the whole
+/// realized-vs-logical batching story.
+static DEDUP_HITS: AtomicUsize = AtomicUsize::new(0);
+
+/// Total bucketed-executable compilations so far in this process.
+pub fn bucket_compiles() -> usize {
+    BUCKET_COMPILES.load(Ordering::Relaxed)
+}
+
+/// Total bucketed `[B × S]` executions so far in this process.
+pub fn bucket_executes() -> usize {
+    BUCKET_EXECUTES.load(Ordering::Relaxed)
+}
+
+/// Total cross-episode dedup hits so far in this process.
+pub fn dedup_hits() -> usize {
+    DEDUP_HITS.load(Ordering::Relaxed)
+}
+
+/// Record `n` dedup hits (called by the lockstep driver per round).
+pub fn note_dedup_hits(n: usize) {
+    DEDUP_HITS.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Is the row-at-a-time bitwise reference path forced process-wide?
+/// (`DL2_INFER_REFERENCE` set to anything but `0`/empty.)
+pub fn infer_reference_env() -> bool {
+    std::env::var_os("DL2_INFER_REFERENCE").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Per-bucket compile/execute counters for one engine (see
+/// [`Engine::bucket_counters`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BucketCounters {
+    pub compiles: usize,
+    pub executes: usize,
+}
+
+/// Chunk a round of `n` rows over the available bucket widths: each
+/// `(rows, bucket)` chunk carries `rows ≤ bucket` real rows, padded up
+/// to `bucket`.  Full chunks of the largest bucket are peeled off first;
+/// the tail takes the smallest bucket that fits it, so a handful of
+/// compiled executables cover any round width.
+pub fn bucket_plan(buckets: &[usize], n: usize) -> Vec<(usize, usize)> {
+    debug_assert!(
+        buckets.windows(2).all(|w| w[0] < w[1]),
+        "bucket widths must be strictly ascending: {buckets:?}"
+    );
+    if n == 0 {
+        return Vec::new();
+    }
+    assert!(!buckets.is_empty(), "bucket_plan needs at least one bucket");
+    let largest = *buckets.last().unwrap();
+    let mut plan = Vec::new();
+    let mut left = n;
+    while left >= largest {
+        plan.push((largest, largest));
+        left -= largest;
+    }
+    if left > 0 {
+        let bucket = *buckets
+            .iter()
+            .find(|&&b| b >= left)
+            .expect("tail smaller than largest bucket always fits");
+        plan.push((left, bucket));
+    }
+    plan
+}
+
 /// Losses reported by one `rl_step` execution.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RlLosses {
@@ -76,6 +176,12 @@ pub struct Engine {
     /// buffer).  Re-uploaded only when the parameters actually changed —
     /// cuts ~600 KB of host→device traffic off every inference (§Perf).
     policy_bufs: HashMap<usize, (u64, xla::PjRtBuffer)>,
+    /// Per-engine override of the row-at-a-time reference mode (`None`
+    /// defers to `DL2_INFER_REFERENCE`).  Cross-owner state: cleared by
+    /// the pool's recycle hook.
+    infer_reference: Option<bool>,
+    /// Per-bucket compile/execute counters for this engine.
+    bucket_log: BTreeMap<usize, BucketCounters>,
 }
 
 impl Engine {
@@ -93,7 +199,29 @@ impl Engine {
             meta,
             executables: HashMap::new(),
             policy_bufs: HashMap::new(),
+            infer_reference: None,
+            bucket_log: BTreeMap::new(),
         })
+    }
+
+    /// Force (`Some(true)`) or suppress (`Some(false)`) the row-at-a-time
+    /// reference path for this engine; `None` defers to the
+    /// `DL2_INFER_REFERENCE` environment switch.
+    pub fn set_infer_reference(&mut self, force: Option<bool>) {
+        self.infer_reference = force;
+    }
+
+    /// Must batch inference take the row-at-a-time bitwise reference
+    /// path?  True when forced (per-engine override, else the
+    /// `DL2_INFER_REFERENCE` env switch) or when the manifest lists no
+    /// bucketed `[B × S]` artifacts to execute.
+    pub fn infer_reference(&self) -> bool {
+        self.infer_reference.unwrap_or_else(infer_reference_env) || self.meta.buckets.is_empty()
+    }
+
+    /// This engine's per-bucket compile/execute counters.
+    pub fn bucket_counters(&self) -> &BTreeMap<usize, BucketCounters> {
+        &self.bucket_log
     }
 
     pub fn artifacts_dir(&self) -> &std::path::Path {
@@ -138,10 +266,29 @@ impl Engine {
         Ok(&self.executables[&key])
     }
 
-    /// Pre-compile every artifact for a given J (avoids first-use latency).
+    /// Pre-compile every artifact for a given J (avoids first-use
+    /// latency), including the bucketed `[B × S]` policy-infer variants
+    /// when the manifest lists bucket widths.
     pub fn warmup(&mut self, j: usize) -> Result<()> {
         for name in ["policy_infer", "value_infer", "sl_step", "rl_step", "pg_step"] {
             self.executable(name, j)?;
+        }
+        for bucket in self.meta.buckets.clone() {
+            self.bucket_executable(bucket, j)?;
+        }
+        Ok(())
+    }
+
+    /// Compile (or fetch cached) the bucketed `policy_infer_b{B}_j{J}`
+    /// executable, bumping the bucket compile counters on a fresh
+    /// compile.
+    fn bucket_executable(&mut self, bucket: usize, j: usize) -> Result<()> {
+        let name = format!("policy_infer_b{bucket}");
+        let fresh = !self.executables.contains_key(&format!("{name}_j{j}"));
+        self.executable(&name, j)?;
+        if fresh {
+            BUCKET_COMPILES.fetch_add(1, Ordering::Relaxed);
+            self.bucket_log.entry(bucket).or_default().compiles += 1;
         }
         Ok(())
     }
@@ -183,17 +330,7 @@ impl Engine {
         let spec = *self.meta.spec(j);
         debug_assert_eq!(pol.theta.len(), spec.policy_params);
         debug_assert_eq!(state.len(), spec.state_dim);
-        let stale = match self.policy_bufs.get(&j) {
-            Some((gen, _)) => *gen != pol.gen,
-            None => true,
-        };
-        if stale {
-            let buf = self
-                .ensure_client()?
-                .buffer_from_host_buffer(&pol.theta, &[pol.theta.len()], None)
-                .map_err(err)?;
-            self.policy_bufs.insert(j, (pol.gen, buf));
-        }
+        self.upload_policy(j, pol)?;
         let state_buf = self
             .ensure_client()?
             .buffer_from_host_buffer(state, &[state.len()], None)
@@ -211,27 +348,114 @@ impl Engine {
         Ok(probs)
     }
 
+    /// Upload `pol`'s θ for `j` unless the device-resident copy is
+    /// already at `pol.gen` (the generation cache behind every
+    /// batch-inference tier).
+    fn upload_policy(&mut self, j: usize, pol: &TrainState) -> Result<()> {
+        let stale = match self.policy_bufs.get(&j) {
+            Some((gen, _)) => *gen != pol.gen,
+            None => true,
+        };
+        if stale {
+            let buf = self
+                .ensure_client()?
+                .buffer_from_host_buffer(&pol.theta, &[pol.theta.len()], None)
+                .map_err(err)?;
+            self.policy_bufs.insert(j, (pol.gen, buf));
+        }
+        Ok(())
+    }
+
     /// π(a|s) over a batch of states sharing one θ: the pooled-engine
     /// entry point for cross-episode lockstep inference
-    /// (`sim::batched`).  θ is uploaded at most once for the whole call
-    /// (the generation cache in [`Engine::policy_infer_state`] makes
-    /// rows 2..n device-resident hits), so a call with `n` rows costs
-    /// one parameter upload plus `n` executions instead of `n` of each.
-    /// Row execution stays per-state until a true `[batch × S]`
-    /// policy-infer artifact is AOT'd; callers only depend on the
-    /// call-shape, so that swap stays local to this method.
+    /// (`sim::batched`).  In the default bucketed mode the rows are
+    /// flattened and dispatched through the true `[B × S]` artifacts
+    /// ([`Engine::policy_infer_rows`]); in reference mode
+    /// ([`Engine::infer_reference`]) each row executes per-state with
+    /// device-resident θ — bitwise identical by construction, retained
+    /// as the pin for the bucketed path.
     pub fn policy_infer_batch(
         &mut self,
         j: usize,
         pol: &TrainState,
         states: &[Vec<f32>],
     ) -> Result<Vec<Vec<f32>>> {
+        if self.infer_reference() {
+            BATCH_CALLS.fetch_add(1, Ordering::Relaxed);
+            BATCH_ROWS.fetch_add(states.len(), Ordering::Relaxed);
+            return states
+                .iter()
+                .map(|state| self.policy_infer_state(j, pol, state))
+                .collect();
+        }
+        let state_dim = self.meta.spec(j).state_dim;
+        let mut flat = Vec::with_capacity(states.len() * state_dim);
+        for state in states {
+            debug_assert_eq!(state.len(), state_dim);
+            flat.extend_from_slice(state);
+        }
+        self.policy_infer_rows(j, pol, &flat)
+    }
+
+    /// π(a|s) over `n = rows.len() / S` states stored row-major in
+    /// `rows` (the arena-backed fast path — no per-row `Vec` required).
+    /// Bucketed mode chunks the round via [`bucket_plan`], zero-pads
+    /// each chunk up to its bucket width, executes
+    /// `policy_infer_b{B}_j{J}` once per chunk with device-resident θ,
+    /// and truncates the padding rows from the `[B × A]` result;
+    /// reference mode executes row-at-a-time.
+    pub fn policy_infer_rows(
+        &mut self,
+        j: usize,
+        pol: &TrainState,
+        rows: &[f32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let spec = *self.meta.spec(j);
+        debug_assert_eq!(rows.len() % spec.state_dim, 0);
+        let n = rows.len() / spec.state_dim;
         BATCH_CALLS.fetch_add(1, Ordering::Relaxed);
-        BATCH_ROWS.fetch_add(states.len(), Ordering::Relaxed);
-        states
-            .iter()
-            .map(|state| self.policy_infer_state(j, pol, state))
-            .collect()
+        BATCH_ROWS.fetch_add(n, Ordering::Relaxed);
+        if self.infer_reference() {
+            return rows
+                .chunks(spec.state_dim)
+                .map(|state| self.policy_infer_state(j, pol, state))
+                .collect();
+        }
+        self.upload_policy(j, pol)?;
+        let buckets = self.meta.buckets.clone();
+        let mut out: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut offset = 0usize;
+        let mut padded: Vec<f32> = Vec::new();
+        for (take, bucket) in bucket_plan(&buckets, n) {
+            padded.clear();
+            padded.extend_from_slice(
+                &rows[offset * spec.state_dim..(offset + take) * spec.state_dim],
+            );
+            padded.resize(bucket * spec.state_dim, 0.0);
+            self.bucket_executable(bucket, j)?;
+            let state_buf = self
+                .ensure_client()?
+                .buffer_from_host_buffer(&padded, &[bucket, spec.state_dim], None)
+                .map_err(err)?;
+            let exe = &self.executables[&format!("policy_infer_b{bucket}_j{j}")];
+            let theta_buf = &self.policy_bufs[&j].1;
+            let result = exe
+                .execute_b::<&xla::PjRtBuffer>(&[theta_buf, &state_buf])
+                .map_err(|e| {
+                    anyhow::anyhow!("executing policy_infer_b{bucket}_j{j} failed: {e:?}")
+                })?;
+            BUCKET_EXECUTES.fetch_add(1, Ordering::Relaxed);
+            self.bucket_log.entry(bucket).or_default().executes += 1;
+            let literal = result[0][0].to_literal_sync().map_err(err)?;
+            let tuple = literal.to_tuple().map_err(err)?;
+            let flat = tuple[0].to_vec::<f32>().map_err(err)?;
+            debug_assert_eq!(flat.len(), bucket * spec.num_actions);
+            for r in 0..take {
+                out.push(flat[r * spec.num_actions..(r + 1) * spec.num_actions].to_vec());
+            }
+            offset += take;
+        }
+        Ok(out)
     }
 
     /// V(s): single-state critic evaluation.
@@ -391,4 +615,72 @@ pub fn default_artifacts_dir() -> PathBuf {
 /// Convenience: engine from the default artifacts location.
 pub fn load_default_engine() -> Result<Engine> {
     Engine::load(default_artifacts_dir()).context("loading AOT artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::FeatureSet;
+
+    #[test]
+    fn bucket_plan_covers_any_width() {
+        let buckets = [2, 4, 8];
+        assert_eq!(bucket_plan(&buckets, 0), vec![]);
+        assert_eq!(bucket_plan(&buckets, 1), vec![(1, 2)]);
+        assert_eq!(bucket_plan(&buckets, 2), vec![(2, 2)]);
+        assert_eq!(bucket_plan(&buckets, 3), vec![(3, 4)]);
+        assert_eq!(bucket_plan(&buckets, 4), vec![(4, 4)]);
+        assert_eq!(bucket_plan(&buckets, 5), vec![(5, 8)]);
+        assert_eq!(bucket_plan(&buckets, 8), vec![(8, 8)]);
+        assert_eq!(bucket_plan(&buckets, 9), vec![(8, 8), (1, 2)]);
+        assert_eq!(bucket_plan(&buckets, 21), vec![(8, 8), (8, 8), (5, 8)]);
+        // Every plan accounts for exactly n rows, never exceeds buckets.
+        for n in 0..100 {
+            let plan = bucket_plan(&buckets, n);
+            assert_eq!(plan.iter().map(|&(r, _)| r).sum::<usize>(), n);
+            assert!(plan.iter().all(|&(r, b)| r <= b && buckets.contains(&b)));
+        }
+    }
+
+    #[test]
+    fn reference_mode_resolution() {
+        let dir = std::env::temp_dir().join("dl2_engine_mode_test");
+        // No buckets in the manifest → always the reference path.
+        Meta::write_minimal(&dir, crate::cluster::NUM_TYPES, 16, 8, &[5]).unwrap();
+        let mut engine = Engine::load(&dir).unwrap();
+        assert!(engine.infer_reference(), "bucket-less manifests have no fast path");
+        engine.set_infer_reference(Some(false));
+        assert!(engine.infer_reference(), "cannot force buckets that don't exist");
+
+        // Buckets present → bucketed by default, override wins either way.
+        let dir = std::env::temp_dir().join("dl2_engine_mode_bucketed_test");
+        Meta::write_minimal_buckets(
+            &dir,
+            crate::cluster::NUM_TYPES,
+            16,
+            8,
+            &[5],
+            FeatureSet::V1,
+            &[2, 4],
+        )
+        .unwrap();
+        let mut engine = Engine::load(&dir).unwrap();
+        assert_eq!(engine.meta.buckets, vec![2, 4]);
+        if !infer_reference_env() {
+            assert!(!engine.infer_reference(), "buckets present → fast path default");
+        }
+        engine.set_infer_reference(Some(true));
+        assert!(engine.infer_reference());
+        engine.set_infer_reference(None);
+        assert_eq!(engine.infer_reference(), infer_reference_env());
+        assert!(engine.bucket_counters().is_empty(), "nothing compiled yet");
+    }
+
+    #[test]
+    fn dedup_counter_accumulates() {
+        let before = dedup_hits();
+        note_dedup_hits(3);
+        note_dedup_hits(2);
+        assert!(dedup_hits() >= before + 5);
+    }
 }

@@ -55,6 +55,12 @@ pub struct Meta {
     pub feature_fp: u64,
     /// Available J values, ascending.
     pub js: Vec<usize>,
+    /// Bucketed batch widths for the true `[B × S]` policy-infer
+    /// artifacts (`policy_infer_b{B}_j{J}.hlo.txt`): strictly ascending
+    /// powers of two.  Empty (the `buckets=` key absent — every
+    /// pre-bucket manifest) means only the row-at-a-time reference path
+    /// exists.
+    pub buckets: Vec<usize>,
     pub specs: BTreeMap<usize, SpecMeta>,
 }
 
@@ -109,6 +115,28 @@ impl Meta {
         if js.is_empty() {
             bail!("meta.txt lists no J values");
         }
+        // Bucketed `[B × S]` batch widths (optional; absent on every
+        // pre-bucket manifest).  The engine pads a round up to the
+        // smallest listed width, so the list must be strictly ascending
+        // powers of two for the padding math to be well-defined.
+        let buckets: Vec<usize> = match kv.get("buckets").map(|s| s.trim()) {
+            None | Some("") => Vec::new(),
+            Some(list) => {
+                let bs: Vec<usize> = list
+                    .split(',')
+                    .map(|s| s.trim().parse::<usize>().map_err(Into::into))
+                    .collect::<Result<_>>()?;
+                for &b in &bs {
+                    if !b.is_power_of_two() {
+                        bail!("bucket width {b} is not a power of two");
+                    }
+                }
+                if !bs.windows(2).all(|w| w[0] < w[1]) {
+                    bail!("bucket widths must be strictly ascending: {bs:?}");
+                }
+                bs
+            }
+        };
         let mut specs = BTreeMap::new();
         for &j in &js {
             let g = |suffix: &str| -> Result<usize> {
@@ -156,6 +184,7 @@ impl Meta {
             features,
             feature_fp,
             js,
+            buckets,
             specs,
         })
     }
@@ -200,6 +229,22 @@ impl Meta {
         js: &[usize],
         features: FeatureSet,
     ) -> Result<()> {
+        Self::write_minimal_buckets(dir, num_types, hidden, batch, js, features, &[])
+    }
+
+    /// [`Meta::write_minimal_with`] plus a `buckets=` line naming the
+    /// bucketed `[B × S]` batch widths — what the bucket-path unit tests
+    /// and benches use to exercise mode selection without the python
+    /// emitter.
+    pub fn write_minimal_buckets<P: AsRef<Path>>(
+        dir: P,
+        num_types: usize,
+        hidden: usize,
+        batch: usize,
+        js: &[usize],
+        features: FeatureSet,
+        buckets: &[usize],
+    ) -> Result<()> {
         use std::fmt::Write as _;
         assert!(!js.is_empty(), "need at least one J value");
         let schema = features.schema(num_types);
@@ -211,6 +256,10 @@ impl Meta {
         writeln!(text, "feat_fp={}", schema.fingerprint()).unwrap();
         let js_list: Vec<String> = js.iter().map(|j| j.to_string()).collect();
         writeln!(text, "js={}", js_list.join(",")).unwrap();
+        if !buckets.is_empty() {
+            let list: Vec<String> = buckets.iter().map(|b| b.to_string()).collect();
+            writeln!(text, "buckets={}", list.join(",")).unwrap();
+        }
         for &j in js {
             let s = schema.state_dim(j);
             let a = 3 * j + 1;
@@ -362,6 +411,34 @@ j10.PV=99585
             .replace("features=v1", "features=v2")
             .replace(&format!("feat_fp={v1_fp}"), &format!("feat_fp={v2_fp}"));
         assert!(Meta::parse(&tampered).is_err());
+    }
+
+    #[test]
+    fn buckets_default_empty_and_round_trip() {
+        // Pre-bucket manifests (no `buckets=` key) load with no buckets.
+        let meta = Meta::parse(&fixed_sample()).unwrap();
+        assert!(meta.buckets.is_empty());
+        let dir = std::env::temp_dir().join("dl2_meta_buckets_test");
+        Meta::write_minimal_buckets(&dir, 8, 16, 4, &[5], FeatureSet::V1, &[2, 8, 32]).unwrap();
+        let meta = Meta::load(&dir).unwrap();
+        assert_eq!(meta.buckets, vec![2, 8, 32]);
+        // write_minimal_with emits no buckets line at all.
+        Meta::write_minimal_with(&dir, 8, 16, 4, &[5], FeatureSet::V1).unwrap();
+        let text = std::fs::read_to_string(dir.join("meta.txt")).unwrap();
+        assert!(!text.contains("buckets="));
+        assert!(Meta::parse(&text).unwrap().buckets.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_buckets() {
+        let base = fixed_sample();
+        for bad in ["buckets=3", "buckets=8,4", "buckets=4,4"] {
+            let text = format!("{base}{bad}\n");
+            assert!(Meta::parse(&text).is_err(), "{bad} must be rejected");
+        }
+        // Empty value is tolerated (no buckets).
+        let text = format!("{base}buckets=\n");
+        assert!(Meta::parse(&text).unwrap().buckets.is_empty());
     }
 
     #[test]

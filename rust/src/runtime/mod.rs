@@ -5,6 +5,32 @@
 //! those artifacts via the `xla` crate (`PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `compile` → `execute`), so the
 //! coordinator's hot path is pure rust + native XLA.
+//!
+//! # The three policy-inference tiers
+//!
+//! Inference throughput is the simulator's hot path, so the engine
+//! exposes three tiers (see `engine` for details):
+//!
+//! 1. **Single-state** ([`Engine::policy_infer`]) — θ uploaded per call;
+//!    the simple entry point and the unit of the original paper's loop.
+//! 2. **Device-resident-θ rows** ([`Engine::policy_infer_state`]) — θ
+//!    uploaded once per [`TrainState`] generation, each state still a
+//!    separate dispatch.  This is also the **bitwise reference path**
+//!    for tier 3 (`DL2_INFER_REFERENCE`, or
+//!    [`Engine::set_infer_reference`] per engine).
+//! 3. **True `[B × S]` buckets** ([`Engine::policy_infer_rows`] /
+//!    [`Engine::policy_infer_batch`]) — a whole lockstep round executes
+//!    through a handful of power-of-two-width
+//!    `policy_infer_b{B}_j{J}` artifacts ([`bucket_plan`]): chunks are
+//!    zero-padded to the bucket width, dispatched once, and the padding
+//!    rows truncated from the `[B × A]` result.
+//!
+//! **Bitwise-reference guarantee:** every row of every tier is a pure
+//! function of (θ, state); padding rows are discarded before anyone
+//! reads them; and `tests/infer_batch.rs` pins the bucketed path
+//! row-for-row against the tier-2 reference across bucket boundaries —
+//! so tier selection (and batch composition) can never change episode
+//! results.
 
 pub mod engine;
 pub mod meta;
@@ -12,7 +38,9 @@ pub mod params;
 pub mod pool;
 
 pub use engine::{
-    compile_count, default_artifacts_dir, engine_loads, load_default_engine, Engine, RlLosses,
+    batch_infer_calls, batch_infer_rows, bucket_compiles, bucket_executes, bucket_plan,
+    compile_count, dedup_hits, default_artifacts_dir, engine_loads, infer_reference_env,
+    load_default_engine, note_dedup_hits, BucketCounters, Engine, RlLosses,
 };
 pub use meta::{Meta, SpecMeta};
 pub use params::{load_params, save_params, TrainState};

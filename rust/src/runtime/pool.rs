@@ -11,11 +11,13 @@
 //! reuses it.
 //!
 //! Determinism: pooled reuse cannot change results.  Episode outcomes
-//! depend only on (scenario, θ); the single piece of cross-owner engine
-//! state — the device-resident parameter cache keyed by
-//! `TrainState.gen`, which counts mutations per *instance* — is cleared
-//! by the checkout hook ([`Engine::reset_device_cache`]), so a recycled
-//! engine can never serve a previous owner's parameters.
+//! depend only on (scenario, θ); the cross-owner engine state — the
+//! device-resident parameter cache keyed by `TrainState.gen`, which
+//! counts mutations per *instance*, plus any per-engine
+//! inference-tier override ([`Engine::set_infer_reference`]) — is
+//! cleared by the checkout hook, so a recycled engine can never serve a
+//! previous owner's parameters or inherit its forced reference/fast
+//! path.
 //!
 //! [`Pool`] is deliberately generic: the checkout/recycle/counting
 //! machinery is property-tested against cheap fake resources, and
@@ -229,10 +231,10 @@ impl EnginePool {
     /// Fresh (unshared) pool loading engines from `dir`.
     pub fn new<P: Into<PathBuf>>(dir: P) -> EnginePool {
         let dir = dir.into();
-        Pool::with_factory_and_recycle(
-            move || Engine::load(&dir),
-            Engine::reset_device_cache,
-        )
+        Pool::with_factory_and_recycle(move || Engine::load(&dir), |e: &mut Engine| {
+            e.reset_device_cache();
+            e.set_infer_reference(None);
+        })
     }
 
     /// The process-wide shared pool for `dir`: every call site (trainer
@@ -400,6 +402,33 @@ mod tests {
         let pool: Pool<u8> = Pool::with_factory(|| anyhow::bail!("no backend"));
         assert!(pool.checkout().is_err());
         assert_eq!(pool.built(), 0);
+    }
+
+    #[test]
+    fn recycle_clears_infer_reference_override() {
+        let dir = std::env::temp_dir().join("dl2_pool_infer_ref_test");
+        crate::runtime::Meta::write_minimal_buckets(
+            &dir,
+            crate::cluster::NUM_TYPES,
+            16,
+            8,
+            &[5],
+            crate::scheduler::FeatureSet::V1,
+            &[2, 4],
+        )
+        .unwrap();
+        let pool = EnginePool::new(&dir);
+        {
+            let mut guard = pool.checkout().unwrap();
+            assert!(!guard.infer_reference(), "bucketed manifest defaults fast");
+            guard.set_infer_reference(Some(true));
+            assert!(guard.infer_reference());
+        } // checked back in with the override set
+        let guard = pool.checkout().unwrap();
+        assert!(
+            !guard.infer_reference(),
+            "recycle hook must clear a previous owner's tier override"
+        );
     }
 
     #[test]

@@ -261,6 +261,25 @@ impl Dl2Scheduler {
         batch: &[usize],
         seq: &SlotSeq,
     ) -> Option<(Vec<f32>, Vec<bool>)> {
+        let mut state = vec![0.0f32; self.schema.state_dim(self.cfg.j)];
+        let mask = self.seq_observe_into(cluster, placement, batch, seq, &mut state)?;
+        Some((state, mask))
+    }
+
+    /// [`Dl2Scheduler::seq_observe`] into a caller-owned row buffer (the
+    /// batch-arena fast path): encodes the state directly into `out`
+    /// (exactly `state_dim(j)` long) and returns the action mask, or
+    /// `None` when the sequence is over — in which case `out` is left
+    /// untouched.  `seq_observe` is a thin allocating wrapper, so the
+    /// two are bitwise identical.
+    pub fn seq_observe_into(
+        &self,
+        cluster: &Cluster,
+        placement: &crate::cluster::Placement,
+        batch: &[usize],
+        seq: &SlotSeq,
+        out: &mut [f32],
+    ) -> Option<Vec<bool>> {
         if seq.done || seq.steps_left == 0 {
             return None;
         }
@@ -269,10 +288,9 @@ impl Dl2Scheduler {
         if mask.iter().filter(|&&m| m).count() <= 1 {
             return None; // only void remains
         }
-        let state = self
-            .schema
-            .encode(cluster, Some(placement), batch, &seq.walloc, &seq.palloc, j);
-        Some((state, mask))
+        self.schema
+            .encode_into(cluster, Some(placement), batch, &seq.walloc, &seq.palloc, j, out);
+        Some(mask)
     }
 
     /// Consume one inference result: pick the action (exploration
@@ -290,6 +308,53 @@ impl Dl2Scheduler {
         mask: &[bool],
         probs: &[f32],
     ) {
+        let action = self.seq_choose(seq, batch.len(), mask, probs);
+        if self.training {
+            self.transitions.push(Transition {
+                state,
+                action,
+                slot: cluster.slot,
+            });
+        }
+        self.seq_apply(cluster, placement, batch, seq, action);
+    }
+
+    /// [`Dl2Scheduler::seq_step`] with a borrowed state row — the
+    /// batch-arena fast path.  The state is copied only when a training
+    /// transition actually records it, so greedy evaluation consumes the
+    /// arena row with zero per-inference allocation.  Identical decision
+    /// code (and RNG consumption) to `seq_step`, so the two are bitwise
+    /// interchangeable.
+    pub fn seq_step_ref(
+        &mut self,
+        cluster: &Cluster,
+        placement: &mut crate::cluster::Placement,
+        batch: &[usize],
+        seq: &mut SlotSeq,
+        state: &[f32],
+        mask: &[bool],
+        probs: &[f32],
+    ) {
+        let action = self.seq_choose(seq, batch.len(), mask, probs);
+        if self.training {
+            self.transitions.push(Transition {
+                state: state.to_vec(),
+                action,
+                slot: cluster.slot,
+            });
+        }
+        self.seq_apply(cluster, placement, batch, seq, action);
+    }
+
+    /// Pick the sequence's next action (exploration override / greedy
+    /// argmax / sampled) and burn one step of the inference budget.
+    fn seq_choose(
+        &mut self,
+        seq: &mut SlotSeq,
+        batch_len: usize,
+        mask: &[bool],
+        probs: &[f32],
+    ) -> usize {
         let j = self.cfg.j;
         seq.steps_left -= 1;
         let masked = mask_probs(probs, mask);
@@ -297,16 +362,14 @@ impl Dl2Scheduler {
         // Job-aware ε-greedy exploration (§4.3), training mode only.
         let mut action = None;
         if self.training && self.cfg.explore.enabled {
-            if let Some(fix) =
-                self.poor_state_action(mask, &seq.walloc, &seq.palloc, batch.len())
-            {
+            if let Some(fix) = self.poor_state_action(mask, &seq.walloc, &seq.palloc, batch_len) {
                 if self.rng.bool(self.cfg.explore.epsilon) {
                     action = Some(fix);
                     self.explored += 1;
                 }
             }
         }
-        let action = action.unwrap_or_else(|| {
+        action.unwrap_or_else(|| {
             if !self.training && self.cfg.argmax_eval {
                 // Greedy evaluation: the mode of the masked policy.
                 masked
@@ -318,15 +381,20 @@ impl Dl2Scheduler {
             } else {
                 self.rng.sample_probs(&masked)
             }
-        });
+        })
+    }
 
-        if self.training {
-            self.transitions.push(Transition {
-                state,
-                action,
-                slot: cluster.slot,
-            });
-        }
+    /// Apply a chosen action to the sequence: mark it done on void, or
+    /// grow the placement and the batch-local allocation.
+    fn seq_apply(
+        &mut self,
+        cluster: &Cluster,
+        placement: &mut crate::cluster::Placement,
+        batch: &[usize],
+        seq: &mut SlotSeq,
+        action: usize,
+    ) {
+        let j = self.cfg.j;
         if action >= void_action(j) {
             seq.done = true;
             return;

@@ -264,9 +264,38 @@ impl FeatureSchema {
         palloc: &[usize],
         j: usize,
     ) -> Vec<f32> {
+        let mut s = vec![0.0f32; self.state_dim(j)];
+        self.encode_into(cluster, placement, batch, walloc, palloc, j, &mut s);
+        s
+    }
+
+    /// [`FeatureSchema::encode`] into a caller-owned buffer: writes the
+    /// observation directly into `out` (exactly
+    /// [`state_dim(j)`](Self::state_dim) long, zero-filled first), so a
+    /// batch driver can encode each episode's row straight into a
+    /// reusable row-major arena with zero per-inference heap allocation.
+    /// `encode` is a thin allocating wrapper around this — the two are
+    /// bitwise identical by construction.
+    #[allow(clippy::too_many_arguments)]
+    pub fn encode_into(
+        &self,
+        cluster: &Cluster,
+        placement: Option<&Placement>,
+        batch: &[usize],
+        walloc: &[usize],
+        palloc: &[usize],
+        j: usize,
+        out: &mut [f32],
+    ) {
         debug_assert!(batch.len() <= j);
         let row = self.row_width();
-        let mut s = vec![0.0f32; j * row];
+        assert_eq!(
+            out.len(),
+            j * row,
+            "encode_into buffer must be state_dim(j) long"
+        );
+        out.fill(0.0);
+        let s = out;
         // Global blocks are identical in every row: compute once.
         let class_free: Option<Vec<f64>> = self
             .blocks
@@ -332,7 +361,6 @@ impl FeatureSchema {
                 off += block.width(self.num_types);
             }
         }
-        s
     }
 }
 
@@ -444,6 +472,32 @@ mod tests {
         // The v1 prefix is untouched by the new blocks.
         assert_eq!(s1[0], 1.0);
         assert!((s1[8 + 3] - 3.0 / 12.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn encode_into_matches_encode_bitwise() {
+        let c = cluster_with_jobs(3);
+        for schema in [FeatureSchema::v1(8), FeatureSchema::v2(8)] {
+            let j = 5;
+            let alloc = [3, 0, 1];
+            let ps = [1, 2, 0];
+            let expect = schema.encode(&c, None, &[0, 1, 2], &alloc, &ps, j);
+            // Pre-poison the buffer: encode_into must fully overwrite it.
+            let mut out = vec![7.5f32; schema.state_dim(j)];
+            schema.encode_into(&c, None, &[0, 1, 2], &alloc, &ps, j, &mut out);
+            let a: Vec<u32> = expect.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "schema {:?}", schema.set());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "state_dim")]
+    fn encode_into_rejects_misized_buffer() {
+        let c = cluster_with_jobs(1);
+        let schema = FeatureSchema::v1(8);
+        let mut out = vec![0.0f32; schema.state_dim(5) - 1];
+        schema.encode_into(&c, None, &[0], &[0], &[0], 5, &mut out);
     }
 
     #[test]

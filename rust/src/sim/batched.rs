@@ -22,10 +22,30 @@
 //! own row — `tests::lockstep_batched_matches_serial` pins a 3-episode
 //! lockstep run bitwise against the same episodes driven one at a time.
 //!
+//! # Arena + dedup fast path
+//!
+//! Each round's states are encoded straight into a reusable row-major
+//! arena ([`FeatureSchema::encode_into`](crate::scheduler::features::FeatureSchema::encode_into)
+//! via `Dl2Scheduler::seq_observe_into`) — zero per-inference heap
+//! allocation — and, with [`BatchOptions::dedup`] on (the default),
+//! identical `(state, mask)` rows across parked episodes collapse into
+//! one inference row whose distribution fans back out to every owner.
+//! θ is fixed within a round (one `infer` call resolves it), so the
+//! `(state, mask, θ-generation)` dedup contract degenerates to the
+//! pair; rows are compared **bitwise** (`f32::to_bits`), never by float
+//! equality, so `-0.0`/`0.0` can't merge.  Dedup only removes redundant
+//! evaluations of a pure function, so it is invisible to results —
+//! `tests::dedup_fans_out_identical_rows` and `tests/infer_batch.rs`
+//! pin that.  `DL2_INFER_REFERENCE` (or an explicit
+//! [`BatchOptions`] with `dedup: false`) restores the reference
+//! one-row-per-observation behavior.
+//!
 //! Tensor-layout safety: all episodes in one call must share a single
 //! [`FeatureSchema`](crate::scheduler::features::FeatureSchema)
 //! fingerprint (and J), otherwise rows of different widths/meanings
 //! would be fed through one artifact — checked up front, a hard error.
+
+use std::collections::HashMap;
 
 use anyhow::Result;
 
@@ -39,14 +59,92 @@ use crate::trace::generate;
 
 /// Counters from one lockstep run: how many pooled inference calls were
 /// issued and how many single-state inferences they replaced.
-/// `rows / batches` is the realized batch width.
+/// `rows / batches` is the realized batch width;
+/// `logical_rows / batches` the logical width the episodes observed.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct BatchStats {
     pub episodes: usize,
     /// Pooled inference calls issued.
     pub batches: usize,
-    /// Total states carried by those calls (= single-state calls saved).
+    /// Unique rows actually carried by those calls (realized width).
     pub rows: usize,
+    /// Observations served including dedup fan-out (logical width);
+    /// `logical_rows - rows == dedup_hits`.
+    pub logical_rows: usize,
+    /// Parked observations resolved from another episode's identical
+    /// `(state, mask)` row instead of a fresh inference row.
+    pub dedup_hits: usize,
+}
+
+/// One round's realized inference batch, borrowed from the driver's
+/// arena: `rows()` row-major states of `width()` columns each.  The
+/// `infer` callback reads this; row `k` of its output must be the
+/// policy distribution for row `k` here.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchView<'a> {
+    flat: &'a [f32],
+    width: usize,
+}
+
+impl<'a> BatchView<'a> {
+    /// Number of states in the batch.
+    pub fn rows(&self) -> usize {
+        self.flat.len() / self.width
+    }
+
+    /// Columns per state (the schema's `state_dim(j)`).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// The whole batch, row-major — exactly the shape
+    /// [`Engine::policy_infer_rows`](crate::runtime::Engine::policy_infer_rows)
+    /// consumes.
+    pub fn flat(&self) -> &'a [f32] {
+        self.flat
+    }
+
+    /// State `i`.
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.flat[i * self.width..(i + 1) * self.width]
+    }
+
+    /// Iterate the states in row order.
+    pub fn iter(&self) -> std::slice::Chunks<'a, f32> {
+        self.flat.chunks(self.width)
+    }
+}
+
+/// Knobs for the lockstep driver's fast path.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchOptions {
+    /// Collapse identical `(state, mask)` rows within a round into one
+    /// inference row (fanning the distribution back out).  Defaults to
+    /// on unless `DL2_INFER_REFERENCE` forces the reference behavior.
+    pub dedup: bool,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions {
+            dedup: !crate::runtime::infer_reference_env(),
+        }
+    }
+}
+
+/// Bitwise row comparison: float `==` would merge `-0.0` with `0.0`,
+/// which a bit-sensitive policy could distinguish.
+fn rows_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Hash of a `(state, mask)` pair for the round-local dedup index.
+fn row_hash(state: &[f32], mask: &[bool]) -> u64 {
+    let mut h = crate::util::fnv1a_f32s(state);
+    for &m in mask {
+        h = h.wrapping_mul(31).wrapping_add(m as u64 + 1);
+    }
+    h
 }
 
 /// One slot in progress: the scheduler-side scratch placement plus the
@@ -64,29 +162,47 @@ struct EpState {
     run: EpisodeRun,
     sched: Dl2Scheduler,
     slot: Option<SlotState>,
-    /// The `(state, mask)` pair awaiting this round's inference row.
-    pending: Option<(Vec<f32>, Vec<bool>)>,
+    /// Index of the unique arena row awaiting this round's inference.
+    pending: Option<usize>,
     result: Option<EpisodeResult>,
+}
+
+/// [`run_dl2_batched_opts`] with default [`BatchOptions`] (dedup on
+/// unless `DL2_INFER_REFERENCE` is set).
+pub fn run_dl2_batched_with<F>(
+    specs: &[ScenarioSpec],
+    scheds: Vec<Dl2Scheduler>,
+    infer: F,
+) -> Result<(Vec<EpisodeResult>, Vec<Dl2Scheduler>, BatchStats)>
+where
+    F: for<'a> FnMut(BatchView<'a>) -> Result<Vec<Vec<f32>>>,
+{
+    run_dl2_batched_opts(specs, scheds, infer, BatchOptions::default())
 }
 
 /// Drive `specs.len()` episodes in lockstep, resolving each round's
 /// pending observations with one `infer` call (row *k* of the output
-/// must be the policy distribution for state *k* of the input).
+/// must be the policy distribution for row *k* of the [`BatchView`]).
+///
+/// Each round's states are encoded into a reused row-major arena; with
+/// `opts.dedup` on, identical `(state, mask)` rows collapse into one
+/// inference row and the distribution fans back out (see module docs).
 ///
 /// Generic over the inference function so the lockstep protocol can be
 /// tested offline with a deterministic fake; production use goes through
 /// [`run_dl2_batched`], which binds `infer` to a pooled engine's
-/// [`Engine::policy_infer_batch`](crate::runtime::Engine::policy_infer_batch).
+/// [`Engine::policy_infer_rows`](crate::runtime::Engine::policy_infer_rows).
 /// Returns the per-episode results (in
 /// `specs` order), the schedulers back (transitions and engines intact),
 /// and the batch counters.
-pub fn run_dl2_batched_with<F>(
+pub fn run_dl2_batched_opts<F>(
     specs: &[ScenarioSpec],
     scheds: Vec<Dl2Scheduler>,
     mut infer: F,
+    opts: BatchOptions,
 ) -> Result<(Vec<EpisodeResult>, Vec<Dl2Scheduler>, BatchStats)>
 where
-    F: FnMut(&[Vec<f32>]) -> Result<Vec<Vec<f32>>>,
+    F: for<'a> FnMut(BatchView<'a>) -> Result<Vec<Vec<f32>>>,
 {
     anyhow::ensure!(
         specs.len() == scheds.len(),
@@ -134,12 +250,24 @@ where
         episodes: eps.len(),
         ..Default::default()
     };
+    // Row width is uniform across the batch (layout checked above).
+    let sd = eps
+        .first()
+        .map(|ep| ep.sched.schema.state_dim(ep.sched.cfg.j))
+        .unwrap_or(1);
+    // Round-local buffers, reused across rounds (capacity persists).
+    let mut arena: Vec<f32> = Vec::new(); // unique rows, row-major
+    let mut masks: Vec<Vec<bool>> = Vec::new(); // mask per unique row
+    let mut index: HashMap<u64, Vec<usize>> = HashMap::new();
     loop {
+        arena.clear();
+        masks.clear();
+        index.clear();
+        let mut parked = 0usize; // observations served this round
+        let mut round_hits = 0usize; // of which resolved by dedup
         // Phase 1: advance every live episode inference-free until it
         // either parks on a pending observation or finishes.
-        let mut states: Vec<Vec<f32>> = Vec::new();
-        let mut who: Vec<usize> = Vec::new();
-        for (i, ep) in eps.iter_mut().enumerate() {
+        for ep in eps.iter_mut() {
             if ep.result.is_some() {
                 continue;
             }
@@ -169,17 +297,46 @@ where
                 let slot = ep.slot.as_mut().expect("slot just ensured");
                 let end = (slot.chunk_start + j).min(slot.active.len());
                 let batch = &slot.active[slot.chunk_start..end];
-                match ep
-                    .sched
-                    .seq_observe(&ep.run.cluster, &slot.placement, batch, &slot.seq)
-                {
-                    Some((state, mask)) => {
-                        states.push(state.clone());
-                        who.push(i);
-                        ep.pending = Some((state, mask));
+                let row_start = arena.len();
+                arena.resize(row_start + sd, 0.0);
+                match ep.sched.seq_observe_into(
+                    &ep.run.cluster,
+                    &slot.placement,
+                    batch,
+                    &slot.seq,
+                    &mut arena[row_start..],
+                ) {
+                    Some(mask) => {
+                        let fresh_idx = row_start / sd;
+                        let mut row = None;
+                        if opts.dedup {
+                            let h = row_hash(&arena[row_start..], &mask);
+                            let cands = index.entry(h).or_default();
+                            row = cands.iter().copied().find(|&c| {
+                                masks[c] == mask
+                                    && rows_equal(&arena[c * sd..(c + 1) * sd], &arena[row_start..])
+                            });
+                            if row.is_none() {
+                                cands.push(fresh_idx);
+                            }
+                        }
+                        match row {
+                            Some(c) => {
+                                // Fan-in: this observation rides row `c`.
+                                arena.truncate(row_start);
+                                round_hits += 1;
+                                ep.pending = Some(c);
+                            }
+                            None => {
+                                masks.push(mask);
+                                ep.pending = Some(fresh_idx);
+                            }
+                        }
+                        parked += 1;
                         break 'episode; // park until the pooled call
                     }
                     None => {
+                        arena.truncate(row_start);
                         // Chunk sequence over: bank its allocation.
                         let seq = std::mem::replace(&mut slot.seq, ep.sched.seq_begin(0));
                         let (w, p) = seq.into_alloc();
@@ -199,32 +356,42 @@ where
                 }
             }
         }
-        if states.is_empty() {
+        if parked == 0 {
             break; // every episode finished
         }
-        // Phase 2: one pooled call resolves every parked row.
-        let probs = infer(&states)?;
+        // Phase 2: one pooled call resolves every unique row; dedup'd
+        // observations fan out from the same distribution.
+        let view = BatchView {
+            flat: &arena,
+            width: sd,
+        };
+        let unique = view.rows();
+        let probs = infer(view)?;
         anyhow::ensure!(
-            probs.len() == states.len(),
+            probs.len() == unique,
             "inference returned {} rows for {} states",
             probs.len(),
-            states.len()
+            unique
         );
         stats.batches += 1;
-        stats.rows += states.len();
-        for (row, &i) in who.iter().enumerate() {
-            let ep = &mut eps[i];
-            let (state, mask) = ep.pending.take().expect("pending observation");
+        stats.rows += unique;
+        stats.logical_rows += parked;
+        stats.dedup_hits += round_hits;
+        crate::runtime::note_dedup_hits(round_hits);
+        for ep in eps.iter_mut() {
+            let Some(row) = ep.pending.take() else {
+                continue;
+            };
             let j = ep.sched.cfg.j;
             let slot = ep.slot.as_mut().expect("slot in progress");
             let end = (slot.chunk_start + j).min(slot.active.len());
-            ep.sched.seq_step(
+            ep.sched.seq_step_ref(
                 &ep.run.cluster,
                 &mut slot.placement,
                 &slot.active[slot.chunk_start..end],
                 &mut slot.seq,
-                state,
-                &mask,
+                &arena[row * sd..(row + 1) * sd],
+                &masks[row],
                 &probs[row],
             );
         }
@@ -273,8 +440,8 @@ pub fn run_dl2_batched(
         scheds.push(sched);
     }
     let j = cfg.j;
-    let out = run_dl2_batched_with(specs, scheds, |states| {
-        infer_engine.policy_infer_batch(j, pol, states)
+    let out = run_dl2_batched_with(specs, scheds, |view: BatchView| {
+        infer_engine.policy_infer_rows(j, pol, view.flat())
     });
     pool.release(infer_engine);
     let (results, scheds, stats) = out?;
@@ -347,14 +514,15 @@ mod tests {
             .collect()
     }
 
+    fn fake(view: BatchView<'_>) -> Result<Vec<Vec<f32>>> {
+        let n_actions = 3 * 5 + 1; // j = 5 in these tests
+        Ok(view.iter().map(|s| fake_probs(s, n_actions)).collect())
+    }
+
     #[test]
     fn lockstep_batched_matches_serial() {
         let dir = artifacts_dir();
         let j = 5;
-        let n_actions = 3 * j + 1;
-        let fake = |states: &[Vec<f32>]| -> Result<Vec<Vec<f32>>> {
-            Ok(states.iter().map(|s| fake_probs(s, n_actions)).collect())
-        };
         let features = Engine::load(&dir).unwrap().meta.features;
         let specs = specs(features);
         let scheds = (0..3).map(|i| make_sched(&dir, j, 100 + i)).collect();
@@ -366,6 +534,11 @@ mod tests {
             "lockstep rounds must carry multiple rows ({} rows / {} batches)",
             stats.rows,
             stats.batches
+        );
+        assert_eq!(
+            stats.logical_rows - stats.rows,
+            stats.dedup_hits,
+            "fan-out accounting must balance"
         );
         // The same episodes one at a time (batch width 1 throughout):
         // batch composition must be invisible.
@@ -395,10 +568,70 @@ mod tests {
             make_sched(&dir, 5, 2),
             make_sched(&dir, 10, 3),
         ];
-        let err = match run_dl2_batched_with(&specs, scheds, |_| unreachable!("must fail first")) {
+        let err = match run_dl2_batched_with(&specs, scheds, |_: BatchView| {
+            unreachable!("must fail first")
+        }) {
             Ok(_) => panic!("mixed layouts must be rejected"),
             Err(e) => e,
         };
         assert!(err.to_string().contains("tensor layout"), "{err}");
+    }
+
+    /// N identical episodes stay in exact lockstep, so every round's N
+    /// observations collapse into one inference row — and the fan-out
+    /// must be bitwise invisible: all N results identical to each other,
+    /// to a dedup-off run, and to a solo run of the same spec.
+    #[test]
+    fn dedup_fans_out_identical_rows() {
+        let dir = artifacts_dir();
+        let j = 5;
+        let features = Engine::load(&dir).unwrap().meta.features;
+        let spec = {
+            let mut s = specs(features).remove(0);
+            s.max_slots = 400;
+            s
+        };
+        let quad: Vec<ScenarioSpec> = (0..4).map(|_| spec.clone()).collect();
+        let scheds_on = (0..4).map(|_| make_sched(&dir, j, 77)).collect();
+        let (on, _, stats_on) =
+            run_dl2_batched_opts(&quad, scheds_on, fake, BatchOptions { dedup: true }).unwrap();
+        assert!(stats_on.dedup_hits > 0, "identical episodes must dedup");
+        assert_eq!(
+            stats_on.rows * 4,
+            stats_on.logical_rows,
+            "4 identical episodes must collapse 4→1 every round"
+        );
+        let scheds_off = (0..4).map(|_| make_sched(&dir, j, 77)).collect();
+        let (off, _, stats_off) =
+            run_dl2_batched_opts(&quad, scheds_off, fake, BatchOptions { dedup: false }).unwrap();
+        assert_eq!(stats_off.dedup_hits, 0);
+        assert_eq!(stats_off.rows, stats_off.logical_rows);
+        assert_eq!(stats_on.logical_rows, stats_off.logical_rows);
+        let solo_scheds = vec![make_sched(&dir, j, 77)];
+        let (solo, _, _) =
+            run_dl2_batched_with(std::slice::from_ref(&spec), solo_scheds, fake).unwrap();
+        for (i, res) in on.iter().enumerate() {
+            assert_eq!(res.jct_per_job, off[i].jct_per_job, "episode {i}");
+            assert_eq!(res.rewards, off[i].rewards, "episode {i}");
+            assert_eq!(res.jct_per_job, solo[0].jct_per_job, "episode {i} vs solo");
+            assert_eq!(
+                res.avg_jct_slots.to_bits(),
+                solo[0].avg_jct_slots.to_bits(),
+                "episode {i} vs solo"
+            );
+        }
+    }
+
+    /// Distinct `-0.0` / `0.0` states (or differing masks) must never
+    /// merge — the dedup key is the bit pattern, not float equality.
+    #[test]
+    fn row_dedup_is_bitwise() {
+        let a = [0.0f32, 1.0];
+        let b = [-0.0f32, 1.0];
+        assert!(!rows_equal(&a, &b), "-0.0 must not merge with 0.0");
+        assert!(rows_equal(&a, &a.to_vec()));
+        let m1 = vec![true, false];
+        let m2 = vec![false, true];
+        assert_ne!(row_hash(&a, &m1), row_hash(&a, &m2));
     }
 }

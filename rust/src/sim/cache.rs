@@ -248,6 +248,22 @@ impl ResultCache {
         result
     }
 
+    /// Whether `key` is resident in either tier, without running
+    /// anything, bumping any counter, or promoting a disk entry into
+    /// memory — the read-only probe behind cache-aware matrix planning
+    /// ([`ScenarioMatrix::expand_cached`](super::ScenarioMatrix::expand_cached)).
+    /// Always `false` when the cache is disabled: a planner must not
+    /// skip work the cache would refuse to serve.
+    pub fn contains(&self, key: &EpisodeKey) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        if self.map.lock().unwrap().contains_key(key) {
+            return true;
+        }
+        self.disk.get().is_some_and(|store| store.contains(key))
+    }
+
     /// Drop every in-memory entry for `scheduler` (explicit invalidation,
     /// e.g. after deploying new DL² parameters when the stale entries'
     /// memory should be reclaimed too).  Disk entries are keyed past by
@@ -407,6 +423,19 @@ mod tests {
         cache.get_or_run(key(), || fake_result("y"));
         cache.get_or_run(key(), || panic!("cache re-enabled"));
         assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn contains_probes_without_counters() {
+        let cache = ResultCache::new();
+        let key = EpisodeKey::new(&spec(1), "drf", CacheTag::Pure).unwrap();
+        assert!(!cache.contains(&key));
+        cache.get_or_run(Some(key.clone()), || fake_result("a"));
+        let stats = cache.stats();
+        assert!(cache.contains(&key));
+        assert_eq!(cache.stats(), stats, "contains must not move counters");
+        cache.set_enabled(false);
+        assert!(!cache.contains(&key), "disabled cache must report nothing");
     }
 
     #[test]

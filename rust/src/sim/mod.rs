@@ -58,9 +58,12 @@
 //! ([`ScenarioSpec::episode_with`]; both are pinned bitwise-identical by
 //! `tests/event_kernel.rs`).  For DL² policy evaluation, [`run_dl2_batched`]
 //! drives many episodes in lockstep and resolves each round's pending
-//! state encodings with a single pooled-engine inference call — see
-//! `batched` for the protocol and its batch-composition-independence
-//! guarantee.
+//! state encodings with a single pooled-engine inference call: states
+//! are encoded into a reusable row-major arena, identical `(state,
+//! mask)` rows are deduplicated across episodes ([`BatchOptions`]), and
+//! the realized `[B × S]` batch reaches the engine's bucketed artifacts
+//! — see `batched` for the protocol and its
+//! batch-composition-independence guarantee.
 
 mod batched;
 mod cache;
@@ -68,10 +71,14 @@ mod harness;
 mod scenario;
 mod store;
 
-pub use batched::{run_dl2_batched, run_dl2_batched_with, BatchStats};
+pub use batched::{
+    run_dl2_batched, run_dl2_batched_opts, run_dl2_batched_with, BatchOptions, BatchStats,
+    BatchView,
+};
 pub use cache::{spec_fingerprint, CacheStats, EpisodeKey, ResultCache};
 pub use store::DiskStore;
 pub use harness::{mean_avg_jct, Harness, ScenarioResult};
 pub use scenario::{
-    derive_seed, replica_specs, ScenarioMatrix, ScenarioSpec, SimKernel, TopologySpec,
+    derive_seed, replica_specs, MatrixPlan, ScenarioMatrix, ScenarioSpec, SimKernel,
+    TopologySpec,
 };

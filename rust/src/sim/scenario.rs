@@ -4,7 +4,7 @@ use crate::cluster::{
     Cluster, ClusterConfig, DynamicsConfig, DynamicsSpec, Res, ServerClass, Topology,
 };
 use crate::scheduler::{
-    run_episode, run_episode_event, EpisodeResult, FeatureSet, Scheduler,
+    run_episode, run_episode_event, CacheTag, EpisodeResult, FeatureSet, Scheduler,
 };
 use crate::trace::{generate, ArrivalPattern, TraceConfig, TraceSource};
 
@@ -417,6 +417,47 @@ impl ScenarioMatrix {
         out
     }
 
+    /// Cache-aware expansion: [`ScenarioMatrix::expand`], partitioned by
+    /// residency in `cache` for one `(scheduler, tag)` evaluation pass.
+    /// Scenarios whose `(spec, scheduler, policy, schema)` key is
+    /// already resident (memory or disk tier) land in
+    /// [`MatrixPlan::skipped`] — their results will be served without
+    /// simulation — and everything else in [`MatrixPlan::to_run`].  A
+    /// `Bypass` tag, a disabled cache, or an empty cache plans the full
+    /// matrix.  Probing is read-only: no counters move and no disk entry
+    /// is promoted, so running the skipped slice anyway (e.g. through
+    /// `Harness::run_cached`) still records its hits normally.  Logs the
+    /// skip count whenever anything is resident.
+    pub fn expand_cached(
+        &self,
+        scheduler: &str,
+        tag: CacheTag,
+        cache: &super::ResultCache,
+    ) -> MatrixPlan {
+        let mut plan = MatrixPlan {
+            to_run: Vec::new(),
+            skipped: Vec::new(),
+        };
+        for spec in self.expand() {
+            let resident = super::EpisodeKey::new(&spec, scheduler, tag)
+                .is_some_and(|key| cache.contains(&key));
+            if resident {
+                plan.skipped.push(spec);
+            } else {
+                plan.to_run.push(spec);
+            }
+        }
+        if !plan.skipped.is_empty() {
+            println!(
+                "[dl2 matrix] {scheduler}: {} of {} scenarios cache-resident, {} to run",
+                plan.skipped.len(),
+                plan.total(),
+                plan.to_run.len()
+            );
+        }
+        plan
+    }
+
     /// Materialize one axis point of the cross product.
     #[allow(clippy::too_many_arguments)]
     fn expand_point(
@@ -488,6 +529,27 @@ impl ScenarioMatrix {
             max_slots: self.max_slots,
             features,
         }
+    }
+}
+
+/// A cache-aware matrix expansion ([`ScenarioMatrix::expand_cached`]):
+/// the scenarios still needing simulation and the cache-resident ones
+/// whose results will be served without running.  Both halves preserve
+/// matrix expansion order, so `to_run` fed to a harness behaves exactly
+/// like a smaller matrix.
+#[derive(Debug, Clone)]
+pub struct MatrixPlan {
+    /// Scenarios with no resident cache entry — the work remaining.
+    pub to_run: Vec<ScenarioSpec>,
+    /// Scenarios whose `(spec, scheduler, policy, schema)` key is
+    /// already resident in the consulted cache.
+    pub skipped: Vec<ScenarioSpec>,
+}
+
+impl MatrixPlan {
+    /// Full matrix size (`to_run` + `skipped`).
+    pub fn total(&self) -> usize {
+        self.to_run.len() + self.skipped.len()
     }
 }
 
@@ -788,6 +850,48 @@ mod tests {
         assert_eq!(specs[2].cluster.seed, 789);
         assert_eq!(specs[1].name, "val_r1");
         assert!(specs.iter().all(|s| s.trace.seed == t.seed && s.max_slots == 2000));
+    }
+
+    #[test]
+    fn expand_cached_partitions_by_residency() {
+        use crate::sim::{EpisodeKey, ResultCache};
+        let m = ScenarioMatrix::new(ClusterConfig::default(), TraceConfig::default())
+            .with_cluster_sizes(&[8, 16])
+            .with_replicas(2);
+        let specs = m.expand();
+        let cache = ResultCache::new();
+        // Empty cache: the plan is the whole matrix, in expansion order.
+        let plan = m.expand_cached("drf", CacheTag::Pure, &cache);
+        assert_eq!(plan.total(), specs.len());
+        assert!(plan.skipped.is_empty());
+        let names: Vec<&str> = plan.to_run.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, specs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>());
+        // Seed one resident entry: exactly that slice is skipped.
+        let key = EpisodeKey::new(&specs[1], "drf", CacheTag::Pure).unwrap();
+        cache.get_or_run(Some(key), || crate::sim::ScenarioResult {
+            scenario: specs[1].name.clone(),
+            scheduler: "drf".to_string(),
+            avg_jct_slots: 1.0,
+            jct: crate::util::stats::Aggregate::of(&[1.0]),
+            makespan_slots: 1,
+            mean_gpu_util: 0.5,
+            jct_per_job: vec![1.0],
+        });
+        let stats_before = cache.stats();
+        let plan = m.expand_cached("drf", CacheTag::Pure, &cache);
+        assert_eq!(plan.skipped.len(), 1);
+        assert_eq!(plan.skipped[0].name, specs[1].name);
+        assert_eq!(plan.to_run.len(), specs.len() - 1);
+        assert_eq!(cache.stats(), stats_before, "planning must not move counters");
+        // A different scheduler (or policy fingerprint) shares nothing.
+        let plan = m.expand_cached("fifo", CacheTag::Pure, &cache);
+        assert!(plan.skipped.is_empty());
+        // Bypass tags and disabled caches plan the full matrix.
+        let plan = m.expand_cached("drf", CacheTag::Bypass, &cache);
+        assert!(plan.skipped.is_empty());
+        cache.set_enabled(false);
+        let plan = m.expand_cached("drf", CacheTag::Pure, &cache);
+        assert!(plan.skipped.is_empty(), "disabled cache must not skip work");
     }
 
     #[test]

@@ -112,6 +112,14 @@ impl DiskStore {
         parse_entry(&text, &self.key_line(key))
     }
 
+    /// Whether a valid entry for `key` is resident (same full-parse
+    /// validation as [`DiskStore::load`]: a torn or stale file counts as
+    /// absent).  Used by cache-aware matrix planning to skip slices
+    /// without promoting anything into the memory tier.
+    pub fn contains(&self, key: &EpisodeKey) -> bool {
+        self.load(key).is_some()
+    }
+
     /// Persist `result` under `key` atomically: serialize to a unique
     /// temp file in the store directory, then `rename` over the final
     /// path.  Concurrent writers of the same key both succeed; the last

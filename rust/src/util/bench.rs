@@ -1,8 +1,10 @@
 //! Shared bench reporting: every bench binary emits
 //! `results/BENCH_<name>.json` through [`BenchReport`] — wall-clock,
-//! simulated slots/sec, per-tier cache hit/miss counts, JCT aggregates,
-//! git revision and the `DL2_BENCH_SCALE` factor — so re-anchors and CI
-//! can read the perf trajectory across PRs from one uniform format.
+//! simulated slots/sec, per-tier cache hit/miss counts, batched-
+//! inference counters (realized batch width, dedup hits, bucket
+//! compiles/executes), JCT aggregates, git revision and the
+//! `DL2_BENCH_SCALE` factor — so re-anchors and CI can read the perf
+//! trajectory across PRs from one uniform format.
 //!
 //! [`BenchReport::start`] is also the bench-side cache switchboard: it
 //! attaches the disk tier (`DL2_CACHE_DIR`, default `results/cache`) to
@@ -133,6 +135,17 @@ impl BenchReport {
                 stats.disk_writes
             ),
         );
+        // Batched-inference counters (process-wide): `batch_rows /
+        // batch_calls` is the realized batch width the engines saw;
+        // `dedup_hits` the logical rows served on top of that; bucket
+        // compiles/executes the `[B × S]` artifact activity.
+        let mut batching = Json::new();
+        batching.int("batch_calls", crate::runtime::batch_infer_calls() as u64);
+        batching.int("batch_rows", crate::runtime::batch_infer_rows() as u64);
+        batching.int("dedup_hits", crate::runtime::dedup_hits() as u64);
+        batching.int("bucket_compiles", crate::runtime::bucket_compiles() as u64);
+        batching.int("bucket_executes", crate::runtime::bucket_executes() as u64);
+        j.raw("batching", &batching.close());
         let mut labels = Json::new();
         for (k, v) in &self.labels {
             labels.str(k, v);

@@ -1,0 +1,261 @@
+//! Bitwise pins for the batched policy-inference fast path.
+//!
+//! The contract under test: **batch composition can never change
+//! results**.  Whether a round's observations execute one row at a time
+//! (the tier-2 reference), through zero-padded power-of-two buckets
+//! (tier 3), or collapse via cross-episode dedup, every episode must
+//! produce bit-identical trajectories, transitions and RNG streams.
+//!
+//! The native backend is stubbed in CI, so the engine-executed half of
+//! the contract is pinned at its seams: the lockstep driver runs against
+//! a deterministic host-side fake policy (a pure function of the state
+//! row, exactly the property the real artifacts have), and the bucketed
+//! chunk/pad/truncate arithmetic is exercised directly through
+//! [`bucket_plan`](dl2::runtime::bucket_plan).
+
+use dl2::cluster::{ClusterConfig, NUM_TYPES};
+use dl2::runtime::{bucket_plan, Engine, Meta};
+use dl2::scheduler::{Dl2Config, Dl2Scheduler, FeatureSet};
+use dl2::sim::{
+    derive_seed, run_dl2_batched_opts, run_dl2_batched_with, BatchOptions, BatchView, ScenarioSpec,
+};
+use dl2::trace::TraceConfig;
+use dl2::util::fnv1a_f32s;
+
+const J: usize = 5;
+const N_ACTIONS: usize = 3 * J + 1;
+
+/// Deterministic stand-in policy: a pure function of the state row, so
+/// every driver (solo, lockstep, dedup'd, bucketed) sees the same
+/// distribution for the same bits.
+fn fake_probs(state: &[f32]) -> Vec<f32> {
+    let h = fnv1a_f32s(state);
+    (0..N_ACTIONS)
+        .map(|a| ((derive_seed(h, a as u64) % 1000) as f32 + 1.0) / 1000.0)
+        .collect()
+}
+
+fn fake(view: BatchView<'_>) -> anyhow::Result<Vec<Vec<f32>>> {
+    Ok(view.iter().map(fake_probs).collect())
+}
+
+/// Host-side artifacts dir (`meta.txt` only): the fake inference path
+/// never executes a computation, so these tests run without the native
+/// backend.
+fn artifacts_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("dl2_infer_batch_{tag}"));
+    Meta::write_minimal(&dir, NUM_TYPES, 16, 8, &[J]).unwrap();
+    dir
+}
+
+fn make_sched(dir: &std::path::Path, seed: u64, training: bool) -> Dl2Scheduler {
+    let engine = Engine::load(dir).unwrap();
+    let cfg = Dl2Config {
+        j: J,
+        features: engine.meta.features,
+        seed,
+        ..Default::default()
+    };
+    let mut sched = Dl2Scheduler::new(engine, cfg);
+    sched.training = training;
+    sched
+}
+
+fn specs(n: usize, features: FeatureSet) -> Vec<ScenarioSpec> {
+    (0..n as u64)
+        .map(|i| {
+            let mut spec = ScenarioSpec::new(
+                &format!("infer_batch{i}"),
+                ClusterConfig {
+                    num_servers: 5 + (i as usize % 3),
+                    seed: 40 + i,
+                    ..Default::default()
+                },
+                TraceConfig {
+                    num_jobs: 4,
+                    seed: 90 + i,
+                    ..Default::default()
+                },
+            );
+            spec.max_slots = 400;
+            spec.features = features;
+            spec
+        })
+        .collect()
+}
+
+/// Episode-count widths 1, 4 (a power of two) and 5 (one past it): each
+/// lockstep run must match the same episodes driven one at a time —
+/// results *and* post-run RNG stream positions — so neither the batch
+/// width nor where it lands relative to a bucket boundary can leak into
+/// an episode.
+#[test]
+fn batch_width_is_invisible_across_bucket_boundaries() {
+    let dir = artifacts_dir("widths");
+    let features = Engine::load(&dir).unwrap().meta.features;
+    for width in [1usize, 4, 5] {
+        let specs = specs(width, features);
+        let scheds = (0..width as u64)
+            .map(|i| make_sched(&dir, 100 + i, false))
+            .collect();
+        let (batched, mut batched_scheds, stats) =
+            run_dl2_batched_with(&specs, scheds, fake).unwrap();
+        assert_eq!(stats.episodes, width);
+        assert_eq!(
+            stats.logical_rows - stats.rows,
+            stats.dedup_hits,
+            "width {width}: fan-out accounting must balance"
+        );
+        for (i, spec) in specs.iter().enumerate() {
+            let scheds = vec![make_sched(&dir, 100 + i as u64, false)];
+            let (solo, mut solo_scheds, _) =
+                run_dl2_batched_with(std::slice::from_ref(spec), scheds, fake).unwrap();
+            assert_eq!(solo[0].jct_per_job, batched[i].jct_per_job, "width {width} ep {i}");
+            assert_eq!(solo[0].rewards, batched[i].rewards, "width {width} ep {i}");
+            assert_eq!(solo[0].makespan_slots, batched[i].makespan_slots);
+            assert_eq!(
+                solo[0].avg_jct_slots.to_bits(),
+                batched[i].avg_jct_slots.to_bits(),
+                "width {width} ep {i}"
+            );
+            // Identical RNG stream position after the episode: the
+            // drivers consumed exactly the same draws.
+            for k in 0..4 {
+                assert_eq!(
+                    batched_scheds[i].rng.next_u64(),
+                    solo_scheds[0].rng.next_u64(),
+                    "width {width} ep {i}: RNG streams diverged at draw {k}"
+                );
+            }
+        }
+    }
+}
+
+/// The bucketed tier's chunk/pad/truncate arithmetic, emulated on the
+/// host: for widths around every bucket boundary (1, 2^k, 2^k+1), the
+/// plan must cover each row exactly once, and evaluating the zero-padded
+/// chunks row-wise then truncating must reproduce row-at-a-time output
+/// bitwise.  This is the exact data movement `policy_infer_rows`
+/// performs around the artifact call.
+#[test]
+fn bucketed_padding_matches_row_at_a_time() {
+    let buckets = [2usize, 4, 8];
+    let sd = 7;
+    for n in [1usize, 2, 3, 4, 5, 8, 9, 16, 17] {
+        // Deterministic rows; include a -0.0 so padding zeros can't
+        // silently alias a real state under a bit-exact comparison.
+        let rows: Vec<f32> = (0..n * sd)
+            .map(|k| if k % 11 == 3 { -0.0 } else { (k % 13) as f32 - 6.0 })
+            .collect();
+        let reference: Vec<Vec<f32>> = rows.chunks(sd).map(fake_probs).collect();
+
+        let plan = bucket_plan(&buckets, n);
+        let covered: usize = plan.iter().map(|&(take, _)| take).sum();
+        assert_eq!(covered, n, "plan must cover every row exactly once");
+        for &(take, bucket) in &plan {
+            assert!(take <= bucket, "chunk of {take} rows needs bucket ≥ {take}");
+            assert!(buckets.contains(&bucket), "unknown bucket width {bucket}");
+        }
+
+        let mut bucketed: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut offset = 0usize;
+        for (take, bucket) in plan {
+            let mut padded =
+                rows[offset * sd..(offset + take) * sd].to_vec();
+            padded.resize(bucket * sd, 0.0);
+            // Row-independent evaluation of the [bucket × S] block, then
+            // drop the padding rows — what the artifact + truncation do.
+            let block: Vec<Vec<f32>> = padded.chunks(sd).map(fake_probs).collect();
+            bucketed.extend(block.into_iter().take(take));
+            offset += take;
+        }
+        assert_eq!(bucketed.len(), n);
+        for (i, (b, r)) in bucketed.iter().zip(&reference).enumerate() {
+            assert_eq!(b.len(), r.len());
+            for (x, y) in b.iter().zip(r) {
+                assert_eq!(x.to_bits(), y.to_bits(), "n {n} row {i} differs");
+            }
+        }
+    }
+}
+
+/// Dedup must be invisible to *training*: identical episodes running
+/// with dedup on vs off record bitwise-identical transition buffers
+/// (states, actions, slots) and leave their RNG streams at the same
+/// position, while the on-run actually collapses rows.
+#[test]
+fn dedup_preserves_training_transitions_and_rng() {
+    let dir = artifacts_dir("training");
+    let features = Engine::load(&dir).unwrap().meta.features;
+    let spec = specs(1, features).remove(0);
+    let quad: Vec<ScenarioSpec> = (0..4).map(|_| spec.clone()).collect();
+
+    let scheds_on = (0..4).map(|_| make_sched(&dir, 77, true)).collect();
+    let (on, mut on_scheds, stats_on) =
+        run_dl2_batched_opts(&quad, scheds_on, fake, BatchOptions { dedup: true }).unwrap();
+    assert!(stats_on.dedup_hits > 0, "identical episodes must dedup");
+    assert_eq!(
+        stats_on.rows * 4,
+        stats_on.logical_rows,
+        "4 identical episodes must collapse 4→1 every round"
+    );
+
+    let scheds_off = (0..4).map(|_| make_sched(&dir, 77, true)).collect();
+    let (off, mut off_scheds, stats_off) =
+        run_dl2_batched_opts(&quad, scheds_off, fake, BatchOptions { dedup: false }).unwrap();
+    assert_eq!(stats_off.dedup_hits, 0);
+    assert_eq!(stats_off.rows, stats_off.logical_rows);
+    assert_eq!(stats_on.logical_rows, stats_off.logical_rows);
+
+    for i in 0..4 {
+        assert_eq!(on[i].jct_per_job, off[i].jct_per_job, "episode {i}");
+        assert_eq!(on[i].rewards, off[i].rewards, "episode {i}");
+        let (ta, tb) = (&on_scheds[i].transitions, &off_scheds[i].transitions);
+        assert!(!ta.is_empty(), "training episodes must record transitions");
+        assert_eq!(ta.len(), tb.len(), "episode {i}: transition counts");
+        for (k, (a, b)) in ta.iter().zip(tb).enumerate() {
+            assert_eq!(a.action, b.action, "episode {i} transition {k}");
+            assert_eq!(a.slot, b.slot, "episode {i} transition {k}");
+            assert_eq!(a.state.len(), b.state.len());
+            for (x, y) in a.state.iter().zip(&b.state) {
+                assert_eq!(x.to_bits(), y.to_bits(), "episode {i} transition {k}");
+            }
+        }
+        for _ in 0..4 {
+            assert_eq!(
+                on_scheds[i].rng.next_u64(),
+                off_scheds[i].rng.next_u64(),
+                "episode {i}: RNG streams diverged"
+            );
+        }
+    }
+}
+
+/// Engine-level tier selection: a manifest with bucketed artifacts
+/// defaults to the fast path, the per-engine override forces either
+/// direction, and a manifest without buckets always takes the reference
+/// path (there is nothing else to execute).
+#[test]
+fn reference_mode_tracks_override_and_manifest() {
+    let bucketed = std::env::temp_dir().join("dl2_infer_batch_bucketed_meta");
+    Meta::write_minimal_buckets(&bucketed, NUM_TYPES, 16, 8, &[J], FeatureSet::V1, &[2, 4, 8])
+        .unwrap();
+    let mut engine = Engine::load(&bucketed).unwrap();
+    assert_eq!(engine.meta.buckets, vec![2, 4, 8]);
+    if !dl2::runtime::infer_reference_env() {
+        assert!(!engine.infer_reference(), "buckets present → fast by default");
+    }
+    engine.set_infer_reference(Some(true));
+    assert!(engine.infer_reference());
+    engine.set_infer_reference(Some(false));
+    assert!(!engine.infer_reference());
+
+    let plain = artifacts_dir("plain_meta");
+    let mut engine = Engine::load(&plain).unwrap();
+    assert!(engine.meta.buckets.is_empty());
+    engine.set_infer_reference(Some(false));
+    assert!(
+        engine.infer_reference(),
+        "no bucketed artifacts → reference path regardless of override"
+    );
+}
